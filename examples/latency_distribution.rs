@@ -1,0 +1,33 @@
+//! Figure 5 reproduction: latency distribution of 100 sequential AES-600B
+//! invocations, containerd vs junctiond, gateway-observed + function-exec.
+//!
+//! Prints the comparison table (with the paper's claimed reductions) and
+//! a 10-point CDF sketch per backend.
+//!
+//! ```sh
+//! cargo run --release --example latency_distribution
+//! ```
+
+use junctiond_repro::experiments as ex;
+
+fn sketch_cdf(label: &str, cdf: &[(u64, f64)]) {
+    println!("  {label} CDF:");
+    for q in [0.10, 0.25, 0.50, 0.75, 0.90, 0.95, 0.99, 1.00] {
+        let idx = ((q * cdf.len() as f64).ceil() as usize).clamp(1, cdf.len()) - 1;
+        let (v, _) = cdf[idx];
+        let bar = "#".repeat((v / 20_000).min(80) as usize);
+        println!("    p{:<4} {:>9.2} µs |{}", (q * 100.0) as u32, v as f64 / 1e3, bar);
+    }
+}
+
+fn main() {
+    let (table, c, j) = ex::fig5_table(100, 1);
+    println!("{}", table.to_markdown());
+    println!("containerd:");
+    sketch_cdf("gateway", &c.gateway_cdf);
+    println!("junctiond:");
+    sketch_cdf("gateway", &j.gateway_cdf);
+    println!(
+        "\npaper: median −37.33%, P99 −63.42% (gateway); median −35.3%, P99 −81% (exec)"
+    );
+}

@@ -1,0 +1,35 @@
+//! Figure 6 reproduction: gateway-observed response time vs offered load,
+//! both backends, plus the sustainable-throughput knee ratio (the paper's
+//! "10× more throughput while lowering latency ~2× median / ~3.5× tail").
+//!
+//! ```sh
+//! cargo run --release --example load_sweep
+//! ```
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::simcore::{MILLIS, SECONDS};
+
+fn main() {
+    let rates = ex::fig6_default_rates();
+    let (table, points) = ex::fig6_table(&rates, SECONDS, 3);
+    println!("{}", table.to_markdown());
+
+    let sla = 5 * MILLIS;
+    let kc = ex::knee(&points, Backend::Containerd, sla);
+    let kj = ex::knee(&points, Backend::Junctiond, sla);
+    println!("sustainable throughput (p99 ≤ 5 ms):");
+    println!("  containerd: {kc:>9.0} rps");
+    println!("  junctiond : {kj:>9.0} rps   ({:.1}×; paper: ~10×)", kj / kc.max(1.0));
+
+    // Pre-knee latency ratios at the highest load containerd sustains.
+    let at = |b: Backend| points.iter().filter(|p| p.backend == b && p.offered_rps <= kc).last();
+    if let (Some(c), Some(j)) = (at(Backend::Containerd), at(Backend::Junctiond)) {
+        println!(
+            "at {} rps: median {:.1}× lower, p99 {:.1}× lower (paper: ~2× / ~3.5×)",
+            c.offered_rps,
+            c.p50 as f64 / j.p50 as f64,
+            c.p99 as f64 / j.p99 as f64
+        );
+    }
+}

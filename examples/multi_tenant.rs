@@ -1,0 +1,17 @@
+//! Multi-tenant trace replay (the paper's §1 motivation): a skewed
+//! population of functions — a few hot, most rarely invoked [22] — with
+//! scale-from-zero deploys, containerd vs junctiond.
+//!
+//! ```sh
+//! cargo run --release --example multi_tenant
+//! ```
+
+use junctiond_repro::experiments as ex;
+
+fn main() {
+    let table = ex::multitenant_table(60, 1_000.0, 9);
+    println!("{}", table.to_markdown());
+    println!("containerd's tail is cold-start dominated (~250 ms container boots);");
+    println!("junctiond starts instances in ~3.4 ms, so even first-touch invocations");
+    println!("stay in the millisecond range — the paper's density argument in action.");
+}

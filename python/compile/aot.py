@@ -1,0 +1,92 @@
+"""AOT: lower every catalog entry to HLO *text* artifacts.
+
+This is the one-shot compile path (``make artifacts``).  Python never runs
+on the request path: the Rust runtime loads ``artifacts/<name>.hlo.txt`` via
+``HloModuleProto::from_text_file`` and executes through the PJRT CPU client.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every catalog function returns a tuple and is lowered with
+``return_tuple=True``; the Rust side unwraps with ``to_tuple1()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import CATALOG
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text.
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big constants as ``constant({...})`` and the old text parser
+    silently fills them with pattern data — the AES S-box would round-trip
+    as garbage (caught by the Rust-vs-RustCrypto cross-check).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_entry(name: str) -> str:
+    fn, arg_specs = CATALOG[name]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", nargs="*", default=None, help="subset of catalog entries to lower"
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only if args.only else list(CATALOG)
+    manifest = {}
+    for name in names:
+        text = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, arg_specs = CATALOG[name]
+        manifest[name] = {
+            "artifact": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in arg_specs
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+
+    # Manifests consumed by the Rust runtime's function registry. JSON for
+    # humans/tools, INI for the Rust loader (no serde in the offline
+    # vendored crate set).
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(args.out_dir, "manifest.ini"), "w") as f:
+        for name, entry in manifest.items():
+            f.write(f"[{name}]\n")
+            f.write(f"artifact = {entry['artifact']}\n")
+            args_sig = ";".join(
+                f"{a['dtype']}:{','.join(str(d) for d in a['shape'])}"
+                for a in entry["args"]
+            )
+            f.write(f"args = {args_sig}\n\n")
+    print(f"wrote manifest for {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""L1: AES-128 block-encryption as a Pallas kernel.
+
+The paper's benchmark function (vSwarm ``aes``) encrypts a 600-byte input.
+Its compute hot-spot is the AES round pipeline over a batch of 16-byte
+blocks; this module expresses that pipeline as a single Pallas kernel so the
+whole 10-round dataflow stays resident in VMEM.
+
+TPU adaptation notes (see DESIGN.md §Hardware-Adaptation):
+
+* The batch of states is one ``(N, 16)`` int32 tile — a single BlockSpec
+  block.  For the paper's workload N = 38 blocks (608 B padded), i.e. the
+  working set is ~2.4 KB: trivially VMEM-resident, so there is no HBM↔VMEM
+  schedule to pipeline; one grid step suffices.  For large payloads the
+  grid tiles the batch dimension in ``BLOCK_N``-block chunks.
+* AES has no matmul structure → this is VPU (vector-lane) work, not MXU.
+  SubBytes is a vectorized 256-entry gather; MixColumns is shifts/XORs over
+  int32 lanes; ShiftRows is a static lane permutation.
+* All 10 rounds are unrolled *inside* the kernel, so intermediate round
+  state never leaves VMEM (the analogue of keeping GPU state in registers /
+  shared memory).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the rust PJRT CPU client.  Correctness versus
+``ref.aes_encrypt_blocks_ref`` is exact (integer ops).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile size (in AES blocks) along the batch dimension.  38-block payloads fit
+# in a single tile; the value is a multiple of 8 to keep lanes full when the
+# batch is large.
+BLOCK_N = 256
+
+
+def _xtime(a):
+    """GF(2^8) multiply-by-2 on int32 lanes (AES polynomial 0x11B)."""
+    return ((a << 1) & 0xFF) ^ (((a >> 7) & 1) * 0x1B)
+
+
+def _aes_round_state(state, sbox, perm):
+    """SubBytes + ShiftRows (+ caller applies MixColumns/AddRoundKey)."""
+    state = jnp.take(sbox, state, axis=0)  # SubBytes: vectorized gather
+    state = jnp.take(state, perm, axis=1)  # ShiftRows: static lane permutation
+    return state
+
+
+def _mix_columns(state):
+    """MixColumns over (n, 16) column-major states, int32 lanes."""
+    s = state.reshape(-1, 4, 4)  # [n, col, row]
+    a0, a1, a2, a3 = s[:, :, 0], s[:, :, 1], s[:, :, 2], s[:, :, 3]
+    x0, x1, x2, x3 = _xtime(a0), _xtime(a1), _xtime(a2), _xtime(a3)
+    b0 = x0 ^ (x1 ^ a1) ^ a2 ^ a3
+    b1 = a0 ^ x1 ^ (x2 ^ a2) ^ a3
+    b2 = a0 ^ a1 ^ x2 ^ (x3 ^ a3)
+    b3 = (x0 ^ a0) ^ a1 ^ a2 ^ x3
+    return jnp.stack([b0, b1, b2, b3], axis=2).reshape(-1, 16)
+
+
+def _aes_kernel(blocks_ref, rk_ref, sbox_ref, perm_ref, out_ref):
+    """Pallas kernel body: encrypt one (BLOCK_N, 16) tile of AES states.
+
+    ``rk_ref``: (11, 16) round keys; ``sbox_ref``: (256,) S-box;
+    ``perm_ref``: (16,) ShiftRows lane permutation.  All three are small
+    enough to be replicated into VMEM for every grid step.
+    """
+    state = blocks_ref[...]
+    rks = rk_ref[...]
+    sbox = sbox_ref[...]
+    perm = perm_ref[...]
+
+    state = state ^ rks[0][None, :]
+    # Rounds 1..9 unrolled: the whole round dataflow stays in VMEM.
+    for rnd in range(1, 10):
+        state = _aes_round_state(state, sbox, perm)
+        state = _mix_columns(state)
+        state = state ^ rks[rnd][None, :]
+    # Final round: no MixColumns.
+    state = _aes_round_state(state, sbox, perm)
+    state = state ^ rks[10][None, :]
+    out_ref[...] = state
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def aes_encrypt_blocks(blocks, round_keys, sbox=None, *, block_n: int = BLOCK_N):
+    """Encrypt a batch of AES states with the Pallas kernel.
+
+    Args:
+      blocks: (N, 16) int32 states (byte values in [0, 255]).
+      round_keys: (11, 16) int32 expanded key (``ref.key_expansion``).
+      sbox: optional (256,) int32 S-box (defaults to ``ref.SBOX``).
+      block_n: batch-tile size; the grid covers ceil(N / block_n) steps.
+
+    Returns (N, 16) int32 ciphertext states, bit-identical to
+    ``ref.aes_encrypt_blocks_ref``.
+    """
+    if sbox is None:
+        sbox = jnp.asarray(ref.SBOX)
+    blocks = jnp.asarray(blocks, dtype=jnp.int32)
+    round_keys = jnp.asarray(round_keys, dtype=jnp.int32)
+    n = blocks.shape[0]
+
+    # Pad the batch to a whole number of tiles; strip afterwards.
+    tile = min(block_n, max(n, 1))
+    n_pad = (tile - n % tile) % tile
+    padded = jnp.pad(blocks, ((0, n_pad), (0, 0)))
+    grid = (padded.shape[0] // tile,)
+
+    out = pl.pallas_call(
+        _aes_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+            pl.BlockSpec((11, 16), lambda i: (0, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(padded.shape, jnp.int32),
+        interpret=True,
+    )(padded, round_keys, sbox, jnp.asarray(ref.SHIFT_ROWS_PERM))
+    return out[:n]
+
+
+def aes_ctr_encrypt(plaintext, round_keys, counters):
+    """AES-128-CTR: encrypt ``counters`` with the kernel, XOR into payload.
+
+    Args:
+      plaintext: (L,) int32 byte payload.
+      round_keys: (11, 16) int32 expanded key.
+      counters: (ceil(L/16), 16) int32 counter blocks (``ref.ctr_blocks``).
+    """
+    plaintext = jnp.asarray(plaintext, dtype=jnp.int32)
+    keystream = aes_encrypt_blocks(counters, round_keys).reshape(-1)
+    return plaintext ^ keystream[: plaintext.shape[0]]

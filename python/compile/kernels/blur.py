@@ -1,0 +1,59 @@
+"""L1: 3×3 box-blur stencil as a Pallas kernel.
+
+Stands in for vSwarm's image-processing functions (thumbnailing, filters).
+A stencil is the third kernel *shape* in the repo next to the VPU-byte-wise
+AES and the MXU matmul: neighborhood reads with halo handling.
+
+TPU adaptation: at these image sizes the whole padded image is
+VMEM-resident (64×64 f32 ≈ 16 KB ≪ 16 MB), so the grid tiles only the
+*output* in row bands and each step dynamic-slices its input band (with a
+1-row halo) from the resident image; the 3×3 average is 9 shifted adds on
+the VPU. ``interpret=True`` as everywhere in this repo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("block_h",))
+def blur3x3(img, *, block_h: int = 16):
+    """3×3 box blur with zero boundary, via a row-band Pallas kernel.
+
+    Args:
+      img: (H, W) float32 image.
+    Returns the blurred (H, W) image (average of the 3×3 neighborhood with
+    zero padding at the borders).
+    """
+    img = jnp.asarray(img, dtype=jnp.float32)
+    h, w = img.shape
+
+    bh = min(block_h, h)
+    n_bands = -(-h // bh)
+    padded_h = n_bands * bh
+    # One halo row top and bottom (+ tail padding up to whole bands).
+    img_p = jnp.pad(img, ((1, 1 + padded_h - h), (0, 0)))
+
+    def kernel(img_ref, out_ref, *, bh=bh, w=w):
+        i = pl.program_id(0)
+        band = jax.lax.dynamic_slice(img_ref[...], (i * bh, 0), (bh + 2, w))
+        pc = jnp.pad(band, ((0, 0), (1, 1)))  # column halo
+        acc = jnp.zeros((bh, w), dtype=jnp.float32)
+        for dy in range(3):
+            for dx in range(3):
+                acc = acc + pc[dy : dy + bh, dx : dx + w]
+        out_ref[...] = acc / 9.0
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_bands,),
+        in_specs=[pl.BlockSpec(img_p.shape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bh, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_h, w), jnp.float32),
+        interpret=True,
+    )(img_p)
+    return out[:h, :]

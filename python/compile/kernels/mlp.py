@@ -1,0 +1,89 @@
+"""L1: tiled matmul kernel used by the ``mlp_infer`` catalog function.
+
+Where the AES kernel is VPU-shaped (byte lanes, gathers, XORs), this kernel
+is the MXU-shaped counterpart: a K-accumulating tiled matmul with fused bias
+and optional ReLU, demonstrating the standard BlockSpec HBM↔VMEM tiling
+pattern.  ``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activate: bool, n_k: int):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk), K innermost.
+
+    The output tile is used as the accumulator across the K grid dimension
+    (revisiting o_ref is the canonical Pallas accumulation pattern).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...][None, :]
+        if activate:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "activate"))
+def matmul_bias(x, w, b, *, bm: int = 8, bn: int = 128, bk: int = 128, activate: bool = False):
+    """Compute ``act(x @ w + b)`` with a tiled Pallas kernel.
+
+    Tile sizes default to MXU-friendly shapes (lane dim 128); dimensions are
+    padded up to tile multiples and the pad is stripped from the result.
+    """
+    x = jnp.asarray(x, dtype=jnp.float32)
+    w = jnp.asarray(w, dtype=jnp.float32)
+    b = jnp.asarray(b, dtype=jnp.float32)
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+
+    def pad_to(a, axis, mult):
+        pad = (mult - a.shape[axis] % mult) % mult
+        if pad == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(a, widths)
+
+    xp = pad_to(pad_to(x, 0, bm_), 1, bk_)
+    wp = pad_to(pad_to(w, 0, bk_), 1, bn_)
+    bp = pad_to(b, 0, bn_)
+    gm, gn, gk = xp.shape[0] // bm_, wp.shape[1] // bn_, xp.shape[1] // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, activate=activate, n_k=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def mlp_infer(x, w1, b1, w2, b2):
+    """Two-layer MLP built from the tiled kernel: relu(x@w1+b1) @ w2 + b2."""
+    h = matmul_bias(x, w1, b1, activate=True)
+    return matmul_bias(h, w2, b2, activate=False)

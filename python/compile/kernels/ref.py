@@ -1,0 +1,218 @@
+"""Pure-jnp reference oracles (L1 correctness ground truth).
+
+This module is the *specification* against which the Pallas kernels in
+``aes.py`` / ``mlp.py`` are validated (pytest ``assert_allclose`` /
+exact-equality for integer AES).  It is deliberately written for clarity,
+not speed: plain ``jnp`` ops, no pallas, no fori_loop tricks.
+
+AES-128 follows FIPS-197.  The state layout convention used throughout the
+repo is the standard *column-major* AES state: flat byte index
+``i = row + 4*col`` for ``row, col in 0..4``.  All byte values are carried
+as int32 in ``[0, 255]`` (the ``xla`` crate marshals i32 literals; u8 is
+not in its NativeType set).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# AES tables (FIPS-197 §5.1.1)
+# ---------------------------------------------------------------------------
+
+
+def _build_sbox() -> np.ndarray:
+    """Construct the AES S-box from GF(2^8) inversion + affine transform.
+
+    Building it (rather than pasting the table) gives an independent check:
+    the hardcoded KAT vectors in the tests would fail loudly on any slip.
+    """
+    inv = np.zeros(256, dtype=np.int64)
+
+    def gf_mul(a: int, b: int) -> int:
+        p = 0
+        for _ in range(8):
+            if b & 1:
+                p ^= a
+            hi = a & 0x80
+            a = (a << 1) & 0xFF
+            if hi:
+                a ^= 0x1B
+            b >>= 1
+        return p
+
+    for a in range(1, 256):
+        for b in range(1, 256):
+            if gf_mul(a, b) == 1:
+                inv[a] = b
+                break
+
+    def rotl(v: int, n: int) -> int:
+        return ((v << n) | (v >> (8 - n))) & 0xFF
+
+    sbox = np.zeros(256, dtype=np.int64)
+    for x in range(256):
+        y = inv[x]
+        # Affine transform over GF(2).
+        sbox[x] = y ^ rotl(y, 1) ^ rotl(y, 2) ^ rotl(y, 3) ^ rotl(y, 4) ^ 0x63
+    return sbox.astype(np.int32)
+
+
+SBOX = _build_sbox()
+
+# Round constants for key expansion (first byte of each rcon word).
+RCON = np.array([0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1B, 0x36], dtype=np.int32)
+
+# ShiftRows as a flat permutation over the column-major state:
+# new[r + 4c] = old[r + 4*((c + r) % 4)]
+SHIFT_ROWS_PERM = np.array(
+    [r + 4 * ((c + r) % 4) for c in range(4) for r in range(4)], dtype=np.int32
+)
+
+
+# ---------------------------------------------------------------------------
+# GF(2^8) helpers (vectorized over int32 lanes)
+# ---------------------------------------------------------------------------
+
+
+def xtime(a):
+    """Multiply by x (i.e. by 2) in GF(2^8) with the AES polynomial 0x11B."""
+    a = jnp.asarray(a)
+    shifted = (a << 1) & 0xFF
+    overflow = (a >> 7) & 1
+    return shifted ^ (overflow * 0x1B)
+
+
+def gf_mul2(a):
+    return xtime(a)
+
+
+def gf_mul3(a):
+    return xtime(a) ^ a
+
+
+# ---------------------------------------------------------------------------
+# Key expansion (FIPS-197 §5.2) — runs at L2 (outside the kernel)
+# ---------------------------------------------------------------------------
+
+
+def key_expansion(key: np.ndarray) -> np.ndarray:
+    """Expand a 16-byte key into 11 round keys, shape (11, 16) int32.
+
+    Pure numpy: key expansion happens once per function deployment, never on
+    the per-request path, so there is no reason to trace it.
+    """
+    key = np.asarray(key, dtype=np.int32).reshape(16)
+    words = [key[4 * i : 4 * i + 4].copy() for i in range(4)]
+    for i in range(4, 44):
+        temp = words[i - 1].copy()
+        if i % 4 == 0:
+            temp = np.roll(temp, -1)  # RotWord
+            temp = SBOX[temp]  # SubWord
+            temp[0] ^= RCON[i // 4 - 1]
+        words.append(words[i - 4] ^ temp)
+    return np.stack(words).reshape(11, 16).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Block encryption (the oracle the Pallas kernel must match bit-for-bit)
+# ---------------------------------------------------------------------------
+
+
+def sub_bytes(state, sbox):
+    return jnp.take(sbox, state, axis=0)
+
+
+def shift_rows(state):
+    return state[:, SHIFT_ROWS_PERM]
+
+
+def mix_columns(state):
+    """MixColumns on (N, 16) column-major states."""
+    s = state.reshape(-1, 4, 4)  # [n, col, row]
+    a = [s[:, :, r] for r in range(4)]
+    b = [
+        gf_mul2(a[0]) ^ gf_mul3(a[1]) ^ a[2] ^ a[3],
+        a[0] ^ gf_mul2(a[1]) ^ gf_mul3(a[2]) ^ a[3],
+        a[0] ^ a[1] ^ gf_mul2(a[2]) ^ gf_mul3(a[3]),
+        gf_mul3(a[0]) ^ a[1] ^ a[2] ^ gf_mul2(a[3]),
+    ]
+    return jnp.stack(b, axis=2).reshape(-1, 16)
+
+
+def add_round_key(state, rk):
+    return state ^ rk[None, :]
+
+
+def aes_encrypt_blocks_ref(blocks, round_keys, sbox=None):
+    """Encrypt (N, 16) int32 blocks with (11, 16) int32 round keys (ECB)."""
+    if sbox is None:
+        sbox = jnp.asarray(SBOX)
+    state = jnp.asarray(blocks, dtype=jnp.int32)
+    state = add_round_key(state, round_keys[0])
+    for rnd in range(1, 10):
+        state = sub_bytes(state, sbox)
+        state = shift_rows(state)
+        state = mix_columns(state)
+        state = add_round_key(state, round_keys[rnd])
+    state = sub_bytes(state, sbox)
+    state = shift_rows(state)
+    state = add_round_key(state, round_keys[10])
+    return state
+
+
+def ctr_blocks(nonce: np.ndarray, n_blocks: int) -> np.ndarray:
+    """Build CTR-mode counter blocks: nonce (12 bytes) || 32-bit BE counter."""
+    nonce = np.asarray(nonce, dtype=np.int32).reshape(12)
+    out = np.zeros((n_blocks, 16), dtype=np.int32)
+    out[:, :12] = nonce[None, :]
+    ctr = np.arange(n_blocks, dtype=np.int64)
+    for i in range(4):
+        out[:, 12 + i] = ((ctr >> (8 * (3 - i))) & 0xFF).astype(np.int32)
+    return out
+
+
+def aes_ctr_encrypt_ref(plaintext, key, nonce):
+    """AES-128-CTR over a flat byte payload (int32 values in [0,255]).
+
+    End-to-end oracle for the ``aes600`` catalog entry (the paper's 600-byte
+    vSwarm AES function).  Ciphertext has the same length as the plaintext.
+    """
+    plaintext = np.asarray(plaintext, dtype=np.int32).reshape(-1)
+    n = plaintext.shape[0]
+    n_blocks = (n + 15) // 16
+    rks = key_expansion(key)
+    counters = ctr_blocks(nonce, n_blocks)
+    keystream = np.asarray(aes_encrypt_blocks_ref(counters, jnp.asarray(rks)))
+    keystream = keystream.reshape(-1)[:n]
+    return plaintext ^ keystream
+
+
+# ---------------------------------------------------------------------------
+# MLP / analytics references (other vSwarm-style catalog entries)
+# ---------------------------------------------------------------------------
+
+
+def mlp_infer_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP: relu(x @ w1 + b1) @ w2 + b2."""
+    h = jnp.maximum(jnp.dot(x, w1) + b1, 0.0)
+    return jnp.dot(h, w2) + b2
+
+
+def rowsum_ref(x):
+    """Row-sum analytics function (pure-L2 path, no pallas)."""
+    return jnp.sum(x, axis=1)
+
+
+def blur3x3_ref(img):
+    """3x3 zero-padded box blur (numpy oracle for the stencil kernel)."""
+    import numpy as _np
+    img = _np.asarray(img, dtype=_np.float32)
+    p = _np.pad(img, 1)
+    h, w = img.shape
+    out = _np.zeros_like(img)
+    for dy in range(3):
+        for dx in range(3):
+            out += p[dy : dy + h, dx : dx + w]
+    return out / 9.0

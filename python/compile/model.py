@@ -1,0 +1,146 @@
+"""L2: the FaaS function catalog as JAX compute graphs.
+
+Each entry here is a *function body* that the Rust FaaS runtime executes on
+the request path (after AOT lowering to HLO by ``aot.py``).  They mirror the
+vSwarm functions the paper evaluates with:
+
+* ``aes600``   — the headline workload: AES-128-CTR encryption of a 600-byte
+                 payload (paper §5 "Methodology").  Calls the Pallas AES
+                 kernel (L1) for the block pipeline; key expansion and
+                 counter-block construction are traced into the same graph so
+                 the artifact is self-contained: (plaintext, key, nonce) →
+                 ciphertext.
+* ``aes_blocks`` — kernel-only artifact (fixed 256-block batch) used by the
+                 perf microbenches to isolate kernel cost from marshaling.
+* ``mlp_infer`` — a small ML-inference function (two-layer MLP over the
+                 tiled Pallas matmul kernel), standing in for vSwarm's model
+                 -serving workloads.
+* ``rowsum``   — a trivial analytics function on the pure-jnp path (no
+                 Pallas), exercising the L2-only lowering path.
+
+All byte-valued tensors are int32 in [0, 255]: the Rust ``xla`` crate's
+NativeType set has no u8, and widening costs nothing at these sizes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import aes as aes_kernel
+from .kernels import blur as blur_kernel
+from .kernels import mlp as mlp_kernel
+from .kernels import ref
+
+PAYLOAD_BYTES = 600  # the paper's 600-byte AES input
+N_BLOCKS = (PAYLOAD_BYTES + 15) // 16  # 38
+
+
+# ---------------------------------------------------------------------------
+# In-graph key expansion + counter construction (static shapes, unrolled)
+# ---------------------------------------------------------------------------
+
+
+def key_expansion_jnp(key):
+    """FIPS-197 key expansion traced into the graph ((16,) → (11, 16)).
+
+    The loop unrolls at trace time (44 words); the S-box lookups become
+    gathers.  Running it in-graph keeps the artifact self-contained — the
+    Rust side passes the raw 16-byte key, not pre-expanded round keys.
+    """
+    sbox = jnp.asarray(ref.SBOX)
+    rcon = jnp.asarray(ref.RCON)
+    key = jnp.asarray(key, dtype=jnp.int32).reshape(16)
+    words = [key[4 * i : 4 * i + 4] for i in range(4)]
+    for i in range(4, 44):
+        temp = words[i - 1]
+        if i % 4 == 0:
+            temp = jnp.roll(temp, -1)
+            temp = jnp.take(sbox, temp, axis=0)
+            temp = temp.at[0].set(temp[0] ^ rcon[i // 4 - 1])
+        words.append(words[i - 4] ^ temp)
+    return jnp.stack(words).reshape(11, 16)
+
+
+def ctr_blocks_jnp(nonce, n_blocks: int):
+    """Counter blocks nonce||BE32(i) for i in 0..n_blocks ((12,) → (n, 16))."""
+    nonce = jnp.asarray(nonce, dtype=jnp.int32).reshape(12)
+    ctr = jnp.arange(n_blocks, dtype=jnp.int32)
+    be = jnp.stack([(ctr >> (8 * (3 - i))) & 0xFF for i in range(4)], axis=1)
+    return jnp.concatenate(
+        [jnp.broadcast_to(nonce[None, :], (n_blocks, 12)), be], axis=1
+    )
+
+
+# ---------------------------------------------------------------------------
+# Catalog function bodies
+# ---------------------------------------------------------------------------
+
+
+def aes600(plaintext, key, nonce):
+    """AES-128-CTR encrypt a 600-byte payload.  Returns (600,) ciphertext."""
+    rks = key_expansion_jnp(key)
+    counters = ctr_blocks_jnp(nonce, N_BLOCKS)
+    return (aes_kernel.aes_ctr_encrypt(plaintext, rks, counters),)
+
+
+def aes_blocks(blocks, round_keys):
+    """Kernel-only ECB batch encrypt ((256,16),(11,16)) → (256,16)."""
+    return (aes_kernel.aes_encrypt_blocks(blocks, round_keys),)
+
+
+def _mlp_weights(in_dim=64, hidden=128, out_dim=10, seed=7):
+    """Deterministic baked weights for the inference function."""
+    rng = np.random.default_rng(seed)
+    w1 = rng.standard_normal((in_dim, hidden), dtype=np.float32) / np.sqrt(in_dim)
+    b1 = np.zeros(hidden, dtype=np.float32)
+    w2 = rng.standard_normal((hidden, out_dim), dtype=np.float32) / np.sqrt(hidden)
+    b2 = np.zeros(out_dim, dtype=np.float32)
+    return w1, b1, w2, b2
+
+
+MLP_WEIGHTS = _mlp_weights()
+
+
+def mlp_infer(x):
+    """Two-layer MLP inference over baked weights ((1,64) → (1,10))."""
+    w1, b1, w2, b2 = (jnp.asarray(w) for w in MLP_WEIGHTS)
+    return (mlp_kernel.mlp_infer(x, w1, b1, w2, b2),)
+
+
+def mlp_infer_ref_body(x):
+    """Same MLP on the pure-jnp path (oracle for the artifact test)."""
+    w1, b1, w2, b2 = (jnp.asarray(w) for w in MLP_WEIGHTS)
+    return (ref.mlp_infer_ref(x, w1, b1, w2, b2),)
+
+
+def rowsum(x):
+    """Row sums of a (64, 64) matrix — L2-only path, no Pallas."""
+    return (ref.rowsum_ref(x),)
+
+
+def blur(img):
+    """3×3 box blur of a (64, 64) image — vSwarm image-processing stand-in."""
+    return (blur_kernel.blur3x3(img),)
+
+
+# ---------------------------------------------------------------------------
+# Catalog: name → (callable, example argument specs)
+# ---------------------------------------------------------------------------
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+CATALOG = {
+    "aes600": (aes600, [spec((PAYLOAD_BYTES,), I32), spec((16,), I32), spec((12,), I32)]),
+    "aes_blocks": (aes_blocks, [spec((256, 16), I32), spec((11, 16), I32)]),
+    "mlp_infer": (mlp_infer, [spec((1, 64), F32)]),
+    "rowsum": (rowsum, [spec((64, 64), F32)]),
+    "blur": (blur, [spec((64, 64), F32)]),
+}

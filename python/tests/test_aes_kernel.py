@@ -1,0 +1,124 @@
+"""Pallas AES kernel vs pure-jnp oracle vs FIPS-197 known answers."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import aes, ref
+
+RNG = np.random.default_rng(0xA5)
+
+
+def rand_bytes(*shape):
+    return RNG.integers(0, 256, size=shape, dtype=np.int64).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# FIPS-197 known-answer tests (appendix A & B vectors)
+# ---------------------------------------------------------------------------
+
+FIPS_KEY = np.array(
+    [0x2B, 0x7E, 0x15, 0x16, 0x28, 0xAE, 0xD2, 0xA6,
+     0xAB, 0xF7, 0x15, 0x88, 0x09, 0xCF, 0x4F, 0x3C], dtype=np.int32)
+FIPS_PLAIN = np.array(
+    [0x32, 0x43, 0xF6, 0xA8, 0x88, 0x5A, 0x30, 0x8D,
+     0x31, 0x31, 0x98, 0xA2, 0xE0, 0x37, 0x07, 0x34], dtype=np.int32)
+FIPS_CIPHER = np.array(
+    [0x39, 0x25, 0x84, 0x1D, 0x02, 0xDC, 0x09, 0xFB,
+     0xDC, 0x11, 0x85, 0x97, 0x19, 0x6A, 0x0B, 0x32], dtype=np.int32)
+
+# FIPS-197 appendix C.1: key 000102...0f, plaintext 00112233...ff.
+C1_KEY = np.arange(16, dtype=np.int32)
+C1_PLAIN = np.array([(0x11 * i) & 0xFF for i in range(16)], dtype=np.int32)
+C1_CIPHER = np.array(
+    [0x69, 0xC4, 0xE0, 0xD8, 0x6A, 0x7B, 0x04, 0x30,
+     0xD8, 0xCD, 0xB7, 0x80, 0x70, 0xB4, 0xC5, 0x5A], dtype=np.int32)
+
+
+def test_sbox_known_values():
+    # FIPS-197 table 7 spot checks.
+    assert ref.SBOX[0x00] == 0x63
+    assert ref.SBOX[0x53] == 0xED
+    assert ref.SBOX[0xFF] == 0x16
+    # S-box is a permutation of 0..255.
+    assert sorted(ref.SBOX.tolist()) == list(range(256))
+
+
+def test_key_expansion_fips_appendix_a():
+    rks = ref.key_expansion(FIPS_KEY)
+    assert rks.shape == (11, 16)
+    assert rks[0].tolist() == FIPS_KEY.tolist()
+    # w[43] from FIPS-197 appendix A: b6 63 0c a6
+    assert rks[10, 12:].tolist() == [0xB6, 0x63, 0x0C, 0xA6]
+    # w[4..7] round key 1: a0 fa fe 17 88 54 2c b1 23 a3 39 39 2a 6c 76 05
+    assert rks[1].tolist() == [
+        0xA0, 0xFA, 0xFE, 0x17, 0x88, 0x54, 0x2C, 0xB1,
+        0x23, 0xA3, 0x39, 0x39, 0x2A, 0x6C, 0x76, 0x05]
+
+
+@pytest.mark.parametrize(
+    "key,plain,cipher",
+    [(FIPS_KEY, FIPS_PLAIN, FIPS_CIPHER), (C1_KEY, C1_PLAIN, C1_CIPHER)],
+    ids=["appendixB", "appendixC1"],
+)
+def test_ref_matches_fips(key, plain, cipher):
+    rks = jnp.asarray(ref.key_expansion(key))
+    out = np.asarray(ref.aes_encrypt_blocks_ref(plain[None, :], rks))
+    assert out[0].tolist() == cipher.tolist()
+
+
+@pytest.mark.parametrize(
+    "key,plain,cipher",
+    [(FIPS_KEY, FIPS_PLAIN, FIPS_CIPHER), (C1_KEY, C1_PLAIN, C1_CIPHER)],
+    ids=["appendixB", "appendixC1"],
+)
+def test_pallas_kernel_matches_fips(key, plain, cipher):
+    rks = jnp.asarray(ref.key_expansion(key))
+    out = np.asarray(aes.aes_encrypt_blocks(plain[None, :], rks))
+    assert out[0].tolist() == cipher.tolist()
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle over random batches
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 16, 38, 255, 256, 300])
+def test_kernel_matches_ref_batch(n):
+    blocks = rand_bytes(n, 16)
+    rks = jnp.asarray(ref.key_expansion(rand_bytes(16)))
+    got = np.asarray(aes.aes_encrypt_blocks(blocks, rks))
+    want = np.asarray(ref.aes_encrypt_blocks_ref(blocks, rks))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_n", [1, 7, 38, 64, 256])
+def test_kernel_tile_size_invariance(block_n):
+    """Ciphertext must not depend on the batch tiling."""
+    blocks = rand_bytes(90, 16)
+    rks = jnp.asarray(ref.key_expansion(rand_bytes(16)))
+    got = np.asarray(aes.aes_encrypt_blocks(blocks, rks, block_n=block_n))
+    want = np.asarray(ref.aes_encrypt_blocks_ref(blocks, rks))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ctr_mode_roundtrip():
+    """CTR encryption is its own inverse."""
+    key, nonce = rand_bytes(16), rand_bytes(12)
+    plaintext = rand_bytes(600)
+    rks = jnp.asarray(ref.key_expansion(key))
+    counters = jnp.asarray(ref.ctr_blocks(nonce, 38))
+    ct = np.asarray(aes.aes_ctr_encrypt(plaintext, rks, counters))
+    rt = np.asarray(aes.aes_ctr_encrypt(ct, rks, counters))
+    np.testing.assert_array_equal(rt, plaintext)
+    assert (ct != plaintext).any()
+
+
+def test_ctr_matches_ref():
+    key, nonce = rand_bytes(16), rand_bytes(12)
+    plaintext = rand_bytes(600)
+    rks = jnp.asarray(ref.key_expansion(key))
+    counters = jnp.asarray(ref.ctr_blocks(nonce, 38))
+    got = np.asarray(aes.aes_ctr_encrypt(plaintext, rks, counters))
+    want = ref.aes_ctr_encrypt_ref(plaintext, key, nonce)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,37 @@
+"""Stencil (blur) Pallas kernel vs numpy oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blur, ref
+
+RNG = np.random.default_rng(0xD1)
+
+
+@pytest.mark.parametrize("h,w,bh", [(64, 64, 16), (64, 64, 64), (33, 17, 8), (5, 5, 16), (16, 128, 4)])
+def test_blur_matches_ref(h, w, bh):
+    img = RNG.standard_normal((h, w)).astype(np.float32)
+    got = np.asarray(blur.blur3x3(img, block_h=bh))
+    np.testing.assert_allclose(got, ref.blur3x3_ref(img), rtol=1e-5, atol=1e-5)
+
+
+def test_blur_constant_image_interior():
+    img = np.ones((32, 32), dtype=np.float32)
+    got = np.asarray(blur.blur3x3(img))
+    # Interior of a constant image stays constant; borders shrink (zero pad).
+    np.testing.assert_allclose(got[1:-1, 1:-1], 1.0, rtol=1e-6)
+    assert got[0, 0] < 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(min_value=3, max_value=40),
+    w=st.integers(min_value=3, max_value=40),
+    bh=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_blur_any_shape(h, w, bh, seed):
+    img = np.random.default_rng(seed).standard_normal((h, w)).astype(np.float32)
+    got = np.asarray(blur.blur3x3(img, block_h=bh))
+    np.testing.assert_allclose(got, ref.blur3x3_ref(img), rtol=1e-4, atol=1e-5)

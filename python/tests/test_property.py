@@ -1,0 +1,78 @@
+"""Hypothesis property sweeps over the L1 kernels (shapes, keys, payloads).
+
+Per the repo testing strategy: hypothesis owns the Pallas kernels'
+shape/dtype space; rust proptest owns the coordinator invariants.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aes, mlp, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+byte = st.integers(min_value=0, max_value=255)
+
+
+@st.composite
+def byte_array(draw, shape):
+    n = int(np.prod(shape))
+    vals = draw(st.lists(byte, min_size=n, max_size=n))
+    return np.array(vals, dtype=np.int32).reshape(shape)
+
+
+@settings(**SETTINGS)
+@given(data=st.data(), n=st.integers(min_value=1, max_value=80))
+def test_kernel_equals_ref_any_batch(data, n):
+    blocks = data.draw(byte_array((n, 16)))
+    key = data.draw(byte_array((16,)))
+    rks = jnp.asarray(ref.key_expansion(key))
+    got = np.asarray(aes.aes_encrypt_blocks(blocks, rks))
+    want = np.asarray(ref.aes_encrypt_blocks_ref(blocks, rks))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(data=st.data(), length=st.integers(min_value=1, max_value=700))
+def test_ctr_roundtrip_any_length(data, length):
+    pt = data.draw(byte_array((length,)))
+    key = data.draw(byte_array((16,)))
+    nonce = data.draw(byte_array((12,)))
+    n_blocks = (length + 15) // 16
+    rks = jnp.asarray(ref.key_expansion(key))
+    counters = jnp.asarray(ref.ctr_blocks(nonce, n_blocks))
+    ct = np.asarray(aes.aes_ctr_encrypt(pt, rks, counters))
+    rt = np.asarray(aes.aes_ctr_encrypt(ct, rks, counters))
+    np.testing.assert_array_equal(rt, pt)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_distinct_keys_give_distinct_ciphertexts(data):
+    block = data.draw(byte_array((1, 16)))
+    k1 = data.draw(byte_array((16,)))
+    k2 = data.draw(byte_array((16,)))
+    if k1.tolist() == k2.tolist():
+        return
+    c1 = np.asarray(aes.aes_encrypt_blocks(block, jnp.asarray(ref.key_expansion(k1))))
+    c2 = np.asarray(aes.aes_encrypt_blocks(block, jnp.asarray(ref.key_expansion(k2))))
+    # AES is a PRP per key: collisions across random keys are ~2^-128.
+    assert c1.tolist() != c2.tolist()
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=16),
+    k=st.integers(min_value=1, max_value=64),
+    n=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_any_shape(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(mlp.matmul_bias(x, w, b))
+    want = x @ w + b
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,39 @@
+//! Bench E4 (§4): provider metadata cache on/off. With the cache off,
+//! every invocation pays a backend state query — for containerd that round
+//! trip is "slower than the function invocation itself" (paper §4).
+
+mod common;
+
+use junctiond_repro::experiments as ex;
+use junctiond_repro::simcore::MICROS;
+use junctiond_repro::telemetry::Cell;
+
+fn main() {
+    let n = if common::quick() { 50 } else { 200 };
+    common::section("Ablation — provider metadata cache", || {
+        let table = ex::ablation_cache_table(n, 2);
+        println!("{}", table.to_markdown());
+        let p50 = |row: usize| match &table.rows[row][2] {
+            Cell::NsAsUs(v) => *v,
+            _ => unreachable!(),
+        };
+        // Rows: 0 containerd/on, 1 containerd/off, 2 junctiond/on, 3 junctiond/off.
+        let mut checks = common::Checks::new();
+        checks.check(
+            "containerd: cache off ≫ on (state query dominates)",
+            p50(1) > p50(0) + 500 * MICROS,
+            format!("{}µs vs {}µs", p50(1) / MICROS, p50(0) / MICROS),
+        );
+        checks.check(
+            "junctiond: cache off penalty exists but is small",
+            p50(3) > p50(2) && p50(3) < p50(2) + 200 * MICROS,
+            format!("{}µs vs {}µs", p50(3) / MICROS, p50(2) / MICROS),
+        );
+        checks.check(
+            "cached junctiond beats cached containerd",
+            p50(2) < p50(0),
+            format!("{}µs vs {}µs", p50(2) / MICROS, p50(0) / MICROS),
+        );
+        checks.finish();
+    });
+}

@@ -1,0 +1,39 @@
+//! Bench E8 (§3 isolation): host-kernel surface exercised per invocation.
+//! Junction interposes syscalls in user space and receives packets
+//! directly from hardware, so a warm invocation exercises **zero** host
+//! syscalls/kernel-stack messages on the request path; containerd's path
+//! traps dozens of times.
+
+mod common;
+
+use junctiond_repro::experiments as ex;
+use junctiond_repro::telemetry::Cell;
+
+fn main() {
+    let n = if common::quick() { 30 } else { 100 };
+    common::section("Isolation — host-kernel surface per invocation", || {
+        let table = ex::isolation_table(n, 1);
+        println!("{}", table.to_markdown());
+        let f2 = |r: usize, c: usize| match &table.rows[r][c] {
+            Cell::F2(v) => *v,
+            _ => unreachable!(),
+        };
+        let mut checks = common::Checks::new();
+        checks.check(
+            "containerd exercises host kernel heavily",
+            f2(0, 1) > 10.0 && f2(0, 2) > 8.0,
+            format!("{:.1} syscalls, {:.1} kernel msgs /inv", f2(0, 1), f2(0, 2)),
+        );
+        checks.check(
+            "junctiond request path never enters the host kernel",
+            f2(1, 1) == 0.0 && f2(1, 2) == 0.0,
+            format!("{:.1} syscalls, {:.1} kernel msgs /inv", f2(1, 1), f2(1, 2)),
+        );
+        checks.check(
+            "junctiond handles syscalls in user space instead",
+            f2(1, 4) >= 50.0,
+            format!("{:.1} user-space syscalls /inv", f2(1, 4)),
+        );
+        checks.finish();
+    });
+}

@@ -1,0 +1,45 @@
+//! Bench E5 (§3): polling-core scaling. Junction reserves ONE core for its
+//! scheduler regardless of how many functions the server hosts; DPDK-style
+//! bypass reserves one polling core per isolated function. Also verifies
+//! junctiond's serving latency stays flat as the hosted population grows.
+
+mod common;
+
+use junctiond_repro::experiments as ex;
+use junctiond_repro::telemetry::Cell;
+
+fn main() {
+    let pops: &[u32] =
+        if common::quick() { &[1, 16, 256] } else { &[1, 4, 16, 64, 256, 1024, 4096] };
+    common::section("Ablation — polling cores vs hosted functions", || {
+        let table = ex::ablation_polling_table(pops, 2);
+        println!("{}", table.to_markdown());
+        let int = |r: usize, c: usize| match &table.rows[r][c] {
+            Cell::Int(v) => *v,
+            _ => unreachable!(),
+        };
+        let p99 = |r: usize| match &table.rows[r][5] {
+            Cell::NsAsUs(v) => *v,
+            _ => unreachable!(),
+        };
+        let last = table.rows.len() - 1;
+        let mut checks = common::Checks::new();
+        checks.check(
+            "junction polling cores stay at 1 for thousands of functions",
+            int(last, 1) == 1,
+            format!("{} functions → {} poll core(s)", int(last, 0), int(last, 1)),
+        );
+        checks.check(
+            "dpdk polling cores grow linearly (unhostable past the core count)",
+            int(last, 3) == int(last, 0) && int(last, 4) == 0,
+            format!("{} poll cores, {} usable", int(last, 3), int(last, 4)),
+        );
+        // Latency flat within 3× from 1 function to the max population.
+        checks.check(
+            "junction p99 flat as population grows",
+            p99(last) < 3 * p99(0).max(1),
+            format!("{}µs → {}µs", p99(0) / 1000, p99(last) / 1000),
+        );
+        checks.finish();
+    });
+}

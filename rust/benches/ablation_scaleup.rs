@@ -1,0 +1,38 @@
+//! Bench E6 (§3): junctiond scale-up modes — multi-process per instance
+//! (Python-style), max-core raise (Go-style), isolated instances — under a
+//! fixed offered load. Higher scale must buy goodput until the offered
+//! rate is met.
+
+mod common;
+
+use junctiond_repro::experiments as ex;
+use junctiond_repro::telemetry::Cell;
+
+fn main() {
+    let rate = if common::quick() { 10_000.0 } else { 20_000.0 };
+    common::section("Ablation — junctiond scale-up modes", || {
+        let table = ex::ablation_scaleup_table(rate, 4);
+        println!("{}", table.to_markdown());
+        let goodput = |r: usize| match &table.rows[r][2] {
+            Cell::F2(v) => *v,
+            _ => unreachable!(),
+        };
+        // Rows per mode: scales 1,2,4,8 → indices base..base+3.
+        let mut checks = common::Checks::new();
+        for (mode, base) in [("multi-process", 0), ("max-cores", 4), ("isolated", 8)] {
+            let g1 = goodput(base);
+            let g8 = goodput(base + 3);
+            checks.check(
+                &format!("{mode}: scale 8 ≥ scale 1 goodput"),
+                g8 >= g1 * 0.98,
+                format!("{g1:.0} → {g8:.0} rps"),
+            );
+            checks.check(
+                &format!("{mode}: scale 8 meets offered load"),
+                g8 > rate * 0.85,
+                format!("{g8:.0} / {rate:.0} rps"),
+            );
+        }
+        checks.finish();
+    });
+}

@@ -1,0 +1,29 @@
+//! Bench E9 (§2.1): controller autoscaling on the 4-worker cluster under a
+//! step load. The controller must grow replicas in the high phase and shed
+//! them when idle, on both backends.
+
+mod common;
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::telemetry::Cell;
+
+fn main() {
+    common::section("Autoscaling — step load on a 4-worker pool", || {
+        let mut checks = common::Checks::new();
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let table = ex::autoscale_table(backend, 3);
+            println!("{}", table.to_markdown());
+            let peak = |r: usize| match &table.rows[r][2] {
+                Cell::Int(v) => *v,
+                _ => unreachable!(),
+            };
+            checks.check(
+                &format!("{}: high phase grows replicas", backend.name()),
+                peak(1) >= peak(0),
+                format!("{} → {}", peak(0), peak(1)),
+            );
+        }
+        checks.finish();
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench E3: cold starts. Junction instance init ≈ 3.4 ms (paper §5);
+//! containerd cold start is hundreds of ms.
+
+mod common;
+
+use junctiond_repro::experiments as ex;
+use junctiond_repro::telemetry::Cell;
+
+fn main() {
+    let trials = if common::quick() { 20 } else { 100 };
+    common::section("Cold starts", || {
+        let table = ex::coldstart_table(trials, 5);
+        println!("{}", table.to_markdown());
+        let get = |r: usize, c: usize| match &table.rows[r][c] {
+            Cell::F2(v) => *v,
+            _ => unreachable!(),
+        };
+        let c_init = get(0, 2); // containerd init p50 (ms)
+        let j_init = get(2, 2); // junctiond init p50 (ms)
+        let mut checks = common::Checks::new();
+        checks.check(
+            "junction init ≈ 3.4 ms (paper §5)",
+            (j_init - 3.4).abs() < 0.5,
+            format!("{j_init:.2} ms"),
+        );
+        checks.check(
+            "container cold start ≫ junction (≥ 20×)",
+            c_init > 20.0 * j_init,
+            format!("{c_init:.0} ms vs {j_init:.2} ms"),
+        );
+        checks.finish();
+    });
+}

@@ -1,0 +1,62 @@
+//! Shared mini-bench harness (criterion is unavailable offline).
+//!
+//! Every bench binary (`harness = false`) regenerates one paper artifact
+//! (table or figure) and prints it as markdown, then asserts the *shape*
+//! band from DESIGN.md §3 so `cargo bench` doubles as a reproduction
+//! check. `BENCH_QUICK=1` shrinks the workloads for smoke runs.
+#![allow(dead_code)] // each bench binary uses a different subset
+
+use std::time::Instant;
+
+pub fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Run a named section, timing wall clock.
+pub fn section<F: FnOnce()>(name: &str, f: F) {
+    println!("\n==== {name} ====");
+    let t0 = Instant::now();
+    f();
+    println!("---- {name}: {:.2}s ----", t0.elapsed().as_secs_f64());
+}
+
+/// Time a closure over `iters` iterations, reporting ns/iter.
+pub fn time_it<F: FnMut()>(label: &str, iters: u32, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:<44} {per:>12.0} ns/iter   ({iters} iters)");
+    per
+}
+
+/// Soft assertion: print PASS/FAIL and remember failures (exit code).
+pub struct Checks {
+    failures: Vec<String>,
+}
+
+impl Checks {
+    pub fn new() -> Checks {
+        Checks { failures: Vec::new() }
+    }
+
+    pub fn check(&mut self, name: &str, ok: bool, detail: String) {
+        if ok {
+            println!("CHECK PASS: {name} ({detail})");
+        } else {
+            println!("CHECK FAIL: {name} ({detail})");
+            self.failures.push(name.to_string());
+        }
+    }
+
+    pub fn finish(self) {
+        if !self.failures.is_empty() {
+            panic!("bench shape checks failed: {:?}", self.failures);
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench E1 / Figure 5: latency distribution of 100 sequential AES-600B
+//! invocations, containerd vs junctiond. Asserts the paper's reduction
+//! bands (shape, not absolutes — see DESIGN.md §3).
+
+mod common;
+
+use junctiond_repro::experiments as ex;
+
+fn main() {
+    let n = if common::quick() { 50 } else { 100 };
+    common::section("Figure 5 — sequential latency distribution", || {
+        let (table, c, j) = ex::fig5_table(n, 1);
+        println!("{}", table.to_markdown());
+
+        let mut checks = common::Checks::new();
+        let red = |a: u64, b: u64| 1.0 - b as f64 / a as f64;
+
+        let p50 = red(c.gateway.p50, j.gateway.p50);
+        checks.check(
+            "gateway p50 reduction in band (paper 37.33%)",
+            (0.20..0.60).contains(&p50),
+            format!("{:.1}%", p50 * 100.0),
+        );
+        let p99 = red(c.gateway.p99, j.gateway.p99);
+        checks.check(
+            "gateway p99 reduction in band (paper 63.42%)",
+            (0.40..0.90).contains(&p99),
+            format!("{:.1}%", p99 * 100.0),
+        );
+        let e50 = red(c.exec.p50, j.exec.p50);
+        checks.check(
+            "exec p50 reduction in band (paper 35.3%)",
+            (0.20..0.60).contains(&e50),
+            format!("{:.1}%", e50 * 100.0),
+        );
+        let e99 = red(c.exec.p99, j.exec.p99);
+        checks.check(
+            "exec p99 reduction in band (paper 81%)",
+            (0.50..0.95).contains(&e99),
+            format!("{:.1}%", e99 * 100.0),
+        );
+        checks.finish();
+    });
+}

@@ -1,0 +1,50 @@
+//! Bench E2 / Figure 6: gateway-observed response time vs offered load.
+//! Asserts: junctiond sustains ≥5× the throughput under a 5 ms p99 SLA
+//! (paper: 10×) and wins latency at every pre-knee load.
+
+mod common;
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::simcore::{MILLIS, SECONDS};
+
+fn main() {
+    let duration = if common::quick() { SECONDS / 2 } else { SECONDS };
+    common::section("Figure 6 — response time vs offered load", || {
+        let rates = ex::fig6_default_rates();
+        let (table, points) = ex::fig6_table(&rates, duration, 3);
+        println!("{}", table.to_markdown());
+
+        let sla = 5 * MILLIS;
+        let kc = ex::knee(&points, Backend::Containerd, sla);
+        let kj = ex::knee(&points, Backend::Junctiond, sla);
+        let ratio = kj / kc.max(1.0);
+        println!("knee: containerd {kc:.0} rps, junctiond {kj:.0} rps → {ratio:.1}×");
+
+        let mut checks = common::Checks::new();
+        checks.check("throughput knee ratio (paper ~10×)", ratio >= 5.0, format!("{ratio:.1}×"));
+        // Latency dominance below containerd's knee.
+        let pre_knee_ok = points
+            .iter()
+            .filter(|p| p.backend == Backend::Containerd && p.offered_rps <= kc)
+            .all(|c| {
+                points
+                    .iter()
+                    .find(|j| j.backend == Backend::Junctiond && j.offered_rps == c.offered_rps)
+                    .map(|j| j.p50 < c.p50 && j.p99 < c.p99)
+                    .unwrap_or(false)
+            });
+        checks.check("junctiond wins p50+p99 at every pre-knee load", pre_knee_ok, "pointwise".into());
+        // Median ~2×, tail ~3.5× at moderate load (paper's Fig. 6 text).
+        if let (Some(c), Some(j)) = (
+            points.iter().find(|p| p.backend == Backend::Containerd && p.offered_rps == 2000.0),
+            points.iter().find(|p| p.backend == Backend::Junctiond && p.offered_rps == 2000.0),
+        ) {
+            let m = c.p50 as f64 / j.p50 as f64;
+            let t = c.p99 as f64 / j.p99 as f64;
+            checks.check("median ratio @2k rps (paper ~2×)", (1.3..4.0).contains(&m), format!("{m:.1}×"));
+            checks.check("p99 ratio @2k rps (paper ~3.5×)", (1.8..9.0).contains(&t), format!("{t:.1}×"));
+        }
+        checks.finish();
+    });
+}

@@ -1,0 +1,38 @@
+//! Bench E10 (§1 motivation): multi-tenant Zipf trace with lazy
+//! scale-from-zero deploys — the "serverless in the wild" shape the paper
+//! cites [22]. Junction's ms-scale instance starts and cheap wakeups keep
+//! the tail bounded where containerd's cold starts dominate it.
+
+mod common;
+
+use junctiond_repro::experiments as ex;
+use junctiond_repro::telemetry::Cell;
+
+fn main() {
+    let (funcs, rps) = if common::quick() { (20, 400.0) } else { (60, 1_000.0) };
+    common::section("Multi-tenant trace replay", || {
+        let table = ex::multitenant_table(funcs, rps, 9);
+        println!("{}", table.to_markdown());
+        let us = |r: usize, c: usize| match &table.rows[r][c] {
+            Cell::NsAsUs(v) => *v,
+            _ => unreachable!(),
+        };
+        let mut checks = common::Checks::new();
+        checks.check(
+            "junctiond p99 below containerd p99",
+            us(1, 4) < us(0, 4),
+            format!("{}µs vs {}µs", us(1, 4) / 1000, us(0, 4) / 1000),
+        );
+        checks.check(
+            "containerd tail carries cold starts (≥100ms)",
+            us(0, 4) > 100_000_000,
+            format!("{}ms", us(0, 4) / 1_000_000),
+        );
+        checks.check(
+            "junctiond tail stays in single-digit ms",
+            us(1, 4) < 20_000_000,
+            format!("{}ms", us(1, 4) / 1_000_000),
+        );
+        checks.finish();
+    });
+}

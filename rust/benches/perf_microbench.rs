@@ -1,0 +1,118 @@
+//! §Perf microbenchmarks: the L3 hot paths in isolation.
+//!
+//! * DES engine event throughput (events/s) — the simulator's own speed
+//!   bounds how big a Fig. 6 sweep is practical.
+//! * Pipeline submit→complete cost per simulated invocation.
+//! * PJRT invoke overhead vs raw artifact compute.
+//! * RPC framing encode/decode.
+//! * Histogram record cost.
+//!
+//! Before/after numbers live in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use std::rc::Rc;
+
+use junctiond_repro::config::{Backend, ExperimentConfig, PlatformConfig};
+use junctiond_repro::experiments as ex;
+use junctiond_repro::faas::{FaasSim, FunctionSpec, RuntimeKind};
+use junctiond_repro::rpc::Message;
+use junctiond_repro::simcore::{Rng, Sim, SECONDS};
+use junctiond_repro::telemetry::LogHistogram;
+use junctiond_repro::workload::ClosedLoop;
+
+fn main() {
+    common::section("perf — DES engine", || {
+        // 1M trivial events.
+        let t0 = std::time::Instant::now();
+        let mut sim = Sim::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..1_000_000u32 {
+            sim.at(rng.below(1_000_000_000), |_| {});
+        }
+        sim.run_to_completion();
+        let per = t0.elapsed().as_nanos() as f64 / 1e6;
+        println!("event schedule+fire: {per:.0} ns/event ({:.1}M events/s)", 1e3 / per);
+    });
+
+    common::section("perf — simulated invocation pipeline", || {
+        // Best-of-5: this environment is a shared 1-core container with
+        // ±50% ambient noise; the minimum is the noise-resistant estimator.
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let n = 50_000u32;
+            let mut best = f64::INFINITY;
+            let mut events = 0;
+            for _ in 0..5 {
+                let cfg = ExperimentConfig {
+                    backend,
+                    function_compute_ns: 100_000,
+                    ..Default::default()
+                };
+                let mut sim = Sim::new();
+                let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+                fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+                sim.run_until(SECONDS);
+                let t0 = std::time::Instant::now();
+                ClosedLoop::new("aes", n).run(&mut sim, &fs);
+                best = best.min(t0.elapsed().as_nanos() as f64 / n as f64);
+                events = sim.events_fired();
+            }
+            println!(
+                "{:<11} {best:>8.0} ns wall per simulated invocation, best of 5 ({events} events)",
+                backend.name(),
+            );
+        }
+    });
+
+    common::section("perf — PJRT invoke", || {
+        match junctiond_repro::runtime::Executor::load(
+            &junctiond_repro::runtime::default_artifacts_dir(),
+        ) {
+            Ok(exec) => {
+                let pt = [7u8; 600];
+                let key = [1u8; 16];
+                let nonce = [2u8; 12];
+                let _ = exec.aes600(&pt, &key, &nonce).unwrap();
+                common::time_it("aes600 end-to-end (marshal+execute)", 200, || {
+                    let _ = exec.aes600(&pt, &key, &nonce).unwrap();
+                });
+                // rowsum is a near-trivial graph: its time ≈ dispatch floor.
+                let x = vec![1.0f32; 64 * 64];
+                let _ = x;
+                let args = vec![vec![0i32; 600], vec![0; 16], vec![0; 12]];
+                common::time_it("aes600 via invoke_i32 (generic path)", 200, || {
+                    let _ = exec.invoke_i32("aes600", &args).unwrap();
+                });
+            }
+            Err(e) => println!("skipped (artifacts unavailable: {e})"),
+        }
+    });
+
+    common::section("perf — rpc framing", || {
+        let payload = [0x5Au8; 600];
+        let msg = Message::invoke_request(1, "aes600", &payload);
+        let mut buf = Vec::new();
+        common::time_it("encode_into (reused buffer)", 1_000_000, || {
+            msg.encode_into(&mut buf);
+        });
+        let frame = msg.encode();
+        common::time_it("decode", 1_000_000, || {
+            let _ = Message::decode(&frame).unwrap();
+        });
+    });
+
+    common::section("perf — telemetry", || {
+        let mut h = LogHistogram::new();
+        let mut rng = Rng::new(9);
+        common::time_it("LogHistogram::record", 5_000_000, || {
+            h.record(rng.below(100_000_000));
+        });
+        let _ = h.quantile(0.99);
+    });
+
+    common::section("perf — fig5 driver wall time", || {
+        let t0 = std::time::Instant::now();
+        let _ = ex::fig5_table(100, 1);
+        println!("fig5_table(100): {:.2}s wall", t0.elapsed().as_secs_f64());
+    });
+}

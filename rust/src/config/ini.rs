@@ -1,0 +1,133 @@
+//! Minimal INI-style parser: `[section]`, `key = value`, `#`/`;` comments.
+//!
+//! Keys are addressed as `"section.key"` (or just `"key"` for the unnamed
+//! top section). Typed getters return `anyhow` errors that carry the key
+//! name, so a bad platform file fails loudly at startup, not mid-run.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Parsed INI contents.
+#[derive(Debug, Clone, Default)]
+pub struct Ini {
+    values: BTreeMap<String, String>,
+}
+
+impl Ini {
+    pub fn parse(text: &str) -> Result<Ini> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') {
+                anyhow::ensure!(
+                    line.ends_with(']'),
+                    "line {}: unterminated section header: {raw}",
+                    lineno + 1
+                );
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value: {raw}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            // Strip trailing comments.
+            let v = v.split('#').next().unwrap_or("").trim().to_string();
+            values.insert(key, v);
+        }
+        Ok(Ini { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Ini> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.values
+            .get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("key '{key}' = '{v}' is not u64")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.values
+            .get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("key '{key}' = '{v}' is not f64")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.values
+            .get(key)
+            .map(|v| match v.as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                other => anyhow::bail!("key '{key}' = '{other}' is not a bool"),
+            })
+            .transpose()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+answer = 42
+name = junction   # trailing comment
+
+[net]
+syscall_ns = 600
+enabled = true
+ratio = 2.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get("answer"), Some("42"));
+        assert_eq!(ini.get("name"), Some("junction"));
+        assert_eq!(ini.get_u64("net.syscall_ns").unwrap(), Some(600));
+        assert_eq!(ini.get_bool("net.enabled").unwrap(), Some(true));
+        assert_eq!(ini.get_f64("net.ratio").unwrap(), Some(2.5));
+        assert_eq!(ini.get("missing"), None);
+    }
+
+    #[test]
+    fn type_errors_name_the_key() {
+        let ini = Ini::parse("x = notanumber").unwrap();
+        let err = ini.get_u64("x").unwrap_err().to_string();
+        assert!(err.contains("'x'"), "{err}");
+    }
+
+    #[test]
+    fn bad_section_header_rejected() {
+        assert!(Ini::parse("[oops").is_err());
+    }
+
+    #[test]
+    fn missing_equals_rejected() {
+        assert!(Ini::parse("just a line").is_err());
+    }
+}

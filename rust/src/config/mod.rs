@@ -1,0 +1,69 @@
+//! Configuration system: platform cost model, experiment parameters, and a
+//! small INI-style parser (serde is unavailable offline; the format is a
+//! flat `key = value` file with `#` comments and optional `[sections]`).
+
+mod ini;
+mod platform;
+
+pub use ini::Ini;
+pub use platform::PlatformConfig;
+
+use crate::simcore::Time;
+
+/// Which execution backend hosts the faasd components and functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Baseline: containerd sandboxes + Linux kernel networking.
+    Containerd,
+    /// The paper's contribution: Junction instances + kernel-bypass.
+    Junctiond,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Containerd => "containerd",
+            Backend::Junctiond => "junctiond",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "containerd" | "baseline" => Ok(Backend::Containerd),
+            "junctiond" | "junction" => Ok(Backend::Junctiond),
+            other => anyhow::bail!("unknown backend '{other}' (containerd|junctiond)"),
+        }
+    }
+}
+
+/// Experiment-level knobs shared by the drivers in `experiments/`.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub backend: Backend,
+    /// Provider metadata cache (§4 of the paper). Both evaluated setups have
+    /// it on; the E4 ablation toggles it.
+    pub provider_cache: bool,
+    /// Worker server core count (paper testbed: 10-core Xeon 4114).
+    pub worker_cores: usize,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+    /// Measured compute time of the function body (ns). Filled from PJRT
+    /// calibration (`runtime::calibrate`) or platform defaults.
+    pub function_compute_ns: Time,
+    /// Concurrency limit per function instance (uProc threads / container
+    /// worker threads).
+    pub instance_concurrency: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            backend: Backend::Junctiond,
+            provider_cache: true,
+            worker_cores: 10,
+            seed: 1,
+            function_compute_ns: 120 * crate::simcore::MICROS,
+            instance_concurrency: 4,
+        }
+    }
+}

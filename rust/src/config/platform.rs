@@ -1,0 +1,263 @@
+//! Platform cost model: the calibrated constants from DESIGN.md §4.
+//!
+//! Every per-operation cost the simulators charge lives here, in one place,
+//! overridable from an INI file (`--platform <file>`). Values are virtual
+//! nanoseconds. Sources for the defaults are documented per field; they are
+//! deliberately conservative mid-range numbers for a ~2019 Xeon (the
+//! paper's testbed is a 10-core Xeon 4114 @ 2.2 GHz).
+
+use anyhow::Result;
+
+use super::Ini;
+use crate::simcore::{Time, MICROS, MILLIS};
+
+/// All simulator cost constants (ns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformConfig {
+    // ---- host kernel path (baseline) ----
+    /// One syscall trap in/out (post-KPTI `getpid`-class).
+    pub syscall_ns: Time,
+    /// Context switch between tasks on one core, incl. cache disturbance.
+    pub context_switch_ns: Time,
+    /// Hard IRQ + NAPI softirq processing per received packet.
+    pub irq_softirq_ns: Time,
+    /// Kernel TCP stack traversal per send or recv of a small message.
+    pub kernel_stack_msg_ns: Time,
+    /// Futex/epoll wakeup → task running (scheduler latency).
+    pub sched_wakeup_ns: Time,
+    /// One epoll_wait round (syscall + ready-list scan).
+    pub epoll_round_ns: Time,
+    /// Extra per-message cost of traversing a veth/bridge pair into a
+    /// container network namespace (software switching the paper calls out).
+    pub veth_hop_ns: Time,
+
+    // ---- junction (kernel-bypass) path ----
+    /// Junction user-space network stack per message (send or recv).
+    pub junction_stack_msg_ns: Time,
+    /// uThread wakeup when the instance already holds a core.
+    pub junction_wakeup_ns: Time,
+    /// Scheduler grants a core to an idle instance (IPI + queue scan).
+    pub junction_grant_ns: Time,
+    /// Junction syscall handled in user space (function-call cost).
+    pub junction_syscall_ns: Time,
+    /// Scheduler polling loop iteration (charged to the dedicated core).
+    pub junction_poll_iter_ns: Time,
+    /// Rare scheduler-contention delay on *service* instances (gateway /
+    /// provider): probability per segment in 1/10000, and bounds. Models
+    /// grant delays when the shared machine's cores are contended — the
+    /// residual tail Junction still has end-to-end, while the function
+    /// instance (which holds its core for its whole short burst) stays
+    /// tight. This is why the paper's exec P99 improves more (−81%) than
+    /// the gateway-observed P99 (−63%).
+    pub junction_sched_tail_prob_bp: Time,
+    pub junction_sched_tail_min_ns: Time,
+    pub junction_sched_tail_max_ns: Time,
+
+    // ---- RPC / faasd components ----
+    /// gRPC-ish serialize + deserialize per hop (small payload).
+    pub rpc_serde_ns: Time,
+    /// Gateway request handling CPU (auth, route lookup).
+    pub gateway_cpu_ns: Time,
+    /// Provider request handling CPU (resolve, forward) when the metadata
+    /// cache hits.
+    pub provider_cpu_ns: Time,
+    /// Extra provider cost on metadata-cache miss: a round trip to the
+    /// backend manager's state store (the paper: "requests to containerd
+    /// can be slower than the function invocation itself").
+    pub provider_state_query_ns: Time,
+    /// Same round trip against junctiond (an in-memory table behind one
+    /// local RPC, not containerd's task-list machinery).
+    pub junctiond_state_query_ns: Time,
+
+    // ---- wire / physical ----
+    /// One-way wire + NIC DMA latency between the two machines (100 GbE).
+    pub wire_ns: Time,
+
+    // ---- lifecycle ----
+    /// containerd cold start (create + start, image present).
+    pub container_cold_start_ns: Time,
+    /// Junction instance init (paper §5: 3.4 ms).
+    pub junction_cold_start_ns: Time,
+
+    // ---- function compute ----
+    /// Default AES-600B function body compute (overridden by PJRT
+    /// calibration when artifacts are present).
+    pub function_compute_ns: Time,
+    /// Syscalls issued by one function invocation (read input, write
+    /// output, clock_gettime, allocator traps...).
+    pub function_syscalls: Time,
+
+    // ---- kernel interference (tail model) ----
+    /// Per-CPU-segment probability (in 1/10000) of a kernel-path
+    /// interference burst: CFS throttling, GC pause coinciding with a
+    /// timer tick, IRQ storm. Junction instances don't take these.
+    pub kernel_interference_prob_bp: Time,
+    /// Burst magnitude bounds.
+    pub kernel_interference_min_ns: Time,
+    pub kernel_interference_max_ns: Time,
+
+    // ---- concurrency model ----
+    /// Requests a containerd function instance serves concurrently.
+    /// faasd's classic watchdog forks one fprocess per request and its
+    /// container has a single veth/NAPI queue: effectively serial.
+    pub container_concurrency: Time,
+    /// Max cores junctiond configures per function instance (§3 scale-up:
+    /// uProc threads across granted cores / multi-process).
+    pub junction_max_cores: Time,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            syscall_ns: 600,
+            context_switch_ns: 2_500,
+            irq_softirq_ns: 3 * MICROS,
+            kernel_stack_msg_ns: 4 * MICROS,
+            sched_wakeup_ns: 3_500,
+            epoll_round_ns: 1_200,
+            veth_hop_ns: 1_500,
+
+            junction_stack_msg_ns: 1_500,
+            junction_wakeup_ns: 300,
+            junction_grant_ns: 1 * MICROS,
+            junction_syscall_ns: 80,
+            junction_poll_iter_ns: 150,
+            junction_sched_tail_prob_bp: 120,
+            junction_sched_tail_min_ns: 40 * MICROS,
+            junction_sched_tail_max_ns: 180 * MICROS,
+
+            rpc_serde_ns: 5 * MICROS,
+            gateway_cpu_ns: 25 * MICROS,
+            provider_cpu_ns: 15 * MICROS,
+            provider_state_query_ns: 700 * MICROS,
+            junctiond_state_query_ns: 40 * MICROS,
+
+            wire_ns: 2 * MICROS,
+
+            container_cold_start_ns: 250 * MILLIS,
+            junction_cold_start_ns: 3_400 * MICROS, // paper §5: 3.4 ms
+
+            function_compute_ns: 100 * MICROS,
+            function_syscalls: 50,
+
+            kernel_interference_prob_bp: 150, // 1.5% of kernel CPU segments
+            kernel_interference_min_ns: 100 * MICROS,
+            kernel_interference_max_ns: 500 * MICROS,
+
+            container_concurrency: 1,
+            junction_max_cores: 8,
+        }
+    }
+}
+
+macro_rules! load_fields {
+    ($cfg:ident, $ini:ident, $( $field:ident ),+ $(,)?) => {
+        $(
+            if let Some(v) = $ini.get_u64(concat!("platform.", stringify!($field)))? {
+                $cfg.$field = v;
+            } else if let Some(v) = $ini.get_u64(stringify!($field))? {
+                $cfg.$field = v;
+            }
+        )+
+    };
+}
+
+impl PlatformConfig {
+    /// Load overrides from an INI file on top of the defaults.
+    pub fn from_ini(ini: &Ini) -> Result<Self> {
+        let mut cfg = PlatformConfig::default();
+        load_fields!(
+            cfg,
+            ini,
+            syscall_ns,
+            context_switch_ns,
+            irq_softirq_ns,
+            kernel_stack_msg_ns,
+            sched_wakeup_ns,
+            epoll_round_ns,
+            veth_hop_ns,
+            junction_stack_msg_ns,
+            junction_wakeup_ns,
+            junction_grant_ns,
+            junction_syscall_ns,
+            junction_poll_iter_ns,
+            junction_sched_tail_prob_bp,
+            junction_sched_tail_min_ns,
+            junction_sched_tail_max_ns,
+            rpc_serde_ns,
+            gateway_cpu_ns,
+            provider_cpu_ns,
+            provider_state_query_ns,
+            junctiond_state_query_ns,
+            wire_ns,
+            container_cold_start_ns,
+            junction_cold_start_ns,
+            function_compute_ns,
+            function_syscalls,
+            kernel_interference_prob_bp,
+            kernel_interference_min_ns,
+            kernel_interference_max_ns,
+            container_concurrency,
+            junction_max_cores,
+        );
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity bounds: catches typo'd config files (e.g. µs pasted as ns).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.syscall_ns > 0 && self.syscall_ns < MILLIS, "syscall_ns out of range");
+        anyhow::ensure!(
+            self.junction_stack_msg_ns < self.kernel_stack_msg_ns,
+            "bypass stack must be cheaper than the kernel stack"
+        );
+        anyhow::ensure!(
+            self.junction_wakeup_ns < self.sched_wakeup_ns,
+            "junction wakeup must be cheaper than a kernel wakeup"
+        );
+        anyhow::ensure!(
+            self.junction_cold_start_ns < self.container_cold_start_ns,
+            "junction cold start must be below container cold start"
+        );
+        anyhow::ensure!(self.container_concurrency >= 1, "container_concurrency must be >= 1");
+        anyhow::ensure!(self.junction_max_cores >= 1, "junction_max_cores must be >= 1");
+        anyhow::ensure!(
+            self.kernel_interference_min_ns <= self.kernel_interference_max_ns,
+            "interference bounds inverted"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        PlatformConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn ini_overrides_apply() {
+        let ini = Ini::parse("[platform]\nsyscall_ns = 900\nwire_ns = 5000\n").unwrap();
+        let cfg = PlatformConfig::from_ini(&ini).unwrap();
+        assert_eq!(cfg.syscall_ns, 900);
+        assert_eq!(cfg.wire_ns, 5000);
+        // Untouched fields keep defaults.
+        assert_eq!(cfg.context_switch_ns, PlatformConfig::default().context_switch_ns);
+    }
+
+    #[test]
+    fn unsectioned_keys_also_work() {
+        let ini = Ini::parse("syscall_ns = 700\n").unwrap();
+        let cfg = PlatformConfig::from_ini(&ini).unwrap();
+        assert_eq!(cfg.syscall_ns, 700);
+    }
+
+    #[test]
+    fn inverted_stacks_rejected() {
+        let ini = Ini::parse("junction_stack_msg_ns = 99999999\n").unwrap();
+        assert!(PlatformConfig::from_ini(&ini).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Container lifecycle state machine + containerd API cost model.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::simcore::{Rng, Time};
+
+pub type ContainerId = u32;
+
+/// containerd task states (subset faasd uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    Creating,
+    Running,
+    Paused,
+    Stopped,
+}
+
+/// One container (function replica) under containerd.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: ContainerId,
+    pub name: String,
+    pub state: ContainerState,
+    /// Local IP:port faasd's provider resolves to.
+    pub addr: (u32, u16),
+    /// Virtual time the container becomes Running.
+    pub ready_at: Time,
+    pub invocations: u64,
+}
+
+/// The containerd daemon: container table + API costs.
+///
+/// API calls model gRPC to the containerd socket *plus* containerd's own
+/// work (snapshotter, runc shim spawn for create; task-list scans for
+/// state queries). faasd's provider hits `state_query` on every invocation
+/// unless the metadata cache (§4) short-circuits it.
+pub struct Containerd {
+    p: Rc<PlatformConfig>,
+    rng: Rng,
+    containers: BTreeMap<ContainerId, Container>,
+    next_id: ContainerId,
+    next_port: u16,
+    // telemetry
+    pub creates: u64,
+    pub state_queries: u64,
+}
+
+impl Containerd {
+    pub fn new(platform: Rc<PlatformConfig>, rng: Rng) -> Self {
+        Containerd {
+            p: platform,
+            rng,
+            containers: BTreeMap::new(),
+            next_id: 0,
+            next_port: 31000,
+            creates: 0,
+            state_queries: 0,
+        }
+    }
+
+    /// Create + start a container. Returns (id, cold_start_duration): the
+    /// runc shim spawn, rootfs mount, netns + veth setup, and the function
+    /// process boot. Cold starts are heavy-tailed in practice (image cache
+    /// state, cgroup contention): ±40% spread around the configured cost.
+    pub fn create_and_start(&mut self, name: &str, now: Time) -> (ContainerId, Time) {
+        self.creates += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        let base = self.p.container_cold_start_ns;
+        let spread = base * 2 / 5;
+        let cold = base - spread / 2 + self.rng.below(spread + 1);
+        let port = self.next_port;
+        self.next_port += 1;
+        self.containers.insert(
+            id,
+            Container {
+                id,
+                name: name.to_string(),
+                state: ContainerState::Creating,
+                addr: (0x0A00_0002 + id, port), // 10.0.0.x
+                ready_at: now + cold,
+                invocations: 0,
+            },
+        );
+        (id, cold)
+    }
+
+    /// Mark a container Running (caller schedules this at `ready_at`).
+    pub fn mark_running(&mut self, id: ContainerId) {
+        let c = self.containers.get_mut(&id).expect("unknown container");
+        c.state = ContainerState::Running;
+    }
+
+    pub fn pause(&mut self, id: ContainerId) {
+        let c = self.containers.get_mut(&id).expect("unknown container");
+        assert_eq!(c.state, ContainerState::Running);
+        c.state = ContainerState::Paused;
+    }
+
+    pub fn resume(&mut self, id: ContainerId) {
+        let c = self.containers.get_mut(&id).expect("unknown container");
+        assert_eq!(c.state, ContainerState::Paused);
+        c.state = ContainerState::Running;
+    }
+
+    pub fn stop(&mut self, id: ContainerId) {
+        let c = self.containers.get_mut(&id).expect("unknown container");
+        c.state = ContainerState::Stopped;
+    }
+
+    pub fn get(&self, id: ContainerId) -> Option<&Container> {
+        self.containers.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: ContainerId) -> Option<&mut Container> {
+        self.containers.get_mut(&id)
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.containers.values().filter(|c| c.state == ContainerState::Running).count()
+    }
+
+    /// Latency of a provider→containerd state query (replica count, task
+    /// IP). The paper (§4): "requests to containerd can be slower than the
+    /// function invocation itself and can be on the critical path". Cost
+    /// scales mildly with table size (task-list scan) and carries jitter.
+    pub fn state_query(&mut self) -> Time {
+        self.state_queries += 1;
+        let base = self.p.provider_state_query_ns;
+        let scan = (self.containers.len() as Time) * 500; // per-entry scan cost
+        let jitter = self.rng.below(base / 2 + 1);
+        base + scan + jitter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::MILLIS;
+
+    fn daemon() -> Containerd {
+        Containerd::new(Rc::new(PlatformConfig::default()), Rng::new(21))
+    }
+
+    #[test]
+    fn create_start_lifecycle() {
+        let mut d = daemon();
+        let (id, cold) = d.create_and_start("fn-aes", 0);
+        assert!(cold > 100 * MILLIS, "cold start {cold}ns implausibly fast");
+        assert_eq!(d.get(id).unwrap().state, ContainerState::Creating);
+        d.mark_running(id);
+        assert_eq!(d.get(id).unwrap().state, ContainerState::Running);
+        assert_eq!(d.running_count(), 1);
+    }
+
+    #[test]
+    fn pause_resume_stop() {
+        let mut d = daemon();
+        let (id, _) = d.create_and_start("fn", 0);
+        d.mark_running(id);
+        d.pause(id);
+        assert_eq!(d.get(id).unwrap().state, ContainerState::Paused);
+        d.resume(id);
+        d.stop(id);
+        assert_eq!(d.get(id).unwrap().state, ContainerState::Stopped);
+        assert_eq!(d.running_count(), 0);
+    }
+
+    #[test]
+    fn unique_addresses_assigned() {
+        let mut d = daemon();
+        let (a, _) = d.create_and_start("f1", 0);
+        let (b, _) = d.create_and_start("f2", 0);
+        assert_ne!(d.get(a).unwrap().addr, d.get(b).unwrap().addr);
+    }
+
+    #[test]
+    fn state_query_is_slower_than_typical_invocation() {
+        let mut d = daemon();
+        d.create_and_start("f", 0);
+        // The paper's motivation for the provider cache: containerd round
+        // trips dwarf the ~100µs function invocation.
+        let q = d.state_query();
+        assert!(q > 500 * crate::simcore::MICROS, "state query {q}ns");
+        assert_eq!(d.state_queries, 1);
+    }
+
+    #[test]
+    fn cold_start_spread_is_bounded() {
+        let mut d = daemon();
+        let base = PlatformConfig::default().container_cold_start_ns;
+        for i in 0..200 {
+            let (_, cold) = d.create_and_start(&format!("f{i}"), 0);
+            assert!(cold >= base - base * 2 / 5);
+            assert!(cold <= base + base * 2 / 5);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! containerd baseline backend (paper §2.1.1).
+//!
+//! Models the mainline-faasd execution path: functions run as Linux
+//! containers deployed by containerd, orchestration services run as host
+//! processes, and *everything* traverses the kernel network stack. The
+//! pieces that matter for the evaluation:
+//!
+//! * **Container lifecycle** — create/start/pause/remove with a cold-start
+//!   cost in the hundreds of milliseconds (image present; no pull).
+//! * **containerd API latency** — the provider's state queries go to
+//!   containerd over gRPC and "can be slower than the function invocation
+//!   itself" (§4), which is why the provider cache exists.
+//! * **Per-container kernel networking** — every message into a container
+//!   additionally crosses a veth/bridge pair (software switching).
+
+mod lifecycle;
+
+pub use lifecycle::{Container, ContainerId, ContainerState, Containerd};

@@ -1,0 +1,497 @@
+//! Cluster layer: the rest of the paper's Figure 1 — a pool of worker
+//! servers behind the gateway, a **controller** that deploys function
+//! instances and autoscales them, and a **worker manager** that grows and
+//! shrinks the pool.
+//!
+//! faasd itself is single-node (§2.1.1), which is why the headline
+//! experiments (E1/E2) run on one worker; this module builds the
+//! general-architecture version (§2.1: "gateway … controller … worker
+//! manager … workers are also typically deployed on separate servers") so
+//! the repo covers the full system a deployment would need. The cluster
+//! experiments (`experiments::autoscale_table`, E8) exercise it.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::{Backend, ExperimentConfig, PlatformConfig};
+use crate::simcore::{Sim, Time, MILLIS, SECONDS};
+
+use super::pipeline::{FaasSim, RequestTiming};
+use super::registry::FunctionSpec;
+
+/// Scaling policy knobs for the controller (per function).
+#[derive(Debug, Clone)]
+pub struct ScalePolicy {
+    /// Target in-flight requests per replica before scaling up.
+    pub target_inflight_per_replica: f64,
+    /// Min/max replicas (min 0 enables scale-to-zero).
+    pub min_replicas: u32,
+    pub max_replicas: u32,
+    /// Idle duration after which a function scales to zero.
+    pub scale_to_zero_after: Time,
+    /// Controller reconcile interval.
+    pub interval: Time,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        ScalePolicy {
+            target_inflight_per_replica: 4.0,
+            min_replicas: 1,
+            max_replicas: 8,
+            scale_to_zero_after: 30 * SECONDS,
+            interval: 500 * MILLIS,
+        }
+    }
+}
+
+/// One worker server: an independent single-node `FaasSim` (its own core
+/// pool, scheduler, containerd, cost samplers) plus placement metadata.
+pub struct Worker {
+    pub id: u32,
+    pub sim_node: FaasSim,
+    /// Functions with a replica on this worker.
+    pub hosted: Vec<String>,
+    pub in_flight: Rc<RefCell<i64>>,
+}
+
+/// Replica placement strategies for the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Next worker in order.
+    RoundRobin,
+    /// Worker currently hosting the fewest replicas.
+    LeastLoaded,
+    /// First worker with room (bin packing; densest packing first).
+    BinPack,
+}
+
+/// Controller + worker-manager state for a multi-server deployment.
+pub struct Cluster {
+    platform: Rc<PlatformConfig>,
+    backend: Backend,
+    seed: u64,
+    compute_ns: Time,
+    pub workers: Vec<Worker>,
+    pub placement: Placement,
+    /// function → (spec, replica locations as worker indices)
+    functions: BTreeMap<String, (FunctionSpec, Vec<usize>)>,
+    /// function → in-flight count (controller's demand signal)
+    inflight: Rc<RefCell<BTreeMap<String, i64>>>,
+    /// function → last time a request completed (scale-to-zero signal)
+    last_active: Rc<RefCell<BTreeMap<String, Time>>>,
+    pub policy: ScalePolicy,
+    rr_next: usize,
+    // telemetry
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub scale_to_zeros: u64,
+}
+
+impl Cluster {
+    pub fn new(
+        backend: Backend,
+        n_workers: usize,
+        worker_cores: usize,
+        seed: u64,
+        compute_ns: Time,
+    ) -> Self {
+        assert!(n_workers >= 1);
+        let platform = Rc::new(PlatformConfig::default());
+        let workers = (0..n_workers)
+            .map(|i| {
+                let cfg = ExperimentConfig {
+                    backend,
+                    provider_cache: true,
+                    worker_cores,
+                    seed: seed.wrapping_add(i as u64 * 7919),
+                    function_compute_ns: compute_ns,
+                    instance_concurrency: 4,
+                };
+                Worker {
+                    id: i as u32,
+                    sim_node: FaasSim::new(&cfg, platform.clone()),
+                    hosted: Vec::new(),
+                    in_flight: Rc::new(RefCell::new(0)),
+                }
+            })
+            .collect();
+        Cluster {
+            platform,
+            backend,
+            seed,
+            compute_ns,
+            workers,
+            placement: Placement::LeastLoaded,
+            functions: BTreeMap::new(),
+            inflight: Rc::new(RefCell::new(BTreeMap::new())),
+            last_active: Rc::new(RefCell::new(BTreeMap::new())),
+            policy: ScalePolicy::default(),
+            rr_next: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+            scale_to_zeros: 0,
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    fn pick_worker(&mut self, _function: &str) -> usize {
+        match self.placement {
+            Placement::RoundRobin => {
+                let w = self.rr_next % self.workers.len();
+                self.rr_next += 1;
+                w
+            }
+            Placement::LeastLoaded => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.hosted.len())
+                .map(|(i, _)| i)
+                .unwrap(),
+            Placement::BinPack => {
+                // Densest worker that still has headroom (≤ 16 replicas).
+                self.workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| w.hosted.len() < 16)
+                    .max_by_key(|(_, w)| w.hosted.len())
+                    .map(|(i, _)| i)
+                    .unwrap_or_else(|| {
+                        // All full: fall back to least loaded.
+                        self.workers
+                            .iter()
+                            .enumerate()
+                            .min_by_key(|(_, w)| w.hosted.len())
+                            .map(|(i, _)| i)
+                            .unwrap()
+                    })
+            }
+        }
+    }
+
+    /// Deploy the first replica of a function. Returns its cold-start time.
+    pub fn deploy(&mut self, sim: &mut Sim, spec: FunctionSpec) -> Time {
+        let w = self.pick_worker(&spec.name);
+        let per_worker_name = spec.name.clone();
+        let cold = self.workers[w].sim_node.deploy(sim, spec.clone());
+        self.workers[w].hosted.push(per_worker_name);
+        self.functions.insert(spec.name.clone(), (spec, vec![w]));
+        cold
+    }
+
+    /// Add one replica on a (newly picked) worker. Returns cold time.
+    fn scale_up(&mut self, sim: &mut Sim, name: &str) -> Option<Time> {
+        let (spec, locs) = self.functions.get(name)?.clone();
+        if locs.len() as u32 >= self.policy.max_replicas {
+            return None;
+        }
+        let w = self.pick_worker(name);
+        // A worker can host at most one replica of a given function in
+        // this model (mirrors faasd's one-container-per-function/node).
+        if locs.contains(&w) {
+            // Try any worker without this function.
+            let alt = (0..self.workers.len()).find(|i| !locs.contains(i))?;
+            return self.scale_up_on(sim, name, alt, &spec);
+        }
+        self.scale_up_on(sim, name, w, &spec)
+    }
+
+    fn scale_up_on(
+        &mut self,
+        sim: &mut Sim,
+        name: &str,
+        w: usize,
+        spec: &FunctionSpec,
+    ) -> Option<Time> {
+        let mut replica_spec = spec.clone();
+        replica_spec.name = name.to_string();
+        let cold = self.workers[w].sim_node.deploy(sim, replica_spec);
+        self.workers[w].hosted.push(name.to_string());
+        self.functions.get_mut(name).unwrap().1.push(w);
+        self.scale_ups += 1;
+        Some(cold)
+    }
+
+    /// Remove the most recently added replica (keep ≥ min_replicas).
+    fn scale_down(&mut self, name: &str) -> bool {
+        let Some((_, locs)) = self.functions.get_mut(name) else { return false };
+        if locs.len() as u32 <= 1 {
+            return false;
+        }
+        let w = locs.pop().unwrap();
+        let hosted = &mut self.workers[w].hosted;
+        if let Some(pos) = hosted.iter().position(|h| h == name) {
+            hosted.remove(pos);
+        }
+        self.scale_downs += 1;
+        true
+    }
+
+    pub fn replica_count(&self, name: &str) -> u32 {
+        self.functions.get(name).map(|(_, l)| l.len() as u32).unwrap_or(0)
+    }
+
+    /// Submit one invocation; the cluster-level gateway picks the replica's
+    /// worker (least in-flight first — the "stateless load-balancer" of
+    /// Figure 1).
+    pub fn submit<F: FnOnce(&mut Sim, RequestTiming) + 'static>(
+        &mut self,
+        sim: &mut Sim,
+        function: &str,
+        done: F,
+    ) {
+        let (_, locs) = self.functions.get(function).expect("unknown function").clone();
+        // Route to the replica worker with the least in-flight.
+        let w = *locs
+            .iter()
+            .min_by_key(|&&i| *self.workers[i].in_flight.borrow())
+            .expect("no replicas");
+        *self.workers[w].in_flight.borrow_mut() += 1;
+        {
+            let mut inf = self.inflight.borrow_mut();
+            *inf.entry(function.to_string()).or_insert(0) += 1;
+        }
+        let worker_inflight = self.workers[w].in_flight.clone();
+        let fn_inflight = self.inflight.clone();
+        let last_active = self.last_active.clone();
+        let fname = function.to_string();
+        self.workers[w].sim_node.submit(sim, function, move |sim, t| {
+            *worker_inflight.borrow_mut() -= 1;
+            *fn_inflight.borrow_mut().get_mut(&fname).unwrap() -= 1;
+            last_active.borrow_mut().insert(fname.clone(), sim.now());
+            done(sim, t);
+        });
+    }
+
+    /// One controller reconcile pass (§2.1 "outside of the critical path,
+    /// the controller will perform autoscaling operations"). Call this on
+    /// a timer (see [`Cluster::start_controller`]).
+    pub fn reconcile(&mut self, sim: &mut Sim) {
+        let names: Vec<String> = self.functions.keys().cloned().collect();
+        for name in names {
+            let inflight = *self.inflight.borrow().get(&name).unwrap_or(&0);
+            let replicas = self.replica_count(&name).max(1);
+            let per = inflight as f64 / replicas as f64;
+            if per > self.policy.target_inflight_per_replica
+                && replicas < self.policy.max_replicas
+            {
+                self.scale_up(sim, &name);
+            } else if per < self.policy.target_inflight_per_replica / 4.0 && replicas > 1 {
+                let idle_since =
+                    self.last_active.borrow().get(&name).copied().unwrap_or(0);
+                if inflight == 0 && sim.now().saturating_sub(idle_since) > self.policy.interval {
+                    self.scale_down(&name);
+                }
+            }
+        }
+    }
+
+    /// Drive `reconcile` on the policy interval for `horizon` virtual time.
+    /// (Self-rescheduling closures would keep the sim alive forever, so the
+    /// controller schedules a fixed tick train up front.)
+    pub fn start_controller(cluster: Rc<RefCell<Cluster>>, sim: &mut Sim, horizon: Time) {
+        let interval = cluster.borrow().policy.interval;
+        let mut t = sim.now() + interval;
+        let end = sim.now() + horizon;
+        while t < end {
+            let c = cluster.clone();
+            sim.at(t, move |sim| c.borrow_mut().reconcile(sim));
+            t += interval;
+        }
+    }
+
+    /// Total cores in the pool (worker-manager capacity view).
+    pub fn total_cores(&self) -> usize {
+        self.workers.len() * 10
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Grow the pool by one worker (worker-manager action, §2.1: "adding
+    /// more workers to the pool via the worker manager if there is
+    /// insufficient capacity").
+    pub fn add_worker(&mut self, worker_cores: usize) -> u32 {
+        let i = self.workers.len();
+        let cfg = ExperimentConfig {
+            backend: self.backend,
+            provider_cache: true,
+            worker_cores,
+            seed: self.seed.wrapping_add(i as u64 * 7919),
+            function_compute_ns: self.compute_ns,
+            instance_concurrency: 4,
+        };
+        self.workers.push(Worker {
+            id: i as u32,
+            sim_node: FaasSim::new(&cfg, self.platform.clone()),
+            hosted: Vec::new(),
+            in_flight: Rc::new(RefCell::new(0)),
+        });
+        i as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faas::RuntimeKind;
+    use crate::workload::RunResult;
+
+    fn cluster(backend: Backend, n: usize) -> (Sim, Rc<RefCell<Cluster>>) {
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(backend, n, 10, 1, 100_000);
+        c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS);
+        (sim, Rc::new(RefCell::new(c)))
+    }
+
+    #[test]
+    fn deploy_places_one_replica() {
+        let (_, c) = cluster(Backend::Junctiond, 3);
+        assert_eq!(c.borrow().replica_count("aes"), 1);
+        let hosted: usize = c.borrow().workers.iter().map(|w| w.hosted.len()).sum();
+        assert_eq!(hosted, 1);
+    }
+
+    #[test]
+    fn submit_completes_across_cluster() {
+        let (mut sim, c) = cluster(Backend::Junctiond, 3);
+        let done = Rc::new(RefCell::new(0u32));
+        for _ in 0..20 {
+            let d = done.clone();
+            c.borrow_mut().submit(&mut sim, "aes", move |_, _| *d.borrow_mut() += 1);
+        }
+        sim.run_to_completion();
+        assert_eq!(*done.borrow(), 20);
+    }
+
+    #[test]
+    fn controller_elastic_cycle_up_then_down() {
+        let (mut sim, c) = cluster(Backend::Containerd, 4);
+        Cluster::start_controller(c.clone(), &mut sim, 10 * SECONDS);
+        // Sustained heavy load (8k rps > one containerd replica's ~5.5k
+        // capacity) for 3 s: in-flight piles up until the controller adds
+        // replicas; after the burst the idle path sheds them again.
+        let mut t = sim.now();
+        for _ in 0..24_000 {
+            t += 125_000; // 8k rps offered
+            let c2 = c.clone();
+            sim.at(t, move |sim| {
+                c2.borrow_mut().submit(sim, "aes", |_, _| {});
+            });
+        }
+        sim.run_to_completion();
+        let cl = c.borrow();
+        assert!(cl.scale_ups >= 1, "controller never scaled up");
+        assert!(cl.scale_downs >= 1, "controller never scaled back down");
+        assert_eq!(cl.replica_count("aes"), 1, "should return to baseline when idle");
+    }
+
+    #[test]
+    fn controller_scales_down_when_idle() {
+        let (mut sim, c) = cluster(Backend::Junctiond, 4);
+        // Manually scale to 3 replicas, then leave idle with controller on.
+        {
+            let mut cl = c.borrow_mut();
+            cl.scale_up(&mut sim, "aes");
+            cl.scale_up(&mut sim, "aes");
+            assert_eq!(cl.replica_count("aes"), 3);
+        }
+        sim.run_until(sim.now() + SECONDS);
+        Cluster::start_controller(c.clone(), &mut sim, 20 * SECONDS);
+        sim.run_to_completion();
+        assert!(c.borrow().replica_count("aes") < 3, "idle function should shed replicas");
+        assert!(c.borrow().scale_downs > 0);
+    }
+
+    #[test]
+    fn scale_up_respects_max_replicas() {
+        let (mut sim, c) = cluster(Backend::Junctiond, 2);
+        let mut cl = c.borrow_mut();
+        cl.policy.max_replicas = 2;
+        assert!(cl.scale_up(&mut sim, "aes").is_some());
+        assert!(cl.scale_up(&mut sim, "aes").is_none(), "must stop at max_replicas");
+    }
+
+    #[test]
+    fn worker_manager_grows_pool() {
+        let (_, c) = cluster(Backend::Junctiond, 2);
+        let mut cl = c.borrow_mut();
+        assert_eq!(cl.worker_count(), 2);
+        cl.add_worker(10);
+        assert_eq!(cl.worker_count(), 3);
+        assert_eq!(cl.total_cores(), 30);
+    }
+
+    #[test]
+    fn placement_least_loaded_spreads() {
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Junctiond, 3, 10, 1, 100_000);
+        c.placement = Placement::LeastLoaded;
+        for i in 0..6 {
+            c.deploy(&mut sim, FunctionSpec::new(&format!("f{i}"), "aes600", RuntimeKind::Go));
+        }
+        let counts: Vec<usize> = c.workers.iter().map(|w| w.hosted.len()).collect();
+        assert_eq!(counts, vec![2, 2, 2], "least-loaded should balance: {counts:?}");
+    }
+
+    #[test]
+    fn placement_binpack_fills_densely() {
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Junctiond, 3, 10, 1, 1_000);
+        c.placement = Placement::BinPack;
+        for i in 0..6 {
+            c.deploy(&mut sim, FunctionSpec::new(&format!("f{i}"), "aes600", RuntimeKind::Go));
+        }
+        let max = c.workers.iter().map(|w| w.hosted.len()).max().unwrap();
+        assert!(max >= 5, "bin-pack should concentrate: {:?}",
+            c.workers.iter().map(|w| w.hosted.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cluster_throughput_scales_with_workers() {
+        // Fixed offered load far above one containerd worker's capacity:
+        // more workers with pre-scaled replicas → more goodput.
+        let run = |n_workers: usize| -> f64 {
+            let mut sim = Sim::new();
+            let mut c = Cluster::new(Backend::Containerd, n_workers, 10, 1, 100_000);
+            c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+            for _ in 1..n_workers {
+                c.scale_up(&mut sim, "aes");
+            }
+            sim.run_until(SECONDS);
+            let c = Rc::new(RefCell::new(c));
+            let result = Rc::new(RefCell::new(RunResult::default()));
+            let mut t = sim.now();
+            let end = t + SECONDS;
+            let mut n = 0u64;
+            while t < end {
+                t += 33_333; // 30k rps offered — saturates up to ~5 workers
+                n += 1;
+                let c2 = c.clone();
+                let r2 = result.clone();
+                let end2 = end;
+                sim.at(t, move |sim| {
+                    c2.borrow_mut().submit(sim, "aes", move |sim, _| {
+                        if sim.now() <= end2 {
+                            r2.borrow_mut().completed_in_window += 1;
+                        }
+                    });
+                });
+            }
+            let _ = n;
+            sim.run_to_completion();
+            let r = result.borrow();
+            r.completed_in_window as f64
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(four > 2.5 * one, "4 workers should ≫ 1: {one} vs {four}");
+    }
+}

@@ -1,0 +1,203 @@
+//! DES counting semaphore: per-instance concurrency control.
+//!
+//! A containerd function container admits `container_concurrency` requests
+//! at once (classic-watchdog fork model ≈ 1); a Junction instance admits
+//! `concurrency()` (uProcs × threads). Excess requests queue FIFO at the
+//! instance — this queueing is what bends the Fig. 6 latency curve at the
+//! backend-specific knee.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use crate::simcore::Sim;
+
+type Waiter = Box<dyn FnOnce(&mut Sim)>;
+
+struct GateInner {
+    capacity: u32,
+    in_use: u32,
+    waiters: VecDeque<Waiter>,
+    max_waiters: usize,
+    admitted: u64,
+}
+
+/// Cloneable handle to a concurrency gate.
+#[derive(Clone)]
+pub struct Gate {
+    inner: Rc<RefCell<GateInner>>,
+}
+
+impl Gate {
+    pub fn new(capacity: u32) -> Self {
+        assert!(capacity >= 1);
+        Gate {
+            inner: Rc::new(RefCell::new(GateInner {
+                capacity,
+                in_use: 0,
+                waiters: VecDeque::new(),
+                max_waiters: 0,
+                admitted: 0,
+            })),
+        }
+    }
+
+    /// Raise (or lower) capacity at runtime (junctiond scale-up). Lowering
+    /// never revokes admitted requests, matching the real system.
+    pub fn set_capacity(&self, sim: &mut Sim, capacity: u32) {
+        assert!(capacity >= 1);
+        self.inner.borrow_mut().capacity = capacity;
+        // Newly freed slots admit waiters.
+        self.pump(sim);
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.inner.borrow().capacity
+    }
+
+    pub fn in_use(&self) -> u32 {
+        self.inner.borrow().in_use
+    }
+
+    pub fn waiting(&self) -> usize {
+        self.inner.borrow().waiters.len()
+    }
+
+    pub fn max_waiting(&self) -> usize {
+        self.inner.borrow().max_waiters
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.inner.borrow().admitted
+    }
+
+    /// Acquire a slot; `go` runs immediately (same virtual instant) if a
+    /// slot is free, otherwise when one frees up.
+    pub fn acquire<F: FnOnce(&mut Sim) + 'static>(&self, sim: &mut Sim, go: F) {
+        let mut g = self.inner.borrow_mut();
+        if g.in_use < g.capacity {
+            g.in_use += 1;
+            g.admitted += 1;
+            drop(g);
+            go(sim);
+        } else {
+            g.waiters.push_back(Box::new(go));
+            let w = g.waiters.len();
+            if w > g.max_waiters {
+                g.max_waiters = w;
+            }
+        }
+    }
+
+    /// Release a slot, admitting the next waiter if any.
+    pub fn release(&self, sim: &mut Sim) {
+        let next = {
+            let mut g = self.inner.borrow_mut();
+            assert!(g.in_use > 0, "release without acquire");
+            match g.waiters.pop_front() {
+                Some(w) => {
+                    g.admitted += 1;
+                    Some(w)
+                }
+                None => {
+                    g.in_use -= 1;
+                    None
+                }
+            }
+        };
+        if let Some(w) = next {
+            w(sim);
+        }
+    }
+
+    fn pump(&self, sim: &mut Sim) {
+        loop {
+            let next = {
+                let mut g = self.inner.borrow_mut();
+                if g.in_use < g.capacity && !g.waiters.is_empty() {
+                    g.in_use += 1;
+                    g.admitted += 1;
+                    g.waiters.pop_front()
+                } else {
+                    None
+                }
+            };
+            match next {
+                Some(w) => w(sim),
+                None => break,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn serializes_at_capacity_one() {
+        let mut sim = Sim::new();
+        let gate = Gate::new(1);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..3u32 {
+            let gate2 = gate.clone();
+            let log = log.clone();
+            gate.acquire(&mut sim, move |sim| {
+                let log = log.clone();
+                let gate3 = gate2.clone();
+                sim.after(10, move |sim| {
+                    log.borrow_mut().push((i, sim.now()));
+                    gate3.release(sim);
+                });
+            });
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![(0, 10), (1, 20), (2, 30)]);
+    }
+
+    #[test]
+    fn capacity_two_overlaps() {
+        let mut sim = Sim::new();
+        let gate = Gate::new(2);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..4u32 {
+            let gate2 = gate.clone();
+            let log = log.clone();
+            gate.acquire(&mut sim, move |sim| {
+                let log = log.clone();
+                let gate3 = gate2.clone();
+                sim.after(10, move |sim| {
+                    log.borrow_mut().push((i, sim.now()));
+                    gate3.release(sim);
+                });
+            });
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![(0, 10), (1, 10), (2, 20), (3, 20)]);
+    }
+
+    #[test]
+    fn scale_up_admits_waiters() {
+        let mut sim = Sim::new();
+        let gate = Gate::new(1);
+        let started = Rc::new(RefCell::new(0u32));
+        for _ in 0..3 {
+            let started = started.clone();
+            gate.acquire(&mut sim, move |_| *started.borrow_mut() += 1);
+        }
+        assert_eq!(*started.borrow(), 1);
+        assert_eq!(gate.waiting(), 2);
+        gate.set_capacity(&mut sim, 3);
+        assert_eq!(*started.borrow(), 3);
+        assert_eq!(gate.waiting(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "release without acquire")]
+    fn release_underflow_panics() {
+        let mut sim = Sim::new();
+        Gate::new(1).release(&mut sim);
+    }
+}

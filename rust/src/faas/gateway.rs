@@ -1,0 +1,78 @@
+//! The faasd front-end gateway: auth, route lookup, replica round-robin.
+
+use std::collections::BTreeMap;
+
+/// Gateway routing state + counters.
+#[derive(Debug, Default)]
+pub struct Gateway {
+    rr: BTreeMap<String, usize>,
+    pub requests: u64,
+    pub auth_failures: u64,
+    pub route_misses: u64,
+}
+
+impl Gateway {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Authenticate a request (stub: a shared-secret check; the cost is
+    /// part of `gateway_cpu_ns` in the platform model).
+    pub fn authenticate(&mut self, token: &str) -> bool {
+        let ok = !token.is_empty();
+        if !ok {
+            self.auth_failures += 1;
+        }
+        ok
+    }
+
+    /// Pick a replica for `name` by round-robin over `n_replicas`.
+    /// Returns `None` (and counts a miss) when the function is unknown or
+    /// has no replicas — the caller surfaces a 404/503.
+    pub fn route(&mut self, name: &str, n_replicas: u32) -> Option<u32> {
+        self.requests += 1;
+        if n_replicas == 0 {
+            self.route_misses += 1;
+            return None;
+        }
+        let ctr = self.rr.entry(name.to_string()).or_insert(0);
+        let pick = (*ctr % n_replicas as usize) as u32;
+        *ctr += 1;
+        Some(pick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut gw = Gateway::new();
+        let picks: Vec<u32> = (0..6).map(|_| gw.route("f", 3).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn independent_counters_per_function() {
+        let mut gw = Gateway::new();
+        assert_eq!(gw.route("a", 2), Some(0));
+        assert_eq!(gw.route("b", 2), Some(0));
+        assert_eq!(gw.route("a", 2), Some(1));
+    }
+
+    #[test]
+    fn zero_replicas_is_miss() {
+        let mut gw = Gateway::new();
+        assert_eq!(gw.route("gone", 0), None);
+        assert_eq!(gw.route_misses, 1);
+    }
+
+    #[test]
+    fn auth_stub() {
+        let mut gw = Gateway::new();
+        assert!(gw.authenticate("secret"));
+        assert!(!gw.authenticate(""));
+        assert_eq!(gw.auth_failures, 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! The faasd-shaped FaaS runtime (paper §2.1, Figure 2).
+//!
+//! faasd's invocation path is: client → **gateway** → **provider** →
+//! function instance, with every hop a gRPC-ish RPC. This module carries
+//! the runtime pieces that are backend-agnostic:
+//!
+//! * [`Registry`] / [`FunctionSpec`] — deployed function metadata.
+//! * [`Gateway`] — authentication stub + replica round-robin routing.
+//! * [`Provider`] — resolve/scale logic with the §4 **metadata cache**
+//!   (replica count + instance address cached so containerd/junctiond
+//!   state queries leave the critical path).
+//! * [`Gate`] — DES counting semaphore modeling per-instance concurrency.
+//! * [`pipeline`] — the discrete-event invocation pipeline for both
+//!   backends (the simulation counterpart of `server/` which runs the
+//!   same topology on real sockets).
+
+pub mod cluster;
+mod gate;
+mod gateway;
+pub mod pipeline;
+mod provider;
+mod registry;
+
+pub use cluster::{Cluster, Placement, ScalePolicy, Worker};
+pub use gate::Gate;
+pub use gateway::Gateway;
+pub use pipeline::{CostTelemetry, FaasSim, RequestTiming};
+pub use provider::{CacheOutcome, Provider, ReplicaMeta};
+pub use registry::{FunctionSpec, Registry, RuntimeKind, ScaleMode};

@@ -1,0 +1,661 @@
+//! The discrete-event invocation pipeline: client → gateway → provider →
+//! function instance → provider → gateway → client, for both backends.
+//!
+//! This is the simulation counterpart of the paper's Figure 2/4 topology.
+//! Each component pass is one CPU *segment* on the shared worker core
+//! pool, prefixed by that backend's wakeup/delivery latency:
+//!
+//! * **containerd**: segments pay kernel RX/TX (IRQ + softirq + stack +
+//!   wakeup + syscalls), veth hops into the container, heavy-tailed
+//!   scheduling noise, and rare interference bursts — all from
+//!   [`crate::oskernel::KernelCosts`].
+//! * **junctiond**: segments pay the Junction user-space stack and the
+//!   central scheduler's wakeup/grant path — from
+//!   [`crate::junction::BypassCosts`] and the live
+//!   [`crate::junction::Scheduler`] instance inside [`crate::junctiond::Junctiond`].
+//!
+//! Function compute is *real*: the default segment cost comes from PJRT
+//! calibration of the AES-600B artifact (`runtime::calibrate`), so the
+//! simulated function body costs what the actual lowered HLO costs on
+//! this machine.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::{Backend, ExperimentConfig, PlatformConfig};
+use crate::containerd_sim::{ContainerId, Containerd};
+use crate::junction::{BypassCosts, InstanceId};
+use crate::junctiond::Junctiond;
+use crate::oskernel::KernelCosts;
+use crate::simcore::{CorePool, Rng, Sim, Time};
+
+use super::{CacheOutcome, FunctionSpec, Gate, Gateway, Provider, Registry, ReplicaMeta};
+
+/// Per-request timestamps (virtual ns).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestTiming {
+    /// Client issued the request.
+    pub submit: Time,
+    /// Gateway received it (start of the gateway-observed window).
+    pub gateway_in: Time,
+    /// Function instance admitted the request (exec window start).
+    pub exec_start: Time,
+    /// Function instance finished (exec window end).
+    pub exec_end: Time,
+    /// Client received the response.
+    pub done: Time,
+}
+
+impl RequestTiming {
+    /// Client-observed end-to-end latency.
+    pub fn e2e(&self) -> Time {
+        self.done - self.submit
+    }
+    /// Gateway-observed latency (what the paper's Fig. 5 plots).
+    pub fn gateway_observed(&self) -> Time {
+        self.done.saturating_sub(self.gateway_in)
+    }
+    /// Function execution latency (Fig. 5's second series).
+    pub fn exec(&self) -> Time {
+        self.exec_end - self.exec_start
+    }
+}
+
+/// One deployed replica's runtime handle.
+enum ReplicaHandle {
+    Container(ContainerId),
+    Junction(InstanceId),
+}
+
+struct DeployedFn {
+    #[allow(dead_code)] // retained for monitoring/debug dumps
+    spec: FunctionSpec,
+    replicas: Vec<(ReplicaHandle, Gate)>,
+    ready_at: Time,
+    meta: ReplicaMeta,
+}
+
+struct World {
+    platform: Rc<PlatformConfig>,
+    backend: Backend,
+    cores: CorePool,
+    // Per-component cost samplers (independent RNG streams).
+    kc_gw: KernelCosts,
+    kc_prov: KernelCosts,
+    kc_fn: KernelCosts,
+    bc_gw: BypassCosts,
+    bc_prov: BypassCosts,
+    bc_fn: BypassCosts,
+    // Backends.
+    jd: Junctiond,
+    containerd: Containerd,
+    // faasd services.
+    gateway: Gateway,
+    provider: Provider,
+    registry: Registry,
+    functions: BTreeMap<String, DeployedFn>,
+    // The services' own junction instances (§3: services run in instances).
+    gw_inst: Option<InstanceId>,
+    prov_inst: Option<InstanceId>,
+    compute_ns: Time,
+    pub completed: u64,
+}
+
+impl World {
+    /// Wakeup latency + in-flight accounting for a service instance on the
+    /// junction path; no-op for containerd.
+    fn service_wakeup(&mut self, inst: Option<InstanceId>) -> Time {
+        match (self.backend, inst) {
+            (Backend::Junctiond, Some(id)) => self.jd.scheduler.packet_arrival(id).latency(),
+            _ => 0,
+        }
+    }
+
+    fn service_done(&mut self, inst: Option<InstanceId>) {
+        if let (Backend::Junctiond, Some(id)) = (self.backend, inst) {
+            self.jd.scheduler.request_done(id);
+        }
+    }
+}
+
+/// The simulated faasd deployment (one worker server + a client machine).
+#[derive(Clone)]
+pub struct FaasSim {
+    w: Rc<RefCell<World>>,
+}
+
+impl FaasSim {
+    pub fn new(cfg: &ExperimentConfig, platform: Rc<PlatformConfig>) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let cores = CorePool::new(cfg.worker_cores);
+        let mut jd = Junctiond::new(platform.clone(), cfg.worker_cores as u32, rng.fork());
+        let containerd = Containerd::new(platform.clone(), rng.fork());
+        let mut gw_inst = None;
+        let mut prov_inst = None;
+        if cfg.backend == Backend::Junctiond {
+            // The scheduler busy-polls on a dedicated, reserved core (§2.2.1).
+            cores.reserve(1);
+            // Gateway and provider run inside Junction instances (§3).
+            gw_inst = Some(jd.deploy_service("gateway", 2).0);
+            prov_inst = Some(jd.deploy_service("provider", 2).0);
+        }
+        let world = World {
+            platform: platform.clone(),
+            backend: cfg.backend,
+            cores,
+            kc_gw: KernelCosts::new(platform.clone(), rng.fork()),
+            kc_prov: KernelCosts::new(platform.clone(), rng.fork()),
+            kc_fn: KernelCosts::new(platform.clone(), rng.fork()),
+            bc_gw: BypassCosts::new(platform.clone(), rng.fork()).with_sched_tail(),
+            bc_prov: BypassCosts::new(platform.clone(), rng.fork()).with_sched_tail(),
+            bc_fn: BypassCosts::new(platform.clone(), rng.fork()),
+            jd,
+            containerd,
+            gateway: Gateway::new(),
+            provider: Provider::new(cfg.provider_cache),
+            registry: Registry::new(),
+            functions: BTreeMap::new(),
+            gw_inst,
+            prov_inst,
+            compute_ns: cfg.function_compute_ns,
+            completed: 0,
+        };
+        FaasSim { w: Rc::new(RefCell::new(world)) }
+    }
+
+    /// Deploy a function on the active backend. Returns the cold-start
+    /// duration; the function accepts traffic from `sim.now() + cold`.
+    pub fn deploy(&self, sim: &mut Sim, spec: FunctionSpec) -> Time {
+        let mut w = self.w.borrow_mut();
+        w.registry.deploy(spec.clone()).expect("duplicate deploy");
+        let now = sim.now();
+        let (replicas, cold) = match w.backend {
+            Backend::Containerd => {
+                let conc = w.platform.container_concurrency as u32;
+                let (cid, cold) = w.containerd.create_and_start(&spec.name, now);
+                (vec![(ReplicaHandle::Container(cid), Gate::new(conc))], cold)
+            }
+            Backend::Junctiond => {
+                let (ids, cold) = w.jd.deploy_function(&spec);
+                let reps = ids
+                    .iter()
+                    .map(|id| {
+                        let conc = w.jd.concurrency_of(*id, &spec);
+                        (ReplicaHandle::Junction(*id), Gate::new(conc))
+                    })
+                    .collect();
+                (reps, cold)
+            }
+        };
+        let n_replicas = replicas.len() as u32;
+        let addr = match &replicas[0].0 {
+            ReplicaHandle::Container(cid) => w.containerd.get(*cid).unwrap().addr,
+            ReplicaHandle::Junction(id) => {
+                let cfg = w.jd.config_of(*id).unwrap();
+                (cfg.ip, cfg.port)
+            }
+        };
+        let deployed = DeployedFn {
+            spec: spec.clone(),
+            replicas,
+            ready_at: now + cold,
+            meta: ReplicaMeta { replicas: n_replicas, addr },
+        };
+        w.functions.insert(spec.name.clone(), deployed);
+        // Containers flip to Running at ready_at.
+        if w.backend == Backend::Containerd {
+            let this = self.clone();
+            let name = spec.name.clone();
+            drop(w);
+            sim.at(now + cold, move |_| {
+                let mut w = this.w.borrow_mut();
+                let ids: Vec<ContainerId> = w.functions[&name]
+                    .replicas
+                    .iter()
+                    .map(|(h, _)| match h {
+                        ReplicaHandle::Container(c) => *c,
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                for c in ids {
+                    w.containerd.mark_running(c);
+                }
+            });
+        }
+        cold
+    }
+
+    /// Submit one invocation; `done` fires at the client with the timings.
+    pub fn submit<F: FnOnce(&mut Sim, RequestTiming) + 'static>(
+        &self,
+        sim: &mut Sim,
+        function: &str,
+        done: F,
+    ) {
+        let timing = RequestTiming { submit: sim.now(), ..Default::default() };
+        let this = self.clone();
+        let name = function.to_string();
+        let wire = self.w.borrow().platform.wire_ns;
+        // client → worker wire hop
+        sim.after(wire, move |sim| stage_gateway(this, sim, name, timing, Box::new(done)));
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.w.borrow().completed
+    }
+
+    pub fn cores(&self) -> CorePool {
+        self.w.borrow().cores.clone()
+    }
+
+    pub fn provider_stats(&self) -> (u64, u64) {
+        let w = self.w.borrow();
+        (w.provider.hits, w.provider.misses)
+    }
+
+    pub fn scheduler_stats(&self) -> crate::junction::SchedulerStats {
+        self.w.borrow().jd.scheduler.stats
+    }
+
+    /// Virtual time at which `function` becomes warm.
+    pub fn ready_at(&self, function: &str) -> Time {
+        self.w.borrow().functions[function].ready_at
+    }
+
+    /// Host-kernel vs user-space interaction counters, summed over all
+    /// components — the quantitative side of the paper's §3 isolation
+    /// argument (how much trusted host-kernel surface each invocation
+    /// exercises).
+    pub fn cost_telemetry(&self) -> CostTelemetry {
+        let w = self.w.borrow();
+        CostTelemetry {
+            host_syscalls: w.kc_gw.syscalls + w.kc_prov.syscalls + w.kc_fn.syscalls,
+            host_wakeups: w.kc_gw.wakeups + w.kc_prov.wakeups + w.kc_fn.wakeups,
+            kernel_msgs: w.kc_gw.msgs_recv
+                + w.kc_gw.msgs_sent
+                + w.kc_prov.msgs_recv
+                + w.kc_prov.msgs_sent
+                + w.kc_fn.msgs_recv
+                + w.kc_fn.msgs_sent,
+            user_syscalls: w.bc_gw.syscalls + w.bc_prov.syscalls + w.bc_fn.syscalls,
+            bypass_msgs: w.bc_gw.msgs_recv
+                + w.bc_gw.msgs_sent
+                + w.bc_prov.msgs_recv
+                + w.bc_prov.msgs_sent
+                + w.bc_fn.msgs_recv
+                + w.bc_fn.msgs_sent,
+        }
+    }
+}
+
+/// Aggregated host-kernel vs user-space interaction counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostTelemetry {
+    /// Syscalls that trapped into the host kernel.
+    pub host_syscalls: u64,
+    /// Host-kernel scheduler wakeups.
+    pub host_wakeups: u64,
+    /// Messages that traversed the host kernel network stack.
+    pub kernel_msgs: u64,
+    /// Syscalls handled inside Junction instances (user space).
+    pub user_syscalls: u64,
+    /// Messages that went through per-instance bypass queues.
+    pub bypass_msgs: u64,
+}
+
+type DoneFn = Box<dyn FnOnce(&mut Sim, RequestTiming)>;
+
+/// Gateway pass: auth + route + forward to the provider.
+fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming, done: DoneFn) {
+    t.gateway_in = sim.now();
+    let (lat, cpu, cores) = {
+        let mut w = fs.w.borrow_mut();
+        let gw_inst = w.gw_inst;
+        let lat = w.service_wakeup(gw_inst);
+        let p = w.platform.clone();
+        let n_replicas = w.functions.get(&name).map(|f| f.meta.replicas).unwrap_or(0);
+        w.gateway.authenticate("token");
+        let routed = w.gateway.route(&name, n_replicas);
+        assert!(routed.is_some(), "function '{name}' not deployed");
+        let cpu = match w.backend {
+            Backend::Containerd => {
+                w.kc_gw.recv_msg()
+                    + p.gateway_cpu_ns
+                    + p.rpc_serde_ns
+                    + w.kc_gw.send_msg()
+                    + w.kc_gw.segment_interference()
+            }
+            Backend::Junctiond => {
+                w.bc_gw.recv_msg() + p.gateway_cpu_ns + p.rpc_serde_ns + w.bc_gw.send_msg()
+            }
+        };
+        let lat = lat + w.bc_gw.sched_tail_delay();
+        (lat, cpu, w.cores.clone())
+    };
+    sim.after(lat, move |sim| {
+        let fs2 = fs.clone();
+        cores.run(sim, cpu, move |sim| {
+            {
+                let mut w = fs2.w.borrow_mut();
+                let gw_inst = w.gw_inst;
+                w.service_done(gw_inst);
+            }
+            stage_provider(fs2, sim, name, t, done);
+        });
+    });
+}
+
+/// Provider pass: resolve (cache or backend state query) + forward.
+fn stage_provider(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
+    let (lat, query_lat, cpu, cores) = {
+        let mut w = fs.w.borrow_mut();
+        let prov_inst = w.prov_inst;
+        let lat = w.service_wakeup(prov_inst);
+        let p = w.platform.clone();
+        // §4 metadata cache: a miss pays the backend state query.
+        let query_lat = match w.provider.resolve(&name) {
+            CacheOutcome::Hit(_) => 0,
+            CacheOutcome::Miss => {
+                let meta = w.functions[&name].meta;
+                w.provider.fill(&name, meta);
+                match w.backend {
+                    Backend::Containerd => w.containerd.state_query(),
+                    Backend::Junctiond => p.junctiond_state_query_ns,
+                }
+            }
+        };
+        let cpu = match w.backend {
+            Backend::Containerd => {
+                // Send crosses the veth into the container's netns.
+                w.kc_prov.recv_msg()
+                    + p.provider_cpu_ns
+                    + p.rpc_serde_ns
+                    + w.kc_prov.send_msg()
+                    + w.kc_prov.veth_hop()
+                    + w.kc_prov.segment_interference()
+            }
+            Backend::Junctiond => {
+                w.bc_prov.recv_msg() + p.provider_cpu_ns + p.rpc_serde_ns + w.bc_prov.send_msg()
+            }
+        };
+        let lat = lat + w.bc_prov.sched_tail_delay();
+        (lat, query_lat, cpu, w.cores.clone())
+    };
+    sim.after(lat + query_lat, move |sim| {
+        let fs2 = fs.clone();
+        cores.run(sim, cpu, move |sim| {
+            {
+                let mut w = fs2.w.borrow_mut();
+                let prov_inst = w.prov_inst;
+                w.service_done(prov_inst);
+            }
+            stage_function(fs2, sim, name, t, done);
+        });
+    });
+}
+
+/// Function pass: concurrency gate, then the exec segment.
+fn stage_function(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
+    // Pick the replica (round-robin mirrors the gateway's choice; per-
+    // replica gates model per-instance concurrency).
+    let (gate, handle_idx, ready_at) = {
+        let w = fs.w.borrow();
+        let f = &w.functions[&name];
+        let idx = (w.gateway.requests as usize) % f.replicas.len();
+        let g = f.replicas[idx].1.clone();
+        let ready = f.ready_at;
+        (g, idx, ready)
+    };
+    // Cold start: requests arriving early wait for instance readiness.
+    let wait = ready_at.saturating_sub(sim.now());
+    let gate2 = gate.clone();
+    sim.after(wait, move |sim| {
+        gate2.acquire(sim, move |sim| {
+            exec_segment(fs, sim, name, handle_idx, gate, t, done);
+        });
+    });
+}
+
+/// The exec segment inside the instance (the Fig. 5 "function execution
+/// latency" window).
+fn exec_segment(
+    fs: FaasSim,
+    sim: &mut Sim,
+    name: String,
+    replica: usize,
+    gate: Gate,
+    mut t: RequestTiming,
+    done: DoneFn,
+) {
+    t.exec_start = sim.now();
+    let (lat, cpu, cores, inst) = {
+        let mut w = fs.w.borrow_mut();
+        let p = w.platform.clone();
+        let nsys = p.function_syscalls as u32;
+        let compute = w.compute_ns;
+        match w.backend {
+            Backend::Containerd => {
+                let cid = match w.functions[&name].replicas[replica].0 {
+                    ReplicaHandle::Container(c) => c,
+                    _ => unreachable!(),
+                };
+                w.containerd.get_mut(cid).unwrap().invocations += 1;
+                let cpu = w.kc_fn.recv_msg()
+                    + w.kc_fn.veth_hop()
+                    + w.kc_fn.syscalls(nsys)
+                    + compute
+                    + w.kc_fn.sched_noise()
+                    + w.kc_fn.segment_interference()
+                    + w.kc_fn.send_msg()
+                    + w.kc_fn.veth_hop();
+                (0, cpu, w.cores.clone(), None)
+            }
+            Backend::Junctiond => {
+                let id = match w.functions[&name].replicas[replica].0 {
+                    ReplicaHandle::Junction(i) => i,
+                    _ => unreachable!(),
+                };
+                let lat = w.jd.scheduler.packet_arrival(id).latency();
+                let cpu = w.bc_fn.recv_msg()
+                    + w.bc_fn.syscalls(nsys)
+                    + compute
+                    + w.bc_fn.send_msg();
+                (lat, cpu, w.cores.clone(), Some(id))
+            }
+        }
+    };
+    sim.after(lat, move |sim| {
+        let fs2 = fs.clone();
+        cores.run(sim, cpu, move |sim| {
+            t.exec_end = sim.now();
+            {
+                let mut w = fs2.w.borrow_mut();
+                if let Some(id) = inst {
+                    w.jd.scheduler.request_done(id);
+                }
+            }
+            gate.release(sim);
+            stage_response(fs2, sim, t, done);
+        });
+    });
+}
+
+/// Response path: provider proxy pass, gateway proxy pass, wire to client.
+fn stage_response(fs: FaasSim, sim: &mut Sim, t: RequestTiming, done: DoneFn) {
+    let (lat_p, cpu_p, cores) = {
+        let mut w = fs.w.borrow_mut();
+        let prov_inst = w.prov_inst;
+        let lat = w.service_wakeup(prov_inst);
+        let p = w.platform.clone();
+        let cpu = match w.backend {
+            Backend::Containerd => {
+                w.kc_prov.recv_msg()
+                    + w.kc_prov.veth_hop()
+                    + p.rpc_serde_ns
+                    + w.kc_prov.send_msg()
+                    + w.kc_prov.segment_interference()
+            }
+            Backend::Junctiond => w.bc_prov.recv_msg() + p.rpc_serde_ns + w.bc_prov.send_msg(),
+        };
+        let lat = lat + w.bc_prov.sched_tail_delay();
+        (lat, cpu, w.cores.clone())
+    };
+    sim.after(lat_p, move |sim| {
+        let fs2 = fs.clone();
+        cores.run(sim, cpu_p, move |sim| {
+            let (lat_g, cpu_g, cores2, wire) = {
+                let mut w = fs2.w.borrow_mut();
+                let prov_inst = w.prov_inst;
+                w.service_done(prov_inst);
+                let gw_inst = w.gw_inst;
+                let lat = w.service_wakeup(gw_inst);
+                let p = w.platform.clone();
+                let cpu = match w.backend {
+                    Backend::Containerd => {
+                        w.kc_gw.recv_msg()
+                            + p.rpc_serde_ns
+                            + w.kc_gw.send_msg()
+                            + w.kc_gw.segment_interference()
+                    }
+                    Backend::Junctiond => {
+                        w.bc_gw.recv_msg() + p.rpc_serde_ns + w.bc_gw.send_msg()
+                    }
+                };
+                let lat = lat + w.bc_gw.sched_tail_delay();
+                (lat, cpu, w.cores.clone(), p.wire_ns)
+            };
+            let fs3 = fs2.clone();
+            sim.after(lat_g, move |sim| {
+                cores2.run(sim, cpu_g, move |sim| {
+                    {
+                        let mut w = fs3.w.borrow_mut();
+                        let gw_inst = w.gw_inst;
+                        w.service_done(gw_inst);
+                        w.completed += 1;
+                    }
+                    sim.after(wire, move |sim| {
+                        let mut t = t;
+                        t.done = sim.now();
+                        done(sim, t);
+                    });
+                });
+            });
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faas::RuntimeKind;
+    use crate::simcore::{MICROS, MILLIS};
+
+    fn cfg(backend: Backend) -> ExperimentConfig {
+        ExperimentConfig { backend, ..Default::default() }
+    }
+
+    fn run_n(backend: Backend, n: usize) -> Vec<RequestTiming> {
+        let mut sim = Sim::new();
+        let platform = Rc::new(PlatformConfig::default());
+        let fs = FaasSim::new(&cfg(backend), platform);
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        // Warm up past the cold start.
+        sim.run_until(2 * crate::simcore::SECONDS);
+        let out = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..n {
+            let out2 = out.clone();
+            fs.submit(&mut sim, "aes", move |_, t| out2.borrow_mut().push(t));
+        }
+        sim.run_to_completion();
+        Rc::try_unwrap(out).ok().unwrap().into_inner()
+    }
+
+    #[test]
+    fn containerd_invocation_completes_with_ordered_timestamps() {
+        let ts = run_n(Backend::Containerd, 5);
+        assert_eq!(ts.len(), 5);
+        for t in ts {
+            assert!(t.submit < t.gateway_in);
+            assert!(t.gateway_in < t.exec_start);
+            assert!(t.exec_start < t.exec_end);
+            assert!(t.exec_end < t.done);
+        }
+    }
+
+    #[test]
+    fn junctiond_invocation_completes_with_ordered_timestamps() {
+        let ts = run_n(Backend::Junctiond, 5);
+        assert_eq!(ts.len(), 5);
+        for t in ts {
+            assert!(t.exec_start < t.exec_end);
+            assert!(t.e2e() > 0);
+        }
+    }
+
+    #[test]
+    fn junction_is_faster_end_to_end() {
+        let c: Vec<_> = run_n(Backend::Containerd, 50).iter().map(|t| t.e2e()).collect();
+        let j: Vec<_> = run_n(Backend::Junctiond, 50).iter().map(|t| t.e2e()).collect();
+        let cm = c.iter().sum::<u64>() / c.len() as u64;
+        let jm = j.iter().sum::<u64>() / j.len() as u64;
+        assert!(jm < cm, "junction mean {jm} vs containerd {cm}");
+    }
+
+    #[test]
+    fn exec_window_contains_compute() {
+        let cfg_default = ExperimentConfig::default();
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let ts = run_n(backend, 10);
+            for t in ts {
+                assert!(
+                    t.exec() >= cfg_default.function_compute_ns,
+                    "{backend:?} exec {} < compute",
+                    t.exec()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn first_request_pays_cold_start() {
+        let mut sim = Sim::new();
+        let platform = Rc::new(PlatformConfig::default());
+        let fs = FaasSim::new(&cfg(Backend::Containerd), platform.clone());
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        let out = Rc::new(RefCell::new(Vec::new()));
+        let out2 = out.clone();
+        // Submit immediately — before the container is Running.
+        fs.submit(&mut sim, "aes", move |_, t| out2.borrow_mut().push(t));
+        sim.run_to_completion();
+        let t = out.borrow()[0];
+        assert!(
+            t.e2e() > 100 * MILLIS,
+            "cold-start e2e {}µs suspiciously warm",
+            t.e2e() / MICROS
+        );
+    }
+
+    #[test]
+    fn provider_cache_hits_after_first_request() {
+        let mut sim = Sim::new();
+        let platform = Rc::new(PlatformConfig::default());
+        let fs = FaasSim::new(&cfg(Backend::Junctiond), platform);
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(crate::simcore::SECONDS);
+        for _ in 0..10 {
+            fs.submit(&mut sim, "aes", |_, _| {});
+        }
+        sim.run_to_completion();
+        let (hits, misses) = fs.provider_stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 9);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a: Vec<_> = run_n(Backend::Containerd, 20).iter().map(|t| t.e2e()).collect();
+        let b: Vec<_> = run_n(Backend::Containerd, 20).iter().map(|t| t.e2e()).collect();
+        assert_eq!(a, b);
+    }
+}

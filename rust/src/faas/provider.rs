@@ -1,0 +1,165 @@
+//! The faasd provider: resolves function names to running instances and
+//! carries the §4 **metadata cache**.
+//!
+//! In mainline faasd every invocation asks containerd for the function's
+//! state (replica count, task IP/port); the paper measured those queries
+//! as "slower than the function invocation itself" and cached them in the
+//! provider, invalidated through the gateway's deploy/scale path. The same
+//! cache fronts junctiond, for a like-for-like comparison (§4). The E4
+//! ablation toggles `cache_enabled`.
+
+use std::collections::BTreeMap;
+
+/// What the provider caches per function (§4: "the number of active
+/// replicas of a function, as well as the associated local IP and port").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaMeta {
+    pub replicas: u32,
+    pub addr: (u32, u16),
+}
+
+/// Result of a resolve attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Served from cache: no backend state query.
+    Hit(ReplicaMeta),
+    /// Cache disabled/cold: the caller must pay a backend state query and
+    /// then `fill` the result.
+    Miss,
+}
+
+/// Provider state.
+#[derive(Debug)]
+pub struct Provider {
+    cache_enabled: bool,
+    cache: BTreeMap<String, ReplicaMeta>,
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidations: u64,
+}
+
+impl Provider {
+    pub fn new(cache_enabled: bool) -> Self {
+        Provider {
+            cache_enabled,
+            cache: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+            invalidations: 0,
+        }
+    }
+
+    pub fn cache_enabled(&self) -> bool {
+        self.cache_enabled
+    }
+
+    /// Resolve a function. A disabled cache always misses (mainline faasd
+    /// behaviour: go to containerd every time).
+    pub fn resolve(&mut self, name: &str) -> CacheOutcome {
+        if self.cache_enabled {
+            if let Some(meta) = self.cache.get(name) {
+                self.hits += 1;
+                return CacheOutcome::Hit(*meta);
+            }
+        }
+        self.misses += 1;
+        CacheOutcome::Miss
+    }
+
+    /// Install the result of a backend state query.
+    pub fn fill(&mut self, name: &str, meta: ReplicaMeta) {
+        if self.cache_enabled {
+            self.cache.insert(name.to_string(), meta);
+        }
+    }
+
+    /// Invalidate on scale/remove (all mutations flow through the gateway,
+    /// which is the assumption the paper states for the cache's coherence).
+    pub fn invalidate(&mut self, name: &str) {
+        self.invalidations += 1;
+        self.cache.remove(name);
+    }
+
+    pub fn cached(&self, name: &str) -> Option<ReplicaMeta> {
+        self.cache.get(name).copied()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::{forall, Gen};
+
+    const META: ReplicaMeta = ReplicaMeta { replicas: 1, addr: (0x0A00_0002, 31000) };
+
+    #[test]
+    fn first_miss_then_hits() {
+        let mut p = Provider::new(true);
+        assert_eq!(p.resolve("f"), CacheOutcome::Miss);
+        p.fill("f", META);
+        assert_eq!(p.resolve("f"), CacheOutcome::Hit(META));
+        assert_eq!(p.hits, 1);
+        assert_eq!(p.misses, 1);
+    }
+
+    #[test]
+    fn disabled_cache_always_misses() {
+        let mut p = Provider::new(false);
+        p.fill("f", META);
+        assert_eq!(p.resolve("f"), CacheOutcome::Miss);
+        assert_eq!(p.resolve("f"), CacheOutcome::Miss);
+        assert_eq!(p.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn invalidate_forces_requery() {
+        let mut p = Provider::new(true);
+        p.fill("f", META);
+        p.invalidate("f");
+        assert_eq!(p.resolve("f"), CacheOutcome::Miss);
+    }
+
+    #[test]
+    fn property_cache_coherent_with_ground_truth() {
+        // Model: ground truth mutates only via deploy/scale (which
+        // invalidates). A cached hit must always equal ground truth.
+        forall("provider cache coherence", 60, |g: &mut Gen| {
+            let mut p = Provider::new(true);
+            let mut truth: BTreeMap<String, ReplicaMeta> = BTreeMap::new();
+            let names = ["a", "b", "c"];
+            for _ in 0..100 {
+                let name = *g.choose(&names);
+                match g.u64(0, 3) {
+                    0 => {
+                        // scale mutation through the gateway
+                        let meta = ReplicaMeta {
+                            replicas: g.u64(1, 8) as u32,
+                            addr: (g.u64(1, 1 << 30) as u32, g.u64(1024, 65535) as u16),
+                        };
+                        truth.insert(name.to_string(), meta);
+                        p.invalidate(name);
+                    }
+                    _ => match p.resolve(name) {
+                        CacheOutcome::Hit(meta) => {
+                            assert_eq!(Some(meta), truth.get(name).copied(), "stale cache");
+                        }
+                        CacheOutcome::Miss => {
+                            if let Some(meta) = truth.get(name) {
+                                p.fill(name, *meta);
+                            }
+                        }
+                    },
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Function registry: what is deployed, how it scales, what it runs.
+
+use std::collections::BTreeMap;
+
+/// Language runtime of the function image — determines the §3 scale-up
+/// mode junctiond picks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// No native parallelism → scale with multiple uProcs per instance.
+    Python,
+    /// Native threads → scale by raising the instance's max-core cap
+    /// (custom Go compile target per §5 "Functions benchmark").
+    Go,
+    /// Native threads via LD_PRELOAD'd glibc (§4).
+    Cpp,
+}
+
+/// How junctiond scales a function's concurrency (§3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleMode {
+    /// Multiple processes inside one Junction instance (Python-style).
+    MultiProcess,
+    /// Raise the uProc's max core assignment (Go/C++-style).
+    MaxCores,
+    /// Independent Junction instances per replica ("if isolation is
+    /// required across instances of the same function").
+    IsolatedInstances,
+}
+
+impl RuntimeKind {
+    pub fn default_scale_mode(self) -> ScaleMode {
+        match self {
+            RuntimeKind::Python => ScaleMode::MultiProcess,
+            RuntimeKind::Go | RuntimeKind::Cpp => ScaleMode::MaxCores,
+        }
+    }
+}
+
+/// A deployed function.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    /// AOT artifact the worker executes (e.g. `aes600`).
+    pub artifact: String,
+    pub runtime: RuntimeKind,
+    pub scale_mode: ScaleMode,
+    /// Desired concurrency (uProcs or max cores, per mode).
+    pub scale: u32,
+}
+
+impl FunctionSpec {
+    pub fn new(name: &str, artifact: &str, runtime: RuntimeKind) -> Self {
+        FunctionSpec {
+            name: name.to_string(),
+            artifact: artifact.to_string(),
+            runtime,
+            scale_mode: runtime.default_scale_mode(),
+            scale: 1,
+        }
+    }
+
+    pub fn with_scale(mut self, mode: ScaleMode, scale: u32) -> Self {
+        self.scale_mode = mode;
+        self.scale = scale.max(1);
+        self
+    }
+}
+
+/// Deployed-function table (gateway + provider both consult it).
+#[derive(Debug, Default)]
+pub struct Registry {
+    functions: BTreeMap<String, FunctionSpec>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn deploy(&mut self, spec: FunctionSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.functions.contains_key(&spec.name),
+            "function '{}' already deployed",
+            spec.name
+        );
+        self.functions.insert(spec.name.clone(), spec);
+        Ok(())
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<FunctionSpec> {
+        self.functions.remove(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&FunctionSpec> {
+        self.functions.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.functions.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.functions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deploy_and_lookup() {
+        let mut r = Registry::new();
+        r.deploy(FunctionSpec::new("aes", "aes600", RuntimeKind::Go)).unwrap();
+        assert_eq!(r.get("aes").unwrap().artifact, "aes600");
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_deploy_rejected() {
+        let mut r = Registry::new();
+        r.deploy(FunctionSpec::new("aes", "aes600", RuntimeKind::Go)).unwrap();
+        assert!(r.deploy(FunctionSpec::new("aes", "aes600", RuntimeKind::Go)).is_err());
+    }
+
+    #[test]
+    fn scale_modes_follow_runtime() {
+        assert_eq!(RuntimeKind::Python.default_scale_mode(), ScaleMode::MultiProcess);
+        assert_eq!(RuntimeKind::Go.default_scale_mode(), ScaleMode::MaxCores);
+        assert_eq!(RuntimeKind::Cpp.default_scale_mode(), ScaleMode::MaxCores);
+    }
+
+    #[test]
+    fn remove_undeploys() {
+        let mut r = Registry::new();
+        r.deploy(FunctionSpec::new("aes", "aes600", RuntimeKind::Go)).unwrap();
+        assert!(r.remove("aes").is_some());
+        assert!(r.get("aes").is_none());
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,143 @@
+//! Per-operation costs of the Junction (kernel-bypass) path.
+//!
+//! The counterpart of `oskernel::KernelCosts`. Jitter is small and
+//! *bounded*: there are no timer interrupts or softirq bursts inside a
+//! Junction instance; residual variance comes from cache effects and the
+//! scheduler's polling granularity, modeled as a few-percent uniform band.
+
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::simcore::{Rng, Time};
+
+/// Sampler for bypass-path costs. Deterministic given its RNG stream.
+pub struct BypassCosts {
+    p: Rc<PlatformConfig>,
+    rng: Rng,
+    /// Uniform jitter half-width as a fraction of the base cost.
+    jitter_frac: f64,
+    /// Rare scheduler-contention tail (enabled on *service* instances —
+    /// gateway/provider — which repeatedly park and re-acquire cores; see
+    /// `PlatformConfig::junction_sched_tail_*`).
+    sched_tail: bool,
+    // telemetry
+    pub msgs_recv: u64,
+    pub msgs_sent: u64,
+    pub wakeups: u64,
+    pub syscalls: u64,
+}
+
+impl BypassCosts {
+    pub fn new(platform: Rc<PlatformConfig>, rng: Rng) -> Self {
+        BypassCosts {
+            p: platform,
+            rng,
+            jitter_frac: 0.15,
+            sched_tail: false,
+            msgs_recv: 0,
+            msgs_sent: 0,
+            wakeups: 0,
+            syscalls: 0,
+        }
+    }
+
+    /// Enable the rare core-grant contention tail (service instances).
+    pub fn with_sched_tail(mut self) -> Self {
+        self.sched_tail = true;
+        self
+    }
+
+    /// Sample the rare contention delay (0 in the common case).
+    pub fn sched_tail_delay(&mut self) -> Time {
+        if self.sched_tail && self.rng.below(10_000) < self.p.junction_sched_tail_prob_bp {
+            self.rng.range(self.p.junction_sched_tail_min_ns, self.p.junction_sched_tail_max_ns)
+        } else {
+            0
+        }
+    }
+
+    /// base ± jitter_frac, uniform.
+    fn jittered(&mut self, base: Time) -> Time {
+        let span = (base as f64 * self.jitter_frac) as u64;
+        if span == 0 {
+            return base;
+        }
+        base - span + self.rng.below(2 * span + 1)
+    }
+
+    /// Receive one message: the NIC has already DMA'd the packet into the
+    /// instance's queue; cost is the user-space stack traversal.
+    pub fn recv_msg(&mut self) -> Time {
+        self.msgs_recv += 1;
+        self.jittered(self.p.junction_stack_msg_ns)
+    }
+
+    /// Send one message through the user-space stack + NIC doorbell.
+    pub fn send_msg(&mut self) -> Time {
+        self.msgs_sent += 1;
+        self.jittered(self.p.junction_stack_msg_ns)
+    }
+
+    /// uThread wakeup when the instance already holds a core.
+    pub fn wakeup_warm(&mut self) -> Time {
+        self.wakeups += 1;
+        self.jittered(self.p.junction_wakeup_ns)
+    }
+
+    /// `n` user-space syscalls (function calls into the Junction kernel).
+    pub fn syscalls(&mut self, n: u32) -> Time {
+        self.syscalls += n as u64;
+        n as Time * self.p.junction_syscall_ns
+    }
+
+    /// One-way wire latency (same physical NICs as the baseline).
+    pub fn wire(&self) -> Time {
+        self.p.wire_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oskernel::KernelCosts;
+
+    fn costs() -> BypassCosts {
+        BypassCosts::new(Rc::new(PlatformConfig::default()), Rng::new(11))
+    }
+
+    #[test]
+    fn bypass_is_much_cheaper_than_kernel() {
+        let mut b = costs();
+        let mut k = KernelCosts::new(Rc::new(PlatformConfig::default()), Rng::new(11));
+        let bsum: Time = (0..1000).map(|_| b.recv_msg() + b.send_msg()).sum();
+        let ksum: Time = (0..1000).map(|_| k.recv_msg() + k.send_msg()).sum();
+        assert!(ksum > 5 * bsum, "kernel {ksum} vs bypass {bsum}");
+    }
+
+    #[test]
+    fn jitter_is_bounded() {
+        let mut b = costs();
+        let base = PlatformConfig::default().junction_stack_msg_ns;
+        for _ in 0..10_000 {
+            let v = b.recv_msg();
+            assert!(v >= base - base * 15 / 100);
+            assert!(v <= base + base * 15 / 100 + 1);
+        }
+    }
+
+    #[test]
+    fn user_space_syscalls_are_cheap() {
+        let mut b = costs();
+        let p = PlatformConfig::default();
+        assert!(b.syscalls(100) < 100 * p.syscall_ns / 5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = BypassCosts::new(Rc::new(PlatformConfig::default()), Rng::new(5));
+        let mut b = BypassCosts::new(Rc::new(PlatformConfig::default()), Rng::new(5));
+        for _ in 0..100 {
+            assert_eq!(a.recv_msg(), b.recv_msg());
+        }
+    }
+}

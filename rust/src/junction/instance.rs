@@ -1,0 +1,155 @@
+//! Junction instances and uProcs.
+//!
+//! An [`Instance`] models one Junction host process: a container-like
+//! isolation boundary holding one or more [`UProc`]s that share the
+//! instance's user-space kernel, NIC queue pair(s), and core grant. The
+//! FaaS layer maps every faasd component (gateway, provider) and every
+//! function replica onto an instance (paper §3, Figure 4).
+
+use crate::simcore::Time;
+
+/// Identifier for an instance on a server.
+pub type InstanceId = u32;
+
+/// A user-level process inside an instance (one executable).
+#[derive(Debug, Clone)]
+pub struct UProc {
+    pub name: String,
+    /// uThreads currently runnable (demand signal for the scheduler).
+    pub runnable_threads: u32,
+}
+
+/// Instance lifecycle, as junctiond observes it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// `junction_run` spawned, user-space kernel booting (~3.4 ms, §5).
+    Starting,
+    /// At least one uProc live; can receive packets.
+    Running,
+    /// All uProcs exited.
+    Stopped,
+}
+
+/// One Junction instance (host process + uProcs + queue pair + core grant).
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub name: String,
+    pub state: InstanceState,
+    pub uprocs: Vec<UProc>,
+    /// Maximum cores the scheduler may grant (configured limit, §2.2.1).
+    pub max_cores: u32,
+    /// Cores currently granted by the scheduler.
+    pub granted_cores: u32,
+    /// Requests currently executing inside the instance.
+    pub in_flight: u32,
+    /// NIC queue pairs assigned (∝ max core allocation, §2.2.1).
+    pub queue_pairs: u32,
+    /// Virtual time the instance finished booting (for cold-start math).
+    pub ready_at: Time,
+    // telemetry
+    pub total_invocations: u64,
+    pub preemptions: u64,
+}
+
+impl Instance {
+    pub fn new(id: InstanceId, name: &str, max_cores: u32) -> Self {
+        Instance {
+            id,
+            name: name.to_string(),
+            state: InstanceState::Starting,
+            uprocs: Vec::new(),
+            max_cores,
+            granted_cores: 0,
+            in_flight: 0,
+            queue_pairs: max_cores, // one QP per potential core
+            ready_at: 0,
+            total_invocations: 0,
+            preemptions: 0,
+        }
+    }
+
+    /// Spawn a uProc (e.g. one Python worker process). Scale-up mode (a)
+    /// from §3: "multiple processes can be deployed within the same
+    /// Junction instance".
+    pub fn spawn_uproc(&mut self, name: &str) {
+        self.uprocs.push(UProc { name: name.to_string(), runnable_threads: 0 });
+        if self.state == InstanceState::Starting {
+            self.state = InstanceState::Running;
+        }
+    }
+
+    /// Raise the core cap. Scale-up mode (b) from §3: "the maximum core
+    /// assignment to a given uProc can be modified".
+    pub fn set_max_cores(&mut self, max: u32) {
+        self.max_cores = max;
+        self.queue_pairs = max;
+    }
+
+    /// Concurrency the instance can offer: one request per uProc thread
+    /// slot. Python-style runtimes get 1 slot per uProc; threaded runtimes
+    /// get `max_cores` slots per uProc.
+    pub fn concurrency(&self, threads_per_uproc: u32) -> u32 {
+        (self.uprocs.len() as u32).max(1) * threads_per_uproc.max(1)
+    }
+
+    /// Demand signal the scheduler polls: does this instance want (more)
+    /// cores right now?
+    pub fn wants_core(&self) -> bool {
+        self.state == InstanceState::Running
+            && self.in_flight > self.granted_cores
+            && self.granted_cores < self.max_cores
+    }
+
+    /// Is the instance idle (parked, holding no cores)?
+    pub fn is_idle(&self) -> bool {
+        self.in_flight == 0 && self.granted_cores == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_starting_to_running() {
+        let mut inst = Instance::new(1, "fn-aes", 2);
+        assert_eq!(inst.state, InstanceState::Starting);
+        inst.spawn_uproc("aes-worker");
+        assert_eq!(inst.state, InstanceState::Running);
+    }
+
+    #[test]
+    fn multi_uproc_scaleup_increases_concurrency() {
+        let mut inst = Instance::new(1, "fn-py", 1);
+        inst.spawn_uproc("w0");
+        assert_eq!(inst.concurrency(1), 1);
+        inst.spawn_uproc("w1");
+        inst.spawn_uproc("w2");
+        assert_eq!(inst.concurrency(1), 3);
+    }
+
+    #[test]
+    fn max_core_scaleup_tracks_queue_pairs() {
+        let mut inst = Instance::new(1, "fn-go", 1);
+        inst.spawn_uproc("go");
+        inst.set_max_cores(4);
+        assert_eq!(inst.queue_pairs, 4);
+        assert_eq!(inst.concurrency(4), 4);
+    }
+
+    #[test]
+    fn demand_signal() {
+        let mut inst = Instance::new(1, "fn", 2);
+        inst.spawn_uproc("w");
+        assert!(!inst.wants_core());
+        inst.in_flight = 1;
+        assert!(inst.wants_core());
+        inst.granted_cores = 1;
+        assert!(!inst.wants_core()); // satisfied
+        inst.in_flight = 3;
+        assert!(inst.wants_core()); // wants a second core
+        inst.granted_cores = 2;
+        assert!(!inst.wants_core()); // capped at max_cores
+    }
+}

@@ -1,0 +1,30 @@
+//! Junction kernel-bypass simulator (paper §2.2.1).
+//!
+//! Junction is a libOS-based kernel-bypass system: each *instance* is one
+//! host process running user-level processes (*uProcs*) over a user-space
+//! kernel; NIC send/recv queue pairs are mapped directly into each
+//! instance; a central *scheduler* on a dedicated core busy-polls event
+//! queues and allocates cores to instances on demand.
+//!
+//! The properties of the real system that matter for the paper's FaaS
+//! integration — and that this model reproduces — are:
+//!
+//! 1. **User-space syscalls**: a uProc syscall is a function call into the
+//!    Junction kernel (~tens of ns), not a trap (§2.2.1 "most system calls
+//!    are handled entirely within the Junction instance").
+//! 2. **Direct packet delivery**: the NIC DMAs into per-instance queues; no
+//!    softirq, no software switch, no veth hop.
+//! 3. **Cheap wakeups**: a uThread wakeup on a granted core is a user-level
+//!    switch; granting a core to an idle instance costs ~1 µs (IPI).
+//! 4. **Polling ∝ cores, not instances**: one dedicated scheduler core
+//!    polls for *all* instances on the server (§3: "a single dedicated
+//!    core [can] manage thousands of functions on a 36-core server"),
+//!    versus one polling core *per instance* for DPDK-style bypass.
+
+mod costs;
+mod instance;
+mod scheduler;
+
+pub use costs::BypassCosts;
+pub use instance::{Instance, InstanceId, InstanceState, UProc};
+pub use scheduler::{GrantOutcome, Scheduler, SchedulerStats};

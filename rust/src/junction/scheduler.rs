@@ -1,0 +1,391 @@
+//! The Junction core scheduler (paper §2.2.1 "Scheduler").
+//!
+//! Runs on one *dedicated, reserved core* and busy-polls two signal
+//! sources: NIC event queues (packet arrivals for idle instances) and
+//! uThread run-queue state (demand from running instances). Based on those
+//! signals it grants and revokes cores, up to each instance's configured
+//! limit, preempting for fairness when the server is contended.
+//!
+//! The scalability property the paper leans on (§3): the scheduler's
+//! polling work is proportional to the number of *cores* it manages, not
+//! the number of *instances* hosted — so one polling core serves thousands
+//! of parked functions, where DPDK-style bypass would need a polling core
+//! per function. `poll_iteration_cost` encodes exactly that, and the E5
+//! ablation (`benches/ablation_polling.rs`) measures the consequence.
+
+use super::instance::{Instance, InstanceId, InstanceState};
+use crate::config::PlatformConfig;
+use crate::simcore::Time;
+
+/// What happened when a packet arrived for an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrantOutcome {
+    /// Instance already held a core: user-level wakeup.
+    Warm { latency: Time },
+    /// Instance was idle; a core was granted (IPI + queue mapping).
+    Granted { latency: Time },
+    /// No core available right now; the request runs once the shared
+    /// core pool frees up (contention is modeled by the pool's queue).
+    Contended { latency: Time },
+}
+
+impl GrantOutcome {
+    pub fn latency(&self) -> Time {
+        match self {
+            GrantOutcome::Warm { latency }
+            | GrantOutcome::Granted { latency }
+            | GrantOutcome::Contended { latency } => *latency,
+        }
+    }
+}
+
+/// Scheduler counters (polled by the density/polling benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerStats {
+    pub grants: u64,
+    pub warm_wakeups: u64,
+    pub contended: u64,
+    pub preemptions: u64,
+    pub releases: u64,
+}
+
+/// Central core scheduler for all Junction instances on one server.
+pub struct Scheduler {
+    platform: std::rc::Rc<PlatformConfig>,
+    /// Dense instance table: `InstanceId` is the index (ids are assigned
+    /// sequentially by `register`). Vec indexing beats a BTreeMap on the
+    /// wakeup hot path (§Perf).
+    instances: Vec<Instance>,
+    /// Cores grantable to instances (server cores minus the scheduler's
+    /// own dedicated polling core).
+    grantable_cores: u32,
+    granted_total: u32,
+    next_id: InstanceId,
+    pub stats: SchedulerStats,
+}
+
+impl Scheduler {
+    /// `server_cores` includes the core the scheduler itself reserves.
+    pub fn new(platform: std::rc::Rc<PlatformConfig>, server_cores: u32) -> Self {
+        assert!(server_cores >= 2, "need at least one grantable core besides the poller");
+        Scheduler {
+            platform,
+            instances: Vec::new(),
+            grantable_cores: server_cores - 1,
+            granted_total: 0,
+            next_id: 0,
+            stats: SchedulerStats::default(),
+        }
+    }
+
+    /// Register a new instance (junctiond calls this from `junction_run`).
+    pub fn register(&mut self, name: &str, max_cores: u32) -> InstanceId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances.push(Instance::new(id, name, max_cores));
+        id
+    }
+
+    pub fn instance(&self, id: InstanceId) -> Option<&Instance> {
+        self.instances.get(id as usize)
+    }
+
+    pub fn instance_mut(&mut self, id: InstanceId) -> Option<&mut Instance> {
+        self.instances.get_mut(id as usize)
+    }
+
+    pub fn instance_count(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn granted_total(&self) -> u32 {
+        self.granted_total
+    }
+
+    pub fn grantable_cores(&self) -> u32 {
+        self.grantable_cores
+    }
+
+    /// Cores this server must *reserve for polling* to host `n` instances.
+    /// Junction: always 1. (Compare `dpdk_polling_cores`.)
+    pub fn polling_cores(&self) -> u32 {
+        1
+    }
+
+    /// The DPDK-style alternative the paper contrasts with (§1): one
+    /// polling core per isolated application instance.
+    pub fn dpdk_polling_cores(n_instances: u32) -> u32 {
+        n_instances
+    }
+
+    /// CPU cost of one scheduler polling iteration. Proportional to the
+    /// number of granted (active) cores — *not* to `instance_count` — plus
+    /// a small constant for the event-queue doorbell scan.
+    pub fn poll_iteration_cost(&self) -> Time {
+        let per_core = self.platform.junction_poll_iter_ns;
+        per_core + per_core * self.granted_total as Time
+    }
+
+    /// A packet arrived for `id` (NIC event queue signaled). Accounts the
+    /// in-flight request and decides the wakeup path.
+    pub fn packet_arrival(&mut self, id: InstanceId) -> GrantOutcome {
+        let granted_total = self.granted_total;
+        let grantable = self.grantable_cores;
+        let p_wakeup = self.platform.junction_wakeup_ns;
+        let p_grant = self.platform.junction_grant_ns;
+        let inst = self.instances.get_mut(id as usize).expect("unknown instance");
+        assert_eq!(inst.state, InstanceState::Running, "packet for non-running instance");
+        inst.in_flight += 1;
+        inst.total_invocations += 1;
+        if inst.granted_cores > 0 {
+            self.stats.warm_wakeups += 1;
+            return GrantOutcome::Warm { latency: p_wakeup };
+        }
+        if granted_total < grantable {
+            inst.granted_cores += 1;
+            self.granted_total += 1;
+            self.stats.grants += 1;
+            return GrantOutcome::Granted { latency: p_grant };
+        }
+        // All cores granted elsewhere: fairness rebalance may preempt.
+        self.stats.contended += 1;
+        let preempted = self.try_preempt_for(id);
+        if preempted {
+            // Preemption path: grant latency plus one quantum-edge wait.
+            GrantOutcome::Granted { latency: p_grant + p_wakeup }
+        } else {
+            GrantOutcome::Contended { latency: p_grant }
+        }
+    }
+
+    /// A request finished inside `id`. Releases the core when the instance
+    /// goes idle (the scheduler parks idle instances to keep polling cheap).
+    pub fn request_done(&mut self, id: InstanceId) {
+        let inst = self.instances.get_mut(id as usize).expect("unknown instance");
+        assert!(inst.in_flight > 0, "request_done with nothing in flight");
+        inst.in_flight -= 1;
+        if inst.in_flight == 0 && inst.granted_cores > 0 {
+            self.granted_total -= inst.granted_cores;
+            self.stats.releases += inst.granted_cores as u64;
+            inst.granted_cores = 0;
+        }
+    }
+
+    /// Grow an instance's grant toward its demand if capacity allows
+    /// (called from the poll loop; demand = runnable uThreads).
+    pub fn grow_grants(&mut self, id: InstanceId) -> u32 {
+        let mut grown = 0;
+        while self.granted_total < self.grantable_cores {
+            let inst = self.instances.get_mut(id as usize).expect("unknown instance");
+            if !inst.wants_core() {
+                break;
+            }
+            inst.granted_cores += 1;
+            self.granted_total += 1;
+            self.stats.grants += 1;
+            grown += 1;
+        }
+        grown
+    }
+
+    /// Fair-share preemption: if `hungry` wants a core and some instance
+    /// holds more than its fair share, revoke one core from the most
+    /// over-allocated instance and grant it to `hungry`.
+    fn try_preempt_for(&mut self, hungry: InstanceId) -> bool {
+        let demanding = self.instances.iter().filter(|i| i.in_flight > 0).count() as u32;
+        if demanding == 0 {
+            return false;
+        }
+        let fair = (self.grantable_cores / demanding).max(1);
+        // Most over-allocated donor (holding strictly more than fair share).
+        let donor = self
+            .instances
+            .iter()
+            .filter(|i| i.id != hungry && i.granted_cores > fair)
+            .max_by_key(|i| i.granted_cores)
+            .map(|i| i.id);
+        let Some(donor_id) = donor else { return false };
+        {
+            let d = self.instances.get_mut(donor_id as usize).unwrap();
+            d.granted_cores -= 1;
+            d.preemptions += 1;
+        }
+        self.stats.preemptions += 1;
+        let h = self.instances.get_mut(hungry as usize).unwrap();
+        h.granted_cores += 1;
+        true
+    }
+
+    /// Return `n` cores to the pool without an owner (crash path: the
+    /// instance's grant bookkeeping was already zeroed by the caller).
+    pub fn force_release(&mut self, n: u32) {
+        self.granted_total = self.granted_total.saturating_sub(n);
+    }
+
+    /// Debug/test invariant check: grant accounting is consistent.
+    pub fn check_invariants(&self) {
+        let sum: u32 = self.instances.iter().map(|i| i.granted_cores).sum();
+        assert_eq!(sum, self.granted_total, "granted core accounting drifted");
+        assert!(self.granted_total <= self.grantable_cores, "over-granted cores");
+        for inst in self.instances.iter() {
+            assert!(
+                inst.granted_cores <= inst.max_cores,
+                "instance {} over its core cap",
+                inst.name
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::{forall, Gen};
+    use std::rc::Rc;
+
+    fn sched(cores: u32) -> Scheduler {
+        Scheduler::new(Rc::new(PlatformConfig::default()), cores)
+    }
+
+    fn running_instance(s: &mut Scheduler, name: &str, max_cores: u32) -> InstanceId {
+        let id = s.register(name, max_cores);
+        s.instance_mut(id).unwrap().spawn_uproc("w");
+        id
+    }
+
+    #[test]
+    fn first_packet_grants_then_warm() {
+        let mut s = sched(4);
+        let id = running_instance(&mut s, "fn", 2);
+        assert!(matches!(s.packet_arrival(id), GrantOutcome::Granted { .. }));
+        assert!(matches!(s.packet_arrival(id), GrantOutcome::Warm { .. }));
+        s.check_invariants();
+    }
+
+    #[test]
+    fn idle_instance_releases_core() {
+        let mut s = sched(4);
+        let id = running_instance(&mut s, "fn", 2);
+        s.packet_arrival(id);
+        assert_eq!(s.granted_total(), 1);
+        s.request_done(id);
+        assert_eq!(s.granted_total(), 0);
+        assert!(s.instance(id).unwrap().is_idle());
+        s.check_invariants();
+    }
+
+    #[test]
+    fn contention_triggers_preemption_for_fairness() {
+        let mut s = sched(3); // 2 grantable
+        let a = running_instance(&mut s, "a", 2);
+        let b = running_instance(&mut s, "b", 2);
+        // a grabs both cores.
+        s.packet_arrival(a);
+        s.instance_mut(a).unwrap().in_flight += 1; // fake concurrent demand
+        s.grow_grants(a);
+        assert_eq!(s.instance(a).unwrap().granted_cores, 2);
+        // b's packet must steal one back (fair share = 1 each).
+        let out = s.packet_arrival(b);
+        assert!(matches!(out, GrantOutcome::Granted { .. }), "{out:?}");
+        assert_eq!(s.instance(a).unwrap().granted_cores, 1);
+        assert_eq!(s.instance(b).unwrap().granted_cores, 1);
+        assert_eq!(s.stats.preemptions, 1);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn polling_cores_constant_vs_dpdk_linear() {
+        let mut s = sched(10);
+        for i in 0..1000 {
+            running_instance(&mut s, &format!("fn{i}"), 1);
+        }
+        assert_eq!(s.polling_cores(), 1);
+        assert_eq!(Scheduler::dpdk_polling_cores(1000), 1000);
+    }
+
+    #[test]
+    fn poll_cost_scales_with_cores_not_instances() {
+        let mut dense = sched(10);
+        for i in 0..4096 {
+            running_instance(&mut dense, &format!("fn{i}"), 1);
+        }
+        let mut sparse = sched(10);
+        let a = running_instance(&mut sparse, "a", 4);
+        // Idle-heavy server: poll cost identical regardless of 4096 vs 1
+        // registered instances.
+        assert_eq!(dense.poll_iteration_cost(), sparse.poll_iteration_cost());
+        // Activating cores raises the cost.
+        sparse.packet_arrival(a);
+        assert!(sparse.poll_iteration_cost() > dense.poll_iteration_cost());
+    }
+
+    #[test]
+    fn max_cores_is_respected() {
+        let mut s = sched(10);
+        let id = running_instance(&mut s, "fn", 2);
+        s.instance_mut(id).unwrap().in_flight = 8;
+        s.grow_grants(id);
+        assert_eq!(s.instance(id).unwrap().granted_cores, 2);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn property_no_double_grant_under_random_traffic() {
+        forall("scheduler grant accounting", 60, |g: &mut Gen| {
+            let cores = g.u64(2, 12) as u32;
+            let mut s = sched(cores);
+            let n_inst = g.usize(1, 8);
+            let ids: Vec<_> = (0..n_inst)
+                .map(|i| {
+                    let max = g.u64(1, 4) as u32;
+                    let id = s.register(&format!("f{i}"), max);
+                    s.instance_mut(id).unwrap().spawn_uproc("w");
+                    id
+                })
+                .collect();
+            let mut in_flight: Vec<u32> = vec![0; n_inst];
+            for _ in 0..200 {
+                let k = g.usize(0, n_inst - 1);
+                if g.bool() || in_flight[k] == 0 {
+                    s.packet_arrival(ids[k]);
+                    in_flight[k] += 1;
+                } else {
+                    s.request_done(ids[k]);
+                    in_flight[k] -= 1;
+                }
+                s.check_invariants();
+            }
+        });
+    }
+
+    #[test]
+    fn property_work_conservation() {
+        // If a packet arrives while free cores exist, the instance must end
+        // up holding a core (never Contended).
+        forall("work conservation", 40, |g: &mut Gen| {
+            let mut s = sched(g.u64(3, 10) as u32);
+            let n = g.usize(1, 4);
+            let ids: Vec<_> =
+                (0..n).map(|i| running_instance(&mut s, &format!("f{i}"), 2)).collect();
+            for _ in 0..50 {
+                let k = g.usize(0, n - 1);
+                if s.granted_total() < s.grantable_cores() {
+                    let out = s.packet_arrival(ids[k]);
+                    assert!(
+                        !matches!(out, GrantOutcome::Contended { .. }),
+                        "contended despite free cores"
+                    );
+                } else {
+                    s.packet_arrival(ids[k]);
+                }
+                if g.bool() {
+                    if let Some(&id) = ids.iter().find(|&&id| s.instance(id).unwrap().in_flight > 0)
+                    {
+                        s.request_done(id);
+                    }
+                }
+                s.check_invariants();
+            }
+        });
+    }
+}

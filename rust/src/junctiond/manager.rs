@@ -1,0 +1,387 @@
+//! The junctiond function manager.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::faas::{FunctionSpec, ScaleMode};
+use crate::junction::{InstanceId, InstanceState, Scheduler};
+use crate::simcore::{Rng, Time};
+
+/// Network + resource configuration junctiond writes for each instance
+/// before `junction_run` (§4: "manages the configuration of junction
+/// instances (including network settings)").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InstanceConfig {
+    pub name: String,
+    /// Local IP assigned to the instance's NIC queue pair.
+    pub ip: u32,
+    pub port: u16,
+    pub queue_pairs: u32,
+    pub max_cores: u32,
+}
+
+/// Monitoring snapshot for one function (§4 "monitoring the running state
+/// of all functions").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunState {
+    pub function: String,
+    pub instances: u32,
+    pub running: u32,
+    pub uprocs: u32,
+    pub in_flight: u32,
+}
+
+/// The manager: owns the server's Junction scheduler, the per-function
+/// instance sets, and their configs.
+pub struct Junctiond {
+    platform: Rc<PlatformConfig>,
+    pub scheduler: Scheduler,
+    functions: BTreeMap<String, Vec<InstanceId>>,
+    configs: BTreeMap<InstanceId, InstanceConfig>,
+    rng: Rng,
+    next_ip: u32,
+    next_port: u16,
+    pub deploys: u64,
+}
+
+impl Junctiond {
+    pub fn new(platform: Rc<PlatformConfig>, server_cores: u32, rng: Rng) -> Self {
+        Junctiond {
+            scheduler: Scheduler::new(platform.clone(), server_cores),
+            platform,
+            functions: BTreeMap::new(),
+            configs: BTreeMap::new(),
+            rng,
+            next_ip: 0x0A01_0002, // 10.1.0.x — junction subnet
+            next_port: 8080,
+            deploys: 0,
+        }
+    }
+
+    fn alloc_config(&mut self, name: &str, max_cores: u32) -> InstanceConfig {
+        let cfg = InstanceConfig {
+            name: name.to_string(),
+            ip: self.next_ip,
+            port: self.next_port,
+            queue_pairs: max_cores,
+            max_cores,
+        };
+        self.next_ip += 1;
+        self.next_port = self.next_port.wrapping_add(1).max(1024);
+        cfg
+    }
+
+    /// `junction_run`: spawn one instance. Returns (id, cold_start_ns).
+    /// Junction instance init is fast and tight: 3.4 ms ± a small spread
+    /// (paper §5 "Cold starts").
+    fn junction_run(&mut self, name: &str, max_cores: u32) -> (InstanceId, Time) {
+        let cfg = self.alloc_config(name, max_cores);
+        let id = self.scheduler.register(name, max_cores);
+        self.configs.insert(id, cfg);
+        let base = self.platform.junction_cold_start_ns;
+        let spread = base / 10;
+        let cold = base - spread / 2 + self.rng.below(spread + 1);
+        (id, cold)
+    }
+
+    /// Deploy a function per its spec. Returns (instance ids, cold_ns):
+    /// * `MultiProcess` → 1 instance, `scale` uProcs (Python-style);
+    /// * `MaxCores`     → 1 instance, 1 uProc, core cap = `scale`;
+    /// * `IsolatedInstances` → `scale` instances of 1 uProc each.
+    pub fn deploy_function(&mut self, spec: &FunctionSpec) -> (Vec<InstanceId>, Time) {
+        self.deploys += 1;
+        let mut ids = Vec::new();
+        let mut cold_total = 0;
+        match spec.scale_mode {
+            ScaleMode::MultiProcess => {
+                let (id, cold) = self.junction_run(&spec.name, 1);
+                for k in 0..spec.scale.max(1) {
+                    self.scheduler
+                        .instance_mut(id)
+                        .unwrap()
+                        .spawn_uproc(&format!("{}-w{k}", spec.name));
+                }
+                ids.push(id);
+                cold_total = cold;
+            }
+            ScaleMode::MaxCores => {
+                let (id, cold) = self.junction_run(&spec.name, spec.scale.max(1));
+                self.scheduler.instance_mut(id).unwrap().spawn_uproc(&spec.name);
+                ids.push(id);
+                cold_total = cold;
+            }
+            ScaleMode::IsolatedInstances => {
+                // Instances boot in parallel; cold time is the max.
+                for k in 0..spec.scale.max(1) {
+                    let (id, cold) = self.junction_run(&format!("{}-{k}", spec.name), 1);
+                    self.scheduler
+                        .instance_mut(id)
+                        .unwrap()
+                        .spawn_uproc(&format!("{}-{k}", spec.name));
+                    ids.push(id);
+                    cold_total = cold_total.max(cold);
+                }
+            }
+        }
+        self.functions.insert(spec.name.clone(), ids.clone());
+        (ids, cold_total)
+    }
+
+    /// Deploy one of the faasd *services* (gateway/provider) into its own
+    /// instance (§3: "Junction instances are utilized not only to host the
+    /// function code, but also to run the various services").
+    pub fn deploy_service(&mut self, name: &str, max_cores: u32) -> (InstanceId, Time) {
+        let (id, cold) = self.junction_run(name, max_cores);
+        self.scheduler.instance_mut(id).unwrap().spawn_uproc(name);
+        (id, cold)
+    }
+
+    /// Scale an existing function up/down per its mode.
+    pub fn scale(&mut self, spec: &FunctionSpec, new_scale: u32) -> anyhow::Result<()> {
+        let ids =
+            self.functions.get(&spec.name).cloned().ok_or_else(|| {
+                anyhow::anyhow!("scale: function '{}' not deployed", spec.name)
+            })?;
+        match spec.scale_mode {
+            ScaleMode::MultiProcess => {
+                let id = ids[0];
+                let inst = self.scheduler.instance_mut(id).unwrap();
+                let have = inst.uprocs.len() as u32;
+                for k in have..new_scale {
+                    inst.spawn_uproc(&format!("{}-w{k}", spec.name));
+                }
+            }
+            ScaleMode::MaxCores => {
+                let id = ids[0];
+                self.scheduler.instance_mut(id).unwrap().set_max_cores(new_scale.max(1));
+                if let Some(cfg) = self.configs.get_mut(&id) {
+                    cfg.max_cores = new_scale.max(1);
+                    cfg.queue_pairs = new_scale.max(1);
+                }
+            }
+            ScaleMode::IsolatedInstances => {
+                anyhow::bail!("isolated-instance scaling redeploys; use deploy_function")
+            }
+        }
+        Ok(())
+    }
+
+    pub fn instances_of(&self, name: &str) -> &[InstanceId] {
+        self.functions.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn config_of(&self, id: InstanceId) -> Option<&InstanceConfig> {
+        self.configs.get(&id)
+    }
+
+    /// Monitoring endpoint: run state of every function (§4).
+    pub fn monitor(&self) -> Vec<RunState> {
+        self.functions
+            .iter()
+            .map(|(name, ids)| {
+                let mut running = 0;
+                let mut uprocs = 0;
+                let mut in_flight = 0;
+                for id in ids {
+                    let inst = self.scheduler.instance(*id).unwrap();
+                    if inst.state == InstanceState::Running {
+                        running += 1;
+                    }
+                    uprocs += inst.uprocs.len() as u32;
+                    in_flight += inst.in_flight;
+                }
+                RunState {
+                    function: name.clone(),
+                    instances: ids.len() as u32,
+                    running,
+                    uprocs,
+                    in_flight,
+                }
+            })
+            .collect()
+    }
+
+    /// Failure injection: an instance's uProcs die (host process crash).
+    /// The scheduler releases its cores; junctiond's monitor will report
+    /// it non-running until [`Junctiond::restart_crashed`] revives it.
+    pub fn fail_instance(&mut self, id: InstanceId) {
+        let granted = {
+            let inst = self.scheduler.instance_mut(id).expect("unknown instance");
+            inst.state = InstanceState::Stopped;
+            inst.uprocs.clear();
+            inst.in_flight = 0;
+            let g = inst.granted_cores;
+            inst.granted_cores = 0;
+            g
+        };
+        // Return the crashed instance's cores to the pool.
+        for _ in 0..granted {
+            self.scheduler.stats.releases += 1;
+        }
+        self.scheduler.force_release(granted);
+    }
+
+    /// Crash-recovery sweep (the §4 monitoring loop's remediation): every
+    /// Stopped instance is relaunched via `junction_run`. Returns
+    /// (revived count, worst-case cold-start ns).
+    pub fn restart_crashed(&mut self) -> (u32, Time) {
+        let crashed: Vec<(InstanceId, String)> = self
+            .functions
+            .values()
+            .flatten()
+            .filter_map(|id| {
+                let inst = self.scheduler.instance(*id)?;
+                (inst.state == InstanceState::Stopped).then(|| (*id, inst.name.clone()))
+            })
+            .collect();
+        let mut worst = 0;
+        let n = crashed.len() as u32;
+        for (id, name) in crashed {
+            let inst = self.scheduler.instance_mut(id).unwrap();
+            inst.spawn_uproc(&name);
+            inst.state = InstanceState::Running;
+            let base = self.platform.junction_cold_start_ns;
+            let spread = base / 10;
+            let cold = base - spread / 2 + self.rng.below(spread + 1);
+            worst = worst.max(cold);
+        }
+        (n, worst)
+    }
+
+    /// Per-instance effective concurrency for the pipeline's gate.
+    pub fn concurrency_of(&self, id: InstanceId, spec: &FunctionSpec) -> u32 {
+        let inst = self.scheduler.instance(id).expect("unknown instance");
+        match spec.scale_mode {
+            ScaleMode::MultiProcess => inst.concurrency(1),
+            ScaleMode::MaxCores => inst.max_cores.min(self.platform.junction_max_cores as u32),
+            ScaleMode::IsolatedInstances => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faas::RuntimeKind;
+    use crate::simcore::MILLIS;
+
+    fn manager() -> Junctiond {
+        Junctiond::new(Rc::new(PlatformConfig::default()), 10, Rng::new(17))
+    }
+
+    #[test]
+    fn deploy_python_multiprocess() {
+        let mut jd = manager();
+        let spec = FunctionSpec::new("py-fn", "aes600", RuntimeKind::Python)
+            .with_scale(ScaleMode::MultiProcess, 4);
+        let (ids, cold) = jd.deploy_function(&spec);
+        assert_eq!(ids.len(), 1);
+        assert!(cold > 3 * MILLIS && cold < 4 * MILLIS, "cold={cold}");
+        let inst = jd.scheduler.instance(ids[0]).unwrap();
+        assert_eq!(inst.uprocs.len(), 4);
+        assert_eq!(jd.concurrency_of(ids[0], &spec), 4);
+    }
+
+    #[test]
+    fn deploy_go_maxcores() {
+        let mut jd = manager();
+        let spec = FunctionSpec::new("go-fn", "aes600", RuntimeKind::Go)
+            .with_scale(ScaleMode::MaxCores, 6);
+        let (ids, _) = jd.deploy_function(&spec);
+        let inst = jd.scheduler.instance(ids[0]).unwrap();
+        assert_eq!(inst.max_cores, 6);
+        assert_eq!(inst.queue_pairs, 6);
+        assert_eq!(jd.concurrency_of(ids[0], &spec), 6);
+    }
+
+    #[test]
+    fn deploy_isolated_instances() {
+        let mut jd = manager();
+        let spec = FunctionSpec::new("iso-fn", "aes600", RuntimeKind::Go)
+            .with_scale(ScaleMode::IsolatedInstances, 3);
+        let (ids, _) = jd.deploy_function(&spec);
+        assert_eq!(ids.len(), 3);
+        // Distinct network configs per instance.
+        let ips: Vec<u32> = ids.iter().map(|id| jd.config_of(*id).unwrap().ip).collect();
+        let mut dedup = ips.clone();
+        dedup.dedup();
+        assert_eq!(ips.len(), dedup.len());
+    }
+
+    #[test]
+    fn services_run_in_instances_too() {
+        let mut jd = manager();
+        let (gw, _) = jd.deploy_service("gateway", 2);
+        let (prov, _) = jd.deploy_service("provider", 2);
+        assert_ne!(gw, prov);
+        assert_eq!(jd.scheduler.instance(gw).unwrap().state, InstanceState::Running);
+    }
+
+    #[test]
+    fn scale_up_multiprocess_adds_uprocs() {
+        let mut jd = manager();
+        let spec = FunctionSpec::new("py", "aes600", RuntimeKind::Python)
+            .with_scale(ScaleMode::MultiProcess, 1);
+        let (ids, _) = jd.deploy_function(&spec);
+        jd.scale(&spec, 5).unwrap();
+        assert_eq!(jd.scheduler.instance(ids[0]).unwrap().uprocs.len(), 5);
+    }
+
+    #[test]
+    fn scale_up_maxcores_updates_config() {
+        let mut jd = manager();
+        let spec =
+            FunctionSpec::new("go", "aes600", RuntimeKind::Go).with_scale(ScaleMode::MaxCores, 2);
+        let (ids, _) = jd.deploy_function(&spec);
+        jd.scale(&spec, 8).unwrap();
+        assert_eq!(jd.config_of(ids[0]).unwrap().max_cores, 8);
+        assert_eq!(jd.scheduler.instance(ids[0]).unwrap().max_cores, 8);
+    }
+
+    #[test]
+    fn crash_and_recover_cycle() {
+        let mut jd = manager();
+        let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+        let (ids, _) = jd.deploy_function(&spec);
+        let id = ids[0];
+        // Instance takes traffic, then crashes mid-flight.
+        jd.scheduler.packet_arrival(id);
+        assert_eq!(jd.scheduler.granted_total(), 1);
+        jd.fail_instance(id);
+        assert_eq!(jd.scheduler.instance(id).unwrap().state, InstanceState::Stopped);
+        assert_eq!(jd.scheduler.granted_total(), 0, "crashed cores must return to the pool");
+        // Monitoring shows it down.
+        let down = jd.monitor();
+        assert_eq!(down[0].running, 0);
+        // Recovery sweep relaunches at junction cold-start cost (~3.4ms).
+        let (revived, worst) = jd.restart_crashed();
+        assert_eq!(revived, 1);
+        assert!(worst > 3 * MILLIS && worst < 4 * MILLIS);
+        assert_eq!(jd.monitor()[0].running, 1);
+        jd.scheduler.check_invariants();
+        // And it serves again.
+        assert!(matches!(
+            jd.scheduler.packet_arrival(id),
+            crate::junction::GrantOutcome::Granted { .. }
+        ));
+    }
+
+    #[test]
+    fn restart_is_noop_without_crashes() {
+        let mut jd = manager();
+        jd.deploy_function(&FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        let (revived, worst) = jd.restart_crashed();
+        assert_eq!((revived, worst), (0, 0));
+    }
+
+    #[test]
+    fn monitor_reports_all_functions() {
+        let mut jd = manager();
+        jd.deploy_function(&FunctionSpec::new("a", "aes600", RuntimeKind::Go));
+        jd.deploy_function(&FunctionSpec::new("b", "aes600", RuntimeKind::Python));
+        let states = jd.monitor();
+        assert_eq!(states.len(), 2);
+        assert!(states.iter().all(|s| s.running == s.instances));
+    }
+}

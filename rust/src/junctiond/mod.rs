@@ -1,0 +1,14 @@
+//! junctiond — the paper's contribution (§3–§4): the function manager that
+//! replaces containerd as faasd's execution backend.
+//!
+//! junctiond is "a simple component that manages the configuration of
+//! junction instances (including network settings), the deployment of
+//! instances via the custom `junction_run` command, and the monitoring of
+//! the running state of all functions" (§4). It is the only component that
+//! runs *outside* a Junction instance, so it can spawn isolated instances
+//! for each function; the faasd gateway and provider themselves run inside
+//! Junction instances (§3, Figure 4).
+
+mod manager;
+
+pub use manager::{InstanceConfig, Junctiond, RunState};

@@ -1,0 +1,34 @@
+//! # junctiond-repro
+//!
+//! Reproduction of *"Junctiond: Extending FaaS Runtimes with Kernel-Bypass"*
+//! (Saurez et al., 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the faasd-shaped FaaS runtime (gateway →
+//!   provider → execution backend), the `junctiond` function manager, a
+//!   Junction kernel-bypass simulator, the `containerd` baseline backend,
+//!   and the discrete-event substrate that replaces the paper's two-machine
+//!   100 GbE testbed.
+//! * **Layer 2/1 (python/, build-time only)** — the function bodies (AES-128
+//!   -CTR over a 600-byte payload, MLP inference, row-sum) written in JAX
+//!   with Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! The Rust binary loads the artifacts through the PJRT CPU client (`xla`
+//! crate) and executes the *real* function compute on the request path;
+//! Python never runs at serve time.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod containerd_sim;
+pub mod experiments;
+pub mod faas;
+pub mod junction;
+pub mod junctiond;
+pub mod oskernel;
+pub mod rpc;
+pub mod runtime;
+pub mod server;
+pub mod simcore;
+pub mod telemetry;
+pub mod workload;

@@ -1,0 +1,179 @@
+//! junctiond-repro CLI — the launcher for every experiment in the repo.
+//!
+//! ```text
+//! junctiond-repro fig5      [--invocations N] [--seed S] [--csv DIR]
+//! junctiond-repro fig6      [--duration-ms MS] [--seed S] [--csv DIR]
+//! junctiond-repro coldstart [--trials N] [--seed S]
+//! junctiond-repro ablation  --which cache|polling|scaleup
+//! junctiond-repro serve     --mode kernel|bypass [--requests N]
+//! junctiond-repro calibrate [--runs N]
+//! junctiond-repro monitor
+//! ```
+//!
+//! (Hand-rolled argument parsing: the crates.io registry is offline in
+//! this environment, so no clap.)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::server::{run_pipeline, ServeMode};
+use junctiond_repro::simcore::MILLIS;
+use junctiond_repro::telemetry::write_csv;
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument '{a}'");
+        };
+        let val = args.get(i + 1).cloned().unwrap_or_default();
+        anyhow::ensure!(!val.starts_with("--") && !val.is_empty(), "flag --{key} needs a value");
+        flags.insert(key.to_string(), val);
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn get_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> Result<u64> {
+    flags
+        .get(key)
+        .map(|v| v.parse::<u64>().with_context(|| format!("--{key} '{v}' is not a number")))
+        .unwrap_or(Ok(default))
+}
+
+fn maybe_csv(
+    flags: &HashMap<String, String>,
+    table: &junctiond_repro::telemetry::Table,
+    name: &str,
+) -> Result<()> {
+    if let Some(dir) = flags.get("csv") {
+        let path = std::path::Path::new(dir).join(format!("{name}.csv"));
+        write_csv(table, &path)?;
+        eprintln!("# wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: junctiond-repro <fig5|fig6|coldstart|ablation|serve|calibrate|monitor> [flags]\n\
+         flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
+         --which cache|polling|scaleup  --mode kernel|bypass --requests N --runs N"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let flags = parse_flags(&argv[1..])?;
+    match cmd.as_str() {
+        "fig5" => {
+            let n = get_u64(&flags, "invocations", 100)? as u32;
+            let seed = get_u64(&flags, "seed", 1)?;
+            let (table, _, _) = ex::fig5_table(n, seed);
+            println!("{}", table.to_markdown());
+            maybe_csv(&flags, &table, "fig5")?;
+        }
+        "fig6" => {
+            let dur = get_u64(&flags, "duration-ms", 1000)? * MILLIS;
+            let seed = get_u64(&flags, "seed", 3)?;
+            let rates = ex::fig6_default_rates();
+            let (table, points) = ex::fig6_table(&rates, dur, seed);
+            println!("{}", table.to_markdown());
+            let sla = 5 * MILLIS;
+            let kc = ex::knee(&points, Backend::Containerd, sla);
+            let kj = ex::knee(&points, Backend::Junctiond, sla);
+            println!(
+                "sustainable throughput (p99 ≤ 5ms): containerd {kc:.0} rps, junctiond {kj:.0} rps ({:.1}×)",
+                kj / kc.max(1.0)
+            );
+            maybe_csv(&flags, &table, "fig6")?;
+        }
+        "coldstart" => {
+            let trials = get_u64(&flags, "trials", 100)? as u32;
+            let seed = get_u64(&flags, "seed", 5)?;
+            let table = ex::coldstart_table(trials, seed);
+            println!("{}", table.to_markdown());
+            maybe_csv(&flags, &table, "coldstart")?;
+        }
+        "ablation" => {
+            let which = flags.get("which").map(|s| s.as_str()).unwrap_or("cache");
+            let seed = get_u64(&flags, "seed", 2)?;
+            let table = match which {
+                "cache" => ex::ablation_cache_table(100, seed),
+                "polling" => ex::ablation_polling_table(&[1, 4, 16, 64, 256, 1024, 4096], seed),
+                "scaleup" => ex::ablation_scaleup_table(20_000.0, seed),
+                "isolation" => ex::isolation_table(100, seed),
+                "autoscale" => ex::autoscale_table(Backend::Junctiond, seed),
+                "multitenant" => ex::multitenant_table(60, 1_000.0, seed),
+                other => bail!(
+                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant)"
+                ),
+            };
+            println!("{}", table.to_markdown());
+            maybe_csv(&flags, &table, &format!("ablation_{which}"))?;
+        }
+        "serve" => {
+            let mode = match flags.get("mode").map(|s| s.as_str()).unwrap_or("bypass") {
+                "kernel" => ServeMode::Kernel,
+                "bypass" => ServeMode::Bypass,
+                other => bail!("unknown mode '{other}' (kernel|bypass)"),
+            };
+            let n = get_u64(&flags, "requests", 100)? as usize;
+            let mut h = run_pipeline(mode, junctiond_repro::runtime::default_artifacts_dir())?;
+            let payload = [0x5Au8; 600];
+            let mut lat = junctiond_repro::telemetry::Samples::with_capacity(n);
+            for _ in 0..5 {
+                h.invoke_aes600(&payload)?; // warmup
+            }
+            for _ in 0..n {
+                let t0 = std::time::Instant::now();
+                h.invoke_aes600(&payload)?;
+                lat.record(t0.elapsed().as_nanos() as u64);
+            }
+            h.shutdown()?;
+            println!("serve mode={} {}", mode.name(), lat.summary().fmt_us());
+        }
+        "calibrate" => {
+            let runs = get_u64(&flags, "runs", 50)? as u32;
+            let exec = junctiond_repro::runtime::Executor::load(
+                &junctiond_repro::runtime::default_artifacts_dir(),
+            )?;
+            let c = junctiond_repro::runtime::calibrate(&exec, runs)?;
+            println!(
+                "aes600 compute: p50 {}µs, mean {}µs, min {}µs over {} runs",
+                c.p50_ns / 1000,
+                c.mean_ns / 1000,
+                c.min_ns / 1000,
+                c.runs
+            );
+        }
+        "monitor" => {
+            // Demonstrate junctiond's monitoring endpoint on a toy deployment.
+            use junctiond_repro::config::{ExperimentConfig, PlatformConfig};
+            use junctiond_repro::faas::{FaasSim, FunctionSpec, RuntimeKind};
+            use junctiond_repro::simcore::Sim;
+            let cfg = ExperimentConfig { backend: Backend::Junctiond, ..Default::default() };
+            let mut sim = Sim::new();
+            let fs = FaasSim::new(&cfg, std::rc::Rc::new(PlatformConfig::default()));
+            for (name, runtime) in [("aes", RuntimeKind::Go), ("thumbnailer", RuntimeKind::Python)]
+            {
+                fs.deploy(&mut sim, FunctionSpec::new(name, "aes600", runtime));
+            }
+            sim.run_until(junctiond_repro::simcore::SECONDS);
+            for _ in 0..4 {
+                fs.submit(&mut sim, "aes", |_, _| {});
+            }
+            sim.run_to_completion();
+            println!("{:#?}", fs.scheduler_stats());
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

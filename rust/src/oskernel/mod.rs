@@ -1,0 +1,229 @@
+//! Host-kernel cost model (the baseline network/OS path).
+//!
+//! Models the per-operation costs a request pays when faasd components and
+//! functions run as ordinary Linux processes with kernel networking:
+//! syscall traps, context switches, hard-IRQ + softirq packet processing,
+//! scheduler wakeups, epoll rounds, and the veth/bridge hop into a
+//! container network namespace.
+//!
+//! Costs are sampled, not constant: the kernel path carries *heavy-tailed
+//! jitter* (timer interrupts landing mid-request, softirq bursts, scheduler
+//! migrations, TLB shootdowns). This jitter is exactly what the paper's
+//! P99 numbers measure — Junction's user-space path removes most of it
+//! (§5: P99 −63.42% end-to-end, −81% function execution). The tail model
+//! is a bounded Pareto on the wakeup/IRQ components (`Rng::heavy_tail`),
+//! which matches the qualitative shape of kernel jitter distributions.
+
+use std::rc::Rc;
+
+use crate::config::PlatformConfig;
+use crate::simcore::{Rng, Time};
+
+/// Jitter knobs for the kernel path.
+#[derive(Debug, Clone)]
+pub struct JitterModel {
+    /// Pareto shape for wakeup/IRQ tails (lower = heavier tail).
+    pub alpha: f64,
+    /// Cap in multiples of the mean.
+    pub cap: f64,
+    /// Fraction of *deterministic* base retained; the rest is the sampled
+    /// tail component's mean.
+    pub base_fraction: f64,
+}
+
+impl Default for JitterModel {
+    fn default() -> Self {
+        JitterModel { alpha: 1.6, cap: 60.0, base_fraction: 0.7 }
+    }
+}
+
+/// Precomputed inverse-CDF table for the bounded-Pareto tail: sampling
+/// `Q[below(N)]` is distribution-equivalent to `Rng::heavy_tail` but costs
+/// an array read instead of `powf`/`ln` — the DES hot path samples this
+/// 10–20 times per simulated invocation (§Perf: this table cut the
+/// containerd pipeline cost ~2×).
+struct TailTable {
+    /// Multipliers of the mean, Q((i+0.5)/N) for i in 0..N.
+    q: Vec<f64>,
+}
+
+const TAIL_TABLE_N: usize = 4096;
+
+impl TailTable {
+    fn new(alpha: f64, cap: f64) -> TailTable {
+        let norm = alpha / (alpha - 1.0); // mean of the unit Pareto
+        let q = (0..TAIL_TABLE_N)
+            .map(|i| {
+                let u = 1.0 - (i as f64 + 0.5) / TAIL_TABLE_N as f64; // (0,1]
+                (u.powf(-1.0 / alpha) / norm).min(cap)
+            })
+            .collect();
+        TailTable { q }
+    }
+
+    #[inline]
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.q[rng.below(TAIL_TABLE_N as u64) as usize]
+    }
+}
+
+/// Sampler for kernel-path costs. One per simulated server; deterministic
+/// given its RNG stream.
+pub struct KernelCosts {
+    p: Rc<PlatformConfig>,
+    jitter: JitterModel,
+    tail: TailTable,
+    rng: Rng,
+    // telemetry
+    pub msgs_recv: u64,
+    pub msgs_sent: u64,
+    pub wakeups: u64,
+    pub syscalls: u64,
+}
+
+impl KernelCosts {
+    pub fn new(platform: Rc<PlatformConfig>, rng: Rng) -> Self {
+        let jitter = JitterModel::default();
+        KernelCosts {
+            p: platform,
+            tail: TailTable::new(jitter.alpha, jitter.cap),
+            jitter,
+            rng,
+            msgs_recv: 0,
+            msgs_sent: 0,
+            wakeups: 0,
+            syscalls: 0,
+        }
+    }
+
+    pub fn with_jitter(mut self, jitter: JitterModel) -> Self {
+        self.tail = TailTable::new(jitter.alpha, jitter.cap);
+        self.jitter = jitter;
+        self
+    }
+
+    /// Sample a value with the configured heavy-tail jitter around `mean`.
+    fn tailed(&mut self, mean: Time) -> Time {
+        let base = (mean as f64 * self.jitter.base_fraction) as Time;
+        let tail_mean = mean as f64 * (1.0 - self.jitter.base_fraction);
+        let sampled = tail_mean * self.tail.sample(&mut self.rng);
+        base + sampled as Time
+    }
+
+    /// CPU cost of receiving one small message in a process: hard IRQ +
+    /// softirq, kernel TCP stack traversal, the `epoll_wait`/`read`
+    /// syscalls, and the wakeup + context switch to the sleeping task.
+    pub fn recv_msg(&mut self) -> Time {
+        self.msgs_recv += 1;
+        self.wakeups += 1;
+        self.syscalls += 2;
+        let irq = self.tailed(self.p.irq_softirq_ns);
+        let stack = self.p.kernel_stack_msg_ns;
+        let wake = self.tailed(self.p.sched_wakeup_ns) + self.p.context_switch_ns;
+        irq + stack + wake + self.p.epoll_round_ns + 2 * self.p.syscall_ns
+    }
+
+    /// CPU cost of sending one small message: `write`/`sendmsg` syscall +
+    /// kernel TCP TX path (checksum, qdisc, driver) + ACK processing
+    /// amortized onto the sender.
+    pub fn send_msg(&mut self) -> Time {
+        self.msgs_sent += 1;
+        self.syscalls += 1;
+        // The eventual ACK costs roughly half a softirq on this side.
+        let ack = self.tailed(self.p.irq_softirq_ns / 2);
+        self.p.syscall_ns + self.p.kernel_stack_msg_ns + ack
+    }
+
+    /// Extra cost when the message crosses a veth/bridge pair into a
+    /// container netns (the "software switching" the paper calls out).
+    pub fn veth_hop(&mut self) -> Time {
+        self.p.veth_hop_ns
+    }
+
+    /// Cost of `n` syscalls from the function body (read input, write
+    /// output, clock_gettime, mmap churn...). Each traps into the kernel.
+    pub fn syscalls(&mut self, n: u32) -> Time {
+        self.syscalls += n as u64;
+        n as Time * self.p.syscall_ns
+    }
+
+    /// Per-request process-scheduling overhead inside a busy instance:
+    /// timer ticks + involuntary context switches.
+    pub fn sched_noise(&mut self) -> Time {
+        self.tailed(self.p.context_switch_ns)
+    }
+
+    /// Rare kernel-path interference burst charged per CPU segment: CFS
+    /// throttling, a GC pause landing on a timer tick, an IRQ storm, or a
+    /// cross-core migration. This is the dominant source of the kernel
+    /// path's P99 (the paper's §5 tail claims); Junction segments never
+    /// take it — their instances are not subject to host-kernel
+    /// scheduling noise.
+    pub fn segment_interference(&mut self) -> Time {
+        if self.rng.below(10_000) < self.p.kernel_interference_prob_bp {
+            self.rng.range(self.p.kernel_interference_min_ns, self.p.kernel_interference_max_ns)
+        } else {
+            0
+        }
+    }
+
+    /// One-way wire latency between the client and worker machines.
+    pub fn wire(&self) -> Time {
+        self.p.wire_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::MICROS;
+
+    fn costs() -> KernelCosts {
+        KernelCosts::new(Rc::new(PlatformConfig::default()), Rng::new(7))
+    }
+
+    #[test]
+    fn recv_is_more_expensive_than_send() {
+        let mut c = costs();
+        let recv: Time = (0..1000).map(|_| c.recv_msg()).sum();
+        let send: Time = (0..1000).map(|_| c.send_msg()).sum();
+        assert!(recv > send, "recv {recv} send {send}");
+    }
+
+    #[test]
+    fn costs_have_heavy_tail() {
+        let mut c = costs();
+        let samples: Vec<Time> = (0..20_000).map(|_| c.recv_msg()).collect();
+        let mean = samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+        let max = *samples.iter().max().unwrap() as f64;
+        // The tail must reach several times the mean (kernel jitter), but
+        // stay bounded (Pareto cap).
+        assert!(max > mean * 2.0, "max {max} mean {mean}");
+        assert!(max < mean * 100.0, "runaway tail: max {max} mean {mean}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = KernelCosts::new(Rc::new(PlatformConfig::default()), Rng::new(3));
+        let mut b = KernelCosts::new(Rc::new(PlatformConfig::default()), Rng::new(3));
+        for _ in 0..100 {
+            assert_eq!(a.recv_msg(), b.recv_msg());
+            assert_eq!(a.send_msg(), b.send_msg());
+        }
+    }
+
+    #[test]
+    fn syscall_batches_accumulate_telemetry() {
+        let mut c = costs();
+        let t = c.syscalls(80);
+        assert_eq!(t, 80 * PlatformConfig::default().syscall_ns);
+        assert_eq!(c.syscalls, 80);
+    }
+
+    #[test]
+    fn recv_cost_is_microseconds_scale() {
+        let mut c = costs();
+        let v = c.recv_msg();
+        assert!(v > 5 * MICROS && v < 600 * MICROS, "recv {v}ns out of plausible range");
+    }
+}

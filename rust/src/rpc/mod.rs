@@ -1,0 +1,183 @@
+//! gRPC-like RPC layer: message types + length-prefixed wire framing.
+//!
+//! faasd connects its components with gRPC (§2.1.1: "each invocation
+//! involves at least three gRPC invocations"). This module carries the
+//! repo's equivalent: a compact binary framing shared by the real-mode
+//! servers in `server/` (over TCP sockets for the kernel path, over
+//! shared-memory rings for the bypass path). The DES pipeline charges the
+//! *costs* of these hops from the platform model instead of moving real
+//! bytes.
+//!
+//! Frame layout: `[u32 LE total_len][u8 kind][u64 LE request_id][body]`.
+
+use anyhow::{bail, Result};
+
+/// Message kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    InvokeRequest = 1,
+    InvokeResponse = 2,
+    Shutdown = 3,
+}
+
+impl Kind {
+    fn from_u8(v: u8) -> Result<Kind> {
+        Ok(match v {
+            1 => Kind::InvokeRequest,
+            2 => Kind::InvokeResponse,
+            3 => Kind::Shutdown,
+            other => bail!("unknown rpc kind {other}"),
+        })
+    }
+}
+
+/// One RPC message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    pub kind: Kind,
+    pub request_id: u64,
+    /// For requests: `<fn-name>\0<payload>`; for responses: `<status>\0<payload>`.
+    pub body: Vec<u8>,
+}
+
+impl Message {
+    pub fn invoke_request(request_id: u64, function: &str, payload: &[u8]) -> Message {
+        let mut body = Vec::with_capacity(function.len() + 1 + payload.len());
+        body.extend_from_slice(function.as_bytes());
+        body.push(0);
+        body.extend_from_slice(payload);
+        Message { kind: Kind::InvokeRequest, request_id, body }
+    }
+
+    pub fn invoke_response(request_id: u64, status: u8, payload: &[u8]) -> Message {
+        let mut body = Vec::with_capacity(2 + payload.len());
+        body.push(status);
+        body.push(0);
+        body.extend_from_slice(payload);
+        Message { kind: Kind::InvokeResponse, request_id, body }
+    }
+
+    pub fn shutdown() -> Message {
+        Message { kind: Kind::Shutdown, request_id: 0, body: Vec::new() }
+    }
+
+    /// Split a request body into (function, payload).
+    pub fn parse_request(&self) -> Result<(&str, &[u8])> {
+        anyhow::ensure!(self.kind == Kind::InvokeRequest, "not a request");
+        let sep =
+            self.body.iter().position(|&b| b == 0).ok_or_else(|| anyhow::anyhow!("no sep"))?;
+        let name = std::str::from_utf8(&self.body[..sep])?;
+        Ok((name, &self.body[sep + 1..]))
+    }
+
+    /// Split a response body into (status, payload).
+    pub fn parse_response(&self) -> Result<(u8, &[u8])> {
+        anyhow::ensure!(self.kind == Kind::InvokeResponse, "not a response");
+        anyhow::ensure!(self.body.len() >= 2 && self.body[1] == 0, "malformed response");
+        Ok((self.body[0], &self.body[2..]))
+    }
+
+    /// Encode into a length-prefixed frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let total = 4 + 1 + 8 + self.body.len();
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(&(total as u32).to_le_bytes());
+        out.push(self.kind as u8);
+        out.extend_from_slice(&self.request_id.to_le_bytes());
+        out.extend_from_slice(&self.body);
+        out
+    }
+
+    /// Encode into a caller-provided buffer (hot-path variant: the server's
+    /// per-connection buffer is reused across requests, so steady-state
+    /// serving does no allocation here).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        let total = 4 + 1 + 8 + self.body.len();
+        out.reserve(total);
+        out.extend_from_slice(&(total as u32).to_le_bytes());
+        out.push(self.kind as u8);
+        out.extend_from_slice(&self.request_id.to_le_bytes());
+        out.extend_from_slice(&self.body);
+    }
+
+    /// Decode one frame (must be exactly one message).
+    pub fn decode(frame: &[u8]) -> Result<Message> {
+        anyhow::ensure!(frame.len() >= 13, "short frame: {} bytes", frame.len());
+        let total = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(total == frame.len(), "length mismatch: {} != {}", total, frame.len());
+        let kind = Kind::from_u8(frame[4])?;
+        let request_id = u64::from_le_bytes(frame[5..13].try_into().unwrap());
+        Ok(Message { kind, request_id, body: frame[13..].to_vec() })
+    }
+
+    /// Read the frame length from a 4-byte header.
+    pub fn frame_len(header: &[u8; 4]) -> usize {
+        u32::from_le_bytes(*header) as usize
+    }
+}
+
+/// Number of gRPC hops in one faasd invocation (§2.1.1: client→gateway,
+/// gateway→provider, provider→function), used by cost accounting.
+pub const HOPS_PER_INVOCATION: u32 = 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::{forall, Gen};
+
+    #[test]
+    fn request_round_trip() {
+        let m = Message::invoke_request(42, "aes600", b"payload-bytes");
+        let decoded = Message::decode(&m.encode()).unwrap();
+        assert_eq!(decoded, m);
+        let (name, payload) = decoded.parse_request().unwrap();
+        assert_eq!(name, "aes600");
+        assert_eq!(payload, b"payload-bytes");
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let m = Message::invoke_response(42, 0, b"cipher");
+        let decoded = Message::decode(&m.encode()).unwrap();
+        let (status, payload) = decoded.parse_response().unwrap();
+        assert_eq!(status, 0);
+        assert_eq!(payload, b"cipher");
+    }
+
+    #[test]
+    fn encode_into_matches_encode() {
+        let m = Message::invoke_request(7, "f", b"xyz");
+        let mut buf = Vec::new();
+        m.encode_into(&mut buf);
+        assert_eq!(buf, m.encode());
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[0, 0, 0, 0]).is_err());
+        let mut good = Message::shutdown().encode();
+        good[4] = 99; // unknown kind
+        assert!(Message::decode(&good).is_err());
+        let mut short = Message::shutdown().encode();
+        short[0] = 200; // wrong length
+        assert!(Message::decode(&short).is_err());
+    }
+
+    #[test]
+    fn property_any_payload_round_trips() {
+        forall("rpc round trip", 100, |g: &mut Gen| {
+            let n = g.usize(0, 2000);
+            let payload: Vec<u8> = (0..n).map(|_| g.u64(0, 255) as u8).collect();
+            let id = g.u64(0, u64::MAX - 1);
+            let m = Message::invoke_request(id, "fn-name", &payload);
+            let d = Message::decode(&m.encode()).unwrap();
+            assert_eq!(d.request_id, id);
+            let (name, p) = d.parse_request().unwrap();
+            assert_eq!(name, "fn-name");
+            assert_eq!(p, &payload[..]);
+        });
+    }
+}

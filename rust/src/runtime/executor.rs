@@ -1,0 +1,291 @@
+//! Artifact loading + execution on the PJRT CPU client.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Ini;
+use crate::simcore::Time;
+
+/// Dtype+shape signature of one artifact argument, parsed from
+/// `manifest.ini` (e.g. `int32:600`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSig {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSig {
+    fn parse(s: &str) -> Result<ArgSig> {
+        let (dtype, dims) =
+            s.split_once(':').with_context(|| format!("bad arg sig '{s}'"))?;
+        let shape = dims
+            .split(',')
+            .filter(|d| !d.is_empty())
+            .map(|d| d.trim().parse::<usize>().with_context(|| format!("bad dim '{d}'")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArgSig { dtype: dtype.trim().to_string(), shape })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact.
+pub struct FunctionArtifact {
+    pub name: String,
+    pub args: Vec<ArgSig>,
+    exe: xla::PjRtLoadedExecutable,
+    pub invocations: std::cell::Cell<u64>,
+}
+
+/// The PJRT executor: one CPU client + all compiled catalog entries.
+pub struct Executor {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: BTreeMap<String, FunctionArtifact>,
+    pub dir: PathBuf,
+}
+
+impl Executor {
+    /// Load every entry listed in `<dir>/manifest.ini`.
+    pub fn load(dir: &Path) -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Ini::load(&dir.join("manifest.ini"))?;
+        // Section names are `<name>.artifact` keys in the flattened INI.
+        let names: Vec<String> = manifest
+            .keys()
+            .filter_map(|k| k.strip_suffix(".artifact").map(|s| s.to_string()))
+            .collect();
+        anyhow::ensure!(!names.is_empty(), "empty manifest in {}", dir.display());
+        let mut artifacts = BTreeMap::new();
+        for name in names {
+            let file = manifest.get(&format!("{name}.artifact")).unwrap();
+            let sig = manifest
+                .get(&format!("{name}.args"))
+                .with_context(|| format!("missing args for {name}"))?;
+            let args = sig
+                .split(';')
+                .filter(|s| !s.is_empty())
+                .map(ArgSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let proto = xla::HloModuleProto::from_text_file(dir.join(file).to_str().unwrap())
+                .map_err(|e| anyhow::anyhow!("loading {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+            artifacts.insert(
+                name.clone(),
+                FunctionArtifact { name, args, exe, invocations: std::cell::Cell::new(0) },
+            );
+        }
+        Ok(Executor { client, artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&FunctionArtifact> {
+        self.artifacts.get(name)
+    }
+
+    fn invoke_literals<T: xla::NativeType + xla::ArrayElement>(
+        &self,
+        name: &str,
+        args: &[Vec<T>],
+    ) -> Result<Vec<T>> {
+        let art =
+            self.artifacts.get(name).with_context(|| format!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            args.len() == art.args.len(),
+            "{name}: expected {} args, got {}",
+            art.args.len(),
+            args.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (sig, data) in art.args.iter().zip(args) {
+            anyhow::ensure!(
+                data.len() == sig.elements(),
+                "{name}: arg size {} != {:?}",
+                data.len(),
+                sig.shape
+            );
+            let lit = xla::Literal::vec1(data);
+            let lit = if sig.shape.len() > 1 {
+                let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        art.invocations.set(art.invocations.get() + 1);
+        out.to_vec::<T>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute an i32-typed artifact with the given flat argument vectors
+    /// (shapes from the manifest are applied). Returns the flat i32 output
+    /// of the 1-tuple result.
+    pub fn invoke_i32(&self, name: &str, args: &[Vec<i32>]) -> Result<Vec<i32>> {
+        self.invoke_literals::<i32>(name, args)
+    }
+
+    /// f32 counterpart (mlp_infer / rowsum / blur artifacts).
+    pub fn invoke_f32(&self, name: &str, args: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.invoke_literals::<f32>(name, args)
+    }
+
+    /// AES-128-CTR over a 600-byte payload via the `aes600` artifact — the
+    /// paper's benchmark function, on the real lowered HLO.
+    pub fn aes600(&self, plaintext: &[u8; 600], key: &[u8; 16], nonce: &[u8; 12]) -> Result<[u8; 600]> {
+        let args = vec![
+            plaintext.iter().map(|&b| b as i32).collect(),
+            key.iter().map(|&b| b as i32).collect(),
+            nonce.iter().map(|&b| b as i32).collect(),
+        ];
+        let out = self.invoke_i32("aes600", &args)?;
+        anyhow::ensure!(out.len() == 600, "aes600 returned {} elements", out.len());
+        let mut ct = [0u8; 600];
+        for (dst, &v) in ct.iter_mut().zip(&out) {
+            anyhow::ensure!((0..=255).contains(&v), "non-byte output {v}");
+            *dst = v as u8;
+        }
+        Ok(ct)
+    }
+}
+
+/// Result of timing the AES-600B artifact on this machine.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub p50_ns: Time,
+    pub mean_ns: Time,
+    pub min_ns: Time,
+    pub runs: u32,
+}
+
+/// Measure the real per-invocation compute cost of `aes600`. The *median*
+/// feeds `ExperimentConfig::function_compute_ns`, so the simulator's
+/// function service time is the measured cost of the actual lowered HLO.
+pub fn calibrate(exec: &Executor, runs: u32) -> Result<Calibration> {
+    let pt = [7u8; 600];
+    let key = [1u8; 16];
+    let nonce = [2u8; 12];
+    // Warmup (first run pays one-time PJRT initialization).
+    for _ in 0..3 {
+        exec.aes600(&pt, &key, &nonce)?;
+    }
+    let mut samples = Vec::with_capacity(runs as usize);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        exec.aes600(&pt, &key, &nonce)?;
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let p50 = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<u64>() / samples.len() as u64;
+    Ok(Calibration { p50_ns: p50, mean_ns: mean, min_ns: samples[0], runs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{default_artifacts_dir, rustcrypto_aes_ctr};
+
+    fn executor() -> Executor {
+        Executor::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn loads_all_catalog_entries() {
+        let e = executor();
+        let names: Vec<&str> = e.names().collect();
+        for expected in ["aes600", "aes_blocks", "mlp_infer", "rowsum", "blur"] {
+            assert!(names.contains(&expected), "missing {expected} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn f32_artifacts_execute() {
+        let e = executor();
+        // rowsum: (64,64) ones → every row sums to 64.
+        let out = e.invoke_f32("rowsum", &[vec![1.0f32; 64 * 64]]).unwrap();
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|&v| (v - 64.0).abs() < 1e-4));
+        // blur: constant image stays constant in the interior.
+        let img = vec![2.0f32; 64 * 64];
+        let b = e.invoke_f32("blur", &[img]).unwrap();
+        assert_eq!(b.len(), 64 * 64);
+        let center = b[32 * 64 + 32];
+        assert!((center - 2.0).abs() < 1e-4, "center {center}");
+        let corner = b[0];
+        assert!(corner < 1.0, "corner {corner} should be attenuated by zero pad");
+        // mlp_infer: finite logits.
+        let y = e.invoke_f32("mlp_infer", &[vec![0.5f32; 64]]).unwrap();
+        assert_eq!(y.len(), 10);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn aes600_matches_rustcrypto_oracle() {
+        // The artifact (JAX + Pallas AES, AOT-lowered) must agree with the
+        // completely independent RustCrypto implementation.
+        let e = executor();
+        let mut pt = [0u8; 600];
+        for (i, b) in pt.iter_mut().enumerate() {
+            *b = (i * 31 % 256) as u8;
+        }
+        let key = *b"0123456789abcdef";
+        let nonce = [9u8; 12];
+        let got = e.aes600(&pt, &key, &nonce).unwrap();
+        let want = rustcrypto_aes_ctr(&pt, &key, &nonce);
+        assert_eq!(got.to_vec(), want);
+    }
+
+    #[test]
+    fn aes600_roundtrip() {
+        let e = executor();
+        let pt = [42u8; 600];
+        let key = [3u8; 16];
+        let nonce = [4u8; 12];
+        let ct = e.aes600(&pt, &key, &nonce).unwrap();
+        let rt = e.aes600(&ct, &key, &nonce).unwrap();
+        assert_eq!(rt, pt);
+        assert_ne!(ct, pt);
+    }
+
+    #[test]
+    fn bad_arity_rejected() {
+        let e = executor();
+        assert!(e.invoke_i32("aes600", &[vec![0; 600]]).is_err());
+        assert!(e.invoke_i32("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        let e = executor();
+        let args = vec![vec![0i32; 599], vec![0; 16], vec![0; 12]];
+        assert!(e.invoke_i32("aes600", &args).is_err());
+    }
+
+    #[test]
+    fn calibration_is_positive_and_stable() {
+        let e = executor();
+        let cal = calibrate(&e, 20).unwrap();
+        assert!(cal.p50_ns > 0);
+        assert!(cal.min_ns <= cal.p50_ns);
+        assert!(cal.p50_ns < 1_000_000_000, "AES-600B taking >1s is wrong");
+    }
+}

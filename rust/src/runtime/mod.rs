@@ -1,0 +1,27 @@
+//! PJRT runtime: loads the AOT artifacts and executes function bodies.
+//!
+//! This is the L2/L3 bridge. `make artifacts` (Python, build-time only)
+//! lowers the JAX/Pallas function catalog to `artifacts/*.hlo.txt`; this
+//! module loads the HLO **text** via `HloModuleProto::from_text_file`,
+//! compiles it once on the PJRT CPU client, and executes it from the
+//! serving hot path. Python never runs at serve time.
+//!
+//! Also here: [`calibrate`], which measures the real compute cost of the
+//! AES-600B artifact on this machine and feeds it to the simulator's
+//! service-time model, and a cross-check of the JAX/Pallas AES against
+//! the independent RustCrypto `aes` implementation.
+
+mod aes_check;
+mod executor;
+
+pub use aes_check::rustcrypto_aes_ctr;
+pub use executor::{calibrate, ArgSig, Calibration, Executor, FunctionArtifact};
+
+/// Default artifacts directory, relative to the repo root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // Honor an override for tests / relocated builds.
+    if let Ok(dir) = std::env::var("JUNCTIOND_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,277 @@
+//! The real-mode pipeline: gateway, provider, and worker threads wired by
+//! either transport, with the PJRT executor on the worker.
+//!
+//! Topology (one hop chain, mirroring faasd):
+//!
+//! ```text
+//! client ──(gateway channel)──► gateway thread
+//!          ──(provider channel)──► provider thread
+//!          ──(worker channel)──► worker thread [PJRT aes600]
+//! ```
+//!
+//! In `ServeMode::Kernel` each channel is a loopback TCP connection; in
+//! `ServeMode::Bypass` each is a polled shared-memory ring. The component
+//! logic is identical — only the transport differs, which is exactly the
+//! paper's point.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::rpc::{Kind, Message};
+use crate::runtime::Executor;
+
+use super::ring::RingPair;
+use super::transport::{FrameRx, FrameTx, RingRx, RingTx, TcpFramed};
+
+/// Which transport the pipeline's hops use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Loopback TCP through the host kernel (mainline-faasd analogue).
+    Kernel,
+    /// Polled shared-memory rings (Junction analogue).
+    Bypass,
+}
+
+impl ServeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeMode::Kernel => "kernel",
+            ServeMode::Bypass => "bypass",
+        }
+    }
+}
+
+/// Handle to a running pipeline: the client-facing channel + join handles.
+pub struct PipelineHandle {
+    tx: Box<dyn FrameTx>,
+    rx: Box<dyn FrameRx>,
+    threads: Vec<JoinHandle<()>>,
+    next_id: u64,
+}
+
+impl PipelineHandle {
+    /// Invoke the AES-600B function once; returns the 600-byte ciphertext.
+    pub fn invoke_aes600(&mut self, payload: &[u8; 600]) -> Result<Vec<u8>> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Message::invoke_request(id, "aes600", payload);
+        self.tx.send_frame(&req.encode())?;
+        let frame = self.rx.recv_frame()?.context("pipeline closed")?;
+        let resp = Message::decode(&frame)?;
+        anyhow::ensure!(resp.request_id == id, "response id mismatch");
+        let (status, body) = resp.parse_response()?;
+        anyhow::ensure!(status == 0, "function error status {status}");
+        Ok(body.to_vec())
+    }
+
+    /// Shut the pipeline down and join all component threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.tx.send_frame(&Message::shutdown().encode())?;
+        for t in self.threads.drain(..) {
+            t.join().map_err(|_| anyhow::anyhow!("component thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// A generic proxy component: receives a frame upstream, does its (small)
+/// component work, forwards downstream; relays responses back. This is
+/// both the gateway and the provider (their faasd logic differs only in
+/// bookkeeping, which `label` tags).
+fn proxy_loop(
+    label: &'static str,
+    mut up_rx: Box<dyn FrameRx>,
+    mut up_tx: Box<dyn FrameTx>,
+    mut down_tx: Box<dyn FrameTx>,
+    mut down_rx: Box<dyn FrameRx>,
+) {
+    // Provider metadata cache stand-in: function name → hit count. The
+    // real resolve logic lives in the DES (`faas::Provider`); here it is
+    // per-request bookkeeping on the same code path.
+    let mut cache: HashMap<String, u64> = HashMap::new();
+    loop {
+        let Ok(Some(frame)) = up_rx.recv_frame() else { break };
+        let Ok(msg) = Message::decode(&frame) else { break };
+        match msg.kind {
+            Kind::Shutdown => {
+                let _ = down_tx.send_frame(&frame);
+                break;
+            }
+            Kind::InvokeRequest => {
+                if let Ok((name, _)) = msg.parse_request() {
+                    *cache.entry(name.to_string()).or_insert(0) += 1;
+                }
+                if down_tx.send_frame(&frame).is_err() {
+                    break;
+                }
+                match down_rx.recv_frame() {
+                    Ok(Some(resp)) => {
+                        if up_tx.send_frame(&resp).is_err() {
+                            break;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            Kind::InvokeResponse => { /* stray response: drop */ }
+        }
+    }
+    log::debug!("{label} exiting");
+}
+
+/// Worker loop: owns the PJRT executor; executes the real artifact.
+fn worker_loop(mut rx: Box<dyn FrameRx>, mut tx: Box<dyn FrameTx>, artifacts: std::path::PathBuf) {
+    let exec = Executor::load(&artifacts).expect("worker: loading artifacts");
+    let key = *b"junctiond-repro!";
+    let nonce = [7u8; 12];
+    let mut resp_buf = Vec::with_capacity(640);
+    loop {
+        let Ok(Some(frame)) = rx.recv_frame() else { break };
+        let Ok(msg) = Message::decode(&frame) else { break };
+        match msg.kind {
+            Kind::Shutdown => break,
+            Kind::InvokeRequest => {
+                let reply = match msg.parse_request() {
+                    Ok(("aes600", payload)) if payload.len() == 600 => {
+                        let mut pt = [0u8; 600];
+                        pt.copy_from_slice(payload);
+                        match exec.aes600(&pt, &key, &nonce) {
+                            Ok(ct) => Message::invoke_response(msg.request_id, 0, &ct),
+                            Err(_) => Message::invoke_response(msg.request_id, 2, b""),
+                        }
+                    }
+                    _ => Message::invoke_response(msg.request_id, 1, b"bad request"),
+                };
+                reply.encode_into(&mut resp_buf);
+                if tx.send_frame(&resp_buf).is_err() {
+                    break;
+                }
+            }
+            Kind::InvokeResponse => {}
+        }
+    }
+}
+
+/// Build and start the 3-component pipeline in the chosen mode. Returns a
+/// client handle.
+pub fn run_pipeline(mode: ServeMode, artifacts: std::path::PathBuf) -> Result<PipelineHandle> {
+    match mode {
+        ServeMode::Bypass => {
+            // Three ring pairs: client↔gateway, gateway↔provider,
+            // provider↔worker.
+            let cg = RingPair::new();
+            let gp = RingPair::new();
+            let pw = RingPair::new();
+            let ((c_tx, c_rx), (g_up_tx, g_up_rx)) = cg.endpoints();
+            let ((g_down_tx, g_down_rx), (p_up_tx, p_up_rx)) = gp.endpoints();
+            let ((p_down_tx, p_down_rx), (w_tx, w_rx)) = pw.endpoints();
+            let gw = std::thread::Builder::new().name("gateway".into()).spawn(move || {
+                proxy_loop(
+                    "gateway",
+                    Box::new(RingRx(g_up_rx)),
+                    Box::new(RingTx(g_up_tx)),
+                    Box::new(RingTx(g_down_tx)),
+                    Box::new(RingRx(g_down_rx)),
+                )
+            })?;
+            let prov = std::thread::Builder::new().name("provider".into()).spawn(move || {
+                proxy_loop(
+                    "provider",
+                    Box::new(RingRx(p_up_rx)),
+                    Box::new(RingTx(p_up_tx)),
+                    Box::new(RingTx(p_down_tx)),
+                    Box::new(RingRx(p_down_rx)),
+                )
+            })?;
+            let worker = std::thread::Builder::new().name("worker".into()).spawn(move || {
+                worker_loop(Box::new(RingRx(w_rx)), Box::new(RingTx(w_tx)), artifacts)
+            })?;
+            Ok(PipelineHandle {
+                tx: Box::new(RingTx(c_tx)),
+                rx: Box::new(RingRx(c_rx)),
+                threads: vec![gw, prov, worker],
+                next_id: 1,
+            })
+        }
+        ServeMode::Kernel => {
+            // Three loopback TCP connections.
+            let gw_listener = TcpListener::bind("127.0.0.1:0")?;
+            let prov_listener = TcpListener::bind("127.0.0.1:0")?;
+            let worker_listener = TcpListener::bind("127.0.0.1:0")?;
+            let gw_addr = gw_listener.local_addr()?;
+            let prov_addr = prov_listener.local_addr()?;
+            let worker_addr = worker_listener.local_addr()?;
+
+            let worker = std::thread::Builder::new().name("worker".into()).spawn(move || {
+                let (s, _) = worker_listener.accept().expect("worker accept");
+                let fr = TcpFramed::new(s).expect("worker framed");
+                let fr2 = fr.try_clone().expect("clone");
+                worker_loop(Box::new(fr), Box::new(fr2), artifacts)
+            })?;
+            let prov = std::thread::Builder::new().name("provider".into()).spawn(move || {
+                let (s, _) = prov_listener.accept().expect("provider accept");
+                let up = TcpFramed::new(s).expect("framed");
+                let up2 = up.try_clone().expect("clone");
+                let down =
+                    TcpFramed::new(TcpStream::connect(worker_addr).expect("dial worker"))
+                        .expect("framed");
+                let down2 = down.try_clone().expect("clone");
+                proxy_loop("provider", Box::new(up), Box::new(up2), Box::new(down), Box::new(down2))
+            })?;
+            let gw = std::thread::Builder::new().name("gateway".into()).spawn(move || {
+                let (s, _) = gw_listener.accept().expect("gateway accept");
+                let up = TcpFramed::new(s).expect("framed");
+                let up2 = up.try_clone().expect("clone");
+                let down = TcpFramed::new(TcpStream::connect(prov_addr).expect("dial provider"))
+                    .expect("framed");
+                let down2 = down.try_clone().expect("clone");
+                proxy_loop("gateway", Box::new(up), Box::new(up2), Box::new(down), Box::new(down2))
+            })?;
+            let client = TcpFramed::new(TcpStream::connect(gw_addr)?)?;
+            let client_rx = client.try_clone()?;
+            Ok(PipelineHandle {
+                tx: Box::new(client),
+                rx: Box::new(client_rx),
+                threads: vec![gw, prov, worker],
+                next_id: 1,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{default_artifacts_dir, rustcrypto_aes_ctr};
+
+    fn check_pipeline(mode: ServeMode) {
+        let mut h = run_pipeline(mode, default_artifacts_dir()).unwrap();
+        let mut pt = [0u8; 600];
+        for (i, b) in pt.iter_mut().enumerate() {
+            *b = (i % 256) as u8;
+        }
+        let ct = h.invoke_aes600(&pt).unwrap();
+        // The worker uses a fixed key/nonce; verify against RustCrypto.
+        let want = rustcrypto_aes_ctr(&pt, b"junctiond-repro!", &[7u8; 12]);
+        assert_eq!(ct, want);
+        // A few more to exercise steady-state.
+        for _ in 0..5 {
+            let ct2 = h.invoke_aes600(&pt).unwrap();
+            assert_eq!(ct2, ct);
+        }
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bypass_pipeline_serves_real_aes() {
+        check_pipeline(ServeMode::Bypass);
+    }
+
+    #[test]
+    fn kernel_pipeline_serves_real_aes() {
+        check_pipeline(ServeMode::Kernel);
+    }
+}

@@ -1,0 +1,24 @@
+//! Real-mode serving: the faasd topology on real transports, with real
+//! PJRT compute — no simulation.
+//!
+//! This is the end-to-end demonstration (E7 in DESIGN.md): the same
+//! client → gateway → provider → worker pipeline as the DES, where
+//!
+//! * **kernel mode** uses genuine loopback TCP sockets — every hop
+//!   traverses the host kernel's network stack (syscalls, softirq, the
+//!   works), exactly like mainline faasd;
+//! * **bypass mode** uses in-process shared-memory rings with a polling
+//!   consumer — the hops never enter the kernel, the honest analogue of
+//!   Junction's user-space networking on this hardware (no bypass NICs
+//!   here; the substitution is documented in DESIGN.md §1).
+//!
+//! The worker thread owns the PJRT [`crate::runtime::Executor`] and runs
+//! the real AES-600B artifact for every request.
+
+mod components;
+mod ring;
+mod transport;
+
+pub use components::{run_pipeline, PipelineHandle, ServeMode};
+pub use ring::RingPair;
+pub use transport::{FrameRx, FrameTx, TcpFramed};

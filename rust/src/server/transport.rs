@@ -1,0 +1,152 @@
+//! Frame transports: a common send/recv interface over TCP sockets
+//! (kernel path) or shared-memory rings (bypass path).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::ring::Ring;
+
+/// Sending half of a frame channel.
+pub trait FrameTx: Send {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()>;
+}
+
+/// Receiving half of a frame channel. `None` = peer closed.
+pub trait FrameRx: Send {
+    fn recv_frame(&mut self) -> Result<Option<Vec<u8>>>;
+}
+
+// ---------------------------------------------------------------------------
+// TCP (kernel path)
+// ---------------------------------------------------------------------------
+
+/// Length-prefixed frames over a TCP stream. The frame layout already
+/// starts with a u32 length (see `rpc::Message::encode`), so the wire
+/// format *is* the frame.
+pub struct TcpFramed {
+    stream: TcpStream,
+}
+
+impl TcpFramed {
+    pub fn new(stream: TcpStream) -> Result<TcpFramed> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        Ok(TcpFramed { stream })
+    }
+
+    pub fn try_clone(&self) -> Result<TcpFramed> {
+        Ok(TcpFramed { stream: self.stream.try_clone()? })
+    }
+}
+
+impl FrameTx for TcpFramed {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        self.stream.write_all(frame)?;
+        Ok(())
+    }
+}
+
+impl FrameRx for TcpFramed {
+    fn recv_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let mut header = [0u8; 4];
+        match self.stream.read_exact(&mut header) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e.into()),
+        }
+        let total = u32::from_le_bytes(header) as usize;
+        anyhow::ensure!((13..16 << 20).contains(&total), "bad frame length {total}");
+        let mut frame = vec![0u8; total];
+        frame[..4].copy_from_slice(&header);
+        self.stream.read_exact(&mut frame[4..])?;
+        Ok(Some(frame))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring (bypass path)
+// ---------------------------------------------------------------------------
+
+/// Ring-backed sender.
+pub struct RingTx(pub Arc<Ring>);
+/// Ring-backed polling receiver.
+pub struct RingRx(pub Arc<Ring>);
+
+impl FrameTx for RingTx {
+    fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        self.0.send(frame.to_vec());
+        Ok(())
+    }
+}
+
+impl FrameRx for RingRx {
+    fn recv_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        Ok(self.0.recv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::Message;
+    use std::net::TcpListener;
+
+    #[test]
+    fn tcp_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut fr = TcpFramed::new(s).unwrap();
+            while let Some(frame) = fr.recv_frame().unwrap() {
+                let m = Message::decode(&frame).unwrap();
+                if m.kind == crate::rpc::Kind::Shutdown {
+                    break;
+                }
+                let resp = Message::invoke_response(m.request_id, 0, &m.body);
+                fr.send_frame(&resp.encode()).unwrap();
+            }
+        });
+        let mut c = TcpFramed::new(TcpStream::connect(addr).unwrap()).unwrap();
+        for i in 0..20u64 {
+            let m = Message::invoke_request(i, "echo", b"hello");
+            c.send_frame(&m.encode()).unwrap();
+            let resp = Message::decode(&c.recv_frame().unwrap().unwrap()).unwrap();
+            assert_eq!(resp.request_id, i);
+        }
+        c.send_frame(&Message::shutdown().encode()).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn ring_transport_round_trip() {
+        let pair = crate::server::RingPair::new();
+        let ((a_tx, a_rx), (b_tx, b_rx)) = pair.endpoints();
+        let (mut tx, mut rx) = (RingTx(a_tx), RingRx(a_rx));
+        let t = std::thread::spawn(move || {
+            let (mut btx, mut brx) = (RingTx(b_tx), RingRx(b_rx));
+            let f = brx.recv_frame().unwrap().unwrap();
+            btx.send_frame(&f).unwrap();
+        });
+        let m = Message::invoke_request(1, "f", b"x");
+        tx.send_frame(&m.encode()).unwrap();
+        let back = rx.recv_frame().unwrap().unwrap();
+        assert_eq!(Message::decode(&back).unwrap(), m);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_eof_returns_none() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            drop(s); // immediate close
+        });
+        let mut c = TcpFramed::new(TcpStream::connect(addr).unwrap()).unwrap();
+        t.join().unwrap();
+        assert!(c.recv_frame().unwrap().is_none());
+    }
+}

@@ -1,0 +1,210 @@
+//! The event-heap core of the simulator.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Virtual time in nanoseconds.
+pub type Time = u64;
+
+/// One virtual microsecond in `Time` units.
+pub const MICROS: Time = 1_000;
+/// One virtual millisecond in `Time` units.
+pub const MILLIS: Time = 1_000_000;
+/// One virtual second in `Time` units.
+pub const SECONDS: Time = 1_000_000_000;
+
+type EventFn = Box<dyn FnOnce(&mut Sim)>;
+
+struct Entry {
+    time: Time,
+    seq: u64,
+    event: EventFn,
+}
+
+// Order by (time, seq): seq is the insertion counter, so simultaneous events
+// fire in schedule order — this is what makes runs bit-deterministic.
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// A discrete-event simulation: an event heap plus a virtual clock.
+///
+/// Events are boxed `FnOnce(&mut Sim)` closures; world state lives in
+/// `Rc<RefCell<..>>` structures captured by the closures (the simulation is
+/// single-threaded by construction).
+pub struct Sim {
+    now: Time,
+    seq: u64,
+    heap: BinaryHeap<Reverse<Entry>>,
+    events_fired: u64,
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Self {
+        Sim { now: 0, seq: 0, heap: BinaryHeap::new(), events_fired: 0 }
+    }
+
+    /// Current virtual time.
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Total events fired so far (perf counter for the §Perf benches).
+    #[inline]
+    pub fn events_fired(&self) -> u64 {
+        self.events_fired
+    }
+
+    /// Schedule `event` at absolute virtual time `t` (must be >= now).
+    pub fn at<F: FnOnce(&mut Sim) + 'static>(&mut self, t: Time, event: F) {
+        debug_assert!(t >= self.now, "scheduling into the past: {} < {}", t, self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time: t.max(self.now), seq, event: Box::new(event) }));
+    }
+
+    /// Schedule `event` after a relative delay.
+    #[inline]
+    pub fn after<F: FnOnce(&mut Sim) + 'static>(&mut self, delay: Time, event: F) {
+        self.at(self.now + delay, event);
+    }
+
+    /// Run until the heap is empty or the clock passes `until`.
+    ///
+    /// Events scheduled exactly at `until` still fire; the first event
+    /// strictly after `until` is left in the heap and the clock stops at
+    /// `until`.
+    pub fn run_until(&mut self, until: Time) {
+        loop {
+            match self.heap.peek() {
+                None => break,
+                Some(Reverse(e)) if e.time > until => {
+                    self.now = until;
+                    return;
+                }
+                Some(_) => {}
+            }
+            let Reverse(entry) = self.heap.pop().unwrap();
+            self.now = entry.time;
+            self.events_fired += 1;
+            (entry.event)(self);
+        }
+        // Heap drained before `until`: advance the clock to the horizon.
+        self.now = self.now.max(until);
+    }
+
+    /// Run until the event heap drains completely.
+    pub fn run_to_completion(&mut self) {
+        while let Some(Reverse(entry)) = self.heap.pop() {
+            self.now = entry.time;
+            self.events_fired += 1;
+            (entry.event)(self);
+        }
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[test]
+    fn fires_in_time_order() {
+        let mut sim = Sim::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for &t in &[30u64, 10, 20] {
+            let log = log.clone();
+            sim.at(t, move |s| log.borrow_mut().push(s.now()));
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn ties_fire_in_schedule_order() {
+        let mut sim = Sim::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..100 {
+            let log = log.clone();
+            sim.at(5, move |_| log.borrow_mut().push(i));
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_scheduling_advances_clock() {
+        let mut sim = Sim::new();
+        let hits = Rc::new(RefCell::new(0u32));
+        let h = hits.clone();
+        sim.at(10, move |s| {
+            assert_eq!(s.now(), 10);
+            let h2 = h.clone();
+            s.after(5, move |s2| {
+                assert_eq!(s2.now(), 15);
+                *h2.borrow_mut() += 1;
+            });
+            *h.borrow_mut() += 1;
+        });
+        sim.run_to_completion();
+        assert_eq!(*hits.borrow(), 2);
+    }
+
+    #[test]
+    fn run_until_stops_and_resumes() {
+        let mut sim = Sim::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for &t in &[10u64, 20, 30] {
+            let log = log.clone();
+            sim.at(t, move |s| log.borrow_mut().push(s.now()));
+        }
+        sim.run_until(20);
+        assert_eq!(*log.borrow(), vec![10, 20]);
+        assert_eq!(sim.now(), 20);
+        assert_eq!(sim.pending(), 1);
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn clock_is_monotone_under_many_events() {
+        let mut sim = Sim::new();
+        let last = Rc::new(RefCell::new(0u64));
+        let mut rng = crate::simcore::Rng::new(42);
+        for _ in 0..10_000 {
+            let t = rng.next_u64() % 1_000_000;
+            let last = last.clone();
+            sim.at(t, move |s| {
+                assert!(s.now() >= *last.borrow());
+                *last.borrow_mut() = s.now();
+            });
+        }
+        sim.run_to_completion();
+    }
+}

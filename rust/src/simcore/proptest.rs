@@ -1,0 +1,132 @@
+//! Minimal property-testing harness (the `proptest` crate is unavailable
+//! offline, so we carry the 5% of it this repo needs: seeded generators,
+//! many cases, and a reproduction line on failure).
+//!
+//! Usage:
+//! ```
+//! use junctiond_repro::simcore::{forall, Gen};
+//! forall("addition commutes", 200, |g| {
+//!     let (a, b) = (g.u64(0, 1000), g.u64(0, 1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//! On failure the panic message includes the case seed so the exact case
+//! replays with `Gen::from_seed`.
+
+use super::rng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Uniform u64 in [lo, hi] inclusive.
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+
+    /// A vector of `n` draws.
+    pub fn vec_u64(&mut self, n: usize, lo: u64, hi: u64) -> Vec<u64> {
+        (0..n).map(|_| self.u64(lo, hi)).collect()
+    }
+
+    /// Sub-generator with an independent stream.
+    pub fn fork(&mut self) -> Gen {
+        let seed = self.rng.next_u64() | 1;
+        Gen::from_seed(seed)
+    }
+}
+
+/// Run `prop` for `cases` independently-seeded cases. Panics (with the
+/// failing seed) on the first failure.
+pub fn forall<F: FnMut(&mut Gen)>(name: &str, cases: u32, mut prop: F) {
+    // Derive case seeds from the property name so adding properties doesn't
+    // shift the cases of existing ones.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    let mut master = Rng::new(h | 1);
+    for case in 0..cases {
+        let seed = master.next_u64() | 1;
+        let mut g = Gen::from_seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay with Gen::from_seed({seed})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("u64 bounds respected", 100, |g| {
+            let v = g.u64(10, 20);
+            assert!((10..=20).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        forall("always fails", 10, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        forall("collect", 20, |g| first.push(g.u64(0, 1_000_000)));
+        let mut second = Vec::new();
+        forall("collect", 20, |g| second.push(g.u64(0, 1_000_000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn choose_hits_all_elements() {
+        let items = [1, 2, 3, 4];
+        let mut seen = [false; 4];
+        forall("choose coverage", 200, |g| {
+            seen[*g.choose(&[0usize, 1, 2, 3])] = true;
+            let _ = items;
+        });
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,327 @@
+//! Exact-sample and log-bucketed latency recorders.
+
+use super::LatencySummary;
+
+/// Exact recorder: stores every observation (nanoseconds).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<u64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { values: Vec::new(), sorted: true }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Samples { values: Vec::with_capacity(n), sorted: true }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.sorted = false;
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[u64] {
+        &self.values
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// Exact quantile via the nearest-rank method (q in [0,1]).
+    pub fn quantile(&mut self, q: f64) -> u64 {
+        if self.values.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let n = self.values.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        self.values[rank - 1]
+    }
+
+    pub fn min(&mut self) -> u64 {
+        self.ensure_sorted();
+        self.values.first().copied().unwrap_or(0)
+    }
+
+    pub fn max(&mut self) -> u64 {
+        self.ensure_sorted();
+        self.values.last().copied().unwrap_or(0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.values.iter().map(|&v| v as f64).sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn summary(&mut self) -> LatencySummary {
+        if self.values.is_empty() {
+            return LatencySummary::empty();
+        }
+        LatencySummary {
+            count: self.values.len() as u64,
+            min: self.min(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+            max: self.max(),
+            mean: self.mean(),
+        }
+    }
+
+    /// CDF points (value, cumulative fraction) — the shape plotted in Fig. 5.
+    pub fn cdf(&mut self) -> Vec<(u64, f64)> {
+        self.ensure_sorted();
+        let n = self.values.len();
+        self.values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, (i + 1) as f64 / n as f64))
+            .collect()
+    }
+}
+
+/// HDR-style log-bucketed histogram: 64 exponents × `SUB` linear sub-buckets
+/// → ≤ ~1.6% relative quantile error, O(1) record, fixed 4 KB footprint.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS; // 32 sub-buckets per power of two
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            buckets: vec![0; 64 * SUB],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let exp = 63 - v.leading_zeros();
+        let sub = ((v >> (exp - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        ((exp - SUB_BITS + 1) as usize) * SUB + sub
+    }
+
+    /// Representative (upper-bound) value of bucket `i`.
+    fn value_of(i: usize) -> u64 {
+        if i < SUB {
+            return i as u64;
+        }
+        let exp = (i / SUB) as u32 + SUB_BITS - 1;
+        let sub = (i % SUB) as u64;
+        (1u64 << exp) + ((sub + 1) << (exp - SUB_BITS)) - 1
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::value_of(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        if self.count == 0 {
+            return LatencySummary::empty();
+        }
+        LatencySummary {
+            count: self.count,
+            min: self.min,
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+            max: self.max,
+            mean: self.mean(),
+        }
+    }
+
+    /// Merge another histogram into this one (sharded recording).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::{forall, Rng};
+
+    #[test]
+    fn exact_quantiles_small() {
+        let mut s = Samples::new();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            s.record(v);
+        }
+        assert_eq!(s.quantile(0.5), 50);
+        assert_eq!(s.quantile(0.99), 100);
+        assert_eq!(s.quantile(0.0), 10);
+        assert_eq!(s.min(), 10);
+        assert_eq!(s.max(), 100);
+        assert!((s.mean() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_complete() {
+        let mut s = Samples::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            s.record(rng.range(1, 1_000_000));
+        }
+        let cdf = s.cdf();
+        assert_eq!(cdf.len(), 1000);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 < w[1].1 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn log_histogram_bounded_relative_error() {
+        forall("loghist relative error", 50, |g| {
+            let mut h = LogHistogram::new();
+            let mut s = Samples::new();
+            let n = g.usize(100, 5000);
+            for _ in 0..n {
+                let v = g.u64(1, 100_000_000);
+                h.record(v);
+                s.record(v);
+            }
+            for q in [0.5, 0.9, 0.99] {
+                let exact = s.quantile(q) as f64;
+                let approx = h.quantile(q) as f64;
+                let err = (approx - exact).abs() / exact.max(1.0);
+                assert!(err < 0.04, "q={q} exact={exact} approx={approx} err={err}");
+            }
+        });
+    }
+
+    #[test]
+    fn log_histogram_count_conservation() {
+        let mut h = LogHistogram::new();
+        for v in 0..10_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 10_000);
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_combined() {
+        let mut rng = Rng::new(9);
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut all = LogHistogram::new();
+        for i in 0..5000 {
+            let v = rng.range(1, 10_000_000);
+            if i % 2 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn quantile_monotone_in_q() {
+        forall("quantile monotone", 30, |g| {
+            let mut s = Samples::new();
+            for _ in 0..g.usize(1, 500) {
+                s.record(g.u64(0, 1_000_000));
+            }
+            let mut last = 0;
+            for i in 0..=100 {
+                let v = s.quantile(i as f64 / 100.0);
+                assert!(v >= last);
+                last = v;
+            }
+        });
+    }
+
+    #[test]
+    fn empty_recorders_are_sane() {
+        let mut s = Samples::new();
+        assert_eq!(s.summary(), LatencySummary::empty());
+        let h = LogHistogram::new();
+        assert_eq!(h.summary(), LatencySummary::empty());
+    }
+}

@@ -1,0 +1,195 @@
+//! Metrics registry with Prometheus-style text exposition.
+//!
+//! The paper's junctiond artifact lives on a branch named
+//! `junction_manager_prometheus` — the real system exports Prometheus
+//! metrics. This registry provides the same operational surface: counters,
+//! gauges, and latency histograms, rendered in the Prometheus text format
+//! (v0.0.4), pull-able from the real-mode server and dumpable from the
+//! simulator.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::LogHistogram;
+
+/// A single metric family's data.
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(LogHistogram),
+}
+
+/// Label-set → metric value, under one family name.
+pub struct Registry {
+    /// (family, help) → labels-string → metric
+    families: BTreeMap<String, (String, BTreeMap<String, Metric>)>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn label_key(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\""))).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { families: BTreeMap::new() }
+    }
+
+    fn family(&mut self, name: &str, help: &str) -> &mut BTreeMap<String, Metric> {
+        &mut self
+            .families
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), BTreeMap::new()))
+            .1
+    }
+
+    /// Increment a counter by `v`.
+    pub fn counter_add(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: u64) {
+        let key = label_key(labels);
+        match self.family(name, help).entry(key).or_insert(Metric::Counter(0)) {
+            Metric::Counter(c) => *c += v,
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Set a gauge.
+    pub fn gauge_set(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        let key = label_key(labels);
+        let slot = self.family(name, help).entry(key).or_insert(Metric::Gauge(0.0));
+        match slot {
+            Metric::Gauge(g) => *g = v,
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    /// Record a latency observation (ns) into a histogram metric.
+    pub fn observe(&mut self, name: &str, help: &str, labels: &[(&str, &str)], ns: u64) {
+        let key = label_key(labels);
+        let slot =
+            self.family(name, help).entry(key).or_insert_with(|| Metric::Histogram(LogHistogram::new()));
+        match slot {
+            Metric::Histogram(h) => h.record(ns),
+            _ => panic!("metric '{name}' already registered with another type"),
+        }
+    }
+
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        let (_, fam) = self.families.get(name)?;
+        match fam.get(&label_key(labels))? {
+            Metric::Counter(c) => Some(*c),
+            _ => None,
+        }
+    }
+
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let (_, fam) = self.families.get(name)?;
+        match fam.get(&label_key(labels))? {
+            Metric::Gauge(g) => Some(*g),
+            _ => None,
+        }
+    }
+
+    /// Render the Prometheus text exposition format.
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        for (name, (help, fam)) in &self.families {
+            let kind = match fam.values().next() {
+                Some(Metric::Counter(_)) => "counter",
+                Some(Metric::Gauge(_)) => "gauge",
+                Some(Metric::Histogram(_)) => "summary",
+                None => continue,
+            };
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for (labels, metric) in fam {
+                match metric {
+                    Metric::Counter(c) => {
+                        let _ = writeln!(out, "{name}{labels} {c}");
+                    }
+                    Metric::Gauge(g) => {
+                        let _ = writeln!(out, "{name}{labels} {g}");
+                    }
+                    Metric::Histogram(h) => {
+                        // Summary quantiles in seconds (Prometheus units).
+                        for q in [0.5, 0.9, 0.99] {
+                            let v = h.quantile(q) as f64 / 1e9;
+                            let lq = if labels.is_empty() {
+                                format!("{{quantile=\"{q}\"}}")
+                            } else {
+                                // Splice the quantile label into the set.
+                                let inner = &labels[1..labels.len() - 1];
+                                format!("{{{inner},quantile=\"{q}\"}}")
+                            };
+                            let _ = writeln!(out, "{name}{lq} {v}");
+                        }
+                        let _ = writeln!(out, "{name}_count{labels} {}", h.count());
+                        let _ = writeln!(
+                            out,
+                            "{name}_sum{labels} {}",
+                            h.mean() * h.count() as f64 / 1e9
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_label_set() {
+        let mut r = Registry::new();
+        r.counter_add("invocations_total", "total invocations", &[("backend", "junctiond")], 2);
+        r.counter_add("invocations_total", "total invocations", &[("backend", "junctiond")], 3);
+        r.counter_add("invocations_total", "total invocations", &[("backend", "containerd")], 1);
+        assert_eq!(r.counter_value("invocations_total", &[("backend", "junctiond")]), Some(5));
+        assert_eq!(r.counter_value("invocations_total", &[("backend", "containerd")]), Some(1));
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut r = Registry::new();
+        r.gauge_set("replicas", "replica count", &[("fn", "aes")], 1.0);
+        r.gauge_set("replicas", "replica count", &[("fn", "aes")], 4.0);
+        assert_eq!(r.gauge_value("replicas", &[("fn", "aes")]), Some(4.0));
+    }
+
+    #[test]
+    fn exposition_format_is_wellformed() {
+        let mut r = Registry::new();
+        r.counter_add("requests_total", "reqs", &[("code", "200")], 7);
+        r.gauge_set("in_flight", "concurrent requests", &[], 3.0);
+        for v in [1_000_000u64, 2_000_000, 50_000_000] {
+            r.observe("latency_seconds", "request latency", &[], v);
+        }
+        let text = r.expose();
+        assert!(text.contains("# TYPE requests_total counter"));
+        assert!(text.contains("requests_total{code=\"200\"} 7"));
+        assert!(text.contains("# TYPE in_flight gauge"));
+        assert!(text.contains("in_flight 3"));
+        assert!(text.contains("latency_seconds_count 3"));
+        assert!(text.contains("quantile=\"0.99\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "another type")]
+    fn type_confusion_panics() {
+        let mut r = Registry::new();
+        r.counter_add("x", "h", &[], 1);
+        r.gauge_set("x", "h", &[], 1.0);
+    }
+}

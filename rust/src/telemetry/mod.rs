@@ -1,0 +1,54 @@
+//! Latency recording and reporting.
+//!
+//! Two recorders:
+//! * [`Samples`] — keeps every observation for *exact* percentiles; right
+//!   for the paper's Fig. 5 (100 invocations) and any run up to a few
+//!   million points.
+//! * [`LogHistogram`] — HDR-style log-bucketed histogram with bounded
+//!   relative error; right for the hot path of long load sweeps where
+//!   storing every sample would distort the run being measured.
+//!
+//! Plus small helpers to render the markdown/CSV tables that the benches
+//! print (the repo's equivalent of the paper's figures).
+
+mod histogram;
+pub mod metrics;
+mod table;
+
+pub use histogram::{LogHistogram, Samples};
+pub use metrics::Registry as MetricsRegistry;
+pub use table::{format_markdown_table, write_csv, Cell, Table};
+
+/// Summary statistics used across every experiment report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub min: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+    pub mean: f64,
+}
+
+impl LatencySummary {
+    pub fn empty() -> Self {
+        LatencySummary { count: 0, min: 0, p50: 0, p90: 0, p99: 0, p999: 0, max: 0, mean: 0.0 }
+    }
+
+    /// Render as `µs` with two decimals (inputs are nanoseconds).
+    pub fn fmt_us(&self) -> String {
+        format!(
+            "n={} min={:.2} p50={:.2} p90={:.2} p99={:.2} p99.9={:.2} max={:.2} mean={:.2} (µs)",
+            self.count,
+            self.min as f64 / 1e3,
+            self.p50 as f64 / 1e3,
+            self.p90 as f64 / 1e3,
+            self.p99 as f64 / 1e3,
+            self.p999 as f64 / 1e3,
+            self.max as f64 / 1e3,
+            self.mean / 1e3,
+        )
+    }
+}

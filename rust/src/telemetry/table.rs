@@ -1,0 +1,166 @@
+//! Table rendering: every bench prints its paper-figure counterpart as a
+//! markdown table (and optionally CSV for plotting).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// One table cell.
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Str(String),
+    Int(i64),
+    F2(f64),
+    /// Nanoseconds rendered as microseconds with 2 decimals.
+    NsAsUs(u64),
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Int(v) => v.to_string(),
+            Cell::F2(v) => format!("{v:.2}"),
+            Cell::NsAsUs(ns) => format!("{:.2}", *ns as f64 / 1e3),
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Str(s.to_string())
+    }
+}
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Str(s)
+    }
+}
+impl From<i64> for Cell {
+    fn from(v: i64) -> Self {
+        Cell::Int(v)
+    }
+}
+impl From<u64> for Cell {
+    fn from(v: u64) -> Self {
+        Cell::Int(v as i64)
+    }
+}
+impl From<f64> for Cell {
+    fn from(v: f64) -> Self {
+        Cell::F2(v)
+    }
+}
+
+/// A simple column-named table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<Cell>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch in '{}'", self.title);
+        self.rows.push(row);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        format_markdown_table(self)
+    }
+
+    /// Write the table as CSV (for external plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|c| c.render()).collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render with aligned columns.
+pub fn format_markdown_table(table: &Table) -> String {
+    let rendered: Vec<Vec<String>> =
+        table.rows.iter().map(|r| r.iter().map(|c| c.render()).collect()).collect();
+    let mut widths: Vec<usize> = table.columns.iter().map(|c| c.len()).collect();
+    for row in &rendered {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    if !table.title.is_empty() {
+        let _ = writeln!(out, "### {}", table.title);
+    }
+    let header: Vec<String> =
+        table.columns.iter().enumerate().map(|(i, c)| format!("{:w$}", c, w = widths[i])).collect();
+    let _ = writeln!(out, "| {} |", header.join(" | "));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    let _ = writeln!(out, "| {} |", sep.join(" | "));
+    for row in &rendered {
+        let cells: Vec<String> =
+            row.iter().enumerate().map(|(i, c)| format!("{:w$}", c, w = widths[i])).collect();
+        let _ = writeln!(out, "| {} |", cells.join(" | "));
+    }
+    out
+}
+
+/// Write a table to a CSV file, creating parent directories.
+pub fn write_csv(table: &Table, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(table.to_csv().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.push_row(vec![Cell::Int(1), Cell::F2(2.5)]);
+        t.push_row(vec![Cell::Str("xyz".into()), Cell::NsAsUs(1500)]);
+        t
+    }
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### t"));
+        assert!(md.contains("| 1 "));
+        assert!(md.contains("2.50"));
+        assert!(md.contains("1.50")); // 1500 ns = 1.50 µs
+        assert_eq!(md.lines().count(), 5);
+    }
+
+    #[test]
+    fn csv_round_trips_columns() {
+        let csv = sample().to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "a,bb");
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", &["a"]);
+        t.push_row(vec![Cell::Int(1), Cell::Int(2)]);
+    }
+}

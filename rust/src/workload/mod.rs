@@ -1,0 +1,303 @@
+//! Workload generators: the paper's two experiment drivers plus a
+//! multi-tenant population generator for the density ablation.
+//!
+//! * [`ClosedLoop`] — N sequential invocations, next submitted when the
+//!   previous completes (Fig. 5: "100 sequential invocations").
+//! * [`OpenLoop`] — Poisson arrivals at a configured offered rate
+//!   (Fig. 6: "varying request rates offered via the front-end load
+//!   balancer"). Open-loop is the right model for tail-vs-load curves:
+//!   arrivals don't slow down when the system queues.
+//! * [`population`] — a skewed multi-tenant function population (most
+//!   functions rarely invoked, per the Shahrad et al. characterization the
+//!   paper cites [22]).
+
+pub mod trace;
+
+pub use trace::{replay, TraceEvent, TraceGenerator, TraceResult};
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::faas::FaasSim;
+use crate::simcore::{Rng, Sim, Time, SECONDS};
+use crate::telemetry::Samples;
+
+/// Collected timings of one workload run.
+#[derive(Debug, Default)]
+pub struct RunResult {
+    /// Gateway-observed latency samples (ns) — the paper's Fig. 5 metric.
+    pub gateway_observed: Samples,
+    /// Function-execution latency samples (ns) — Fig. 5's second series.
+    pub exec: Samples,
+    /// Client end-to-end samples (ns).
+    pub e2e: Samples,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Completions that landed *inside* the measurement window — the
+    /// honest achieved-throughput numerator for saturated runs (backlog
+    /// draining after the window does not count).
+    pub completed_in_window: u64,
+    /// Virtual duration of the measurement window.
+    pub elapsed: Time,
+}
+
+impl RunResult {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.elapsed as f64 / SECONDS as f64)
+    }
+
+    /// Achieved goodput: completions within the window / window.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.elapsed == 0 {
+            return 0.0;
+        }
+        self.completed_in_window as f64 / (self.elapsed as f64 / SECONDS as f64)
+    }
+}
+
+/// Closed-loop sequential client.
+pub struct ClosedLoop {
+    pub function: String,
+    pub invocations: u32,
+    /// Client think time between invocations (0 = immediate).
+    pub think_ns: Time,
+}
+
+impl ClosedLoop {
+    pub fn new(function: &str, invocations: u32) -> Self {
+        ClosedLoop { function: function.to_string(), invocations, think_ns: 0 }
+    }
+
+    /// Run to completion on `sim`, returning the collected samples.
+    pub fn run(&self, sim: &mut Sim, fs: &FaasSim) -> RunResult {
+        let result = Rc::new(RefCell::new(RunResult::default()));
+        let start = sim.now();
+        submit_next(
+            sim,
+            fs.clone(),
+            self.function.clone(),
+            self.invocations,
+            self.think_ns,
+            result.clone(),
+        );
+        sim.run_to_completion();
+        let mut out = Rc::try_unwrap(result).ok().expect("pending refs").into_inner();
+        out.elapsed = sim.now() - start;
+        out
+    }
+}
+
+fn submit_next(
+    sim: &mut Sim,
+    fs: FaasSim,
+    function: String,
+    remaining: u32,
+    think: Time,
+    result: Rc<RefCell<RunResult>>,
+) {
+    if remaining == 0 {
+        return;
+    }
+    result.borrow_mut().submitted += 1;
+    let fs2 = fs.clone();
+    let fname = function.clone();
+    fs.submit(sim, &function, move |sim, t| {
+        {
+            let mut r = result.borrow_mut();
+            r.gateway_observed.record(t.gateway_observed());
+            r.exec.record(t.exec());
+            r.e2e.record(t.e2e());
+            r.completed += 1;
+        }
+        let result2 = result.clone();
+        sim.after(think, move |sim| {
+            submit_next(sim, fs2, fname, remaining - 1, think, result2);
+        });
+    });
+}
+
+/// Open-loop Poisson generator at a fixed offered rate.
+pub struct OpenLoop {
+    pub function: String,
+    /// Offered load (requests per second).
+    pub rate_rps: f64,
+    /// Measurement window (virtual time). A warmup of 10% precedes it.
+    pub duration: Time,
+    pub seed: u64,
+}
+
+impl OpenLoop {
+    pub fn new(function: &str, rate_rps: f64, duration: Time, seed: u64) -> Self {
+        OpenLoop { function: function.to_string(), rate_rps, duration, seed }
+    }
+
+    /// Run the open-loop experiment. Samples recorded only inside the
+    /// measurement window (after warmup); the run drains before returning.
+    pub fn run(&self, sim: &mut Sim, fs: &FaasSim) -> RunResult {
+        assert!(self.rate_rps > 0.0);
+        let result = Rc::new(RefCell::new(RunResult::default()));
+        let mut rng = Rng::new(self.seed);
+        let warmup = self.duration / 10;
+        let t_start = sim.now();
+        let measure_from = t_start + warmup;
+        let measure_until = measure_from + self.duration;
+        let mean_gap_ns = SECONDS as f64 / self.rate_rps;
+
+        // Pre-generate the arrival schedule (deterministic, independent of
+        // completion order).
+        let mut t = t_start as f64;
+        let mut arrivals = Vec::new();
+        while (t as Time) < measure_until {
+            t += rng.exp(mean_gap_ns);
+            if (t as Time) < measure_until {
+                arrivals.push(t as Time);
+            }
+        }
+        for at in arrivals {
+            let fs2 = fs.clone();
+            let result2 = result.clone();
+            let function = self.function.clone();
+            let in_window = at >= measure_from;
+            sim.at(at, move |sim| {
+                if in_window {
+                    result2.borrow_mut().submitted += 1;
+                }
+                fs2.submit(sim, &function, move |_, timing| {
+                    if in_window {
+                        let mut r = result2.borrow_mut();
+                        r.gateway_observed.record(timing.gateway_observed());
+                        r.exec.record(timing.exec());
+                        r.e2e.record(timing.e2e());
+                        r.completed += 1;
+                        if timing.done <= measure_until {
+                            r.completed_in_window += 1;
+                        }
+                    }
+                });
+            });
+        }
+        sim.run_to_completion();
+        let mut out = Rc::try_unwrap(result).ok().expect("pending refs").into_inner();
+        out.elapsed = self.duration;
+        out
+    }
+}
+
+/// Generate a skewed multi-tenant function population: `n` functions whose
+/// relative invocation weights follow a Zipf-ish distribution (a few hot
+/// functions, a long cold tail — Shahrad et al. [22]).
+pub fn population(n: usize, rng: &mut Rng) -> Vec<(String, f64)> {
+    let mut fns = Vec::with_capacity(n);
+    let mut total = 0.0;
+    for i in 0..n {
+        let w = 1.0 / ((i + 1) as f64).powf(1.1) * (0.75 + 0.5 * rng.next_f64());
+        total += w;
+        fns.push((format!("fn-{i:04}"), w));
+    }
+    for f in &mut fns {
+        f.1 /= total;
+    }
+    fns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, ExperimentConfig, PlatformConfig};
+    use crate::faas::{FunctionSpec, RuntimeKind};
+    use crate::simcore::MILLIS;
+
+    fn setup(backend: Backend) -> (Sim, FaasSim) {
+        let mut sim = Sim::new();
+        let cfg = ExperimentConfig { backend, ..Default::default() };
+        let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS); // past cold start
+        (sim, fs)
+    }
+
+    #[test]
+    fn closed_loop_completes_all() {
+        let (mut sim, fs) = setup(Backend::Junctiond);
+        let r = ClosedLoop::new("aes", 100).run(&mut sim, &fs);
+        assert_eq!(r.submitted, 100);
+        assert_eq!(r.completed, 100);
+        assert_eq!(r.gateway_observed.len(), 100);
+    }
+
+    #[test]
+    fn closed_loop_is_sequential() {
+        // With one request in flight at a time, total duration >= sum of
+        // latencies.
+        let (mut sim, fs) = setup(Backend::Containerd);
+        let t0 = sim.now();
+        let mut r = ClosedLoop::new("aes", 20).run(&mut sim, &fs);
+        let wall = sim.now() - t0;
+        let sum: u64 = r.e2e.values().iter().sum();
+        assert!(wall >= sum, "wall {wall} < sum of latencies {sum}");
+        assert!(r.e2e.quantile(0.5) > 0);
+    }
+
+    #[test]
+    fn open_loop_offered_rate_is_respected() {
+        let (mut sim, fs) = setup(Backend::Junctiond);
+        let r = OpenLoop::new("aes", 2000.0, 2 * SECONDS, 42).run(&mut sim, &fs);
+        // 2000 rps over a 2s measurement window ≈ 4000 completions ± noise.
+        assert!(r.completed > 3600 && r.completed < 4400, "completed={}", r.completed);
+        let tput = r.throughput_rps();
+        assert!((tput - 2000.0).abs() < 220.0, "tput={tput}");
+    }
+
+    #[test]
+    fn open_loop_latency_grows_with_load() {
+        let (mut sim, fs) = setup(Backend::Containerd);
+        let mut low = OpenLoop::new("aes", 200.0, 2 * SECONDS, 7).run(&mut sim, &fs);
+        let (mut sim2, fs2) = setup(Backend::Containerd);
+        // Far beyond the serial instance's capacity (~1/exec_time ≈ 4.7k).
+        let mut high = OpenLoop::new("aes", 9000.0, 2 * SECONDS, 7).run(&mut sim2, &fs2);
+        assert!(
+            high.gateway_observed.quantile(0.5) > 4 * low.gateway_observed.quantile(0.5),
+            "saturation should blow up latency: low={} high={}",
+            low.gateway_observed.quantile(0.5),
+            high.gateway_observed.quantile(0.5)
+        );
+    }
+
+    #[test]
+    fn open_loop_deterministic() {
+        let (mut a_sim, a_fs) = setup(Backend::Junctiond);
+        let mut a = OpenLoop::new("aes", 500.0, SECONDS, 3).run(&mut a_sim, &a_fs);
+        let (mut b_sim, b_fs) = setup(Backend::Junctiond);
+        let mut b = OpenLoop::new("aes", 500.0, SECONDS, 3).run(&mut b_sim, &b_fs);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.gateway_observed.quantile(0.99), b.gateway_observed.quantile(0.99));
+    }
+
+    #[test]
+    fn population_weights_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let pop = population(500, &mut rng);
+        assert_eq!(pop.len(), 500);
+        let total: f64 = pop.iter().map(|(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // Skew: head function dominates the median one.
+        assert!(pop[0].1 > 20.0 * pop[250].1);
+    }
+
+    #[test]
+    fn cold_start_visible_in_first_sample() {
+        let mut sim = Sim::new();
+        let cfg = ExperimentConfig { backend: Backend::Containerd, ..Default::default() };
+        let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        // No warmup wait: first request hits the cold container.
+        let mut r = ClosedLoop::new("aes", 3).run(&mut sim, &fs);
+        let vals = r.e2e.values().to_vec();
+        assert!(vals[0] > 100 * MILLIS);
+        assert!(vals[1] < 10 * MILLIS);
+        let _ = r.e2e.quantile(0.5);
+    }
+}

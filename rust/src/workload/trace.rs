@@ -1,0 +1,221 @@
+//! Multi-tenant invocation traces, after the production characterization
+//! the paper cites ([22] Shahrad et al., "Serverless in the Wild"):
+//! a large population of functions where a few are hot and most are
+//! invoked rarely (often less than once per minute), with bursty
+//! arrivals.
+//!
+//! [`TraceGenerator`] synthesizes such a trace deterministically;
+//! [`replay`] drives it through a single-node [`FaasSim`] (the density
+//! experiments) or through a [`Cluster`]. The output is per-function and
+//! aggregate latency, plus cold-start counts — the signals the paper's
+//! §1 motivation is about (most functions are cold, so per-function
+//! polling cores are unaffordable).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::faas::FaasSim;
+use crate::simcore::{Rng, Sim, Time, SECONDS};
+use crate::telemetry::Samples;
+
+/// One synthetic invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub at: Time,
+    pub function: u32,
+}
+
+/// Zipf-with-burstiness trace generator.
+pub struct TraceGenerator {
+    pub n_functions: u32,
+    /// Aggregate offered rate across all functions (rps).
+    pub total_rps: f64,
+    /// Zipf skew (1.0–1.3 matches the production characterization).
+    pub skew: f64,
+    /// Burstiness: fraction of each function's traffic arriving in bursts
+    /// of 3–8 back-to-back invocations (0 = pure Poisson).
+    pub burst_fraction: f64,
+    pub seed: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(n_functions: u32, total_rps: f64, seed: u64) -> Self {
+        TraceGenerator { n_functions, total_rps, skew: 1.1, burst_fraction: 0.2, seed }
+    }
+
+    /// Per-function weights (normalized Zipf).
+    pub fn weights(&self) -> Vec<f64> {
+        let mut w: Vec<f64> =
+            (0..self.n_functions).map(|i| 1.0 / ((i + 1) as f64).powf(self.skew)).collect();
+        let total: f64 = w.iter().sum();
+        for x in &mut w {
+            *x /= total;
+        }
+        w
+    }
+
+    /// Generate events over `duration`, sorted by time.
+    pub fn generate(&self, duration: Time) -> Vec<TraceEvent> {
+        let mut rng = Rng::new(self.seed);
+        let weights = self.weights();
+        // Cumulative distribution for function sampling.
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w;
+            cdf.push(acc);
+        }
+        let mean_gap = SECONDS as f64 / self.total_rps;
+        let mut events = Vec::new();
+        let mut t = 0.0f64;
+        while (t as Time) < duration {
+            t += rng.exp(mean_gap);
+            if (t as Time) >= duration {
+                break;
+            }
+            let u = rng.next_f64();
+            let f = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(cdf.len() - 1),
+            } as u32;
+            events.push(TraceEvent { at: t as Time, function: f });
+            // Bursts: occasionally a back-to-back train for the same fn.
+            if rng.next_f64() < self.burst_fraction {
+                let train = rng.range(2, 7);
+                for k in 1..=train {
+                    let bt = t as Time + k * 200_000; // 200µs apart
+                    if bt < duration {
+                        events.push(TraceEvent { at: bt, function: f });
+                    }
+                }
+            }
+        }
+        events.sort_by_key(|e| e.at);
+        events
+    }
+}
+
+/// Result of replaying a trace.
+#[derive(Debug, Default)]
+pub struct TraceResult {
+    pub latency: Samples,
+    /// Invocations that hit a cold (not yet ready) function.
+    pub cold_hits: u64,
+    pub completed: u64,
+    pub per_function_count: Vec<u64>,
+}
+
+/// Replay a trace through a single-node deployment. Functions are
+/// deployed **lazily** on first invocation (the FaaS scale-from-zero
+/// path), so early invocations of each function pay its cold start.
+pub fn replay(
+    sim: &mut Sim,
+    fs: &FaasSim,
+    events: &[TraceEvent],
+    n_functions: u32,
+    make_name: impl Fn(u32) -> String,
+) -> TraceResult {
+    let result = Rc::new(RefCell::new(TraceResult {
+        per_function_count: vec![0; n_functions as usize],
+        ..Default::default()
+    }));
+    let deployed: Rc<RefCell<Vec<bool>>> = Rc::new(RefCell::new(vec![false; n_functions as usize]));
+    for ev in events {
+        let fs2 = fs.clone();
+        let result2 = result.clone();
+        let deployed2 = deployed.clone();
+        let name = make_name(ev.function);
+        let fid = ev.function as usize;
+        sim.at(ev.at, move |sim| {
+            // Lazy deploy on first touch (scale-from-zero).
+            if !deployed2.borrow()[fid] {
+                deployed2.borrow_mut()[fid] = true;
+                let spec = crate::faas::FunctionSpec::new(
+                    &name,
+                    "aes600",
+                    crate::faas::RuntimeKind::Go,
+                );
+                fs2.deploy(sim, spec);
+                result2.borrow_mut().cold_hits += 1;
+            }
+            let r3 = result2.clone();
+            fs2.submit(sim, &name, move |_, t| {
+                let mut r = r3.borrow_mut();
+                r.latency.record(t.gateway_observed());
+                r.completed += 1;
+                r.per_function_count[fid] += 1;
+            });
+        });
+    }
+    sim.run_to_completion();
+    Rc::try_unwrap(result).ok().expect("pending refs").into_inner()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, ExperimentConfig, PlatformConfig};
+    use crate::simcore::MILLIS;
+
+    #[test]
+    fn trace_is_sorted_and_deterministic() {
+        let g = TraceGenerator::new(100, 1000.0, 42);
+        let a = g.generate(SECONDS);
+        let b = g.generate(SECONDS);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at));
+        // ~1000 base events plus burst trains.
+        assert!(a.len() > 800 && a.len() < 2600, "{}", a.len());
+    }
+
+    #[test]
+    fn trace_is_skewed() {
+        let g = TraceGenerator::new(50, 2000.0, 7);
+        let events = g.generate(2 * SECONDS);
+        let mut counts = vec![0u64; 50];
+        for e in &events {
+            counts[e.function as usize] += 1;
+        }
+        // Hot head: function 0 sees far more than the median function.
+        let mut sorted = counts.clone();
+        sorted.sort_unstable();
+        assert!(counts[0] > 8 * sorted[25].max(1), "head {} median {}", counts[0], sorted[25]);
+    }
+
+    #[test]
+    fn replay_completes_everything() {
+        let mut sim = Sim::new();
+        let cfg = ExperimentConfig { backend: Backend::Junctiond, ..Default::default() };
+        let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+        let g = TraceGenerator::new(20, 500.0, 3);
+        let events = g.generate(SECONDS);
+        let n = events.len() as u64;
+        let r = replay(&mut sim, &fs, &events, 20, |i| format!("fn-{i}"));
+        assert_eq!(r.completed, n);
+        assert_eq!(r.per_function_count.iter().sum::<u64>(), n);
+        // Every function touched was lazily deployed exactly once.
+        let touched = r.per_function_count.iter().filter(|&&c| c > 0).count() as u64;
+        assert_eq!(r.cold_hits, touched);
+    }
+
+    #[test]
+    fn junction_tail_beats_containerd_on_multi_tenant_trace() {
+        // The §1 motivation scenario: many functions, skewed traffic.
+        let run = |backend| {
+            let mut sim = Sim::new();
+            let cfg = ExperimentConfig { backend, ..Default::default() };
+            let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+            let g = TraceGenerator::new(30, 800.0, 11);
+            let events = g.generate(SECONDS);
+            let mut r = replay(&mut sim, &fs, &events, 30, |i| format!("fn-{i}"));
+            (r.latency.quantile(0.5), r.latency.quantile(0.99))
+        };
+        let (c50, c99) = run(Backend::Containerd);
+        let (j50, j99) = run(Backend::Junctiond);
+        assert!(j50 < c50, "median: junction {j50} vs containerd {c50}");
+        assert!(j99 < c99, "p99: junction {j99} vs containerd {c99}");
+        // Cold starts dominate the containerd tail (hundreds of ms).
+        assert!(c99 > 100 * MILLIS, "containerd p99 {c99} should include cold starts");
+        assert!(j99 < 100 * MILLIS, "junction p99 {j99} should stay in the ms range");
+    }
+}
