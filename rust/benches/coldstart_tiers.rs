@@ -1,0 +1,114 @@
+//! Bench E3b: the tiered provisioning ladder, end to end.
+//!
+//! Part 1 measures the provisioning latency of every ladder rung (warm
+//! pool / snapshot restore / cold boot) for both backends and asserts the
+//! shape band: warm < restore < cold on each backend, junctiond beating
+//! containerd at every tier, junction cold ≈ 3.4 ms (paper §5).
+//!
+//! Part 2 replays a bursty multi-tenant trace with keep-alive
+//! scale-to-zero, so functions actually walk the ladder, and exports the
+//! per-tier serve counts through the Prometheus-style telemetry registry.
+
+mod common;
+
+use std::rc::Rc;
+
+use junctiond_repro::config::{Backend, PlatformConfig};
+use junctiond_repro::experiments as ex;
+use junctiond_repro::faas::FaasSim;
+use junctiond_repro::simcore::{Sim, MILLIS, SECONDS};
+use junctiond_repro::telemetry::{Cell, MetricsRegistry};
+use junctiond_repro::workload::{replay_with_keepalive, TraceGenerator};
+
+fn main() {
+    let trials = if common::quick() { 5 } else { 30 };
+    common::section("Cold-start tiers — provisioning latency", || {
+        let table = ex::coldstart_tiers_table(trials, 11);
+        println!("{}", table.to_markdown());
+        // Rows: 0..3 containerd warm/restore/cold, 3..6 junctiond.
+        let p50 = |r: usize| match &table.rows[r][2] {
+            Cell::F2(v) => *v,
+            _ => unreachable!(),
+        };
+        let (c_warm, c_restore, c_cold) = (p50(0), p50(1), p50(2));
+        let (j_warm, j_restore, j_cold) = (p50(3), p50(4), p50(5));
+        let mut checks = common::Checks::new();
+        checks.check(
+            "containerd ladder ordered (warm < restore < cold)",
+            c_warm < c_restore && c_restore < c_cold,
+            format!("{c_warm:.2} < {c_restore:.2} < {c_cold:.2} ms"),
+        );
+        checks.check(
+            "junctiond ladder ordered (warm < restore < cold)",
+            j_warm < j_restore && j_restore < j_cold,
+            format!("{j_warm:.3} < {j_restore:.3} < {j_cold:.2} ms"),
+        );
+        checks.check(
+            "junctiond beats containerd at every tier (≥ 10×)",
+            j_warm * 10.0 <= c_warm && j_restore * 10.0 <= c_restore && j_cold * 10.0 <= c_cold,
+            format!(
+                "warm {j_warm:.3}/{c_warm:.2}, restore {j_restore:.3}/{c_restore:.2}, cold {j_cold:.2}/{c_cold:.2} ms"
+            ),
+        );
+        checks.check(
+            "junction cold boot ≈ 3.4 ms (paper §5)",
+            (j_cold - 3.4).abs() < 0.5,
+            format!("{j_cold:.2} ms"),
+        );
+        checks.finish();
+    });
+
+    common::section("Tier mix under a bursty multi-tenant trace", || {
+        let duration = if common::quick() { 3 * SECONDS } else { 8 * SECONDS };
+        let mut reg = MetricsRegistry::new();
+        let mut checks = common::Checks::new();
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let cfg = ex::standard_config(backend, 11);
+            let mut sim = Sim::new();
+            let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+            // Short keep-alive + pool TTL so the skewed trace's tail
+            // functions park, expire, and restore.
+            let mut pc = fs.pool_config();
+            pc.idle_ttl_ns = 300 * MILLIS;
+            fs.set_pool_config(pc);
+            fs.start_pool_maintenance(&mut sim, 100 * MILLIS, duration + 12 * SECONDS);
+            let events = TraceGenerator::new(16, 100.0, 5).generate(duration);
+            let r = replay_with_keepalive(&mut sim, &fs, &events, 16, 100 * MILLIS, |i| {
+                format!("fn-{i}")
+            });
+            println!(
+                "{:<11} provisions: warm={:<4} restore={:<4} cold={:<4}   served: warm={:<5} restore={:<5} cold={:<5} (completed {})",
+                backend.name(),
+                r.provisions[0],
+                r.provisions[1],
+                r.provisions[2],
+                r.tier_served[0],
+                r.tier_served[1],
+                r.tier_served[2],
+                r.completed,
+            );
+            checks.check(
+                &format!("{} tier serve counts cover all completions", backend.name()),
+                r.tier_served.iter().sum::<u64>() == r.completed,
+                format!("{:?} vs {}", r.tier_served, r.completed),
+            );
+            checks.check(
+                &format!("{} ladder exercised beyond cold boot", backend.name()),
+                r.provisions[0] + r.provisions[1] > 0 && r.provisions[2] > 0,
+                format!("{:?}", r.provisions),
+            );
+            fs.export_metrics(&mut reg);
+        }
+        let text = reg.expose();
+        println!("{text}");
+        checks.check(
+            "per-tier serve counts exported via telemetry",
+            text.contains("invocations_served_total")
+                && text.contains("tier=\"warm-pool\"")
+                && text.contains("tier=\"snapshot-restore\"")
+                && text.contains("tier=\"cold-boot\""),
+            "prometheus exposition".into(),
+        );
+        checks.finish();
+    });
+}

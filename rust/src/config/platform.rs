@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use super::Ini;
-use crate::simcore::{Time, MICROS, MILLIS};
+use crate::simcore::{Time, MICROS, MILLIS, SECONDS};
 
 /// All simulator cost constants (ns).
 #[derive(Debug, Clone, PartialEq)]
@@ -79,6 +79,34 @@ pub struct PlatformConfig {
     /// Junction instance init (paper §5: 3.4 ms).
     pub junction_cold_start_ns: Time,
 
+    // ---- tiered provisioning (snapshot/ subsystem) ----
+    /// Acquire a warm-paused Junction instance from the pool: unpark the
+    /// uProc, remap the NIC queue pair — no boot work, memory resident.
+    pub junction_warm_acquire_ns: Time,
+    /// Restore a Junction instance from a per-function memory snapshot
+    /// (ELF image + heap pages already laid out; ≪ cold init).
+    pub junction_restore_ns: Time,
+    /// Capture a Junction instance snapshot after first boot (off the
+    /// critical path; gates snapshot availability).
+    pub junction_snapshot_capture_ns: Time,
+    /// Resident memory a parked warm Junction instance holds (bytes, not
+    /// virtual time — deliberately plain u64).
+    pub junction_instance_mem_bytes: u64,
+    /// Resume a paused container (cgroup unfreeze + route refresh).
+    pub container_warm_acquire_ns: Time,
+    /// CRIU-style restore of a checkpointed container (≪ cold boot, but
+    /// still 10–100× the Junction restore).
+    pub container_restore_ns: Time,
+    /// Checkpoint a running container (off the critical path).
+    pub container_snapshot_capture_ns: Time,
+    /// Resident memory a paused warm container holds (bytes).
+    pub container_instance_mem_bytes: u64,
+    /// Global memory budget for all parked warm instances on one worker
+    /// (bytes); the pool LRU-reclaims past it.
+    pub pool_mem_budget_bytes: u64,
+    /// Idle TTL after which a parked warm instance is evicted.
+    pub pool_idle_ttl_ns: Time,
+
     // ---- function compute ----
     /// Default AES-600B function body compute (overridden by PJRT
     /// calibration when artifacts are present).
@@ -137,6 +165,17 @@ impl Default for PlatformConfig {
             container_cold_start_ns: 250 * MILLIS,
             junction_cold_start_ns: 3_400 * MICROS, // paper §5: 3.4 ms
 
+            junction_warm_acquire_ns: 25 * MICROS,
+            junction_restore_ns: 600 * MICROS,
+            junction_snapshot_capture_ns: 1_500 * MICROS,
+            junction_instance_mem_bytes: 64 << 20, // 64 MiB
+            container_warm_acquire_ns: 2_500 * MICROS,
+            container_restore_ns: 45 * MILLIS,
+            container_snapshot_capture_ns: 120 * MILLIS,
+            container_instance_mem_bytes: 256 << 20, // 256 MiB
+            pool_mem_budget_bytes: 2 << 30, // 2 GiB of parked instances
+            pool_idle_ttl_ns: 10 * SECONDS,
+
             function_compute_ns: 100 * MICROS,
             function_syscalls: 50,
 
@@ -192,6 +231,16 @@ impl PlatformConfig {
             wire_ns,
             container_cold_start_ns,
             junction_cold_start_ns,
+            junction_warm_acquire_ns,
+            junction_restore_ns,
+            junction_snapshot_capture_ns,
+            junction_instance_mem_bytes,
+            container_warm_acquire_ns,
+            container_restore_ns,
+            container_snapshot_capture_ns,
+            container_instance_mem_bytes,
+            pool_mem_budget_bytes,
+            pool_idle_ttl_ns,
             function_compute_ns,
             function_syscalls,
             kernel_interference_prob_bp,
@@ -219,6 +268,25 @@ impl PlatformConfig {
             self.junction_cold_start_ns < self.container_cold_start_ns,
             "junction cold start must be below container cold start"
         );
+        // Tier ladder: warm < restore < cold within each backend, and the
+        // Junction tier beats the containerd tier at every rung (the gap
+        // the paper's cold-start result rests on).
+        anyhow::ensure!(
+            self.junction_warm_acquire_ns < self.junction_restore_ns
+                && self.junction_restore_ns < self.junction_cold_start_ns,
+            "junction tier ladder must be warm < restore < cold"
+        );
+        anyhow::ensure!(
+            self.container_warm_acquire_ns < self.container_restore_ns
+                && self.container_restore_ns < self.container_cold_start_ns,
+            "container tier ladder must be warm < restore < cold"
+        );
+        anyhow::ensure!(
+            self.junction_warm_acquire_ns < self.container_warm_acquire_ns
+                && self.junction_restore_ns < self.container_restore_ns,
+            "junction tiers must be cheaper than containerd tiers"
+        );
+        anyhow::ensure!(self.pool_mem_budget_bytes > 0, "pool_mem_budget_bytes must be > 0");
         anyhow::ensure!(self.container_concurrency >= 1, "container_concurrency must be >= 1");
         anyhow::ensure!(self.junction_max_cores >= 1, "junction_max_cores must be >= 1");
         anyhow::ensure!(

@@ -45,6 +45,8 @@ pub struct Containerd {
     // telemetry
     pub creates: u64,
     pub state_queries: u64,
+    pub restores: u64,
+    pub resumes: u64,
 }
 
 impl Containerd {
@@ -57,6 +59,8 @@ impl Containerd {
             next_port: 31000,
             creates: 0,
             state_queries: 0,
+            restores: 0,
+            resumes: 0,
         }
     }
 
@@ -87,10 +91,46 @@ impl Containerd {
         (id, cold)
     }
 
+    /// CRIU-style restore of a checkpointed container (the
+    /// snapshot-restore provisioning tier): no runc shim spawn, no rootfs
+    /// prep from scratch — pages come back from the checkpoint image at a
+    /// cost ≪ cold boot (±10% spread), though still 10–100× the Junction
+    /// restore.
+    pub fn restore_from_snapshot(
+        &mut self,
+        name: &str,
+        now: Time,
+        restore_base_ns: Time,
+    ) -> (ContainerId, Time) {
+        self.restores += 1;
+        let id = self.next_id;
+        self.next_id += 1;
+        let spread = restore_base_ns / 5;
+        let restore = restore_base_ns - spread / 2 + self.rng.below(spread + 1);
+        let port = self.next_port;
+        self.next_port += 1;
+        self.containers.insert(
+            id,
+            Container {
+                id,
+                name: name.to_string(),
+                state: ContainerState::Creating,
+                addr: (0x0A00_0002 + id, port),
+                ready_at: now + restore,
+                invocations: 0,
+            },
+        );
+        (id, restore)
+    }
+
     /// Mark a container Running (caller schedules this at `ready_at`).
+    /// No-op unless the container is still Creating — a container the pool
+    /// stopped or parked in the meantime keeps its state.
     pub fn mark_running(&mut self, id: ContainerId) {
         let c = self.containers.get_mut(&id).expect("unknown container");
-        c.state = ContainerState::Running;
+        if c.state == ContainerState::Creating {
+            c.state = ContainerState::Running;
+        }
     }
 
     pub fn pause(&mut self, id: ContainerId) {
@@ -103,6 +143,7 @@ impl Containerd {
         let c = self.containers.get_mut(&id).expect("unknown container");
         assert_eq!(c.state, ContainerState::Paused);
         c.state = ContainerState::Running;
+        self.resumes += 1;
     }
 
     pub fn stop(&mut self, id: ContainerId) {
@@ -185,6 +226,30 @@ mod tests {
         let q = d.state_query();
         assert!(q > 500 * crate::simcore::MICROS, "state query {q}ns");
         assert_eq!(d.state_queries, 1);
+    }
+
+    #[test]
+    fn snapshot_restore_is_cheaper_than_cold_boot() {
+        let mut d = daemon();
+        let p = PlatformConfig::default();
+        let (_, cold) = d.create_and_start("fn", 0);
+        let (id, restore) = d.restore_from_snapshot("fn", 0, p.container_restore_ns);
+        assert!(restore * 2 < cold, "restore {restore} should be ≪ cold {cold}");
+        assert!(restore >= p.container_restore_ns - p.container_restore_ns / 10);
+        assert!(restore <= p.container_restore_ns + p.container_restore_ns / 10);
+        assert_eq!(d.get(id).unwrap().state, ContainerState::Creating);
+        d.mark_running(id);
+        assert_eq!(d.restores, 1);
+        assert_eq!(d.running_count(), 1);
+    }
+
+    #[test]
+    fn mark_running_does_not_revive_stopped() {
+        let mut d = daemon();
+        let (id, _) = d.create_and_start("fn", 0);
+        d.stop(id);
+        d.mark_running(id);
+        assert_eq!(d.get(id).unwrap().state, ContainerState::Stopped);
     }
 
     #[test]

@@ -18,8 +18,8 @@ use crate::workload::{ClosedLoop, OpenLoop, RunResult};
 /// available; fall back to the platform default otherwise (e.g. when
 /// `make artifacts` hasn't run). Cached for the process lifetime.
 pub fn calibrated_compute_ns() -> Time {
-    use once_cell::sync::OnceCell;
-    static CAL: OnceCell<Time> = OnceCell::new();
+    use std::sync::OnceLock;
+    static CAL: OnceLock<Time> = OnceLock::new();
     *CAL.get_or_init(|| {
         let dir = crate::runtime::default_artifacts_dir();
         match crate::runtime::Executor::load(&dir)
@@ -248,6 +248,63 @@ pub fn coldstart_table(trials: u32, seed: u64) -> Table {
             Cell::F2(first.quantile(0.5) as f64 / ms),
             Cell::F2(first.quantile(0.99) as f64 / ms),
         ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// E3b — cold-start tier sweep (snapshot/ subsystem)
+// ---------------------------------------------------------------------------
+
+/// Provisioning latency per tier of the ladder (warm pool / snapshot
+/// restore / cold boot), for both backends. Each trial walks one full
+/// cycle on a fresh deployment: cold boot (captures the snapshot), park +
+/// warm re-acquire, then flush the pool and restore from the snapshot.
+pub fn coldstart_tiers_table(trials: u32, seed: u64) -> Table {
+    use crate::snapshot::ProvisionTier;
+    let mut t = Table::new(
+        "Cold-start tiers — provisioning latency by ladder rung",
+        &["backend", "tier", "p50 (ms)", "p99 (ms)", "speedup vs cold"],
+    );
+    for backend in [Backend::Containerd, Backend::Junctiond] {
+        let mut samples =
+            [crate::telemetry::Samples::new(), crate::telemetry::Samples::new(), crate::telemetry::Samples::new()];
+        for k in 0..trials {
+            let cfg = standard_config(backend, seed + k as u64);
+            let mut sim = Sim::new();
+            let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+            let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+            let (cold, tier) = fs.deploy_tiered(&mut sim, spec.clone(), true);
+            assert_eq!(tier, ProvisionTier::ColdBoot);
+            samples[ProvisionTier::ColdBoot.idx()].record(cold);
+            // Past boot + snapshot capture, then park and re-acquire warm.
+            sim.run_until(SECONDS);
+            assert!(fs.undeploy(&mut sim, "aes"));
+            let (warm, tier) = fs.deploy_tiered(&mut sim, spec.clone(), true);
+            assert_eq!(tier, ProvisionTier::WarmPool);
+            samples[ProvisionTier::WarmPool.idx()].record(warm);
+            // Evict the pool: the ladder falls back to the snapshot.
+            sim.run_until(2 * SECONDS);
+            assert!(fs.undeploy(&mut sim, "aes"));
+            fs.flush_warm_pool(&mut sim);
+            let (restore, tier) = fs.deploy_tiered(&mut sim, spec, true);
+            assert_eq!(tier, ProvisionTier::SnapshotRestore);
+            samples[ProvisionTier::SnapshotRestore.idx()].record(restore);
+            sim.run_to_completion();
+        }
+        let ms = 1_000_000.0;
+        let cold_p50 = samples[ProvisionTier::ColdBoot.idx()].quantile(0.5);
+        for tier in ProvisionTier::ALL {
+            let s = &mut samples[tier.idx()];
+            let p50 = s.quantile(0.5);
+            t.push_row(vec![
+                backend.name().into(),
+                tier.name().into(),
+                Cell::F2(p50 as f64 / ms),
+                Cell::F2(s.quantile(0.99) as f64 / ms),
+                Cell::F2(cold_p50 as f64 / p50.max(1) as f64),
+            ]);
+        }
     }
     t
 }
@@ -610,6 +667,24 @@ mod tests {
         assert!(c_init > 50.0 * j_init, "container {c_init}ms vs junction {j_init}ms");
         // Junction init ≈ 3.4ms (paper).
         assert!((j_init - 3.4).abs() < 0.4, "junction init {j_init}ms");
+    }
+
+    #[test]
+    fn tier_sweep_orders_ladder_and_preserves_backend_gap() {
+        let t = coldstart_tiers_table(5, 7);
+        // Rows per backend: warm-pool, snapshot-restore, cold-boot.
+        let p50 = |r: usize| match &t.rows[r][2] {
+            Cell::F2(v) => *v,
+            _ => panic!("unexpected cell"),
+        };
+        let (c_warm, c_restore, c_cold) = (p50(0), p50(1), p50(2));
+        let (j_warm, j_restore, j_cold) = (p50(3), p50(4), p50(5));
+        assert!(c_warm < c_restore && c_restore < c_cold, "containerd ladder inverted");
+        assert!(j_warm < j_restore && j_restore < j_cold, "junction ladder inverted");
+        assert!(j_warm < c_warm && j_restore < c_restore && j_cold < c_cold,
+            "junction must beat containerd at every tier");
+        // The gap stays an order of magnitude at the restore tier.
+        assert!(j_restore * 10.0 <= c_restore, "{j_restore} vs {c_restore}");
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct ScalePolicy {
     pub scale_to_zero_after: Time,
     /// Controller reconcile interval.
     pub interval: Time,
+    /// Request scale-up instances through the tiered provisioning ladder
+    /// (warm pool → snapshot restore → cold boot). Off = always cold boot
+    /// (the seed's behavior, kept as the ablation baseline).
+    pub warm_pool: bool,
 }
 
 impl Default for ScalePolicy {
@@ -42,6 +46,7 @@ impl Default for ScalePolicy {
             max_replicas: 8,
             scale_to_zero_after: 30 * SECONDS,
             interval: 500 * MILLIS,
+            warm_pool: true,
         }
     }
 }
@@ -87,6 +92,9 @@ pub struct Cluster {
     pub scale_ups: u64,
     pub scale_downs: u64,
     pub scale_to_zeros: u64,
+    /// Scale-ups served per provisioning tier (index =
+    /// `crate::snapshot::ProvisionTier::idx`).
+    pub tier_scale_ups: [u64; 3],
 }
 
 impl Cluster {
@@ -132,6 +140,7 @@ impl Cluster {
             scale_ups: 0,
             scale_downs: 0,
             scale_to_zeros: 0,
+            tier_scale_ups: [0; 3],
         }
     }
 
@@ -178,7 +187,8 @@ impl Cluster {
     pub fn deploy(&mut self, sim: &mut Sim, spec: FunctionSpec) -> Time {
         let w = self.pick_worker(&spec.name);
         let per_worker_name = spec.name.clone();
-        let cold = self.workers[w].sim_node.deploy(sim, spec.clone());
+        let (cold, _) =
+            self.workers[w].sim_node.deploy_tiered(sim, spec.clone(), self.policy.warm_pool);
         self.workers[w].hosted.push(per_worker_name);
         self.functions.insert(spec.name.clone(), (spec, vec![w]));
         cold
@@ -210,20 +220,36 @@ impl Cluster {
     ) -> Option<Time> {
         let mut replica_spec = spec.clone();
         replica_spec.name = name.to_string();
-        let cold = self.workers[w].sim_node.deploy(sim, replica_spec);
+        // Request the instance through the tier ladder: a worker that
+        // previously parked this function serves it from its warm pool (or
+        // restores from its snapshot) instead of cold booting.
+        let (cold, tier) =
+            self.workers[w].sim_node.deploy_tiered(sim, replica_spec, self.policy.warm_pool);
         self.workers[w].hosted.push(name.to_string());
         self.functions.get_mut(name).unwrap().1.push(w);
         self.scale_ups += 1;
+        self.tier_scale_ups[tier.idx()] += 1;
         Some(cold)
     }
 
-    /// Remove the most recently added replica (keep ≥ min_replicas).
-    fn scale_down(&mut self, name: &str) -> bool {
+    /// Remove the most recently added replica (keep ≥ min_replicas): the
+    /// worker parks the instance into its warm pool. Refuses while the
+    /// replica still has requests in flight.
+    fn scale_down(&mut self, sim: &mut Sim, name: &str) -> bool {
         let Some((_, locs)) = self.functions.get_mut(name) else { return false };
         if locs.len() as u32 <= 1 {
             return false;
         }
-        let w = locs.pop().unwrap();
+        let w = *locs.last().unwrap();
+        if !self.workers[w].sim_node.undeploy(sim, name) {
+            return false; // busy replica: retry next reconcile
+        }
+        // Cold-only baseline keeps no warm memory resident (the seed's
+        // behavior): drop whatever the undeploy just parked.
+        if !self.policy.warm_pool {
+            self.workers[w].sim_node.flush_warm_pool(sim);
+        }
+        self.functions.get_mut(name).unwrap().1.pop();
         let hosted = &mut self.workers[w].hosted;
         if let Some(pos) = hosted.iter().position(|h| h == name) {
             hosted.remove(pos);
@@ -285,7 +311,7 @@ impl Cluster {
                 let idle_since =
                     self.last_active.borrow().get(&name).copied().unwrap_or(0);
                 if inflight == 0 && sim.now().saturating_sub(idle_since) > self.policy.interval {
-                    self.scale_down(&name);
+                    self.scale_down(sim, &name);
                 }
             }
         }
@@ -417,6 +443,43 @@ mod tests {
         cl.policy.max_replicas = 2;
         assert!(cl.scale_up(&mut sim, "aes").is_some());
         assert!(cl.scale_up(&mut sim, "aes").is_none(), "must stop at max_replicas");
+    }
+
+    #[test]
+    fn scale_cycle_reuses_worker_warm_pool() {
+        use crate::snapshot::ProvisionTier;
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Junctiond, 2, 10, 1, 100_000);
+        c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS);
+        // First scale-up lands cold on the empty second worker.
+        assert!(c.scale_up(&mut sim, "aes").is_some());
+        sim.run_until(2 * SECONDS);
+        // Scale down parks the replica in that worker's warm pool...
+        assert!(c.scale_down(&mut sim, "aes"), "idle replica must park");
+        assert_eq!(c.replica_count("aes"), 1);
+        // ...so the next scale-up acquires it at the warm tier.
+        assert!(c.scale_up(&mut sim, "aes").is_some());
+        assert_eq!(c.tier_scale_ups[ProvisionTier::ColdBoot.idx()], 1);
+        assert_eq!(c.tier_scale_ups[ProvisionTier::WarmPool.idx()], 1);
+        sim.run_to_completion();
+    }
+
+    #[test]
+    fn cold_only_policy_never_uses_pool() {
+        use crate::snapshot::ProvisionTier;
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Junctiond, 2, 10, 1, 100_000);
+        c.policy.warm_pool = false;
+        c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS);
+        assert!(c.scale_up(&mut sim, "aes").is_some());
+        sim.run_until(2 * SECONDS);
+        assert!(c.scale_down(&mut sim, "aes"));
+        assert!(c.scale_up(&mut sim, "aes").is_some());
+        assert_eq!(c.tier_scale_ups[ProvisionTier::WarmPool.idx()], 0);
+        assert_eq!(c.tier_scale_ups[ProvisionTier::ColdBoot.idx()], 2);
+        sim.run_to_completion();
     }
 
     #[test]

@@ -18,19 +18,34 @@
 //! calibration of the AES-600B artifact (`runtime::calibrate`), so the
 //! simulated function body costs what the actual lowered HLO costs on
 //! this machine.
+//!
+//! **Provisioning** goes through the tiered ladder in [`crate::snapshot`]:
+//! every replica is acquired from the warm pool when possible, restored
+//! from a per-function snapshot otherwise, and cold-booted only as a last
+//! resort. The tier that provisioned the serving replica is recorded on
+//! every [`RequestTiming`] and in per-tier counters exported through
+//! [`crate::telemetry::MetricsRegistry`].
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
-use crate::containerd_sim::{ContainerId, Containerd};
+use crate::containerd_sim::{ContainerId, ContainerState, Containerd};
 use crate::junction::{BypassCosts, InstanceId};
 use crate::junctiond::Junctiond;
 use crate::oskernel::KernelCosts;
-use crate::simcore::{CorePool, Rng, Sim, Time};
+use crate::simcore::{CorePool, Rng, Sim, Time, MILLIS};
+use crate::snapshot::{
+    ArrivalEstimator, PoolConfig, PoolHandle, PoolStats, PrewarmPolicy, ProvisionTier,
+    SnapshotStore, TierCosts, WarmPool,
+};
 
 use super::{CacheOutcome, FunctionSpec, Gate, Gateway, Provider, Registry, ReplicaMeta};
+
+/// Time constant for the per-function arrival-rate estimator feeding the
+/// prewarm policy.
+const ESTIMATOR_TAU: Time = 250 * MILLIS;
 
 /// Per-request timestamps (virtual ns).
 #[derive(Debug, Clone, Copy, Default)]
@@ -45,6 +60,8 @@ pub struct RequestTiming {
     pub exec_end: Time,
     /// Client received the response.
     pub done: Time,
+    /// Provisioning tier of the replica that served this invocation.
+    pub tier: ProvisionTier,
 }
 
 impl RequestTiming {
@@ -68,12 +85,25 @@ enum ReplicaHandle {
     Junction(InstanceId),
 }
 
-struct DeployedFn {
-    #[allow(dead_code)] // retained for monitoring/debug dumps
-    spec: FunctionSpec,
-    replicas: Vec<(ReplicaHandle, Gate)>,
+/// One provisioned replica: backend handle, concurrency gate, readiness,
+/// and the provenance the telemetry reports.
+struct Replica {
+    handle: ReplicaHandle,
+    gate: Gate,
+    /// Virtual time this replica starts accepting traffic.
     ready_at: Time,
+    /// Which rung of the ladder produced it.
+    tier: ProvisionTier,
+    /// Name junctiond's bookkeeping filed the instance(s) under.
+    jd_name: String,
+}
+
+struct DeployedFn {
+    spec: FunctionSpec,
+    replicas: Vec<Replica>,
     meta: ReplicaMeta,
+    /// Requests submitted but not yet fully responded (guards undeploy).
+    outstanding: u32,
 }
 
 struct World {
@@ -95,6 +125,16 @@ struct World {
     provider: Provider,
     registry: Registry,
     functions: BTreeMap<String, DeployedFn>,
+    // Tiered provisioning (snapshot/ subsystem).
+    pool: WarmPool,
+    snapshots: SnapshotStore,
+    tier_costs: TierCosts,
+    estimators: BTreeMap<String, ArrivalEstimator>,
+    prewarm: PrewarmPolicy,
+    /// Instances provisioned per tier (index = `ProvisionTier::idx`).
+    tier_provisioned: [u64; 3],
+    /// Invocations served per replica-provisioning tier.
+    tier_served: [u64; 3],
     // The services' own junction instances (§3: services run in instances).
     gw_inst: Option<InstanceId>,
     prov_inst: Option<InstanceId>,
@@ -115,6 +155,126 @@ impl World {
     fn service_done(&mut self, inst: Option<InstanceId>) {
         if let (Backend::Junctiond, Some(id)) = (self.backend, inst) {
             self.jd.scheduler.request_done(id);
+        }
+    }
+
+    /// Provision one single-instance replica through the tier ladder:
+    /// warm pool → snapshot restore → cold boot. `jd_name` is the name the
+    /// backend's own bookkeeping uses (distinct for added replicas);
+    /// `spec.name` keys the pool and the snapshot store.
+    fn provision_single(
+        &mut self,
+        now: Time,
+        jd_name: &str,
+        spec: &FunctionSpec,
+        allow_pool: bool,
+    ) -> Replica {
+        let fn_name = &spec.name;
+        if allow_pool {
+            if let Some((_, handle)) = self.pool.acquire_warm(fn_name, now) {
+                let lat = self.tier_costs.warm_acquire_ns;
+                let (handle, conc) = match handle {
+                    PoolHandle::Junction(id) => {
+                        self.jd.adopt_instances(jd_name, spec.scale.max(1), &[id]);
+                        (ReplicaHandle::Junction(id), self.jd.concurrency_of(id, spec))
+                    }
+                    PoolHandle::Container(cid) => {
+                        match self.containerd.get(cid).unwrap().state {
+                            ContainerState::Paused => self.containerd.resume(cid),
+                            // Acquired at the same instant its background
+                            // restore finished: the park-side fixup (mark
+                            // running + pause) hasn't run yet.
+                            ContainerState::Creating => self.containerd.mark_running(cid),
+                            _ => {}
+                        }
+                        (
+                            ReplicaHandle::Container(cid),
+                            self.platform.container_concurrency as u32,
+                        )
+                    }
+                };
+                self.tier_provisioned[ProvisionTier::WarmPool.idx()] += 1;
+                return Replica {
+                    handle,
+                    gate: Gate::new(conc),
+                    ready_at: now + lat,
+                    tier: ProvisionTier::WarmPool,
+                    jd_name: jd_name.to_string(),
+                };
+            }
+            if self.snapshots.ready(fn_name, now) {
+                let (handle, conc, lat) = match self.backend {
+                    Backend::Junctiond => {
+                        let mut s = spec.clone();
+                        s.name = jd_name.to_string();
+                        let (ids, lat) = self.jd.restore_function(&s, self.tier_costs.restore_ns);
+                        (ReplicaHandle::Junction(ids[0]), self.jd.concurrency_of(ids[0], spec), lat)
+                    }
+                    Backend::Containerd => {
+                        let (cid, lat) = self.containerd.restore_from_snapshot(
+                            jd_name,
+                            now,
+                            self.tier_costs.restore_ns,
+                        );
+                        (
+                            ReplicaHandle::Container(cid),
+                            self.platform.container_concurrency as u32,
+                            lat,
+                        )
+                    }
+                };
+                self.snapshots.note_restore(fn_name);
+                self.tier_provisioned[ProvisionTier::SnapshotRestore.idx()] += 1;
+                return Replica {
+                    handle,
+                    gate: Gate::new(conc),
+                    ready_at: now + lat,
+                    tier: ProvisionTier::SnapshotRestore,
+                    jd_name: jd_name.to_string(),
+                };
+            }
+        }
+        // Cold boot — the seed's only path — plus an off-critical-path
+        // snapshot capture so later provisions can take the faster rungs.
+        let (handle, conc, lat) = match self.backend {
+            Backend::Junctiond => {
+                let mut s = spec.clone();
+                s.name = jd_name.to_string();
+                let (ids, lat) = self.jd.deploy_function(&s);
+                (ReplicaHandle::Junction(ids[0]), self.jd.concurrency_of(ids[0], spec), lat)
+            }
+            Backend::Containerd => {
+                let (cid, lat) = self.containerd.create_and_start(jd_name, now);
+                (ReplicaHandle::Container(cid), self.platform.container_concurrency as u32, lat)
+            }
+        };
+        self.snapshots.capture(
+            fn_name,
+            now + lat,
+            self.tier_costs.capture_ns,
+            self.tier_costs.instance_mem_bytes,
+        );
+        self.tier_provisioned[ProvisionTier::ColdBoot.idx()] += 1;
+        Replica {
+            handle,
+            gate: Gate::new(conc),
+            ready_at: now + lat,
+            tier: ProvisionTier::ColdBoot,
+            jd_name: jd_name.to_string(),
+        }
+    }
+
+    /// Tear down instances the pool evicted.
+    fn teardown(&mut self, handles: Vec<PoolHandle>) {
+        for h in handles {
+            match h {
+                PoolHandle::Junction(id) => self.jd.retire_instance(id),
+                PoolHandle::Container(cid) => {
+                    if self.containerd.get(cid).is_some() {
+                        self.containerd.stop(cid);
+                    }
+                }
+            }
         }
     }
 }
@@ -141,7 +301,6 @@ impl FaasSim {
             prov_inst = Some(jd.deploy_service("provider", 2).0);
         }
         let world = World {
-            platform: platform.clone(),
             backend: cfg.backend,
             cores,
             kc_gw: KernelCosts::new(platform.clone(), rng.fork()),
@@ -156,74 +315,369 @@ impl FaasSim {
             provider: Provider::new(cfg.provider_cache),
             registry: Registry::new(),
             functions: BTreeMap::new(),
+            pool: WarmPool::new(PoolConfig::from_platform(&platform)),
+            snapshots: SnapshotStore::new(),
+            tier_costs: TierCosts::for_backend(cfg.backend, &platform),
+            estimators: BTreeMap::new(),
+            prewarm: PrewarmPolicy::default(),
+            tier_provisioned: [0; 3],
+            tier_served: [0; 3],
             gw_inst,
             prov_inst,
             compute_ns: cfg.function_compute_ns,
             completed: 0,
+            platform,
         };
         FaasSim { w: Rc::new(RefCell::new(world)) }
     }
 
-    /// Deploy a function on the active backend. Returns the cold-start
-    /// duration; the function accepts traffic from `sim.now() + cold`.
+    /// Deploy a function on the active backend via the tier ladder.
+    /// Returns the provisioning duration; the function accepts traffic
+    /// from `sim.now() + duration`.
     pub fn deploy(&self, sim: &mut Sim, spec: FunctionSpec) -> Time {
-        let mut w = self.w.borrow_mut();
-        w.registry.deploy(spec.clone()).expect("duplicate deploy");
+        self.deploy_tiered(sim, spec, true).0
+    }
+
+    /// Deploy bypassing the pool and the snapshot store (always cold —
+    /// the seed's behavior, kept as the ablation baseline).
+    pub fn deploy_cold(&self, sim: &mut Sim, spec: FunctionSpec) -> Time {
+        self.deploy_tiered(sim, spec, false).0
+    }
+
+    /// Deploy and report which provisioning tier served the request.
+    pub fn deploy_tiered(
+        &self,
+        sim: &mut Sim,
+        spec: FunctionSpec,
+        allow_pool: bool,
+    ) -> (Time, ProvisionTier) {
         let now = sim.now();
-        let (replicas, cold) = match w.backend {
-            Backend::Containerd => {
-                let conc = w.platform.container_concurrency as u32;
-                let (cid, cold) = w.containerd.create_and_start(&spec.name, now);
-                (vec![(ReplicaHandle::Container(cid), Gate::new(conc))], cold)
-            }
-            Backend::Junctiond => {
-                let (ids, cold) = w.jd.deploy_function(&spec);
-                let reps = ids
-                    .iter()
-                    .map(|id| {
-                        let conc = w.jd.concurrency_of(*id, &spec);
-                        (ReplicaHandle::Junction(*id), Gate::new(conc))
-                    })
-                    .collect();
-                (reps, cold)
-            }
-        };
-        let n_replicas = replicas.len() as u32;
-        let addr = match &replicas[0].0 {
-            ReplicaHandle::Container(cid) => w.containerd.get(*cid).unwrap().addr,
-            ReplicaHandle::Junction(id) => {
-                let cfg = w.jd.config_of(*id).unwrap();
-                (cfg.ip, cfg.port)
-            }
-        };
-        let deployed = DeployedFn {
-            spec: spec.clone(),
-            replicas,
-            ready_at: now + cold,
-            meta: ReplicaMeta { replicas: n_replicas, addr },
-        };
-        w.functions.insert(spec.name.clone(), deployed);
-        // Containers flip to Running at ready_at.
-        if w.backend == Backend::Containerd {
-            let this = self.clone();
-            let name = spec.name.clone();
-            drop(w);
-            sim.at(now + cold, move |_| {
-                let mut w = this.w.borrow_mut();
-                let ids: Vec<ContainerId> = w.functions[&name]
-                    .replicas
-                    .iter()
-                    .map(|(h, _)| match h {
-                        ReplicaHandle::Container(c) => *c,
-                        _ => unreachable!(),
-                    })
-                    .collect();
-                for c in ids {
-                    w.containerd.mark_running(c);
+        let (lat, tier, marks) = {
+            let mut w = self.w.borrow_mut();
+            w.registry.deploy(spec.clone()).expect("duplicate deploy");
+            let replicas = if spec.scale.max(1) == 1 {
+                vec![w.provision_single(now, &spec.name, &spec, allow_pool)]
+            } else {
+                // Multi-instance shapes (uProc fan-out, isolated replicas)
+                // keep the seed's cold path: the ladder hands out single
+                // instances.
+                provision_multi(&mut w, now, &spec)
+            };
+            let lat = replicas.iter().map(|r| r.ready_at).max().unwrap() - now;
+            let tier = replicas[0].tier;
+            let addr = match &replicas[0].handle {
+                ReplicaHandle::Container(cid) => w.containerd.get(*cid).unwrap().addr,
+                ReplicaHandle::Junction(id) => {
+                    let cfg = w.jd.config_of(*id).unwrap();
+                    (cfg.ip, cfg.port)
                 }
+            };
+            // Containers still booting flip to Running at their ready time.
+            let marks: Vec<(ContainerId, Time)> = replicas
+                .iter()
+                .filter_map(|r| match r.handle {
+                    ReplicaHandle::Container(cid)
+                        if w.containerd.get(cid).unwrap().state == ContainerState::Creating =>
+                    {
+                        Some((cid, r.ready_at))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let meta = ReplicaMeta { replicas: replicas.len() as u32, addr };
+            w.functions.insert(
+                spec.name.clone(),
+                DeployedFn { spec: spec.clone(), replicas, meta, outstanding: 0 },
+            );
+            (lat, tier, marks)
+        };
+        for (cid, at) in marks {
+            let this = self.clone();
+            sim.at(at, move |_| this.w.borrow_mut().containerd.mark_running(cid));
+        }
+        (lat, tier)
+    }
+
+    /// Remove a function and park its (idle) instances into the warm pool.
+    /// Refuses — returning `false` — while any request is outstanding or a
+    /// replica is still booting, so an invocation can never land on a
+    /// parked instance.
+    pub fn undeploy(&self, sim: &mut Sim, name: &str) -> bool {
+        let now = sim.now();
+        let mut w = self.w.borrow_mut();
+        let Some(f) = w.functions.get(name) else { return false };
+        if f.outstanding > 0 {
+            return false;
+        }
+        if f.replicas.iter().any(|r| r.ready_at > now || r.gate.in_use() > 0 || r.gate.waiting() > 0)
+        {
+            return false;
+        }
+        for r in &f.replicas {
+            if let ReplicaHandle::Junction(id) = r.handle {
+                if w.jd.scheduler.instance(id).map_or(0, |i| i.in_flight) > 0 {
+                    return false;
+                }
+            }
+        }
+        let f = w.functions.remove(name).unwrap();
+        w.registry.remove(name);
+        w.provider.invalidate(name);
+        let mem = w.tier_costs.instance_mem_bytes;
+        for r in &f.replicas {
+            match r.handle {
+                ReplicaHandle::Junction(_) => {
+                    for id in w.jd.park_instances(&r.jd_name) {
+                        if w.pool.try_park(name, PoolHandle::Junction(id), now, mem).is_none() {
+                            w.jd.retire_instance(id);
+                        }
+                    }
+                }
+                ReplicaHandle::Container(cid) => {
+                    if w.containerd.get(cid).unwrap().state == ContainerState::Running {
+                        w.containerd.pause(cid);
+                        if w.pool.try_park(name, PoolHandle::Container(cid), now, mem).is_none() {
+                            w.containerd.stop(cid);
+                        }
+                    } else {
+                        w.containerd.stop(cid);
+                    }
+                }
+            }
+        }
+        let evicted = w.pool.reclaim_to_budget().into_iter().map(|(_, h)| h).collect();
+        w.teardown(evicted);
+        true
+    }
+
+    pub fn is_deployed(&self, name: &str) -> bool {
+        self.w.borrow().functions.contains_key(name)
+    }
+
+    /// Add one replica to a deployed function through the tier ladder
+    /// (the pipeline-level scale-up path). Returns the tier that served
+    /// the request and the time until the replica is ready.
+    pub fn scale_up_replica(
+        &self,
+        sim: &mut Sim,
+        name: &str,
+        allow_pool: bool,
+    ) -> Option<(ProvisionTier, Time)> {
+        let now = sim.now();
+        let (tier, lat, mark) = {
+            let mut w = self.w.borrow_mut();
+            let (spec, idx) = {
+                let f = w.functions.get(name)?;
+                (f.spec.clone(), f.replicas.len())
+            };
+            let mut rspec = spec;
+            rspec.scale = 1;
+            let jd_name = format!("{name}#r{idx}");
+            let r = w.provision_single(now, &jd_name, &rspec, allow_pool);
+            let tier = r.tier;
+            let lat = r.ready_at - now;
+            let mark = match r.handle {
+                ReplicaHandle::Container(cid)
+                    if w.containerd.get(cid).unwrap().state == ContainerState::Creating =>
+                {
+                    Some((cid, r.ready_at))
+                }
+                _ => None,
+            };
+            let f = w.functions.get_mut(name).unwrap();
+            f.replicas.push(r);
+            f.meta.replicas += 1;
+            w.provider.invalidate(name);
+            (tier, lat, mark)
+        };
+        if let Some((cid, at)) = mark {
+            let this = self.clone();
+            sim.at(at, move |_| this.w.borrow_mut().containerd.mark_running(cid));
+        }
+        Some((tier, lat))
+    }
+
+    /// TTL sweep: evict idle warm instances past the keep-alive and tear
+    /// them down.
+    pub fn pool_sweep(&self, sim: &mut Sim) {
+        let mut w = self.w.borrow_mut();
+        let now = sim.now();
+        let evicted = w.pool.sweep_ttl(now).into_iter().map(|(_, h)| h).collect();
+        w.teardown(evicted);
+    }
+
+    /// Evict *every* parked instance (bench helper: forces the next
+    /// provision down to the snapshot-restore or cold tier).
+    pub fn flush_warm_pool(&self, _sim: &mut Sim) {
+        let mut w = self.w.borrow_mut();
+        let evicted = w.pool.flush().into_iter().map(|(_, h)| h).collect();
+        w.teardown(evicted);
+    }
+
+    /// Prewarm hook: for every deployed function whose estimated arrival
+    /// rate warrants it, restore (or boot) instances into the pool in the
+    /// background so later scale-ups take the warm tier.
+    pub fn prewarm_tick(&self, sim: &mut Sim) {
+        let now = sim.now();
+        let scheduled = {
+            let mut w = self.w.borrow_mut();
+            w.pool.promote_ready(now);
+            let names: Vec<String> = w.functions.keys().cloned().collect();
+            let mut scheduled = Vec::new();
+            for name in names {
+                let rate = w.estimators.get(&name).map(|e| e.rate_rps(now)).unwrap_or(0.0);
+                let target = w.prewarm.target_warm(rate) as usize;
+                let have = w.pool.warm_count(&name) + w.pool.restoring_count(&name);
+                for _ in have..target {
+                    let mem = w.tier_costs.instance_mem_bytes;
+                    // Never prewarm past the pool's memory budget: an
+                    // over-budget restore would only be LRU-reclaimed on
+                    // arrival (restore → evict thrash, never converging).
+                    if w.pool.mem_in_use + mem > w.pool.cfg.mem_budget_bytes {
+                        break;
+                    }
+                    let pw_name = format!("{name}#pw");
+                    let (handle, ready_at) = if w.snapshots.ready(&name, now) {
+                        w.snapshots.note_restore(&name);
+                        match w.backend {
+                            Backend::Junctiond => {
+                                let (id, _) = w.jd.spawn_parked(&pw_name, 1);
+                                (PoolHandle::Junction(id), now + w.tier_costs.restore_ns)
+                            }
+                            Backend::Containerd => {
+                                let (cid, lat) = w.containerd.restore_from_snapshot(
+                                    &pw_name,
+                                    now,
+                                    w.tier_costs.restore_ns,
+                                );
+                                (PoolHandle::Container(cid), now + lat)
+                            }
+                        }
+                    } else {
+                        match w.backend {
+                            Backend::Junctiond => {
+                                let (id, boot) = w.jd.spawn_parked(&pw_name, 1);
+                                (PoolHandle::Junction(id), now + boot)
+                            }
+                            Backend::Containerd => {
+                                let (cid, lat) = w.containerd.create_and_start(&pw_name, now);
+                                (PoolHandle::Container(cid), now + lat)
+                            }
+                        }
+                    };
+                    let slot = w.pool.begin_prewarm(&name, handle, ready_at, mem);
+                    scheduled.push((slot, handle, ready_at));
+                }
+            }
+            scheduled
+        };
+        for (slot, handle, ready_at) in scheduled {
+            let this = self.clone();
+            sim.at(ready_at, move |sim| {
+                let mut w = this.w.borrow_mut();
+                w.pool.promote_ready(sim.now());
+                // Containers park paused; Junction instances just sit
+                // idle. Skip the fixup if the slot was acquired (a deploy
+                // landed at this exact instant) or already evicted — the
+                // acquire/teardown paths own the container state then.
+                if w.pool.slot(slot).state == crate::snapshot::SlotState::Warm {
+                    if let PoolHandle::Container(cid) = handle {
+                        w.containerd.mark_running(cid);
+                        if w.containerd.get(cid).unwrap().state == ContainerState::Running {
+                            w.containerd.pause(cid);
+                        }
+                    }
+                }
+                let evicted = w.pool.reclaim_to_budget().into_iter().map(|(_, h)| h).collect();
+                w.teardown(evicted);
             });
         }
-        cold
+    }
+
+    /// Drive TTL sweeps + the prewarm hook on a fixed tick train for
+    /// `horizon` of virtual time (same pattern as the cluster controller).
+    pub fn start_pool_maintenance(&self, sim: &mut Sim, interval: Time, horizon: Time) {
+        let mut t = sim.now() + interval;
+        let end = sim.now() + horizon;
+        while t < end {
+            let this = self.clone();
+            sim.at(t, move |sim| {
+                this.pool_sweep(sim);
+                this.prewarm_tick(sim);
+            });
+            t += interval;
+        }
+    }
+
+    /// Override the keep-alive policy (TTL / memory budget / per-fn cap).
+    pub fn set_pool_config(&self, cfg: PoolConfig) {
+        self.w.borrow_mut().pool.cfg = cfg;
+    }
+
+    pub fn pool_config(&self) -> PoolConfig {
+        self.w.borrow().pool.cfg
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.w.borrow().pool.stats
+    }
+
+    /// (provisioned, served) counters per tier, indexed by
+    /// [`ProvisionTier::idx`].
+    pub fn tier_counts(&self) -> ([u64; 3], [u64; 3]) {
+        let w = self.w.borrow();
+        (w.tier_provisioned, w.tier_served)
+    }
+
+    /// Export the provisioning subsystem's counters and gauges into a
+    /// metrics registry (call once per run).
+    pub fn export_metrics(&self, reg: &mut crate::telemetry::MetricsRegistry) {
+        let w = self.w.borrow();
+        let b = w.backend.name();
+        for tier in ProvisionTier::ALL {
+            reg.counter_add(
+                "provision_total",
+                "instances provisioned, by tier",
+                &[("backend", b), ("tier", tier.name())],
+                w.tier_provisioned[tier.idx()],
+            );
+            reg.counter_add(
+                "invocations_served_total",
+                "invocations served, by the serving replica's provisioning tier",
+                &[("backend", b), ("tier", tier.name())],
+                w.tier_served[tier.idx()],
+            );
+        }
+        reg.counter_add(
+            "snapshot_captures_total",
+            "per-function snapshots captured",
+            &[("backend", b)],
+            w.snapshots.captures,
+        );
+        reg.counter_add(
+            "pool_ttl_evictions_total",
+            "warm instances evicted by idle TTL",
+            &[("backend", b)],
+            w.pool.stats.ttl_evictions,
+        );
+        reg.counter_add(
+            "pool_lru_evictions_total",
+            "warm instances evicted by the memory budget",
+            &[("backend", b)],
+            w.pool.stats.lru_evictions,
+        );
+        reg.gauge_set(
+            "pool_warm_instances",
+            "instances currently parked warm",
+            &[("backend", b)],
+            w.pool.total_warm() as f64,
+        );
+        reg.gauge_set(
+            "pool_resident_bytes",
+            "resident memory held by the warm pool",
+            &[("backend", b)],
+            w.pool.mem_in_use as f64,
+        );
     }
 
     /// Submit one invocation; `done` fires at the client with the timings.
@@ -236,7 +690,18 @@ impl FaasSim {
         let timing = RequestTiming { submit: sim.now(), ..Default::default() };
         let this = self.clone();
         let name = function.to_string();
-        let wire = self.w.borrow().platform.wire_ns;
+        let wire = {
+            let mut w = self.w.borrow_mut();
+            let now = sim.now();
+            w.estimators
+                .entry(name.clone())
+                .or_insert_with(|| ArrivalEstimator::new(ESTIMATOR_TAU))
+                .observe(now);
+            if let Some(f) = w.functions.get_mut(&name) {
+                f.outstanding += 1;
+            }
+            w.platform.wire_ns
+        };
         // client → worker wire hop
         sim.after(wire, move |sim| stage_gateway(this, sim, name, timing, Box::new(done)));
     }
@@ -258,9 +723,9 @@ impl FaasSim {
         self.w.borrow().jd.scheduler.stats
     }
 
-    /// Virtual time at which `function` becomes warm.
+    /// Virtual time at which `function` becomes warm (latest replica).
     pub fn ready_at(&self, function: &str) -> Time {
-        self.w.borrow().functions[function].ready_at
+        self.w.borrow().functions[function].replicas.iter().map(|r| r.ready_at).max().unwrap_or(0)
     }
 
     /// Host-kernel vs user-space interaction counters, summed over all
@@ -287,6 +752,42 @@ impl FaasSim {
                 + w.bc_fn.msgs_sent,
         }
     }
+}
+
+/// Multi-instance deploy shapes (scale > 1) keep the seed's cold path.
+fn provision_multi(w: &mut World, now: Time, spec: &FunctionSpec) -> Vec<Replica> {
+    let replicas = match w.backend {
+        Backend::Containerd => {
+            let conc = w.platform.container_concurrency as u32;
+            let (cid, cold) = w.containerd.create_and_start(&spec.name, now);
+            vec![Replica {
+                handle: ReplicaHandle::Container(cid),
+                gate: Gate::new(conc),
+                ready_at: now + cold,
+                tier: ProvisionTier::ColdBoot,
+                jd_name: spec.name.clone(),
+            }]
+        }
+        Backend::Junctiond => {
+            let (ids, cold) = w.jd.deploy_function(spec);
+            ids.iter()
+                .map(|id| {
+                    let conc = w.jd.concurrency_of(*id, spec);
+                    Replica {
+                        handle: ReplicaHandle::Junction(*id),
+                        gate: Gate::new(conc),
+                        ready_at: now + cold,
+                        tier: ProvisionTier::ColdBoot,
+                        jd_name: spec.name.clone(),
+                    }
+                })
+                .collect()
+        }
+    };
+    let ready = replicas.iter().map(|r| r.ready_at).max().unwrap();
+    w.snapshots.capture(&spec.name, ready, w.tier_costs.capture_ns, w.tier_costs.instance_mem_bytes);
+    w.tier_provisioned[ProvisionTier::ColdBoot.idx()] += replicas.len() as u64;
+    replicas
 }
 
 /// Aggregated host-kernel vs user-space interaction counters.
@@ -396,17 +897,19 @@ fn stage_provider(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
 }
 
 /// Function pass: concurrency gate, then the exec segment.
-fn stage_function(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
+fn stage_function(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming, done: DoneFn) {
     // Pick the replica (round-robin mirrors the gateway's choice; per-
-    // replica gates model per-instance concurrency).
-    let (gate, handle_idx, ready_at) = {
+    // replica gates model per-instance concurrency). Each replica has its
+    // own readiness time — warm acquires serve in microseconds while a
+    // cold-booting sibling is still coming up.
+    let (gate, handle_idx, ready_at, tier) = {
         let w = fs.w.borrow();
         let f = &w.functions[&name];
         let idx = (w.gateway.requests as usize) % f.replicas.len();
-        let g = f.replicas[idx].1.clone();
-        let ready = f.ready_at;
-        (g, idx, ready)
+        let r = &f.replicas[idx];
+        (r.gate.clone(), idx, r.ready_at, r.tier)
     };
+    t.tier = tier;
     // Cold start: requests arriving early wait for instance readiness.
     let wait = ready_at.saturating_sub(sim.now());
     let gate2 = gate.clone();
@@ -434,9 +937,10 @@ fn exec_segment(
         let p = w.platform.clone();
         let nsys = p.function_syscalls as u32;
         let compute = w.compute_ns;
+        w.tier_served[t.tier.idx()] += 1;
         match w.backend {
             Backend::Containerd => {
-                let cid = match w.functions[&name].replicas[replica].0 {
+                let cid = match w.functions[&name].replicas[replica].handle {
                     ReplicaHandle::Container(c) => c,
                     _ => unreachable!(),
                 };
@@ -452,7 +956,7 @@ fn exec_segment(
                 (0, cpu, w.cores.clone(), None)
             }
             Backend::Junctiond => {
-                let id = match w.functions[&name].replicas[replica].0 {
+                let id = match w.functions[&name].replicas[replica].handle {
                     ReplicaHandle::Junction(i) => i,
                     _ => unreachable!(),
                 };
@@ -476,13 +980,13 @@ fn exec_segment(
                 }
             }
             gate.release(sim);
-            stage_response(fs2, sim, t, done);
+            stage_response(fs2, sim, name, t, done);
         });
     });
 }
 
 /// Response path: provider proxy pass, gateway proxy pass, wire to client.
-fn stage_response(fs: FaasSim, sim: &mut Sim, t: RequestTiming, done: DoneFn) {
+fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
     let (lat_p, cpu_p, cores) = {
         let mut w = fs.w.borrow_mut();
         let prov_inst = w.prov_inst;
@@ -533,6 +1037,9 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, t: RequestTiming, done: DoneFn) {
                         let gw_inst = w.gw_inst;
                         w.service_done(gw_inst);
                         w.completed += 1;
+                        if let Some(f) = w.functions.get_mut(&name) {
+                            f.outstanding = f.outstanding.saturating_sub(1);
+                        }
                     }
                     sim.after(wire, move |sim| {
                         let mut t = t;
@@ -549,7 +1056,7 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, t: RequestTiming, done: DoneFn) {
 mod tests {
     use super::*;
     use crate::faas::RuntimeKind;
-    use crate::simcore::{MICROS, MILLIS};
+    use crate::simcore::{MICROS, MILLIS, SECONDS};
 
     fn cfg(backend: Backend) -> ExperimentConfig {
         ExperimentConfig { backend, ..Default::default() }
@@ -634,6 +1141,7 @@ mod tests {
             "cold-start e2e {}µs suspiciously warm",
             t.e2e() / MICROS
         );
+        assert_eq!(t.tier, ProvisionTier::ColdBoot);
     }
 
     #[test]
@@ -657,5 +1165,139 @@ mod tests {
         let a: Vec<_> = run_n(Backend::Containerd, 20).iter().map(|t| t.e2e()).collect();
         let b: Vec<_> = run_n(Backend::Containerd, 20).iter().map(|t| t.e2e()).collect();
         assert_eq!(a, b);
+    }
+
+    // ---- tiered provisioning -------------------------------------------
+
+    /// Deploy, serve, undeploy, and redeploy on one backend; returns the
+    /// (cold, warm, restore) provisioning latencies the ladder reported.
+    fn ladder(backend: Backend) -> (Time, Time, Time) {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(backend), Rc::new(PlatformConfig::default()));
+        let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+        let (cold, tier) = fs.deploy_tiered(&mut sim, spec.clone(), true);
+        assert_eq!(tier, ProvisionTier::ColdBoot);
+        // Run past boot + snapshot capture.
+        sim.run_until(SECONDS);
+        assert!(fs.undeploy(&mut sim, "aes"), "idle function must undeploy");
+        let (warm, tier) = fs.deploy_tiered(&mut sim, spec.clone(), true);
+        assert_eq!(tier, ProvisionTier::WarmPool);
+        sim.run_until(2 * SECONDS);
+        assert!(fs.undeploy(&mut sim, "aes"));
+        fs.flush_warm_pool(&mut sim);
+        let (restore, tier) = fs.deploy_tiered(&mut sim, spec, true);
+        assert_eq!(tier, ProvisionTier::SnapshotRestore);
+        sim.run_to_completion();
+        (cold, warm, restore)
+    }
+
+    #[test]
+    fn tier_ladder_orders_costs_per_backend() {
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let (cold, warm, restore) = ladder(backend);
+            assert!(warm < restore, "{backend:?}: warm {warm} !< restore {restore}");
+            assert!(restore < cold, "{backend:?}: restore {restore} !< cold {cold}");
+        }
+    }
+
+    #[test]
+    fn junction_beats_containerd_at_every_tier() {
+        let (c_cold, c_warm, c_restore) = ladder(Backend::Containerd);
+        let (j_cold, j_warm, j_restore) = ladder(Backend::Junctiond);
+        assert!(j_warm * 10 <= c_warm, "warm: {j_warm} vs {c_warm}");
+        assert!(j_restore * 10 <= c_restore, "restore: {j_restore} vs {c_restore}");
+        assert!(j_cold * 10 <= c_cold, "cold: {j_cold} vs {c_cold}");
+    }
+
+    #[test]
+    fn warm_redeploy_serves_invocations() {
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let mut sim = Sim::new();
+            let fs = FaasSim::new(&cfg(backend), Rc::new(PlatformConfig::default()));
+            let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+            fs.deploy(&mut sim, spec.clone());
+            sim.run_until(SECONDS);
+            let done = Rc::new(RefCell::new(Vec::new()));
+            for _ in 0..5 {
+                let d = done.clone();
+                fs.submit(&mut sim, "aes", move |_, t| d.borrow_mut().push(t));
+            }
+            sim.run_to_completion();
+            assert!(fs.undeploy(&mut sim, "aes"));
+            assert!(!fs.is_deployed("aes"));
+            fs.deploy(&mut sim, spec);
+            for _ in 0..5 {
+                let d = done.clone();
+                fs.submit(&mut sim, "aes", move |_, t| d.borrow_mut().push(t));
+            }
+            sim.run_to_completion();
+            let ts = done.borrow();
+            assert_eq!(ts.len(), 10, "{backend:?}");
+            assert!(ts[..5].iter().all(|t| t.tier == ProvisionTier::ColdBoot));
+            assert!(ts[5..].iter().all(|t| t.tier == ProvisionTier::WarmPool));
+            let (_, served) = fs.tier_counts();
+            assert_eq!(served[ProvisionTier::WarmPool.idx()], 5);
+            assert_eq!(served[ProvisionTier::ColdBoot.idx()], 5);
+            assert_eq!(served.iter().sum::<u64>(), fs.completed());
+        }
+    }
+
+    #[test]
+    fn undeploy_refuses_while_requests_outstanding() {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Junctiond), Rc::new(PlatformConfig::default()));
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS);
+        fs.submit(&mut sim, "aes", |_, _| {});
+        assert!(!fs.undeploy(&mut sim, "aes"), "must refuse with a request in flight");
+        sim.run_to_completion();
+        assert!(fs.undeploy(&mut sim, "aes"), "idle after drain: must undeploy");
+        assert!(!fs.undeploy(&mut sim, "aes"), "already gone");
+    }
+
+    #[test]
+    fn prewarm_hook_feeds_scale_up() {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Junctiond), Rc::new(PlatformConfig::default()));
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS);
+        // Drive enough traffic that the arrival-rate estimator crosses the
+        // prewarm threshold.
+        let mut at = sim.now();
+        for _ in 0..400 {
+            at += MILLIS;
+            let fs2 = fs.clone();
+            sim.at(at, move |sim| fs2.submit(sim, "aes", |_, _| {}));
+        }
+        sim.run_to_completion();
+        fs.prewarm_tick(&mut sim);
+        assert!(fs.pool_stats().prewarms > 0, "estimator should trigger prewarms");
+        // Let the background restores land, then scale up from the pool.
+        sim.run_until(sim.now() + SECONDS);
+        let (tier, lat) = fs.scale_up_replica(&mut sim, "aes", true).unwrap();
+        assert_eq!(tier, ProvisionTier::WarmPool);
+        assert!(lat < MILLIS, "warm scale-up should be near-instant, got {lat}");
+        sim.run_to_completion();
+    }
+
+    #[test]
+    fn ttl_sweep_evicts_parked_instances() {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Junctiond), Rc::new(PlatformConfig::default()));
+        let ttl = fs.pool_config().idle_ttl_ns;
+        let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+        fs.deploy(&mut sim, spec.clone());
+        sim.run_until(SECONDS);
+        assert!(fs.undeploy(&mut sim, "aes"));
+        // Before the TTL: still parked.
+        fs.pool_sweep(&mut sim);
+        assert_eq!(fs.pool_stats().ttl_evictions, 0);
+        sim.run_until(sim.now() + ttl + SECONDS);
+        fs.pool_sweep(&mut sim);
+        assert_eq!(fs.pool_stats().ttl_evictions, 1);
+        // Redeploy now restores from snapshot (warm slot is gone).
+        let (_, tier) = fs.deploy_tiered(&mut sim, spec, true);
+        assert_eq!(tier, ProvisionTier::SnapshotRestore);
+        sim.run_to_completion();
     }
 }

@@ -59,30 +59,53 @@ impl Junctiond {
         }
     }
 
+    /// Hand out the next free port. Allocates *before* incrementing, and
+    /// after u16 wraparound skips the reserved range so ports below 1024
+    /// are never handed to an instance.
+    fn alloc_port(&mut self) -> u16 {
+        let port = self.next_port;
+        self.next_port = match self.next_port.checked_add(1) {
+            Some(next) if next >= 1024 => next,
+            _ => 1024, // wrapped past 65535 (or drifted into the reserved range)
+        };
+        port
+    }
+
     fn alloc_config(&mut self, name: &str, max_cores: u32) -> InstanceConfig {
         let cfg = InstanceConfig {
             name: name.to_string(),
             ip: self.next_ip,
-            port: self.next_port,
+            port: self.alloc_port(),
             queue_pairs: max_cores,
             max_cores,
         };
         self.next_ip += 1;
-        self.next_port = self.next_port.wrapping_add(1).max(1024);
         cfg
+    }
+
+    /// Boot-latency sample: `base` ± 5% (paper §5: instance init is fast
+    /// and tight). Shared by cold boot, snapshot restore, and recovery.
+    fn sample_boot(&mut self, base: Time) -> Time {
+        let spread = base / 10;
+        base - spread / 2 + self.rng.below(spread + 1)
     }
 
     /// `junction_run`: spawn one instance. Returns (id, cold_start_ns).
     /// Junction instance init is fast and tight: 3.4 ms ± a small spread
     /// (paper §5 "Cold starts").
     fn junction_run(&mut self, name: &str, max_cores: u32) -> (InstanceId, Time) {
+        let base = self.platform.junction_cold_start_ns;
+        self.junction_run_with(name, max_cores, base)
+    }
+
+    /// `junction_run` with an explicit boot-cost base (the snapshot-restore
+    /// tier boots the same instance shape at a much lower cost).
+    fn junction_run_with(&mut self, name: &str, max_cores: u32, boot_base: Time) -> (InstanceId, Time) {
         let cfg = self.alloc_config(name, max_cores);
         let id = self.scheduler.register(name, max_cores);
         self.configs.insert(id, cfg);
-        let base = self.platform.junction_cold_start_ns;
-        let spread = base / 10;
-        let cold = base - spread / 2 + self.rng.below(spread + 1);
-        (id, cold)
+        let boot = self.sample_boot(boot_base);
+        (id, boot)
     }
 
     /// Deploy a function per its spec. Returns (instance ids, cold_ns):
@@ -90,12 +113,23 @@ impl Junctiond {
     /// * `MaxCores`     → 1 instance, 1 uProc, core cap = `scale`;
     /// * `IsolatedInstances` → `scale` instances of 1 uProc each.
     pub fn deploy_function(&mut self, spec: &FunctionSpec) -> (Vec<InstanceId>, Time) {
+        let base = self.platform.junction_cold_start_ns;
+        self.deploy_with_boot(spec, base)
+    }
+
+    /// Deploy from a per-function memory snapshot (the snapshot-restore
+    /// tier): identical instance shape, restore-cost boot.
+    pub fn restore_function(&mut self, spec: &FunctionSpec, restore_base_ns: Time) -> (Vec<InstanceId>, Time) {
+        self.deploy_with_boot(spec, restore_base_ns)
+    }
+
+    fn deploy_with_boot(&mut self, spec: &FunctionSpec, boot_base: Time) -> (Vec<InstanceId>, Time) {
         self.deploys += 1;
         let mut ids = Vec::new();
         let mut cold_total = 0;
         match spec.scale_mode {
             ScaleMode::MultiProcess => {
-                let (id, cold) = self.junction_run(&spec.name, 1);
+                let (id, cold) = self.junction_run_with(&spec.name, 1, boot_base);
                 for k in 0..spec.scale.max(1) {
                     self.scheduler
                         .instance_mut(id)
@@ -106,7 +140,7 @@ impl Junctiond {
                 cold_total = cold;
             }
             ScaleMode::MaxCores => {
-                let (id, cold) = self.junction_run(&spec.name, spec.scale.max(1));
+                let (id, cold) = self.junction_run_with(&spec.name, spec.scale.max(1), boot_base);
                 self.scheduler.instance_mut(id).unwrap().spawn_uproc(&spec.name);
                 ids.push(id);
                 cold_total = cold;
@@ -114,7 +148,7 @@ impl Junctiond {
             ScaleMode::IsolatedInstances => {
                 // Instances boot in parallel; cold time is the max.
                 for k in 0..spec.scale.max(1) {
-                    let (id, cold) = self.junction_run(&format!("{}-{k}", spec.name), 1);
+                    let (id, cold) = self.junction_run_with(&format!("{}-{k}", spec.name), 1, boot_base);
                     self.scheduler
                         .instance_mut(id)
                         .unwrap()
@@ -242,11 +276,68 @@ impl Junctiond {
             inst.spawn_uproc(&name);
             inst.state = InstanceState::Running;
             let base = self.platform.junction_cold_start_ns;
-            let spread = base / 10;
-            let cold = base - spread / 2 + self.rng.below(spread + 1);
+            let cold = self.sample_boot(base);
             worst = worst.max(cold);
         }
         (n, worst)
+    }
+
+    /// Detach a function's instances for parking in the warm pool: they
+    /// stay registered with the scheduler (Running, idle, memory resident)
+    /// but junctiond no longer lists the function. Returns the ids.
+    pub fn park_instances(&mut self, name: &str) -> Vec<InstanceId> {
+        let ids = self.functions.remove(name).unwrap_or_default();
+        for id in &ids {
+            let inst = self.scheduler.instance(*id).expect("unknown instance");
+            debug_assert_eq!(inst.in_flight, 0, "parking a busy instance");
+        }
+        ids
+    }
+
+    /// Re-attach previously parked instances to a (re)deployed function —
+    /// the warm-pool acquire path. The instances keep their network config
+    /// (IP/port/queue pairs survive the park).
+    pub fn adopt_instances(&mut self, name: &str, max_cores: u32, ids: &[InstanceId]) {
+        self.deploys += 1;
+        for id in ids {
+            let inst = self.scheduler.instance_mut(*id).expect("unknown instance");
+            inst.name = name.to_string();
+            if inst.uprocs.is_empty() {
+                inst.spawn_uproc(name);
+            }
+            inst.set_max_cores(max_cores.max(1));
+            if let Some(cfg) = self.configs.get_mut(id) {
+                cfg.name = name.to_string();
+                cfg.max_cores = max_cores.max(1);
+                cfg.queue_pairs = max_cores.max(1);
+            }
+        }
+        self.functions.insert(name.to_string(), ids.to_vec());
+    }
+
+    /// Boot a fresh single-uProc instance straight into a parked state
+    /// (background prewarm): registered and Running but attached to no
+    /// function until adopted. Returns the instance and its boot latency.
+    pub fn spawn_parked(&mut self, name: &str, max_cores: u32) -> (InstanceId, Time) {
+        let (id, boot) = self.junction_run(name, max_cores);
+        self.scheduler.instance_mut(id).unwrap().spawn_uproc(name);
+        (id, boot)
+    }
+
+    /// Tear down an evicted pooled instance: stop it, return any cores,
+    /// and free its network config.
+    pub fn retire_instance(&mut self, id: InstanceId) {
+        let granted = {
+            let inst = self.scheduler.instance_mut(id).expect("unknown instance");
+            inst.state = InstanceState::Stopped;
+            inst.uprocs.clear();
+            inst.in_flight = 0;
+            let g = inst.granted_cores;
+            inst.granted_cores = 0;
+            g
+        };
+        self.scheduler.force_release(granted);
+        self.configs.remove(&id);
     }
 
     /// Per-instance effective concurrency for the pipeline's gate.
@@ -373,6 +464,78 @@ mod tests {
         jd.deploy_function(&FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
         let (revived, worst) = jd.restart_crashed();
         assert_eq!((revived, worst), (0, 0));
+    }
+
+    #[test]
+    fn port_allocation_returns_allocated_then_advances() {
+        let mut jd = manager();
+        assert_eq!(jd.next_port, 8080);
+        let p = jd.alloc_port();
+        assert_eq!(p, 8080, "must hand out the current port, not the next one");
+        assert_eq!(jd.next_port, 8081);
+    }
+
+    #[test]
+    fn port_allocation_skips_reserved_range_on_wraparound() {
+        let mut jd = manager();
+        jd.next_port = u16::MAX;
+        assert_eq!(jd.alloc_port(), u16::MAX);
+        // Wrapped: never hand out 0..1024.
+        let p = jd.alloc_port();
+        assert_eq!(p, 1024, "after wraparound allocation must resume at 1024");
+        assert_eq!(jd.alloc_port(), 1025);
+        for _ in 0..100 {
+            assert!(jd.alloc_port() >= 1024);
+        }
+    }
+
+    #[test]
+    fn park_adopt_cycle_keeps_config_and_serves() {
+        let mut jd = manager();
+        let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+        let (ids, _) = jd.deploy_function(&spec);
+        let cfg_before = jd.config_of(ids[0]).unwrap().clone();
+        let parked = jd.park_instances("aes");
+        assert_eq!(parked, ids);
+        assert!(jd.instances_of("aes").is_empty());
+        assert!(jd.monitor().is_empty(), "parked functions leave the monitor");
+        // Instance is still Running (memory resident), just detached.
+        assert_eq!(jd.scheduler.instance(ids[0]).unwrap().state, InstanceState::Running);
+        jd.adopt_instances("aes", 1, &parked);
+        assert_eq!(jd.instances_of("aes"), &parked[..]);
+        let cfg_after = jd.config_of(ids[0]).unwrap();
+        assert_eq!(cfg_after.ip, cfg_before.ip, "network config survives the park");
+        assert_eq!(cfg_after.port, cfg_before.port);
+        assert!(matches!(
+            jd.scheduler.packet_arrival(ids[0]),
+            crate::junction::GrantOutcome::Granted { .. }
+        ));
+        jd.scheduler.check_invariants();
+    }
+
+    #[test]
+    fn retire_frees_config_and_stops_instance() {
+        let mut jd = manager();
+        let (ids, _) = jd.deploy_function(&FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        let parked = jd.park_instances("aes");
+        jd.retire_instance(parked[0]);
+        assert_eq!(jd.scheduler.instance(ids[0]).unwrap().state, InstanceState::Stopped);
+        assert!(jd.config_of(ids[0]).is_none());
+        jd.scheduler.check_invariants();
+    }
+
+    #[test]
+    fn restore_is_much_cheaper_than_cold_boot() {
+        let mut jd = manager();
+        let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+        let (_, cold) = jd.deploy_function(&spec);
+        jd.park_instances("aes");
+        let restore_base = PlatformConfig::default().junction_restore_ns;
+        let spec2 = FunctionSpec::new("aes-r", "aes600", RuntimeKind::Go);
+        let (ids, restore) = jd.restore_function(&spec2, restore_base);
+        assert_eq!(ids.len(), 1);
+        assert!(restore * 4 < cold, "restore {restore} should be ≪ cold {cold}");
+        assert_eq!(jd.scheduler.instance(ids[0]).unwrap().state, InstanceState::Running);
     }
 
     #[test]

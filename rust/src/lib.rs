@@ -30,5 +30,6 @@ pub mod rpc;
 pub mod runtime;
 pub mod server;
 pub mod simcore;
+pub mod snapshot;
 pub mod telemetry;
 pub mod workload;

@@ -63,7 +63,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: junctiond-repro <fig5|fig6|coldstart|ablation|serve|calibrate|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
-         --which cache|polling|scaleup  --mode kernel|bypass --requests N --runs N"
+         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers\n\
+         --mode kernel|bypass --requests N --runs N"
     );
     std::process::exit(2);
 }
@@ -112,8 +113,9 @@ fn main() -> Result<()> {
                 "isolation" => ex::isolation_table(100, seed),
                 "autoscale" => ex::autoscale_table(Backend::Junctiond, seed),
                 "multitenant" => ex::multitenant_table(60, 1_000.0, seed),
+                "tiers" => ex::coldstart_tiers_table(20, seed),
                 other => bail!(
-                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant)"
+                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers)"
                 ),
             };
             println!("{}", table.to_markdown());

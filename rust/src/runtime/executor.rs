@@ -1,4 +1,13 @@
-//! Artifact loading + execution on the PJRT CPU client.
+//! Artifact loading + execution.
+//!
+//! Two backends behind one `Executor` API:
+//!
+//! * **`pjrt` feature** — load `<dir>/manifest.ini`, compile each HLO-text
+//!   artifact on the PJRT CPU client (`xla` crate), and execute the real
+//!   lowered compute. Requires the native xla_extension toolchain.
+//! * **default (hermetic)** — install the pure-Rust reference kernels from
+//!   [`super::fallback`] under the same catalog names and signatures. No
+//!   artifacts, no native libraries, bit-exact AES semantics.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -6,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::config::Ini;
 use crate::simcore::Time;
 
@@ -18,6 +28,7 @@ pub struct ArgSig {
 }
 
 impl ArgSig {
+    #[cfg(feature = "pjrt")]
     fn parse(s: &str) -> Result<ArgSig> {
         let (dtype, dims) =
             s.split_once(':').with_context(|| format!("bad arg sig '{s}'"))?;
@@ -34,16 +45,34 @@ impl ArgSig {
     }
 }
 
-/// One compiled artifact.
+/// Which pure-Rust reference kernel serves a catalog entry in the default
+/// build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BuiltinKernel {
+    Aes600,
+    AesBlocks,
+    MlpInfer,
+    RowSum,
+    Blur,
+}
+
+enum ArtifactKind {
+    Builtin(BuiltinKernel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
+}
+
+/// One compiled (or builtin) artifact.
 pub struct FunctionArtifact {
     pub name: String,
     pub args: Vec<ArgSig>,
-    exe: xla::PjRtLoadedExecutable,
+    kind: ArtifactKind,
     pub invocations: std::cell::Cell<u64>,
 }
 
-/// The PJRT executor: one CPU client + all compiled catalog entries.
+/// The executor: the full catalog, PJRT-compiled or builtin.
 pub struct Executor {
+    #[cfg(feature = "pjrt")]
     #[allow(dead_code)]
     client: xla::PjRtClient,
     artifacts: BTreeMap<String, FunctionArtifact>,
@@ -51,8 +80,51 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Load every entry listed in `<dir>/manifest.ini`.
+    /// Load the function catalog (PJRT with `--features pjrt`, builtin
+    /// reference kernels otherwise).
     pub fn load(dir: &Path) -> Result<Executor> {
+        #[cfg(feature = "pjrt")]
+        fn inner(dir: &Path) -> Result<Executor> {
+            Executor::load_pjrt(dir)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        fn inner(dir: &Path) -> Result<Executor> {
+            Ok(Executor::builtin(dir))
+        }
+        inner(dir)
+    }
+
+    /// Builtin catalog: same names and shapes as `make artifacts` emits.
+    #[cfg(not(feature = "pjrt"))]
+    fn builtin(dir: &Path) -> Executor {
+        fn entry(name: &str, kernel: BuiltinKernel, sigs: &[(&str, &[usize])]) -> FunctionArtifact {
+            FunctionArtifact {
+                name: name.to_string(),
+                args: sigs
+                    .iter()
+                    .map(|(d, s)| ArgSig { dtype: d.to_string(), shape: s.to_vec() })
+                    .collect(),
+                kind: ArtifactKind::Builtin(kernel),
+                invocations: std::cell::Cell::new(0),
+            }
+        }
+        let mut artifacts = BTreeMap::new();
+        for art in [
+            entry("aes600", BuiltinKernel::Aes600, &[("int32", &[600]), ("int32", &[16]), ("int32", &[12])]),
+            entry("aes_blocks", BuiltinKernel::AesBlocks, &[("int32", &[256, 16]), ("int32", &[11, 16])]),
+            entry("mlp_infer", BuiltinKernel::MlpInfer, &[("float32", &[1, 64])]),
+            entry("rowsum", BuiltinKernel::RowSum, &[("float32", &[64, 64])]),
+            entry("blur", BuiltinKernel::Blur, &[("float32", &[64, 64])]),
+        ] {
+            artifacts.insert(art.name.clone(), art);
+        }
+        Executor { artifacts, dir: dir.to_path_buf() }
+    }
+
+    /// Load every entry listed in `<dir>/manifest.ini` onto the PJRT CPU
+    /// client.
+    #[cfg(feature = "pjrt")]
+    fn load_pjrt(dir: &Path) -> Result<Executor> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let manifest = Ini::load(&dir.join("manifest.ini"))?;
         // Section names are `<name>.artifact` keys in the flattened INI.
@@ -80,7 +152,12 @@ impl Executor {
                 .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
             artifacts.insert(
                 name.clone(),
-                FunctionArtifact { name, args, exe, invocations: std::cell::Cell::new(0) },
+                FunctionArtifact {
+                    name,
+                    args,
+                    kind: ArtifactKind::Pjrt(exe),
+                    invocations: std::cell::Cell::new(0),
+                },
             );
         }
         Ok(Executor { client, artifacts, dir: dir.to_path_buf() })
@@ -94,27 +171,35 @@ impl Executor {
         self.artifacts.get(name)
     }
 
+    /// Arity + per-argument element-count validation against the catalog
+    /// signature (shared by both execution backends).
+    fn checked(&self, name: &str, lens: &[usize]) -> Result<&FunctionArtifact> {
+        let art =
+            self.artifacts.get(name).with_context(|| format!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            lens.len() == art.args.len(),
+            "{name}: expected {} args, got {}",
+            art.args.len(),
+            lens.len()
+        );
+        for (sig, &len) in art.args.iter().zip(lens) {
+            anyhow::ensure!(len == sig.elements(), "{name}: arg size {len} != {:?}", sig.shape);
+        }
+        Ok(art)
+    }
+
+    #[cfg(feature = "pjrt")]
     fn invoke_literals<T: xla::NativeType + xla::ArrayElement>(
         &self,
         name: &str,
         args: &[Vec<T>],
     ) -> Result<Vec<T>> {
-        let art =
-            self.artifacts.get(name).with_context(|| format!("unknown artifact '{name}'"))?;
-        anyhow::ensure!(
-            args.len() == art.args.len(),
-            "{name}: expected {} args, got {}",
-            art.args.len(),
-            args.len()
-        );
+        let art = self.artifacts.get(name).unwrap();
+        let ArtifactKind::Pjrt(exe) = &art.kind else {
+            anyhow::bail!("{name}: not a PJRT artifact")
+        };
         let mut literals = Vec::with_capacity(args.len());
         for (sig, data) in art.args.iter().zip(args) {
-            anyhow::ensure!(
-                data.len() == sig.elements(),
-                "{name}: arg size {} != {:?}",
-                data.len(),
-                sig.shape
-            );
             let lit = xla::Literal::vec1(data);
             let lit = if sig.shape.len() > 1 {
                 let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
@@ -124,32 +209,46 @@ impl Executor {
             };
             literals.push(lit);
         }
-        let result = art
-            .exe
+        let result = exe
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
         // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
         let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
-        art.invocations.set(art.invocations.get() + 1);
         out.to_vec::<T>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
     }
 
     /// Execute an i32-typed artifact with the given flat argument vectors
-    /// (shapes from the manifest are applied). Returns the flat i32 output
+    /// (shapes from the catalog are applied). Returns the flat i32 output
     /// of the 1-tuple result.
     pub fn invoke_i32(&self, name: &str, args: &[Vec<i32>]) -> Result<Vec<i32>> {
-        self.invoke_literals::<i32>(name, args)
+        let lens: Vec<usize> = args.iter().map(|a| a.len()).collect();
+        let art = self.checked(name, &lens)?;
+        let out = match &art.kind {
+            ArtifactKind::Builtin(k) => builtin_i32(*k, name, args)?,
+            #[cfg(feature = "pjrt")]
+            ArtifactKind::Pjrt(_) => self.invoke_literals::<i32>(name, args)?,
+        };
+        art.invocations.set(art.invocations.get() + 1);
+        Ok(out)
     }
 
     /// f32 counterpart (mlp_infer / rowsum / blur artifacts).
     pub fn invoke_f32(&self, name: &str, args: &[Vec<f32>]) -> Result<Vec<f32>> {
-        self.invoke_literals::<f32>(name, args)
+        let lens: Vec<usize> = args.iter().map(|a| a.len()).collect();
+        let art = self.checked(name, &lens)?;
+        let out = match &art.kind {
+            ArtifactKind::Builtin(k) => builtin_f32(*k, name, args)?,
+            #[cfg(feature = "pjrt")]
+            ArtifactKind::Pjrt(_) => self.invoke_literals::<f32>(name, args)?,
+        };
+        art.invocations.set(art.invocations.get() + 1);
+        Ok(out)
     }
 
     /// AES-128-CTR over a 600-byte payload via the `aes600` artifact — the
-    /// paper's benchmark function, on the real lowered HLO.
+    /// paper's benchmark function.
     pub fn aes600(&self, plaintext: &[u8; 600], key: &[u8; 16], nonce: &[u8; 12]) -> Result<[u8; 600]> {
         let args = vec![
             plaintext.iter().map(|&b| b as i32).collect(),
@@ -167,6 +266,47 @@ impl Executor {
     }
 }
 
+fn as_bytes(name: &str, arg: &[i32]) -> Result<Vec<u8>> {
+    arg.iter()
+        .map(|&v| {
+            anyhow::ensure!((0..=255).contains(&v), "{name}: non-byte input {v}");
+            Ok(v as u8)
+        })
+        .collect()
+}
+
+fn builtin_i32(k: BuiltinKernel, name: &str, args: &[Vec<i32>]) -> Result<Vec<i32>> {
+    match k {
+        BuiltinKernel::Aes600 => {
+            let pt = as_bytes(name, &args[0])?;
+            let key: [u8; 16] = as_bytes(name, &args[1])?.try_into().unwrap();
+            let nonce: [u8; 12] = as_bytes(name, &args[2])?.try_into().unwrap();
+            let ct = super::rustcrypto_aes_ctr(&pt, &key, &nonce);
+            Ok(ct.iter().map(|&b| b as i32).collect())
+        }
+        BuiltinKernel::AesBlocks => {
+            let blocks = as_bytes(name, &args[0])?;
+            let rk_flat = as_bytes(name, &args[1])?;
+            let mut rks = [[0u8; 16]; 11];
+            for (r, rk) in rks.iter_mut().enumerate() {
+                rk.copy_from_slice(&rk_flat[16 * r..16 * r + 16]);
+            }
+            let out = super::fallback::aes_blocks(&blocks, &rks);
+            Ok(out.iter().map(|&b| b as i32).collect())
+        }
+        _ => anyhow::bail!("{name}: float32 artifact — use invoke_f32"),
+    }
+}
+
+fn builtin_f32(k: BuiltinKernel, name: &str, args: &[Vec<f32>]) -> Result<Vec<f32>> {
+    match k {
+        BuiltinKernel::MlpInfer => Ok(super::fallback::mlp_infer(&args[0])),
+        BuiltinKernel::RowSum => Ok(super::fallback::rowsum(&args[0], 64, 64)),
+        BuiltinKernel::Blur => Ok(super::fallback::blur3x3(&args[0], 64, 64)),
+        _ => anyhow::bail!("{name}: int32 artifact — use invoke_i32"),
+    }
+}
+
 /// Result of timing the AES-600B artifact on this machine.
 #[derive(Debug, Clone, Copy)]
 pub struct Calibration {
@@ -178,12 +318,13 @@ pub struct Calibration {
 
 /// Measure the real per-invocation compute cost of `aes600`. The *median*
 /// feeds `ExperimentConfig::function_compute_ns`, so the simulator's
-/// function service time is the measured cost of the actual lowered HLO.
+/// function service time is the measured cost of the actual function body
+/// (lowered HLO under `pjrt`, the reference kernel otherwise).
 pub fn calibrate(exec: &Executor, runs: u32) -> Result<Calibration> {
     let pt = [7u8; 600];
     let key = [1u8; 16];
     let nonce = [2u8; 12];
-    // Warmup (first run pays one-time PJRT initialization).
+    // Warmup (first run pays one-time initialization).
     for _ in 0..3 {
         exec.aes600(&pt, &key, &nonce)?;
     }
@@ -196,7 +337,7 @@ pub fn calibrate(exec: &Executor, runs: u32) -> Result<Calibration> {
     samples.sort_unstable();
     let p50 = samples[samples.len() / 2];
     let mean = samples.iter().sum::<u64>() / samples.len() as u64;
-    Ok(Calibration { p50_ns: p50, mean_ns: mean, min_ns: samples[0], runs })
+    Ok(Calibration { p50_ns: p50.max(1), mean_ns: mean, min_ns: samples[0], runs })
 }
 
 #[cfg(test)]
@@ -205,7 +346,7 @@ mod tests {
     use crate::runtime::{default_artifacts_dir, rustcrypto_aes_ctr};
 
     fn executor() -> Executor {
-        Executor::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+        Executor::load(&default_artifacts_dir()).expect("loading executor catalog")
     }
 
     #[test]
@@ -240,8 +381,8 @@ mod tests {
 
     #[test]
     fn aes600_matches_rustcrypto_oracle() {
-        // The artifact (JAX + Pallas AES, AOT-lowered) must agree with the
-        // completely independent RustCrypto implementation.
+        // The artifact path must agree with the independent RustCrypto
+        // construction.
         let e = executor();
         let mut pt = [0u8; 600];
         for (i, b) in pt.iter_mut().enumerate() {
@@ -267,6 +408,17 @@ mod tests {
     }
 
     #[test]
+    fn aes_blocks_executes_with_round_keys() {
+        let e = executor();
+        let blocks = vec![0i32; 256 * 16];
+        let rks = vec![0i32; 11 * 16];
+        let out = e.invoke_i32("aes_blocks", &[blocks, rks]).unwrap();
+        assert_eq!(out.len(), 256 * 16);
+        assert_eq!(&out[..16], &out[16..32], "identical blocks encrypt identically");
+        assert_eq!(e.artifact("aes_blocks").unwrap().invocations.get(), 1);
+    }
+
+    #[test]
     fn bad_arity_rejected() {
         let e = executor();
         assert!(e.invoke_i32("aes600", &[vec![0; 600]]).is_err());
@@ -278,6 +430,14 @@ mod tests {
         let e = executor();
         let args = vec![vec![0i32; 599], vec![0; 16], vec![0; 12]];
         assert!(e.invoke_i32("aes600", &args).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let e = executor();
+        // mlp_infer is float32: the i32 entry point must refuse it.
+        assert!(e.invoke_i32("mlp_infer", &[vec![0i32; 64]]).is_err());
+        assert!(e.invoke_f32("aes600", &[vec![0.0; 600], vec![0.0; 16], vec![0.0; 12]]).is_err());
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Pure-Rust reference kernels backing the default (hermetic) build of the
+//! runtime [`Executor`](super::Executor).
+//!
+//! The `pjrt` feature executes the AOT-lowered HLO artifacts through the
+//! PJRT CPU client; without it these implementations serve the same
+//! catalog (`aes600`, `aes_blocks`, `mlp_infer`, `rowsum`, `blur`) with
+//! identical shapes and semantics, so every layer above — the real-mode
+//! server, calibration, the experiments — runs unchanged offline.
+//!
+//! `aes600` reuses the RustCrypto oracle in `aes_check`; `aes_blocks`
+//! needs AES with *caller-provided round keys* (the Pallas kernel's
+//! signature), which no crate exposes, so [`aes128`] carries a compact
+//! FIPS-197 implementation validated against RustCrypto and the standard
+//! test vectors.
+
+/// Minimal AES-128 core operating on caller-provided round keys.
+pub mod aes128 {
+    /// FIPS-197 S-box.
+    const SBOX: [u8; 256] = [
+        0x63, 0x7c, 0x77, 0x7b, 0xf2, 0x6b, 0x6f, 0xc5, 0x30, 0x01, 0x67, 0x2b, 0xfe, 0xd7,
+        0xab, 0x76, 0xca, 0x82, 0xc9, 0x7d, 0xfa, 0x59, 0x47, 0xf0, 0xad, 0xd4, 0xa2, 0xaf,
+        0x9c, 0xa4, 0x72, 0xc0, 0xb7, 0xfd, 0x93, 0x26, 0x36, 0x3f, 0xf7, 0xcc, 0x34, 0xa5,
+        0xe5, 0xf1, 0x71, 0xd8, 0x31, 0x15, 0x04, 0xc7, 0x23, 0xc3, 0x18, 0x96, 0x05, 0x9a,
+        0x07, 0x12, 0x80, 0xe2, 0xeb, 0x27, 0xb2, 0x75, 0x09, 0x83, 0x2c, 0x1a, 0x1b, 0x6e,
+        0x5a, 0xa0, 0x52, 0x3b, 0xd6, 0xb3, 0x29, 0xe3, 0x2f, 0x84, 0x53, 0xd1, 0x00, 0xed,
+        0x20, 0xfc, 0xb1, 0x5b, 0x6a, 0xcb, 0xbe, 0x39, 0x4a, 0x4c, 0x58, 0xcf, 0xd0, 0xef,
+        0xaa, 0xfb, 0x43, 0x4d, 0x33, 0x85, 0x45, 0xf9, 0x02, 0x7f, 0x50, 0x3c, 0x9f, 0xa8,
+        0x51, 0xa3, 0x40, 0x8f, 0x92, 0x9d, 0x38, 0xf5, 0xbc, 0xb6, 0xda, 0x21, 0x10, 0xff,
+        0xf3, 0xd2, 0xcd, 0x0c, 0x13, 0xec, 0x5f, 0x97, 0x44, 0x17, 0xc4, 0xa7, 0x7e, 0x3d,
+        0x64, 0x5d, 0x19, 0x73, 0x60, 0x81, 0x4f, 0xdc, 0x22, 0x2a, 0x90, 0x88, 0x46, 0xee,
+        0xb8, 0x14, 0xde, 0x5e, 0x0b, 0xdb, 0xe0, 0x32, 0x3a, 0x0a, 0x49, 0x06, 0x24, 0x5c,
+        0xc2, 0xd3, 0xac, 0x62, 0x91, 0x95, 0xe4, 0x79, 0xe7, 0xc8, 0x37, 0x6d, 0x8d, 0xd5,
+        0x4e, 0xa9, 0x6c, 0x56, 0xf4, 0xea, 0x65, 0x7a, 0xae, 0x08, 0xba, 0x78, 0x25, 0x2e,
+        0x1c, 0xa6, 0xb4, 0xc6, 0xe8, 0xdd, 0x74, 0x1f, 0x4b, 0xbd, 0x8b, 0x8a, 0x70, 0x3e,
+        0xb5, 0x66, 0x48, 0x03, 0xf6, 0x0e, 0x61, 0x35, 0x57, 0xb9, 0x86, 0xc1, 0x1d, 0x9e,
+        0xe1, 0xf8, 0x98, 0x11, 0x69, 0xd9, 0x8e, 0x94, 0x9b, 0x1e, 0x87, 0xe9, 0xce, 0x55,
+        0x28, 0xdf, 0x8c, 0xa1, 0x89, 0x0d, 0xbf, 0xe6, 0x42, 0x68, 0x41, 0x99, 0x2d, 0x0f,
+        0xb0, 0x54, 0xbb, 0x16,
+    ];
+
+    const RCON: [u8; 10] = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1b, 0x36];
+
+    /// Expand a 16-byte key into the 11 round keys (FIPS-197 §5.2).
+    pub fn expand_key(key: &[u8; 16]) -> [[u8; 16]; 11] {
+        let mut w = [[0u8; 4]; 44];
+        for i in 0..4 {
+            w[i].copy_from_slice(&key[4 * i..4 * i + 4]);
+        }
+        for i in 4..44 {
+            let mut t = w[i - 1];
+            if i % 4 == 0 {
+                t = [
+                    SBOX[t[1] as usize] ^ RCON[i / 4 - 1],
+                    SBOX[t[2] as usize],
+                    SBOX[t[3] as usize],
+                    SBOX[t[0] as usize],
+                ];
+            }
+            for b in 0..4 {
+                w[i][b] = w[i - 4][b] ^ t[b];
+            }
+        }
+        let mut rks = [[0u8; 16]; 11];
+        for (r, rk) in rks.iter_mut().enumerate() {
+            for c in 0..4 {
+                rk[4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+            }
+        }
+        rks
+    }
+
+    #[inline]
+    fn xtime(b: u8) -> u8 {
+        (b << 1) ^ (0x1b * (b >> 7))
+    }
+
+    fn sub_bytes(b: &mut [u8; 16]) {
+        for x in b.iter_mut() {
+            *x = SBOX[*x as usize];
+        }
+    }
+
+    // State is column-major: byte (row, col) lives at index 4*col + row.
+    fn shift_rows(b: &mut [u8; 16]) {
+        let mut out = [0u8; 16];
+        for col in 0..4 {
+            for row in 0..4 {
+                out[4 * col + row] = b[4 * ((col + row) % 4) + row];
+            }
+        }
+        *b = out;
+    }
+
+    fn mix_columns(b: &mut [u8; 16]) {
+        for col in 0..4 {
+            let i = 4 * col;
+            let (a0, a1, a2, a3) = (b[i], b[i + 1], b[i + 2], b[i + 3]);
+            b[i] = xtime(a0) ^ (xtime(a1) ^ a1) ^ a2 ^ a3;
+            b[i + 1] = a0 ^ xtime(a1) ^ (xtime(a2) ^ a2) ^ a3;
+            b[i + 2] = a0 ^ a1 ^ xtime(a2) ^ (xtime(a3) ^ a3);
+            b[i + 3] = (xtime(a0) ^ a0) ^ a1 ^ a2 ^ xtime(a3);
+        }
+    }
+
+    fn add_round_key(b: &mut [u8; 16], rk: &[u8; 16]) {
+        for k in 0..16 {
+            b[k] ^= rk[k];
+        }
+    }
+
+    /// Encrypt one block in place with pre-expanded round keys.
+    pub fn encrypt_block(block: &mut [u8; 16], rks: &[[u8; 16]; 11]) {
+        add_round_key(block, &rks[0]);
+        for rk in &rks[1..10] {
+            sub_bytes(block);
+            shift_rows(block);
+            mix_columns(block);
+            add_round_key(block, rk);
+        }
+        sub_bytes(block);
+        shift_rows(block);
+        add_round_key(block, &rks[10]);
+    }
+}
+
+/// AES-128 ECB over consecutive 16-byte blocks with caller-provided round
+/// keys — the `aes_blocks` artifact's contract.
+pub fn aes_blocks(blocks: &[u8], round_keys: &[[u8; 16]; 11]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(blocks.len());
+    for chunk in blocks.chunks(16) {
+        let mut b = [0u8; 16];
+        b[..chunk.len()].copy_from_slice(chunk);
+        aes128::encrypt_block(&mut b, round_keys);
+        out.extend_from_slice(&b[..chunk.len()]);
+    }
+    out
+}
+
+/// Two-layer MLP (64 → 32 relu → 10) with fixed pseudo-random weights:
+/// shape-faithful stand-in for the `mlp_infer` artifact.
+pub fn mlp_infer(x: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), 64);
+    let mut rng = crate::simcore::Rng::new(0x4d4c_5031); // "MLP1"
+    let mut weight = || (rng.next_f64() as f32 - 0.5) * 0.4;
+    let mut hidden = [0f32; 32];
+    for h in hidden.iter_mut() {
+        let mut acc = weight(); // bias
+        for &xi in x {
+            acc += xi * weight();
+        }
+        *h = acc.max(0.0); // relu
+    }
+    let mut logits = vec![0f32; 10];
+    for l in logits.iter_mut() {
+        let mut acc = weight(); // bias
+        for &hi in &hidden {
+            acc += hi * weight();
+        }
+        *l = acc;
+    }
+    logits
+}
+
+/// Row sums of a `rows × cols` matrix.
+pub fn rowsum(m: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(m.len(), rows * cols);
+    (0..rows).map(|r| m[r * cols..(r + 1) * cols].iter().sum()).collect()
+}
+
+/// 3×3 box blur with zero padding over an `h × w` image.
+pub fn blur3x3(img: &[f32], h: usize, w: usize) -> Vec<f32> {
+    debug_assert_eq!(img.len(), h * w);
+    let mut out = vec![0f32; h * w];
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0f32;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    let (ny, nx) = (y as i64 + dy, x as i64 + dx);
+                    if ny >= 0 && ny < h as i64 && nx >= 0 && nx < w as i64 {
+                        acc += img[ny as usize * w + nx as usize];
+                    }
+                }
+            }
+            out[y * w + x] = acc / 9.0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use aes::cipher::{BlockEncrypt, KeyInit};
+    use aes::Aes128;
+
+    #[test]
+    fn fips197_appendix_b_vector() {
+        let key: [u8; 16] = [
+            0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
+            0x4f, 0x3c,
+        ];
+        let mut block: [u8; 16] = [
+            0x32, 0x43, 0xf6, 0xa8, 0x88, 0x5a, 0x30, 0x8d, 0x31, 0x31, 0x98, 0xa2, 0xe0, 0x37,
+            0x07, 0x34,
+        ];
+        let rks = aes128::expand_key(&key);
+        aes128::encrypt_block(&mut block, &rks);
+        assert_eq!(
+            block,
+            [
+                0x39, 0x25, 0x84, 0x1d, 0x02, 0xdc, 0x09, 0xfb, 0xdc, 0x11, 0x85, 0x97, 0x19,
+                0x6a, 0x0b, 0x32
+            ]
+        );
+    }
+
+    #[test]
+    fn matches_rustcrypto_on_many_blocks() {
+        // Bit-exact agreement with the completely independent RustCrypto
+        // implementation, across several keys and blocks.
+        for seed in 0..4u8 {
+            let key: [u8; 16] = std::array::from_fn(|i| (i as u8) * 7 + seed * 31 + 1);
+            let cipher = Aes128::new(&key.into());
+            let rks = aes128::expand_key(&key);
+            for b in 0..8u8 {
+                let mut mine: [u8; 16] = std::array::from_fn(|i| (i as u8) ^ (b * 17));
+                let mut theirs = aes::Block::from(mine);
+                aes128::encrypt_block(&mut mine, &rks);
+                cipher.encrypt_block(&mut theirs);
+                assert_eq!(mine.as_slice(), theirs.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn aes_blocks_is_deterministic_per_block() {
+        let rks = aes128::expand_key(&[0u8; 16]);
+        let blocks = vec![0u8; 16 * 4];
+        let out = aes_blocks(&blocks, &rks);
+        assert_eq!(out.len(), 64);
+        assert_eq!(&out[..16], &out[16..32], "identical blocks encrypt identically");
+    }
+
+    #[test]
+    fn rowsum_and_blur_shapes() {
+        let out = rowsum(&vec![1.0; 64 * 64], 64, 64);
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|&v| (v - 64.0).abs() < 1e-4));
+        let b = blur3x3(&vec![2.0; 64 * 64], 64, 64);
+        assert_eq!(b.len(), 64 * 64);
+        assert!((b[32 * 64 + 32] - 2.0).abs() < 1e-4);
+        assert!(b[0] < 1.0, "corner attenuated by zero pad: {}", b[0]);
+    }
+
+    #[test]
+    fn mlp_is_deterministic_and_finite() {
+        let x = vec![0.5f32; 64];
+        let a = mlp_infer(&x);
+        let b = mlp_infer(&x);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 10);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,10 +1,13 @@
-//! PJRT runtime: loads the AOT artifacts and executes function bodies.
+//! Function runtime: loads the catalog and executes function bodies.
 //!
-//! This is the L2/L3 bridge. `make artifacts` (Python, build-time only)
-//! lowers the JAX/Pallas function catalog to `artifacts/*.hlo.txt`; this
-//! module loads the HLO **text** via `HloModuleProto::from_text_file`,
-//! compiles it once on the PJRT CPU client, and executes it from the
-//! serving hot path. Python never runs at serve time.
+//! This is the L2/L3 bridge. With the **`pjrt` feature**, `make artifacts`
+//! (Python, build-time only) lowers the JAX/Pallas function catalog to
+//! `artifacts/*.hlo.txt`; this module loads the HLO **text** via
+//! `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
+//! client, and executes it from the serving hot path. Python never runs at
+//! serve time. The **default build** is hermetic: the same catalog is
+//! served by pure-Rust reference kernels ([`fallback`]) with identical
+//! shapes and AES semantics, so nothing above this layer changes offline.
 //!
 //! Also here: [`calibrate`], which measures the real compute cost of the
 //! AES-600B artifact on this machine and feeds it to the simulator's
@@ -13,6 +16,7 @@
 
 mod aes_check;
 mod executor;
+pub mod fallback;
 
 pub use aes_check::rustcrypto_aes_ctr;
 pub use executor::{calibrate, ArgSig, Calibration, Executor, FunctionArtifact};

@@ -119,7 +119,7 @@ fn proxy_loop(
             Kind::InvokeResponse => { /* stray response: drop */ }
         }
     }
-    log::debug!("{label} exiting");
+    let _ = label; // kept for debugger breakpoints; no logger dependency
 }
 
 /// Worker loop: owns the PJRT executor; executes the real artifact.

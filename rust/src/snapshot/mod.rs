@@ -1,0 +1,36 @@
+//! Tiered instance provisioning: warm pools + snapshot/restore for both
+//! execution backends.
+//!
+//! The paper's headline cold-start number (Junction instance init ≈ 3.4 ms
+//! vs containerd's ~250 ms container boot) is a *single* fixed-cost boot
+//! path. Real FaaS tail latency at scale is dominated by the provisioning
+//! *policy* wrapped around that path (FaaSNet, ATC'21; Quark, 2023), so
+//! this subsystem gives every function a three-rung ladder:
+//!
+//! | tier             | junctiond | containerd | mechanism                     |
+//! |------------------|-----------|------------|-------------------------------|
+//! | warm-pool        |   25 µs   |   2.5 ms   | unpark a parked instance      |
+//! | snapshot-restore |  600 µs   |    45 ms   | restore per-function snapshot |
+//! | cold-boot        |  3.4 ms   |   250 ms   | the seed's boot path          |
+//!
+//! * [`tiers`] — the [`ProvisionTier`] ladder and per-backend [`TierCosts`].
+//! * [`store`] — [`SnapshotStore`]: per-function snapshots, captured off
+//!   the critical path after first boot.
+//! * [`pool`] — [`WarmPool`]: keep-alive with idle-TTL eviction and a
+//!   global memory budget with LRU reclaim.
+//! * [`policy`] — [`PrewarmPolicy`] + [`ArrivalEstimator`]: arrival-rate
+//!   driven background prewarming, fed by the workload layer.
+//!
+//! The pipeline (`faas::pipeline`) provisions every replica through the
+//! ladder, records the serving tier per invocation, and exports per-tier
+//! counters through `telemetry::MetricsRegistry`.
+
+pub mod policy;
+pub mod pool;
+pub mod store;
+pub mod tiers;
+
+pub use policy::{ArrivalEstimator, PrewarmPolicy};
+pub use pool::{PoolConfig, PoolHandle, PoolStats, SlotId, SlotState, WarmPool};
+pub use store::{Snapshot, SnapshotStore};
+pub use tiers::{ProvisionTier, TierCosts};

@@ -1,0 +1,132 @@
+//! Prewarm policy: decide how many warm instances to keep parked per
+//! function, driven by an arrival-rate estimate fed from the workload
+//! layer (every `FaasSim::submit` observes into the estimator).
+//!
+//! The shape follows the FaaSNet/keep-alive literature: estimate the
+//! per-function arrival rate with an event-driven EWMA, keep enough warm
+//! capacity to absorb `headroom_window` worth of arrivals, and cap it so a
+//! single hot function cannot monopolize the pool budget.
+
+use crate::simcore::{Time, SECONDS};
+
+/// Event-driven exponentially-weighted arrival-rate estimator.
+///
+/// On each arrival the instantaneous rate `1/gap` is blended in with a
+/// weight that grows with the gap (`1 - exp(-gap/tau)`), so the estimate
+/// is independent of the sampling pattern; reads decay the estimate toward
+/// zero for silent functions.
+#[derive(Debug, Clone)]
+pub struct ArrivalEstimator {
+    ewma_rps: f64,
+    last_arrival: Option<Time>,
+    /// Time constant of the EWMA.
+    tau_ns: f64,
+}
+
+impl ArrivalEstimator {
+    pub fn new(tau: Time) -> ArrivalEstimator {
+        ArrivalEstimator { ewma_rps: 0.0, last_arrival: None, tau_ns: tau as f64 }
+    }
+
+    /// Record one arrival at virtual time `now`.
+    pub fn observe(&mut self, now: Time) {
+        match self.last_arrival {
+            None => {
+                // First arrival: seed with one arrival per tau.
+                self.ewma_rps = SECONDS as f64 / self.tau_ns;
+            }
+            Some(prev) => {
+                let gap = now.saturating_sub(prev).max(1) as f64;
+                let inst_rps = SECONDS as f64 / gap;
+                let alpha = 1.0 - (-gap / self.tau_ns).exp();
+                self.ewma_rps = alpha * inst_rps + (1.0 - alpha) * self.ewma_rps;
+            }
+        }
+        self.last_arrival = Some(now);
+    }
+
+    /// Current rate estimate (rps), decayed by the silence since the last
+    /// arrival.
+    pub fn rate_rps(&self, now: Time) -> f64 {
+        let Some(prev) = self.last_arrival else { return 0.0 };
+        let silence = now.saturating_sub(prev) as f64;
+        self.ewma_rps * (-silence / self.tau_ns).exp()
+    }
+}
+
+/// How many warm instances to keep parked for a function.
+#[derive(Debug, Clone, Copy)]
+pub struct PrewarmPolicy {
+    /// Cover this much future arrival mass with warm capacity.
+    pub headroom_window_ns: Time,
+    /// Per-function ceiling on prewarmed instances.
+    pub max_prewarm: u32,
+    /// Below this rate a function is considered cold and gets no prewarm.
+    pub min_rate_rps: f64,
+}
+
+impl Default for PrewarmPolicy {
+    fn default() -> Self {
+        PrewarmPolicy {
+            headroom_window_ns: SECONDS / 2,
+            max_prewarm: 4,
+            min_rate_rps: 20.0,
+        }
+    }
+}
+
+impl PrewarmPolicy {
+    /// Target parked-warm count for an estimated arrival rate.
+    pub fn target_warm(&self, rate_rps: f64) -> u32 {
+        if rate_rps < self.min_rate_rps {
+            return 0;
+        }
+        let window_s = self.headroom_window_ns as f64 / SECONDS as f64;
+        ((rate_rps * window_s).ceil() as u32).min(self.max_prewarm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::MILLIS;
+
+    #[test]
+    fn estimator_converges_to_offered_rate() {
+        // 1 kHz arrivals → estimate near 1000 rps after warm-up.
+        let mut e = ArrivalEstimator::new(100 * MILLIS);
+        let mut t = 0;
+        for _ in 0..2_000 {
+            t += MILLIS;
+            e.observe(t);
+        }
+        let r = e.rate_rps(t);
+        assert!((r - 1000.0).abs() < 100.0, "rate {r}");
+    }
+
+    #[test]
+    fn estimator_decays_when_silent() {
+        let mut e = ArrivalEstimator::new(100 * MILLIS);
+        let mut t = 0;
+        for _ in 0..500 {
+            t += MILLIS;
+            e.observe(t);
+        }
+        let busy = e.rate_rps(t);
+        let idle = e.rate_rps(t + SECONDS);
+        assert!(idle < busy / 100.0, "busy {busy} idle {idle}");
+        assert_eq!(ArrivalEstimator::new(MILLIS).rate_rps(123), 0.0);
+    }
+
+    #[test]
+    fn policy_targets_scale_with_rate_and_clamp() {
+        let p = PrewarmPolicy::default();
+        assert_eq!(p.target_warm(0.0), 0);
+        assert_eq!(p.target_warm(p.min_rate_rps / 2.0), 0, "cold functions get no prewarm");
+        let low = p.target_warm(p.min_rate_rps);
+        let high = p.target_warm(1_000.0);
+        assert!(low >= 1);
+        assert!(high >= low);
+        assert_eq!(high, p.max_prewarm, "hot function clamps at the cap");
+    }
+}

@@ -1,0 +1,456 @@
+//! The warm-instance pool: per-function keep-alive, idle-TTL eviction, a
+//! global memory budget with LRU reclaim, and the bookkeeping for
+//! background prewarms.
+//!
+//! The pool is backend-agnostic: it tracks opaque [`PoolHandle`]s (a
+//! Junction instance id or a containerd container id) and decides *which*
+//! parked instance serves an acquire; the caller (the pipeline's `World`)
+//! applies the backend side effects (resume/pause/stop/retire) to the
+//! handles the pool returns.
+//!
+//! Slot lifecycle:
+//!
+//! ```text
+//! try_park ──► Warm ──acquire_warm──► InUse          (serving)
+//!                │
+//!                ├─sweep_ttl / reclaim_to_budget──► Evicted (terminal)
+//! begin_prewarm ──► Restoring ──promote_ready──► Warm
+//! ```
+//!
+//! An instance is only ever served out of `InUse`; `Evicted` and
+//! `Restoring` slots are never returned by `acquire_warm` — the property
+//! test at the bottom pins this.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::PlatformConfig;
+use crate::simcore::Time;
+
+pub type SlotId = usize;
+
+/// Backend-opaque handle to a pooled instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolHandle {
+    /// A Junction instance id (scheduler-registered, parked idle).
+    Junction(u32),
+    /// A containerd container id (paused).
+    Container(u32),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// Parked, memory resident, acquirable.
+    Warm,
+    /// Acquired; the instance is serving a deployment.
+    InUse,
+    /// Background restore in flight; acquirable once `ready_at` passes.
+    Restoring { ready_at: Time },
+    /// Torn down by TTL or memory reclaim (terminal).
+    Evicted,
+}
+
+/// One pooled-instance record.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub function: String,
+    pub handle: PoolHandle,
+    pub state: SlotState,
+    /// When the slot last entered `Warm`.
+    pub parked_at: Time,
+    pub mem_bytes: u64,
+}
+
+/// Pool telemetry counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub parks: u64,
+    pub warm_hits: u64,
+    pub prewarms: u64,
+    pub ttl_evictions: u64,
+    pub lru_evictions: u64,
+    /// Evictions from explicit `flush` calls (not TTL or budget).
+    pub flushes: u64,
+}
+
+/// Keep-alive policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Idle duration after which a parked instance is evicted.
+    pub idle_ttl_ns: Time,
+    /// Global resident-memory budget for parked + restoring instances.
+    pub mem_budget_bytes: u64,
+    /// Cap on parked instances per function.
+    pub max_warm_per_fn: u32,
+}
+
+impl PoolConfig {
+    pub fn from_platform(p: &PlatformConfig) -> PoolConfig {
+        PoolConfig {
+            idle_ttl_ns: p.pool_idle_ttl_ns,
+            mem_budget_bytes: p.pool_mem_budget_bytes,
+            max_warm_per_fn: 8,
+        }
+    }
+}
+
+/// The warm pool.
+pub struct WarmPool {
+    pub cfg: PoolConfig,
+    slots: Vec<Slot>,
+    /// function → parked slot ids, front = oldest parked (LRU end).
+    warm: BTreeMap<String, VecDeque<SlotId>>,
+    /// Slots currently in `Restoring` (scanned by `promote_ready`).
+    restoring: Vec<SlotId>,
+    /// Resident bytes held by Warm + Restoring slots.
+    pub mem_in_use: u64,
+    pub stats: PoolStats,
+}
+
+impl WarmPool {
+    pub fn new(cfg: PoolConfig) -> WarmPool {
+        WarmPool {
+            cfg,
+            slots: Vec::new(),
+            warm: BTreeMap::new(),
+            restoring: Vec::new(),
+            mem_in_use: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn slot(&self, id: SlotId) -> &Slot {
+        &self.slots[id]
+    }
+
+    pub fn warm_count(&self, function: &str) -> usize {
+        self.warm.get(function).map(|q| q.len()).unwrap_or(0)
+    }
+
+    pub fn restoring_count(&self, function: &str) -> usize {
+        self.restoring.iter().filter(|&&id| self.slots[id].function == function).count()
+    }
+
+    pub fn total_warm(&self) -> usize {
+        self.warm.values().map(|q| q.len()).sum()
+    }
+
+    /// Park an idle instance as warm. Returns `None` (caller must tear the
+    /// instance down) when the per-function cap is reached.
+    pub fn try_park(
+        &mut self,
+        function: &str,
+        handle: PoolHandle,
+        now: Time,
+        mem_bytes: u64,
+    ) -> Option<SlotId> {
+        if self.warm_count(function) >= self.cfg.max_warm_per_fn as usize {
+            return None;
+        }
+        let id = self.slots.len();
+        self.slots.push(Slot {
+            function: function.to_string(),
+            handle,
+            state: SlotState::Warm,
+            parked_at: now,
+            mem_bytes,
+        });
+        self.warm.entry(function.to_string()).or_default().push_back(id);
+        self.mem_in_use += mem_bytes;
+        self.stats.parks += 1;
+        Some(id)
+    }
+
+    /// Register a background prewarm (instance being restored/booted into
+    /// the pool). It becomes acquirable once promoted past `ready_at`.
+    pub fn begin_prewarm(
+        &mut self,
+        function: &str,
+        handle: PoolHandle,
+        ready_at: Time,
+        mem_bytes: u64,
+    ) -> SlotId {
+        let id = self.slots.len();
+        self.slots.push(Slot {
+            function: function.to_string(),
+            handle,
+            state: SlotState::Restoring { ready_at },
+            parked_at: ready_at,
+            mem_bytes,
+        });
+        self.restoring.push(id);
+        self.mem_in_use += mem_bytes;
+        self.stats.prewarms += 1;
+        id
+    }
+
+    /// Promote every finished restore to `Warm`. Idempotent.
+    pub fn promote_ready(&mut self, now: Time) -> Vec<SlotId> {
+        let mut promoted = Vec::new();
+        let mut still = Vec::new();
+        for id in std::mem::take(&mut self.restoring) {
+            match self.slots[id].state {
+                SlotState::Restoring { ready_at } if ready_at <= now => {
+                    self.slots[id].state = SlotState::Warm;
+                    self.slots[id].parked_at = ready_at;
+                    let function = self.slots[id].function.clone();
+                    self.warm.entry(function).or_default().push_back(id);
+                    promoted.push(id);
+                }
+                SlotState::Restoring { .. } => still.push(id),
+                // Already promoted/evicted through another path: drop.
+                _ => {}
+            }
+        }
+        self.restoring = still;
+        promoted
+    }
+
+    /// Acquire the most-recently-parked warm instance for `function`
+    /// (MRU keeps caches hottest; eviction runs from the LRU end).
+    pub fn acquire_warm(&mut self, function: &str, now: Time) -> Option<(SlotId, PoolHandle)> {
+        self.promote_ready(now);
+        let q = self.warm.get_mut(function)?;
+        let id = q.pop_back()?;
+        if q.is_empty() {
+            self.warm.remove(function);
+        }
+        debug_assert_eq!(self.slots[id].state, SlotState::Warm);
+        self.slots[id].state = SlotState::InUse;
+        self.mem_in_use -= self.slots[id].mem_bytes;
+        self.stats.warm_hits += 1;
+        Some((id, self.slots[id].handle))
+    }
+
+    fn evict(&mut self, id: SlotId) -> PoolHandle {
+        debug_assert_eq!(self.slots[id].state, SlotState::Warm);
+        self.slots[id].state = SlotState::Evicted;
+        self.mem_in_use -= self.slots[id].mem_bytes;
+        let function = self.slots[id].function.clone();
+        if let Some(q) = self.warm.get_mut(&function) {
+            q.retain(|&s| s != id);
+            if q.is_empty() {
+                self.warm.remove(&function);
+            }
+        }
+        self.slots[id].handle
+    }
+
+    /// Evict every warm slot idle for at least the TTL. Returns the evicted
+    /// handles oldest-first; the caller tears the instances down.
+    /// Scans only the warm queues, not every slot ever created.
+    pub fn sweep_ttl(&mut self, now: Time) -> Vec<(SlotId, PoolHandle)> {
+        self.promote_ready(now);
+        let mut expired: Vec<SlotId> = self
+            .warm
+            .values()
+            .flatten()
+            .copied()
+            .filter(|&id| now.saturating_sub(self.slots[id].parked_at) >= self.cfg.idle_ttl_ns)
+            .collect();
+        expired.sort_by_key(|&id| (self.slots[id].parked_at, id));
+        let mut out = Vec::with_capacity(expired.len());
+        for id in expired {
+            let h = self.evict(id);
+            self.stats.ttl_evictions += 1;
+            out.push((id, h));
+        }
+        out
+    }
+
+    /// LRU-reclaim warm slots until resident memory fits the budget. The
+    /// global LRU victim is the oldest queue front (queues are in park
+    /// order, so each front is that function's oldest).
+    pub fn reclaim_to_budget(&mut self) -> Vec<(SlotId, PoolHandle)> {
+        let mut out = Vec::new();
+        while self.mem_in_use > self.cfg.mem_budget_bytes {
+            let oldest = self
+                .warm
+                .values()
+                .filter_map(|q| q.front().copied())
+                .min_by_key(|&id| (self.slots[id].parked_at, id));
+            let Some(id) = oldest else { break };
+            let h = self.evict(id);
+            self.stats.lru_evictions += 1;
+            out.push((id, h));
+        }
+        out
+    }
+
+    /// Evict every warm slot regardless of age (test/bench helper: forces
+    /// the next acquire down to the snapshot or cold tier).
+    pub fn flush(&mut self) -> Vec<(SlotId, PoolHandle)> {
+        let all: Vec<SlotId> = self.warm.values().flatten().copied().collect();
+        let mut out = Vec::with_capacity(all.len());
+        for id in all {
+            let h = self.evict(id);
+            self.stats.flushes += 1;
+            out.push((id, h));
+        }
+        out
+    }
+
+    /// May this slot serve an invocation at `now`? Only an acquired
+    /// (`InUse`) instance serves; evicted and still-restoring never do.
+    pub fn servable(&self, id: SlotId, _now: Time) -> bool {
+        matches!(self.slots[id].state, SlotState::InUse)
+    }
+
+    /// Accounting invariants (called from tests and debug paths).
+    pub fn check_invariants(&self) {
+        let resident: u64 = self
+            .slots
+            .iter()
+            .filter(|s| matches!(s.state, SlotState::Warm | SlotState::Restoring { .. }))
+            .map(|s| s.mem_bytes)
+            .sum();
+        assert_eq!(resident, self.mem_in_use, "pool memory accounting drifted");
+        for (function, q) in &self.warm {
+            for &id in q {
+                assert_eq!(self.slots[id].state, SlotState::Warm, "non-warm slot in warm queue");
+                assert_eq!(&self.slots[id].function, function, "slot filed under wrong function");
+            }
+        }
+        for &id in &self.restoring {
+            assert!(
+                matches!(self.slots[id].state, SlotState::Restoring { .. }),
+                "stale restoring entry"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::{forall, Gen, SECONDS};
+
+    fn pool(budget: u64, ttl: Time) -> WarmPool {
+        WarmPool::new(PoolConfig { idle_ttl_ns: ttl, mem_budget_bytes: budget, max_warm_per_fn: 8 })
+    }
+
+    fn h(n: u32) -> PoolHandle {
+        PoolHandle::Junction(n)
+    }
+
+    #[test]
+    fn ttl_eviction_is_oldest_first() {
+        let mut p = pool(u64::MAX, 10 * SECONDS);
+        let a = p.try_park("f", h(0), 0, 1).unwrap();
+        let b = p.try_park("f", h(1), 3 * SECONDS, 1).unwrap();
+        let c = p.try_park("g", h(2), 1 * SECONDS, 1).unwrap();
+        // At t=11s: a (11s idle) and c (10s idle) expire, b (8s) survives.
+        let evicted = p.sweep_ttl(11 * SECONDS);
+        let ids: Vec<SlotId> = evicted.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![a, c], "must evict in park order (oldest first)");
+        assert_eq!(p.stats.ttl_evictions, 2);
+        assert_eq!(p.warm_count("f"), 1);
+        assert!(p.acquire_warm("g", 11 * SECONDS).is_none());
+        let _ = b;
+        p.check_invariants();
+    }
+
+    #[test]
+    fn memory_budget_reclaims_lru() {
+        let mut p = pool(3, Time::MAX);
+        let a = p.try_park("f", h(0), 10, 1).unwrap();
+        p.try_park("f", h(1), 20, 1).unwrap();
+        p.try_park("g", h(2), 30, 1).unwrap();
+        assert!(p.reclaim_to_budget().is_empty(), "within budget: no reclaim");
+        p.try_park("g", h(3), 40, 1).unwrap();
+        let evicted = p.reclaim_to_budget();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, a, "LRU (oldest parked) must go first");
+        assert!(p.mem_in_use <= 3);
+        assert_eq!(p.stats.lru_evictions, 1);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn acquire_is_mru_and_marks_in_use() {
+        let mut p = pool(u64::MAX, Time::MAX);
+        p.try_park("f", h(0), 10, 5).unwrap();
+        let newer = p.try_park("f", h(1), 20, 5).unwrap();
+        let (id, handle) = p.acquire_warm("f", 30).unwrap();
+        assert_eq!(id, newer, "MRU slot must serve first");
+        assert_eq!(handle, h(1));
+        assert!(p.servable(id, 30));
+        assert_eq!(p.mem_in_use, 5, "acquired slot leaves the resident budget");
+        assert_eq!(p.warm_count("f"), 1);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn per_function_park_cap() {
+        let mut p = WarmPool::new(PoolConfig {
+            idle_ttl_ns: Time::MAX,
+            mem_budget_bytes: u64::MAX,
+            max_warm_per_fn: 2,
+        });
+        assert!(p.try_park("f", h(0), 0, 1).is_some());
+        assert!(p.try_park("f", h(1), 0, 1).is_some());
+        assert!(p.try_park("f", h(2), 0, 1).is_none(), "cap reached");
+        assert!(p.try_park("g", h(3), 0, 1).is_some(), "cap is per function");
+    }
+
+    #[test]
+    fn prewarm_promotes_only_after_ready() {
+        let mut p = pool(u64::MAX, Time::MAX);
+        let id = p.begin_prewarm("f", h(0), 100, 7);
+        assert!(!p.servable(id, 50));
+        assert!(p.acquire_warm("f", 50).is_none(), "still restoring: not acquirable");
+        let (got, _) = p.acquire_warm("f", 100).expect("ready at 100");
+        assert_eq!(got, id);
+        assert!(p.servable(id, 100));
+        assert_eq!(p.stats.prewarms, 1);
+        p.check_invariants();
+    }
+
+    /// The satellite property: an invocation is never served by an evicted
+    /// or still-restoring instance — under arbitrary interleavings of
+    /// park/prewarm/acquire/sweep/reclaim with an advancing clock.
+    #[test]
+    fn property_never_serve_evicted_or_restoring() {
+        forall("pool never serves evicted/restoring", 80, |g: &mut Gen| {
+            let budget = g.u64(2, 6);
+            let ttl = g.u64(1, 20) * SECONDS;
+            let mut p = pool(budget, ttl);
+            let mut now: Time = 0;
+            let mut next_handle = 0u32;
+            let fns = ["a", "b", "c"];
+            // Shadow state: every slot id ever evicted.
+            let mut evicted: Vec<SlotId> = Vec::new();
+            for _ in 0..120 {
+                now += g.u64(0, 4) * SECONDS;
+                let f = *g.choose(&fns);
+                match g.u64(0, 4) {
+                    0 => {
+                        p.try_park(f, h(next_handle), now, 1);
+                        next_handle += 1;
+                    }
+                    1 => {
+                        p.begin_prewarm(f, h(next_handle), now + g.u64(1, 3) * SECONDS, 1);
+                        next_handle += 1;
+                    }
+                    2 => {
+                        if let Some((id, _)) = p.acquire_warm(f, now) {
+                            // The served instance must be InUse, never a
+                            // slot that was evicted or is still restoring.
+                            assert!(p.servable(id, now), "acquired slot not servable");
+                            assert!(!evicted.contains(&id), "served an evicted slot");
+                            assert!(
+                                !matches!(p.slot(id).state, SlotState::Restoring { .. }),
+                                "served a still-restoring slot"
+                            );
+                        }
+                    }
+                    3 => evicted.extend(p.sweep_ttl(now).into_iter().map(|(id, _)| id)),
+                    _ => evicted.extend(p.reclaim_to_budget().into_iter().map(|(id, _)| id)),
+                }
+                for &id in &evicted {
+                    assert!(!p.servable(id, now), "evicted slot became servable");
+                }
+                p.check_invariants();
+            }
+        });
+    }
+}

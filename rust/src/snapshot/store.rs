@@ -1,0 +1,145 @@
+//! Per-function memory-snapshot store.
+//!
+//! On a function's first cold boot the backend captures a memory snapshot
+//! of the freshly initialized instance (off the critical path — the boot
+//! latency the caller observes is unchanged). The snapshot becomes
+//! *available* `capture_ns` after the instance is ready; from then on,
+//! re-provisioning the function can restore from it instead of cold
+//! booting (Quark-style secure-runtime starts; FaaSNet-style provisioning
+//! artifacts).
+
+use std::collections::BTreeMap;
+
+use crate::simcore::Time;
+
+/// One captured snapshot's metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Snapshot {
+    pub function: String,
+    /// Virtual time the capture started (instance ready).
+    pub captured_at: Time,
+    /// Virtual time the snapshot becomes restorable.
+    pub available_at: Time,
+    pub size_bytes: u64,
+    /// How many instances were restored from this snapshot.
+    pub restores: u64,
+}
+
+/// Snapshot metadata table + counters.
+#[derive(Debug, Default)]
+pub struct SnapshotStore {
+    snaps: BTreeMap<String, Snapshot>,
+    pub captures: u64,
+    pub bytes_written: u64,
+}
+
+impl SnapshotStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin capturing a snapshot for `function` at `start` (typically the
+    /// instance's ready time). Returns when it becomes available. Capture
+    /// is once-per-function: a later call returns the existing snapshot's
+    /// availability unchanged.
+    pub fn capture(&mut self, function: &str, start: Time, capture_ns: Time, size: u64) -> Time {
+        if let Some(s) = self.snaps.get(function) {
+            return s.available_at;
+        }
+        self.captures += 1;
+        self.bytes_written += size;
+        let available_at = start + capture_ns;
+        self.snaps.insert(
+            function.to_string(),
+            Snapshot {
+                function: function.to_string(),
+                captured_at: start,
+                available_at,
+                size_bytes: size,
+                restores: 0,
+            },
+        );
+        available_at
+    }
+
+    pub fn get(&self, function: &str) -> Option<&Snapshot> {
+        self.snaps.get(function)
+    }
+
+    /// Is a snapshot restorable for `function` at virtual time `now`?
+    pub fn ready(&self, function: &str, now: Time) -> bool {
+        self.snaps.get(function).is_some_and(|s| s.available_at <= now)
+    }
+
+    pub fn note_restore(&mut self, function: &str) {
+        if let Some(s) = self.snaps.get_mut(function) {
+            s.restores += 1;
+        }
+    }
+
+    /// Drop a snapshot (e.g. on function removal). Returns whether one
+    /// existed.
+    pub fn evict(&mut self, function: &str) -> bool {
+        self.snaps.remove(function).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.snaps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snaps.is_empty()
+    }
+
+    pub fn total_restores(&self) -> u64 {
+        self.snaps.values().map(|s| s.restores).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::MILLIS;
+
+    #[test]
+    fn capture_gates_availability() {
+        let mut st = SnapshotStore::new();
+        let avail = st.capture("aes", 10 * MILLIS, 5 * MILLIS, 1 << 20);
+        assert_eq!(avail, 15 * MILLIS);
+        assert!(!st.ready("aes", 14 * MILLIS));
+        assert!(st.ready("aes", 15 * MILLIS));
+        assert!(!st.ready("other", u64::MAX));
+    }
+
+    #[test]
+    fn capture_is_once_per_function() {
+        let mut st = SnapshotStore::new();
+        let a = st.capture("aes", 0, MILLIS, 100);
+        let b = st.capture("aes", 99 * MILLIS, MILLIS, 100);
+        assert_eq!(a, b, "recapture must not move availability");
+        assert_eq!(st.captures, 1);
+        assert_eq!(st.bytes_written, 100);
+        assert_eq!(st.len(), 1);
+    }
+
+    #[test]
+    fn restores_are_counted() {
+        let mut st = SnapshotStore::new();
+        st.capture("aes", 0, MILLIS, 100);
+        st.note_restore("aes");
+        st.note_restore("aes");
+        st.note_restore("missing"); // no-op
+        assert_eq!(st.get("aes").unwrap().restores, 2);
+        assert_eq!(st.total_restores(), 2);
+    }
+
+    #[test]
+    fn evict_removes() {
+        let mut st = SnapshotStore::new();
+        st.capture("aes", 0, MILLIS, 100);
+        assert!(st.evict("aes"));
+        assert!(!st.evict("aes"));
+        assert!(st.is_empty());
+        assert!(!st.ready("aes", u64::MAX));
+    }
+}

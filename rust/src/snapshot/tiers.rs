@@ -1,0 +1,127 @@
+//! Provisioning tiers and their per-backend cost model.
+//!
+//! Every function instance can be provisioned through a three-rung ladder
+//! (cheapest first):
+//!
+//! 1. [`ProvisionTier::WarmPool`] — a warm-paused instance parked in the
+//!    pool; acquiring it is an unpark, memory stays resident.
+//! 2. [`ProvisionTier::SnapshotRestore`] — rebuild the instance from a
+//!    per-function memory snapshot captured after its first boot; ≪ cold.
+//! 3. [`ProvisionTier::ColdBoot`] — today's full boot path.
+//!
+//! Both backends walk the same ladder; the containerd rungs are 10–100×
+//! slower than the Junction rungs (see `PlatformConfig::validate`), so the
+//! paper's cold-start gap survives at every tier.
+
+use crate::config::{Backend, PlatformConfig};
+use crate::simcore::Time;
+
+/// Which rung of the provisioning ladder served an instance request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum ProvisionTier {
+    /// Unparked a warm-paused pooled instance.
+    WarmPool,
+    /// Restored from a per-function memory snapshot.
+    SnapshotRestore,
+    /// Full cold boot (the seed's only path).
+    #[default]
+    ColdBoot,
+}
+
+impl ProvisionTier {
+    pub const ALL: [ProvisionTier; 3] =
+        [ProvisionTier::WarmPool, ProvisionTier::SnapshotRestore, ProvisionTier::ColdBoot];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProvisionTier::WarmPool => "warm-pool",
+            ProvisionTier::SnapshotRestore => "snapshot-restore",
+            ProvisionTier::ColdBoot => "cold-boot",
+        }
+    }
+
+    /// Dense index for per-tier counter arrays.
+    pub fn idx(&self) -> usize {
+        match self {
+            ProvisionTier::WarmPool => 0,
+            ProvisionTier::SnapshotRestore => 1,
+            ProvisionTier::ColdBoot => 2,
+        }
+    }
+}
+
+/// Per-backend cost constants for the ladder (cold-boot cost stays with
+/// each backend's own sampler so its spread model is unchanged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierCosts {
+    pub warm_acquire_ns: Time,
+    pub restore_ns: Time,
+    pub capture_ns: Time,
+    pub cold_base_ns: Time,
+    /// Resident bytes one parked warm instance (or snapshot) holds.
+    pub instance_mem_bytes: u64,
+}
+
+impl TierCosts {
+    pub fn junction(p: &PlatformConfig) -> TierCosts {
+        TierCosts {
+            warm_acquire_ns: p.junction_warm_acquire_ns,
+            restore_ns: p.junction_restore_ns,
+            capture_ns: p.junction_snapshot_capture_ns,
+            cold_base_ns: p.junction_cold_start_ns,
+            instance_mem_bytes: p.junction_instance_mem_bytes,
+        }
+    }
+
+    pub fn container(p: &PlatformConfig) -> TierCosts {
+        TierCosts {
+            warm_acquire_ns: p.container_warm_acquire_ns,
+            restore_ns: p.container_restore_ns,
+            capture_ns: p.container_snapshot_capture_ns,
+            cold_base_ns: p.container_cold_start_ns,
+            instance_mem_bytes: p.container_instance_mem_bytes,
+        }
+    }
+
+    pub fn for_backend(backend: Backend, p: &PlatformConfig) -> TierCosts {
+        match backend {
+            Backend::Junctiond => TierCosts::junction(p),
+            Backend::Containerd => TierCosts::container(p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_ordered_for_both_backends() {
+        let p = PlatformConfig::default();
+        for costs in [TierCosts::junction(&p), TierCosts::container(&p)] {
+            assert!(costs.warm_acquire_ns < costs.restore_ns);
+            assert!(costs.restore_ns < costs.cold_base_ns);
+        }
+    }
+
+    #[test]
+    fn junction_beats_containerd_at_every_tier() {
+        let p = PlatformConfig::default();
+        let j = TierCosts::junction(&p);
+        let c = TierCosts::container(&p);
+        assert!(j.warm_acquire_ns * 10 <= c.warm_acquire_ns);
+        assert!(j.restore_ns * 10 <= c.restore_ns);
+        assert!(j.cold_base_ns * 10 <= c.cold_base_ns);
+    }
+
+    #[test]
+    fn tier_indices_are_dense_and_named() {
+        let mut seen = [false; 3];
+        for t in ProvisionTier::ALL {
+            seen[t.idx()] = true;
+            assert!(!t.name().is_empty());
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(ProvisionTier::default(), ProvisionTier::ColdBoot);
+    }
+}

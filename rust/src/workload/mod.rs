@@ -13,7 +13,7 @@
 
 pub mod trace;
 
-pub use trace::{replay, TraceEvent, TraceGenerator, TraceResult};
+pub use trace::{replay, replay_with_keepalive, TraceEvent, TraceGenerator, TraceResult};
 
 use std::cell::RefCell;
 use std::rc::Rc;

@@ -99,10 +99,15 @@ impl TraceGenerator {
 #[derive(Debug, Default)]
 pub struct TraceResult {
     pub latency: Samples,
-    /// Invocations that hit a cold (not yet ready) function.
+    /// Deploys that were full cold boots.
     pub cold_hits: u64,
     pub completed: u64,
     pub per_function_count: Vec<u64>,
+    /// Provisioning events per tier (index = `ProvisionTier::idx`):
+    /// warm-pool / snapshot-restore / cold-boot.
+    pub provisions: [u64; 3],
+    /// Completions per serving replica's provisioning tier.
+    pub tier_served: [u64; 3],
 }
 
 /// Replay a trace through a single-node deployment. Functions are
@@ -144,6 +149,82 @@ pub fn replay(
                 r.latency.record(t.gateway_observed());
                 r.completed += 1;
                 r.per_function_count[fid] += 1;
+                r.tier_served[t.tier.idx()] += 1;
+            });
+        });
+    }
+    sim.run_to_completion();
+    Rc::try_unwrap(result).ok().expect("pending refs").into_inner()
+}
+
+/// Replay with **keep-alive scale-to-zero**: a function idle for
+/// `keepalive_ns` is undeployed, which parks its instances in the warm
+/// pool. Rare functions then walk the full provisioning ladder — first
+/// touch cold-boots (and captures a snapshot), a quick re-touch unparks
+/// from the pool, and a touch after the pool's idle TTL restores from the
+/// snapshot. Start `fs.start_pool_maintenance` before calling this so TTL
+/// sweeps (and prewarms) actually run.
+pub fn replay_with_keepalive(
+    sim: &mut Sim,
+    fs: &FaasSim,
+    events: &[TraceEvent],
+    n_functions: u32,
+    keepalive_ns: Time,
+    make_name: impl Fn(u32) -> String,
+) -> TraceResult {
+    use crate::snapshot::ProvisionTier;
+    let result = Rc::new(RefCell::new(TraceResult {
+        per_function_count: vec![0; n_functions as usize],
+        ..Default::default()
+    }));
+    let outstanding: Rc<RefCell<Vec<u32>>> = Rc::new(RefCell::new(vec![0; n_functions as usize]));
+    let last_touch: Rc<RefCell<Vec<Time>>> = Rc::new(RefCell::new(vec![0; n_functions as usize]));
+    for ev in events {
+        let fs2 = fs.clone();
+        let result2 = result.clone();
+        let outstanding2 = outstanding.clone();
+        let last_touch2 = last_touch.clone();
+        let name = make_name(ev.function);
+        let fid = ev.function as usize;
+        sim.at(ev.at, move |sim| {
+            if !fs2.is_deployed(&name) {
+                let spec = crate::faas::FunctionSpec::new(
+                    &name,
+                    "aes600",
+                    crate::faas::RuntimeKind::Go,
+                );
+                let (_, tier) = fs2.deploy_tiered(sim, spec, true);
+                let mut r = result2.borrow_mut();
+                r.provisions[tier.idx()] += 1;
+                if tier == ProvisionTier::ColdBoot {
+                    r.cold_hits += 1;
+                }
+            }
+            outstanding2.borrow_mut()[fid] += 1;
+            last_touch2.borrow_mut()[fid] = sim.now();
+            let r3 = result2.clone();
+            let fs3 = fs2.clone();
+            let name2 = name.clone();
+            fs2.submit(sim, &name, move |sim, t| {
+                {
+                    let mut r = r3.borrow_mut();
+                    r.latency.record(t.gateway_observed());
+                    r.completed += 1;
+                    r.per_function_count[fid] += 1;
+                    r.tier_served[t.tier.idx()] += 1;
+                }
+                outstanding2.borrow_mut()[fid] -= 1;
+                let done_at = sim.now();
+                last_touch2.borrow_mut()[fid] = done_at;
+                // Keep-alive check: if nothing touched the function for a
+                // full TTL after this completion, park it.
+                let out3 = outstanding2.clone();
+                let touch3 = last_touch2.clone();
+                sim.after(keepalive_ns, move |sim| {
+                    if out3.borrow()[fid] == 0 && touch3.borrow()[fid] <= done_at {
+                        fs3.undeploy(sim, &name2);
+                    }
+                });
             });
         });
     }
@@ -196,6 +277,36 @@ mod tests {
         // Every function touched was lazily deployed exactly once.
         let touched = r.per_function_count.iter().filter(|&&c| c > 0).count() as u64;
         assert_eq!(r.cold_hits, touched);
+    }
+
+    #[test]
+    fn keepalive_replay_walks_the_tier_ladder() {
+        let mut sim = Sim::new();
+        let cfg = ExperimentConfig { backend: Backend::Junctiond, ..Default::default() };
+        let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+        // Short keep-alive + short pool TTL so a skewed bursty trace
+        // exercises all three tiers: first touch cold-boots, quick
+        // re-touches unpark warm, touches after the TTL restore from the
+        // snapshot.
+        let mut pc = fs.pool_config();
+        pc.idle_ttl_ns = 300 * MILLIS;
+        fs.set_pool_config(pc);
+        fs.start_pool_maintenance(&mut sim, 100 * MILLIS, 20 * SECONDS);
+        let g = TraceGenerator::new(16, 100.0, 5);
+        let events = g.generate(8 * SECONDS);
+        let n = events.len() as u64;
+        let r = replay_with_keepalive(&mut sim, &fs, &events, 16, 100 * MILLIS, |i| {
+            format!("fn-{i}")
+        });
+        assert_eq!(r.completed, n);
+        assert_eq!(r.tier_served.iter().sum::<u64>(), n);
+        assert!(r.provisions[2] > 0, "cold boots expected: {:?}", r.provisions);
+        assert!(r.provisions[0] > 0, "warm unparks expected: {:?}", r.provisions);
+        assert!(r.provisions[1] > 0, "snapshot restores expected: {:?}", r.provisions);
+        assert_eq!(r.cold_hits, r.provisions[2]);
+        // Warm serves must be cheaper than the cold first touches on
+        // average — the ladder is why the tail improves.
+        assert!(fs.pool_stats().ttl_evictions > 0, "TTL sweeps should have evicted");
     }
 
     #[test]

@@ -156,6 +156,51 @@ fn real_pipeline_matches_rustcrypto_both_modes() {
 }
 
 // ---------------------------------------------------------------------------
+// Tiered provisioning (snapshot/ subsystem), whole stack
+// ---------------------------------------------------------------------------
+
+#[test]
+fn provisioning_tier_ladder_end_to_end() {
+    use junctiond_repro::snapshot::ProvisionTier;
+    use junctiond_repro::telemetry::MetricsRegistry;
+    for backend in [Backend::Containerd, Backend::Junctiond] {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(backend), Rc::new(PlatformConfig::default()));
+        let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+        // Rung 3: cold boot (captures the snapshot off the critical path).
+        let (cold, tier) = fs.deploy_tiered(&mut sim, spec.clone(), true);
+        assert_eq!(tier, ProvisionTier::ColdBoot, "{backend:?}");
+        sim.run_until(SECONDS);
+        ClosedLoop::new("aes", 10).run(&mut sim, &fs);
+        // Rung 1: park + warm re-acquire.
+        assert!(fs.undeploy(&mut sim, "aes"));
+        let (warm, tier) = fs.deploy_tiered(&mut sim, spec.clone(), true);
+        assert_eq!(tier, ProvisionTier::WarmPool, "{backend:?}");
+        ClosedLoop::new("aes", 10).run(&mut sim, &fs);
+        // Rung 2: pool flushed → snapshot restore.
+        assert!(fs.undeploy(&mut sim, "aes"));
+        fs.flush_warm_pool(&mut sim);
+        let (restore, tier) = fs.deploy_tiered(&mut sim, spec, true);
+        assert_eq!(tier, ProvisionTier::SnapshotRestore, "{backend:?}");
+        ClosedLoop::new("aes", 10).run(&mut sim, &fs);
+        assert!(
+            warm < restore && restore < cold,
+            "{backend:?} ladder: warm {warm} restore {restore} cold {cold}"
+        );
+        // Every invocation was served and attributed to its replica's tier.
+        let (provisioned, served) = fs.tier_counts();
+        assert!(provisioned.iter().all(|&p| p >= 1), "{provisioned:?}");
+        assert_eq!(served, [10, 10, 10], "{backend:?} served {served:?}");
+        let mut reg = MetricsRegistry::new();
+        fs.export_metrics(&mut reg);
+        let text = reg.expose();
+        assert!(text.contains("invocations_served_total"));
+        assert!(text.contains("tier=\"warm-pool\""));
+        assert!(text.contains("snapshot_captures_total"));
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Experiment drivers smoke (small sizes)
 // ---------------------------------------------------------------------------
 
