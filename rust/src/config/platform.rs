@@ -73,6 +73,24 @@ pub struct PlatformConfig {
     /// One-way wire + NIC DMA latency between the two machines (100 GbE).
     pub wire_ns: Time,
 
+    // ---- per-worker NIC / network data path (netpath) ----
+    /// RX descriptor ring depth (packets) of a worker NIC queue. Arrivals
+    /// beyond this are tail-dropped; the client retries with backoff.
+    pub nic_queue_depth: Time,
+    /// Max packets one bypass poll iteration drains (DPDK `rx_burst`-style
+    /// batch). The poll cost amortizes across the batch.
+    pub nic_batch_max: Time,
+    /// Kernel-path per-KiB copy cost (DMA buffer → socket buffer). The
+    /// bypass path is zero-copy and never pays this.
+    pub nic_copy_ns_per_kb: Time,
+    /// Client retransmit backoff after a tail drop.
+    pub nic_retry_backoff_ns: Time,
+    /// Retransmit attempts before the client gives the request up.
+    pub nic_max_retries: Time,
+    /// Invocation payload carried in each framed `rpc::Message` (bytes);
+    /// the AES-600B artifact's 600-byte input.
+    pub rpc_payload_bytes: Time,
+
     // ---- lifecycle ----
     /// containerd cold start (create + start, image present).
     pub container_cold_start_ns: Time,
@@ -162,6 +180,13 @@ impl Default for PlatformConfig {
 
             wire_ns: 2 * MICROS,
 
+            nic_queue_depth: 256,
+            nic_batch_max: 32,
+            nic_copy_ns_per_kb: 280,
+            nic_retry_backoff_ns: 200 * MICROS,
+            nic_max_retries: 3,
+            rpc_payload_bytes: 600,
+
             container_cold_start_ns: 250 * MILLIS,
             junction_cold_start_ns: 3_400 * MICROS, // paper §5: 3.4 ms
 
@@ -229,6 +254,12 @@ impl PlatformConfig {
             provider_state_query_ns,
             junctiond_state_query_ns,
             wire_ns,
+            nic_queue_depth,
+            nic_batch_max,
+            nic_copy_ns_per_kb,
+            nic_retry_backoff_ns,
+            nic_max_retries,
+            rpc_payload_bytes,
             container_cold_start_ns,
             junction_cold_start_ns,
             junction_warm_acquire_ns,
@@ -287,6 +318,10 @@ impl PlatformConfig {
             "junction tiers must be cheaper than containerd tiers"
         );
         anyhow::ensure!(self.pool_mem_budget_bytes > 0, "pool_mem_budget_bytes must be > 0");
+        anyhow::ensure!(self.nic_queue_depth >= 1, "nic_queue_depth must be >= 1");
+        anyhow::ensure!(self.nic_batch_max >= 1, "nic_batch_max must be >= 1");
+        anyhow::ensure!(self.nic_retry_backoff_ns > 0, "nic_retry_backoff_ns must be > 0");
+        anyhow::ensure!(self.rpc_payload_bytes >= 1, "rpc_payload_bytes must be >= 1");
         anyhow::ensure!(self.container_concurrency >= 1, "container_concurrency must be >= 1");
         anyhow::ensure!(self.junction_max_cores >= 1, "junction_max_cores must be >= 1");
         anyhow::ensure!(

@@ -5,10 +5,11 @@
 //! returns [`crate::telemetry::Table`]s so callers can print markdown or
 //! dump CSV.
 
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
-use crate::faas::{FaasSim, FunctionSpec, RuntimeKind, ScaleMode};
+use crate::faas::{Cluster, FaasSim, FunctionSpec, RuntimeKind, ScaleMode};
 use crate::junction::Scheduler;
 use crate::simcore::{Sim, Time, MICROS, SECONDS};
 use crate::telemetry::{Cell, LatencySummary, Table};
@@ -462,9 +463,6 @@ pub fn isolation_table(invocations: u32, seed: u64) -> Table {
 /// load steps low → high → low; the controller must add replicas under
 /// pressure and shed them when idle.
 pub fn autoscale_table(backend: Backend, seed: u64) -> Table {
-    use crate::faas::Cluster;
-    use std::cell::RefCell;
-
     let compute = PlatformConfig::default().function_compute_ns;
     let mut sim = Sim::new();
     let mut cluster = Cluster::new(backend, 4, 10, seed, compute);
@@ -539,6 +537,174 @@ pub fn autoscale_table(backend: Backend, seed: u64) -> Table {
         Cell::Str("-".into()),
     ]);
     t
+}
+
+// ---------------------------------------------------------------------------
+// E11 — cluster network data path (netpath): Fig. 6 at cluster scale
+// ---------------------------------------------------------------------------
+
+/// One measured point of the cluster load sweep, with the per-hop latency
+/// breakdown the network model produces (NIC queue, gateway/provider
+/// passes, exec window) and the NIC's drop/retry accounting.
+pub struct NetPathPoint {
+    pub backend: Backend,
+    pub offered_rps: f64,
+    pub goodput_rps: f64,
+    pub p50: u64,
+    pub p99: u64,
+    /// Median NIC hop: RX ring wait + per-packet service (+ retransmit
+    /// backoffs).
+    pub nic_p50: u64,
+    /// Median gateway→instance-admission span (in-worker RPC passes).
+    pub gw_p50: u64,
+    /// Median exec window.
+    pub exec_p50: u64,
+    /// Requests abandoned after the NIC retransmit budget.
+    pub dropped: u64,
+    /// NIC retransmissions.
+    pub retries: u64,
+}
+
+/// Default offered-load grids for the cluster sweep (2×16-core workers).
+/// The containerd grid spans its exec-serialization knee and ends with an
+/// overload point past the kernel RX path's *aggregate* packet rate
+/// (least-inflight routing splits load across both worker NICs, each good
+/// for ~139k pps at ~7.2 µs/packet, so the ring only sheds past ~280k
+/// offered), where the bounded NIC ring must drop; the junctiond grid
+/// shares the sub-knee rates (for pointwise latency comparison) and
+/// extends past 10× the containerd knee.
+pub fn netpath_default_containerd_rates() -> Vec<f64> {
+    vec![500.0, 1_000.0, 2_000.0, 4_000.0, 6_000.0, 9_000.0, 320_000.0]
+}
+
+pub fn netpath_default_junction_rates() -> Vec<f64> {
+    vec![
+        500.0, 1_000.0, 2_000.0, 4_000.0, 6_000.0, 9_000.0, 16_000.0, 32_000.0, 48_000.0,
+        64_000.0, 80_000.0,
+    ]
+}
+
+/// Run the cluster load sweep for one backend: `n_workers` independent
+/// worker servers (each with its own NIC ring, scheduler, cost samplers)
+/// behind the least-inflight front end, one replica of the AES function
+/// pre-scaled onto every worker, driven by the open-loop generator.
+pub fn netpath_cluster_run(
+    backend: Backend,
+    n_workers: usize,
+    worker_cores: usize,
+    compute_ns: Time,
+    rates: &[f64],
+    duration: Time,
+    seed: u64,
+) -> Vec<NetPathPoint> {
+    rates
+        .iter()
+        .map(|&rate| {
+            let mut sim = Sim::new();
+            let mut cluster = Cluster::new(backend, n_workers, worker_cores, seed, compute_ns);
+            cluster.policy.max_replicas = n_workers as u32;
+            cluster.deploy(
+                &mut sim,
+                FunctionSpec::new("aes", "aes600", RuntimeKind::Go).with_scale(
+                    ScaleMode::MaxCores,
+                    PlatformConfig::default().junction_max_cores as u32,
+                ),
+            );
+            for _ in 1..n_workers {
+                cluster.scale_up(&mut sim, "aes");
+            }
+            sim.run_until(SECONDS); // past every cold start
+            let cluster = Rc::new(RefCell::new(cluster));
+            let gen = OpenLoop::new("aes", rate, duration, seed ^ (rate as u64));
+            let mut r: RunResult = gen.run_on(&mut sim, &cluster);
+            let (dropped, retries) = (r.dropped, r.retried);
+            NetPathPoint {
+                backend,
+                offered_rps: rate,
+                goodput_rps: r.goodput_rps(),
+                p50: r.gateway_observed.quantile(0.5),
+                p99: r.gateway_observed.quantile(0.99),
+                nic_p50: r.nic_hop.quantile(0.5),
+                gw_p50: r.pre_exec.quantile(0.5),
+                exec_p50: r.exec.quantile(0.5),
+                dropped,
+                retries,
+            }
+        })
+        .collect()
+}
+
+/// The cluster-scale Fig. 6 table: both backends, per-hop breakdown and
+/// drop/retry columns.
+pub fn netpath_table(
+    n_workers: usize,
+    worker_cores: usize,
+    c_rates: &[f64],
+    j_rates: &[f64],
+    duration: Time,
+    seed: u64,
+) -> (Table, Vec<NetPathPoint>) {
+    let compute = calibrated_compute_ns();
+    let mut points = netpath_cluster_run(
+        Backend::Containerd,
+        n_workers,
+        worker_cores,
+        compute,
+        c_rates,
+        duration,
+        seed,
+    );
+    points.extend(netpath_cluster_run(
+        Backend::Junctiond,
+        n_workers,
+        worker_cores,
+        compute,
+        j_rates,
+        duration,
+        seed,
+    ));
+    let mut t = Table::new(
+        &format!(
+            "Cluster network data path — {n_workers}×{worker_cores}-core workers, per-packet NIC model"
+        ),
+        &[
+            "backend",
+            "offered rps",
+            "goodput rps",
+            "p50 (µs)",
+            "p99 (µs)",
+            "nic p50 (µs)",
+            "gateway p50 (µs)",
+            "exec p50 (µs)",
+            "dropped",
+            "retries",
+        ],
+    );
+    for p in &points {
+        t.push_row(vec![
+            p.backend.name().into(),
+            Cell::F2(p.offered_rps),
+            Cell::F2(p.goodput_rps),
+            Cell::NsAsUs(p.p50),
+            Cell::NsAsUs(p.p99),
+            Cell::NsAsUs(p.nic_p50),
+            Cell::NsAsUs(p.gw_p50),
+            Cell::NsAsUs(p.exec_p50),
+            Cell::Int(p.dropped as i64),
+            Cell::Int(p.retries as i64),
+        ]);
+    }
+    (t, points)
+}
+
+/// Saturation throughput on the cluster sweep: highest goodput among
+/// points whose p99 meets `sla_ns` (same knee detector as Fig. 6).
+pub fn netpath_knee(points: &[NetPathPoint], backend: Backend, sla_ns: u64) -> f64 {
+    points
+        .iter()
+        .filter(|p| p.backend == backend && p.p99 <= sla_ns && p.dropped == 0)
+        .map(|p| p.goodput_rps)
+        .fold(0.0, f64::max)
 }
 
 // ---------------------------------------------------------------------------
@@ -728,6 +894,43 @@ mod tests {
             _ => panic!(),
         };
         assert!(peak(1) > peak(0), "high phase should grow replicas: {} vs {}", peak(1), peak(0));
+    }
+
+    fn netpath_small(backend: Backend, rates: &[f64], seed: u64) -> Vec<NetPathPoint> {
+        netpath_cluster_run(backend, 2, 10, quiet_compute(), rates, 300 * MILLIS, seed)
+    }
+
+    #[test]
+    fn netpath_cluster_junction_dominates_pointwise() {
+        let rates = [1_000.0, 3_000.0];
+        let c = netpath_small(Backend::Containerd, &rates, 7);
+        let j = netpath_small(Backend::Junctiond, &rates, 7);
+        for (cp, jp) in c.iter().zip(&j) {
+            assert!(
+                jp.p50 < cp.p50 && jp.p99 < cp.p99,
+                "junction must win at {} rps: p50 {} vs {}, p99 {} vs {}",
+                cp.offered_rps,
+                jp.p50,
+                cp.p50,
+                jp.p99,
+                cp.p99
+            );
+            assert_eq!(cp.dropped, 0, "no drops below the NIC packet rate");
+            assert_eq!(jp.dropped, 0);
+            // The per-hop breakdown is populated and ordered sensibly: the
+            // kernel NIC hop costs more than the polled one.
+            assert!(jp.nic_p50 < cp.nic_p50, "{} vs {}", jp.nic_p50, cp.nic_p50);
+            assert!(cp.exec_p50 > 0 && cp.gw_p50 > 0);
+        }
+    }
+
+    #[test]
+    fn netpath_cluster_junction_sustains_high_rate() {
+        let j = netpath_small(Backend::Junctiond, &[12_000.0], 11);
+        let p = &j[0];
+        assert!(p.p99 < 5 * MILLIS, "junction p99 {} at 12k rps", p.p99);
+        assert!(p.goodput_rps > 10_000.0, "goodput {}", p.goodput_rps);
+        assert_eq!(p.dropped, 0);
     }
 
     #[test]

@@ -92,6 +92,9 @@ pub struct Cluster {
     pub scale_ups: u64,
     pub scale_downs: u64,
     pub scale_to_zeros: u64,
+    /// Functions re-provisioned on demand after a scale-to-zero (the
+    /// cluster-level cold-start path).
+    pub zero_redeploys: u64,
     /// Scale-ups served per provisioning tier (index =
     /// `crate::snapshot::ProvisionTier::idx`).
     pub tier_scale_ups: [u64; 3],
@@ -140,6 +143,7 @@ impl Cluster {
             scale_ups: 0,
             scale_downs: 0,
             scale_to_zeros: 0,
+            zero_redeploys: 0,
             tier_scale_ups: [0; 3],
         }
     }
@@ -190,12 +194,16 @@ impl Cluster {
         let (cold, _) =
             self.workers[w].sim_node.deploy_tiered(sim, spec.clone(), self.policy.warm_pool);
         self.workers[w].hosted.push(per_worker_name);
+        // A fresh deploy counts as activity: without this stamp a
+        // never-invoked function looks idle-since-epoch and the very next
+        // reconcile would scale it straight back to zero.
+        self.last_active.borrow_mut().insert(spec.name.clone(), sim.now());
         self.functions.insert(spec.name.clone(), (spec, vec![w]));
         cold
     }
 
     /// Add one replica on a (newly picked) worker. Returns cold time.
-    fn scale_up(&mut self, sim: &mut Sim, name: &str) -> Option<Time> {
+    pub fn scale_up(&mut self, sim: &mut Sim, name: &str) -> Option<Time> {
         let (spec, locs) = self.functions.get(name)?.clone();
         if locs.len() as u32 >= self.policy.max_replicas {
             return None;
@@ -227,6 +235,7 @@ impl Cluster {
             self.workers[w].sim_node.deploy_tiered(sim, replica_spec, self.policy.warm_pool);
         self.workers[w].hosted.push(name.to_string());
         self.functions.get_mut(name).unwrap().1.push(w);
+        self.last_active.borrow_mut().insert(name.to_string(), sim.now());
         self.scale_ups += 1;
         self.tier_scale_ups[tier.idx()] += 1;
         Some(cold)
@@ -235,7 +244,7 @@ impl Cluster {
     /// Remove the most recently added replica (keep ≥ min_replicas): the
     /// worker parks the instance into its warm pool. Refuses while the
     /// replica still has requests in flight.
-    fn scale_down(&mut self, sim: &mut Sim, name: &str) -> bool {
+    pub fn scale_down(&mut self, sim: &mut Sim, name: &str) -> bool {
         let Some((_, locs)) = self.functions.get_mut(name) else { return false };
         if locs.len() as u32 <= 1 {
             return false;
@@ -258,6 +267,38 @@ impl Cluster {
         true
     }
 
+    /// Retire *every* replica of an idle function (min_replicas == 0):
+    /// each worker parks its instance into the local warm pool, so the
+    /// next invocation re-provisions from the warm tier instead of a cold
+    /// boot. Stops early (returning `false`) if any replica is still busy
+    /// or booting; the remaining replicas stay routable.
+    pub fn scale_to_zero(&mut self, sim: &mut Sim, name: &str) -> bool {
+        let locs = match self.functions.get(name) {
+            Some((_, l)) if !l.is_empty() => l.clone(),
+            _ => return false,
+        };
+        let mut remaining = locs.clone();
+        for &w in &locs {
+            if !self.workers[w].sim_node.undeploy(sim, name) {
+                break;
+            }
+            if !self.policy.warm_pool {
+                self.workers[w].sim_node.flush_warm_pool(sim);
+            }
+            let hosted = &mut self.workers[w].hosted;
+            if let Some(pos) = hosted.iter().position(|h| h == name) {
+                hosted.remove(pos);
+            }
+            remaining.retain(|&x| x != w);
+        }
+        let drained = remaining.is_empty();
+        self.functions.get_mut(name).unwrap().1 = remaining;
+        if drained {
+            self.scale_to_zeros += 1;
+        }
+        drained
+    }
+
     pub fn replica_count(&self, name: &str) -> u32 {
         self.functions.get(name).map(|(_, l)| l.len() as u32).unwrap_or(0)
     }
@@ -272,11 +313,29 @@ impl Cluster {
         done: F,
     ) {
         let (_, locs) = self.functions.get(function).expect("unknown function").clone();
-        // Route to the replica worker with the least in-flight.
-        let w = *locs
-            .iter()
-            .min_by_key(|&&i| *self.workers[i].in_flight.borrow())
-            .expect("no replicas");
+        let w = if locs.is_empty() {
+            // Scaled to zero: re-provision on demand through the tier
+            // ladder and route to the fresh replica. Prefer a worker that
+            // parked this function in its warm pool — any other placement
+            // would silently degrade the re-deploy to a snapshot restore
+            // or cold boot.
+            let (spec, _) = self.functions.get(function).unwrap().clone();
+            let warm = (0..self.workers.len())
+                .find(|&i| self.workers[i].sim_node.pool_warm_count(function) > 0);
+            let w = match warm {
+                Some(w) => w,
+                None => self.pick_worker(function),
+            };
+            let _ = self.scale_up_on(sim, function, w, &spec);
+            self.zero_redeploys += 1;
+            w
+        } else {
+            // Route to the replica worker with the least in-flight.
+            *locs
+                .iter()
+                .min_by_key(|&&i| *self.workers[i].in_flight.borrow())
+                .expect("no replicas")
+        };
         *self.workers[w].in_flight.borrow_mut() += 1;
         {
             let mut inf = self.inflight.borrow_mut();
@@ -301,16 +360,27 @@ impl Cluster {
         let names: Vec<String> = self.functions.keys().cloned().collect();
         for name in names {
             let inflight = *self.inflight.borrow().get(&name).unwrap_or(&0);
-            let replicas = self.replica_count(&name).max(1);
+            let actual = self.replica_count(&name);
+            let replicas = actual.max(1);
             let per = inflight as f64 / replicas as f64;
+            let idle_ns = sim
+                .now()
+                .saturating_sub(self.last_active.borrow().get(&name).copied().unwrap_or(0));
             if per > self.policy.target_inflight_per_replica
                 && replicas < self.policy.max_replicas
             {
                 self.scale_up(sim, &name);
-            } else if per < self.policy.target_inflight_per_replica / 4.0 && replicas > 1 {
-                let idle_since =
-                    self.last_active.borrow().get(&name).copied().unwrap_or(0);
-                if inflight == 0 && sim.now().saturating_sub(idle_since) > self.policy.interval {
+            } else if self.policy.min_replicas == 0
+                && actual >= 1
+                && inflight == 0
+                && idle_ns > self.policy.scale_to_zero_after
+            {
+                // Fully idle past the keep-warm horizon: release every
+                // replica (they park warm; the next invocation re-deploys
+                // on demand through the tier ladder).
+                self.scale_to_zero(sim, &name);
+            } else if per < self.policy.target_inflight_per_replica / 4.0 && actual > 1 {
+                if inflight == 0 && idle_ns > self.policy.interval {
                     self.scale_down(sim, &name);
                 }
             }
@@ -480,6 +550,51 @@ mod tests {
         assert_eq!(c.tier_scale_ups[ProvisionTier::WarmPool.idx()], 0);
         assert_eq!(c.tier_scale_ups[ProvisionTier::ColdBoot.idx()], 2);
         sim.run_to_completion();
+    }
+
+    #[test]
+    fn scale_to_zero_and_redeploy_reconciles() {
+        use crate::snapshot::ProvisionTier;
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Junctiond, 2, 10, 1, 100_000);
+        // Round-robin placement advances past the parking worker between
+        // deploy and re-deploy: the warm-pool-aware routing must still
+        // find the worker holding the parked instance.
+        c.placement = Placement::RoundRobin;
+        c.policy.min_replicas = 0;
+        c.policy.scale_to_zero_after = 2 * SECONDS;
+        c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS);
+        let done = Rc::new(RefCell::new(0u32));
+        for _ in 0..5 {
+            let d = done.clone();
+            c.submit(&mut sim, "aes", move |_, _| *d.borrow_mut() += 1);
+        }
+        sim.run_to_completion();
+        assert_eq!(*done.borrow(), 5);
+        assert_eq!(c.replica_count("aes"), 1);
+        // Idle past the scale-to-zero horizon with the controller ticking.
+        let c = Rc::new(RefCell::new(c));
+        Cluster::start_controller(c.clone(), &mut sim, 6 * SECONDS);
+        sim.run_to_completion();
+        assert_eq!(c.borrow().replica_count("aes"), 0, "idle function must scale to zero");
+        assert_eq!(c.borrow().scale_to_zeros, 1, "exactly one scale-to-zero event");
+        // Re-deploy on demand: the next invocation re-provisions (from the
+        // worker's warm pool, not a cold boot) and serves.
+        {
+            let d = done.clone();
+            c.borrow_mut().submit(&mut sim, "aes", move |_, _| *d.borrow_mut() += 1);
+        }
+        sim.run_to_completion();
+        assert_eq!(*done.borrow(), 6);
+        let cl = c.borrow();
+        assert_eq!(cl.replica_count("aes"), 1, "on-demand redeploy must restore a replica");
+        assert_eq!(cl.zero_redeploys, 1);
+        assert!(
+            cl.tier_scale_ups[ProvisionTier::WarmPool.idx()] >= 1,
+            "redeploy after scale-to-zero should hit the warm pool: {:?}",
+            cl.tier_scale_ups
+        );
     }
 
     #[test]

@@ -89,25 +89,18 @@ impl Gate {
         }
     }
 
-    /// Release a slot, admitting the next waiter if any.
+    /// Release a slot, then admit waiters only while `in_use` is below
+    /// `capacity` (via `pump`). The released slot must *not* be handed to
+    /// a waiter unconditionally: after `set_capacity` lowered the limit,
+    /// doing so pins `in_use` above the new capacity forever (the gate
+    /// never drains down to the new limit).
     pub fn release(&self, sim: &mut Sim) {
-        let next = {
+        {
             let mut g = self.inner.borrow_mut();
             assert!(g.in_use > 0, "release without acquire");
-            match g.waiters.pop_front() {
-                Some(w) => {
-                    g.admitted += 1;
-                    Some(w)
-                }
-                None => {
-                    g.in_use -= 1;
-                    None
-                }
-            }
-        };
-        if let Some(w) = next {
-            w(sim);
+            g.in_use -= 1;
         }
+        self.pump(sim);
     }
 
     fn pump(&self, sim: &mut Sim) {
@@ -199,5 +192,54 @@ mod tests {
     fn release_underflow_panics() {
         let mut sim = Sim::new();
         Gate::new(1).release(&mut sim);
+    }
+
+    /// Regression for the capacity-lowering leak: after `set_capacity`
+    /// shrinks the gate, a release must not admit a waiter while `in_use`
+    /// still exceeds the new limit. The old `release` admitted
+    /// unconditionally, so concurrency never converged down to the new
+    /// capacity (observed here as >1 overlapping executions after the
+    /// scale-down).
+    #[test]
+    fn scale_down_converges() {
+        let mut sim = Sim::new();
+        let gate = Gate::new(4);
+        let active = Rc::new(RefCell::new(0i32));
+        let max_after_scale_down = Rc::new(RefCell::new(0i32));
+        let scaled = Rc::new(RefCell::new(false));
+        for _ in 0..8 {
+            let gate2 = gate.clone();
+            let active2 = active.clone();
+            let max2 = max_after_scale_down.clone();
+            let scaled2 = scaled.clone();
+            gate.acquire(&mut sim, move |sim| {
+                *active2.borrow_mut() += 1;
+                if *scaled2.borrow() {
+                    let cur = *active2.borrow();
+                    let mut m = max2.borrow_mut();
+                    if cur > *m {
+                        *m = cur;
+                    }
+                }
+                let active3 = active2.clone();
+                sim.after(10, move |sim| {
+                    *active3.borrow_mut() -= 1;
+                    gate2.release(sim);
+                });
+            });
+        }
+        assert_eq!(gate.in_use(), 4);
+        assert_eq!(gate.waiting(), 4);
+        gate.set_capacity(&mut sim, 1);
+        *scaled.borrow_mut() = true;
+        sim.run_to_completion();
+        assert_eq!(
+            *max_after_scale_down.borrow(),
+            1,
+            "waiters admitted past the lowered capacity"
+        );
+        assert_eq!(gate.in_use(), 0);
+        assert_eq!(gate.waiting(), 0);
+        assert_eq!(gate.admitted(), 8, "every queued request must still run");
     }
 }

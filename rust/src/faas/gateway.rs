@@ -28,17 +28,31 @@ impl Gateway {
 
     /// Pick a replica for `name` by round-robin over `n_replicas`.
     /// Returns `None` (and counts a miss) when the function is unknown or
-    /// has no replicas — the caller surfaces a 404/503.
+    /// has no replicas — the caller surfaces a 404/503. A miss also evicts
+    /// any stale counter so unknown-function probes cannot pin state.
     pub fn route(&mut self, name: &str, n_replicas: u32) -> Option<u32> {
         self.requests += 1;
         if n_replicas == 0 {
             self.route_misses += 1;
+            self.rr.remove(name);
             return None;
         }
         let ctr = self.rr.entry(name.to_string()).or_insert(0);
         let pick = (*ctr % n_replicas as usize) as u32;
         *ctr += 1;
         Some(pick)
+    }
+
+    /// Drop the round-robin counter for `name` (called on undeploy).
+    /// Without this the `rr` map grows without bound under function churn
+    /// — a million-function trace leaks a counter per retired name.
+    pub fn evict(&mut self, name: &str) {
+        self.rr.remove(name);
+    }
+
+    /// Number of functions with live routing state (leak telemetry).
+    pub fn tracked_functions(&self) -> usize {
+        self.rr.len()
     }
 }
 
@@ -66,6 +80,23 @@ mod tests {
         let mut gw = Gateway::new();
         assert_eq!(gw.route("gone", 0), None);
         assert_eq!(gw.route_misses, 1);
+    }
+
+    #[test]
+    fn rr_counters_do_not_leak_under_churn() {
+        let mut gw = Gateway::new();
+        for i in 0..1000 {
+            let name = format!("fn-{i}");
+            assert!(gw.route(&name, 2).is_some());
+            gw.evict(&name); // undeploy
+        }
+        assert_eq!(gw.tracked_functions(), 0, "retired functions must not pin counters");
+        // A live function keeps exactly one counter...
+        gw.route("live", 2);
+        assert_eq!(gw.tracked_functions(), 1);
+        // ...and an unknown-function miss evicts stale state too.
+        gw.route("live", 0);
+        assert_eq!(gw.tracked_functions(), 0);
     }
 
     #[test]

@@ -34,7 +34,9 @@ use crate::config::{Backend, ExperimentConfig, PlatformConfig};
 use crate::containerd_sim::{ContainerId, ContainerState, Containerd};
 use crate::junction::{BypassCosts, InstanceId};
 use crate::junctiond::Junctiond;
+use crate::netpath::{NicQueue, NicStats, Packet};
 use crate::oskernel::KernelCosts;
+use crate::rpc::Message;
 use crate::simcore::{CorePool, Rng, Sim, Time, MILLIS};
 use crate::snapshot::{
     ArrivalEstimator, PoolConfig, PoolHandle, PoolStats, PrewarmPolicy, ProvisionTier,
@@ -52,6 +54,8 @@ const ESTIMATOR_TAU: Time = 250 * MILLIS;
 pub struct RequestTiming {
     /// Client issued the request.
     pub submit: Time,
+    /// Request frame reached the worker NIC RX ring (after the wire hop).
+    pub nic_in: Time,
     /// Gateway received it (start of the gateway-observed window).
     pub gateway_in: Time,
     /// Function instance admitted the request (exec window start).
@@ -62,6 +66,11 @@ pub struct RequestTiming {
     pub done: Time,
     /// Provisioning tier of the replica that served this invocation.
     pub tier: ProvisionTier,
+    /// Client retransmissions this request needed (NIC tail drops).
+    pub retries: u32,
+    /// True when the request was abandoned after exhausting retransmits;
+    /// only `submit`, `nic_in`, `retries` and `done` are meaningful then.
+    pub dropped: bool,
 }
 
 impl RequestTiming {
@@ -76,6 +85,20 @@ impl RequestTiming {
     /// Function execution latency (Fig. 5's second series).
     pub fn exec(&self) -> Time {
         self.exec_end - self.exec_start
+    }
+    /// NIC hop latency: RX ring wait + per-packet service, plus any
+    /// retransmit backoffs the request ate before being accepted.
+    pub fn nic_hop(&self) -> Time {
+        self.gateway_in.saturating_sub(self.nic_in)
+    }
+    /// Gateway + provider passes, queueing, and instance admission — the
+    /// in-worker RPC hops before the exec window opens.
+    pub fn pre_exec(&self) -> Time {
+        self.exec_start.saturating_sub(self.gateway_in)
+    }
+    /// Response path from instance completion back to the client.
+    pub fn response_hop(&self) -> Time {
+        self.done.saturating_sub(self.exec_end)
     }
 }
 
@@ -140,6 +163,17 @@ struct World {
     prov_inst: Option<InstanceId>,
     compute_ns: Time,
     pub completed: u64,
+    // Network data path (netpath): the worker's bounded NIC RX ring plus
+    // its per-packet cost samplers.
+    nic: NicQueue,
+    kc_nic: KernelCosts,
+    bc_nic: BypassCosts,
+    /// Payload bytes each invocation carries in its framed `rpc::Message`
+    /// (the AES-600B input); packets are sized via
+    /// `Message::request_frame_size` without materializing bodies.
+    payload_bytes: usize,
+    /// Requests abandoned after exhausting NIC retransmits.
+    pub dropped: u64,
 }
 
 impl World {
@@ -326,6 +360,11 @@ impl FaasSim {
             prov_inst,
             compute_ns: cfg.function_compute_ns,
             completed: 0,
+            nic: NicQueue::new(platform.nic_queue_depth as usize),
+            kc_nic: KernelCosts::new(platform.clone(), rng.fork()),
+            bc_nic: BypassCosts::new(platform.clone(), rng.fork()),
+            payload_bytes: platform.rpc_payload_bytes as usize,
+            dropped: 0,
             platform,
         };
         FaasSim { w: Rc::new(RefCell::new(world)) }
@@ -423,6 +462,7 @@ impl FaasSim {
         let f = w.functions.remove(name).unwrap();
         w.registry.remove(name);
         w.provider.invalidate(name);
+        w.gateway.evict(name);
         let mem = w.tier_costs.instance_mem_bytes;
         for r in &f.replicas {
             match r.handle {
@@ -622,6 +662,13 @@ impl FaasSim {
         self.w.borrow().pool.stats
     }
 
+    /// Instances currently parked warm for `function` on this worker
+    /// (placement hint: route a scale-from-zero re-deploy to a worker
+    /// that can serve it from its pool).
+    pub fn pool_warm_count(&self, function: &str) -> usize {
+        self.w.borrow().pool.warm_count(function)
+    }
+
     /// (provisioned, served) counters per tier, indexed by
     /// [`ProvisionTier::idx`].
     pub fn tier_counts(&self) -> ([u64; 3], [u64; 3]) {
@@ -681,6 +728,10 @@ impl FaasSim {
     }
 
     /// Submit one invocation; `done` fires at the client with the timings.
+    /// The request crosses the wire as a framed `rpc::Message` and enters
+    /// the worker through its bounded NIC RX ring (tail-drop + retransmit
+    /// on overflow); `done` fires with `timing.dropped == true` when the
+    /// retransmit budget is exhausted.
     pub fn submit<F: FnOnce(&mut Sim, RequestTiming) + 'static>(
         &self,
         sim: &mut Sim,
@@ -702,12 +753,22 @@ impl FaasSim {
             }
             w.platform.wire_ns
         };
-        // client → worker wire hop
-        sim.after(wire, move |sim| stage_gateway(this, sim, name, timing, Box::new(done)));
+        // client → worker wire hop, then the worker NIC RX ring.
+        sim.after(wire, move |sim| nic_ingress(this, sim, name, timing, 0, Box::new(done)));
     }
 
     pub fn completed(&self) -> u64 {
         self.w.borrow().completed
+    }
+
+    /// Requests abandoned after exhausting the NIC retransmit budget.
+    pub fn dropped(&self) -> u64 {
+        self.w.borrow().dropped
+    }
+
+    /// Worker NIC counters (ring occupancy, drops, batching).
+    pub fn nic_stats(&self) -> NicStats {
+        self.w.borrow().nic.stats
     }
 
     pub fn cores(&self) -> CorePool {
@@ -735,21 +796,28 @@ impl FaasSim {
     pub fn cost_telemetry(&self) -> CostTelemetry {
         let w = self.w.borrow();
         CostTelemetry {
-            host_syscalls: w.kc_gw.syscalls + w.kc_prov.syscalls + w.kc_fn.syscalls,
-            host_wakeups: w.kc_gw.wakeups + w.kc_prov.wakeups + w.kc_fn.wakeups,
+            host_syscalls: w.kc_gw.syscalls + w.kc_prov.syscalls + w.kc_fn.syscalls
+                + w.kc_nic.syscalls,
+            host_wakeups: w.kc_gw.wakeups + w.kc_prov.wakeups + w.kc_fn.wakeups
+                + w.kc_nic.wakeups,
             kernel_msgs: w.kc_gw.msgs_recv
                 + w.kc_gw.msgs_sent
                 + w.kc_prov.msgs_recv
                 + w.kc_prov.msgs_sent
                 + w.kc_fn.msgs_recv
-                + w.kc_fn.msgs_sent,
-            user_syscalls: w.bc_gw.syscalls + w.bc_prov.syscalls + w.bc_fn.syscalls,
+                + w.kc_fn.msgs_sent
+                + w.kc_nic.msgs_recv
+                + w.kc_nic.msgs_sent,
+            user_syscalls: w.bc_gw.syscalls + w.bc_prov.syscalls + w.bc_fn.syscalls
+                + w.bc_nic.syscalls,
             bypass_msgs: w.bc_gw.msgs_recv
                 + w.bc_gw.msgs_sent
                 + w.bc_prov.msgs_recv
                 + w.bc_prov.msgs_sent
                 + w.bc_fn.msgs_recv
-                + w.bc_fn.msgs_sent,
+                + w.bc_fn.msgs_sent
+                + w.bc_nic.msgs_recv
+                + w.bc_nic.msgs_sent,
         }
     }
 }
@@ -807,6 +875,137 @@ pub struct CostTelemetry {
 
 type DoneFn = Box<dyn FnOnce(&mut Sim, RequestTiming)>;
 
+/// NIC ingress: frame the invocation as an `rpc::Message` and offer it to
+/// the worker's bounded RX ring. A full ring tail-drops the frame; the
+/// client retransmits after a backoff up to `nic_max_retries` times, then
+/// gives the request up (`done` fires with `timing.dropped`).
+fn nic_ingress(
+    fs: FaasSim,
+    sim: &mut Sim,
+    name: String,
+    mut t: RequestTiming,
+    attempt: u32,
+    done: DoneFn,
+) {
+    if attempt == 0 {
+        t.nic_in = sim.now();
+    }
+    t.retries = attempt;
+    enum Decision {
+        Accept { kick: bool },
+        Retry(Time),
+        GiveUp,
+    }
+    let mut done_slot = Some(done);
+    let decision = {
+        let mut w = fs.w.borrow_mut();
+        if !w.nic.is_full() {
+            let bytes = Message::request_frame_size(&name, w.payload_bytes);
+            let fs2 = fs.clone();
+            let name2 = name.clone();
+            let done2 = done_slot.take().unwrap();
+            let kick = w.nic.enqueue(Packet {
+                bytes,
+                enqueued_at: sim.now(),
+                deliver: Box::new(move |sim| stage_gateway(fs2, sim, name2, t, done2)),
+            });
+            Decision::Accept { kick }
+        } else {
+            w.nic.note_drop();
+            if (attempt as u64) < w.platform.nic_max_retries {
+                w.nic.stats.retries += 1;
+                Decision::Retry(w.platform.nic_retry_backoff_ns)
+            } else {
+                w.dropped += 1;
+                if let Some(f) = w.functions.get_mut(&name) {
+                    f.outstanding = f.outstanding.saturating_sub(1);
+                }
+                Decision::GiveUp
+            }
+        }
+    };
+    match decision {
+        Decision::Accept { kick } => {
+            if kick {
+                // Defer the first poll one event so a burst of same-instant
+                // arrivals coalesces into one drain batch.
+                let fs2 = fs.clone();
+                sim.after(0, move |sim| nic_drain(fs2, sim));
+            }
+        }
+        Decision::Retry(backoff) => {
+            let done2 = done_slot.take().unwrap();
+            let fs2 = fs.clone();
+            sim.after(backoff, move |sim| nic_ingress(fs2, sim, name, t, attempt + 1, done2));
+        }
+        Decision::GiveUp => {
+            t.dropped = true;
+            t.done = sim.now();
+            let done2 = done_slot.take().unwrap();
+            done2(sim, t);
+        }
+    }
+}
+
+/// NIC drain engine: run one burst off the worker's RX ring.
+///
+/// * **containerd** — one packet at a time: hard IRQ + softirq + kernel
+///   stack + a per-byte copy; the same work also occupies a shared worker
+///   core (softirq steals CPU from the functions).
+/// * **junctiond** — the scheduler's dedicated polling core drains up to
+///   `nic_batch_max` packets per iteration; the iteration cost
+///   (`Scheduler::note_nic_poll`, proportional to granted cores) is
+///   charged once per burst and amortizes across it; per-packet work is
+///   the zero-copy user-space stack.
+fn nic_drain(fs: FaasSim, sim: &mut Sim) {
+    let (deliveries, burst_ns, softirq_cpu_ns, cores) = {
+        let mut w = fs.w.borrow_mut();
+        let burst_max = match w.backend {
+            Backend::Containerd => 1,
+            Backend::Junctiond => w.platform.nic_batch_max as usize,
+        };
+        let pkts = w.nic.pop_burst(burst_max);
+        let copy_per_kb = w.platform.nic_copy_ns_per_kb;
+        let mut deliveries: Vec<(Time, Box<dyn FnOnce(&mut Sim)>)> =
+            Vec::with_capacity(pkts.len());
+        let mut offset: Time = 0;
+        let mut cpu: Time = 0;
+        match w.backend {
+            Backend::Containerd => {
+                for p in pkts {
+                    let copy = p.bytes as Time * copy_per_kb / 1024;
+                    let cost = w.kc_nic.nic_rx_packet(copy);
+                    offset += cost;
+                    cpu += cost;
+                    deliveries.push((offset, p.deliver));
+                }
+            }
+            Backend::Junctiond => {
+                offset += w.jd.scheduler.note_nic_poll(pkts.len() as u32);
+                for p in pkts {
+                    offset += w.bc_nic.rx_poll_packet();
+                    deliveries.push((offset, p.deliver));
+                }
+            }
+        }
+        (deliveries, offset, cpu, w.cores.clone())
+    };
+    // Kernel path only: the softirq RX work contends for the shared cores.
+    if softirq_cpu_ns > 0 {
+        cores.run(sim, softirq_cpu_ns, |_| {});
+    }
+    for (off, deliver) in deliveries {
+        sim.after(off, deliver);
+    }
+    let fs2 = fs.clone();
+    sim.after(burst_ns, move |sim| {
+        let more = fs2.w.borrow_mut().nic.burst_done();
+        if more {
+            nic_drain(fs2, sim);
+        }
+    });
+}
+
 /// Gateway pass: auth + route + forward to the provider.
 fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming, done: DoneFn) {
     t.gateway_in = sim.now();
@@ -821,14 +1020,19 @@ fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming,
         assert!(routed.is_some(), "function '{name}' not deployed");
         let cpu = match w.backend {
             Backend::Containerd => {
-                w.kc_gw.recv_msg()
+                // The NIC-level RX (IRQ + softirq + stack + copy) was
+                // already charged per packet by the drain engine; the
+                // gateway process pays the app-side receive here.
+                w.kc_gw.app_recv()
                     + p.gateway_cpu_ns
                     + p.rpc_serde_ns
                     + w.kc_gw.send_msg()
                     + w.kc_gw.segment_interference()
             }
             Backend::Junctiond => {
-                w.bc_gw.recv_msg() + p.gateway_cpu_ns + p.rpc_serde_ns + w.bc_gw.send_msg()
+                // RX was consumed by the polling core (netpath burst); the
+                // gateway instance starts at the app logic.
+                p.gateway_cpu_ns + p.rpc_serde_ns + w.bc_gw.send_msg()
             }
         };
         let lat = lat + w.bc_gw.sched_tail_delay();
@@ -1026,6 +1230,10 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
                         w.bc_gw.recv_msg() + p.rpc_serde_ns + w.bc_gw.send_msg()
                     }
                 };
+                // The response leaves the worker as one framed TX packet
+                // (the send cost above already covers the TX path).
+                let tx_bytes = Message::response_frame_size(w.payload_bytes);
+                w.nic.note_tx(tx_bytes);
                 let lat = lat + w.bc_gw.sched_tail_delay();
                 (lat, cpu, w.cores.clone(), p.wire_ns)
             };
@@ -1278,6 +1486,122 @@ mod tests {
         assert_eq!(tier, ProvisionTier::WarmPool);
         assert!(lat < MILLIS, "warm scale-up should be near-instant, got {lat}");
         sim.run_to_completion();
+    }
+
+    // ---- network data path (netpath) ------------------------------------
+
+    #[test]
+    fn per_hop_breakdown_sums_to_e2e() {
+        let wire = PlatformConfig::default().wire_ns;
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let ts = run_n(backend, 10);
+            for t in ts {
+                assert!(t.nic_in > t.submit, "{backend:?}: wire precedes the NIC");
+                assert!(t.nic_in <= t.gateway_in, "{backend:?}: NIC precedes the gateway");
+                assert_eq!(t.retries, 0, "{backend:?}: no drops at sequential load");
+                assert!(!t.dropped);
+                assert_eq!(
+                    wire + t.nic_hop() + t.pre_exec() + t.exec() + t.response_hop(),
+                    t.e2e(),
+                    "{backend:?}: per-hop breakdown must cover the whole request"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nic_overflow_drops_and_retries() {
+        // 2000 simultaneous arrivals against a 256-deep RX ring: the ring
+        // must shed, clients must retransmit, and every request must still
+        // resolve (completed or dropped — nothing leaks).
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Containerd), Rc::new(PlatformConfig::default()));
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(crate::simcore::SECONDS);
+        let completed = Rc::new(RefCell::new(0u64));
+        let dropped = Rc::new(RefCell::new(0u64));
+        let max_retries = PlatformConfig::default().nic_max_retries as u32;
+        for _ in 0..2000 {
+            let c = completed.clone();
+            let d = dropped.clone();
+            fs.submit(&mut sim, "aes", move |_, t| {
+                if t.dropped {
+                    assert_eq!(t.retries, max_retries, "gave up before the retry budget");
+                    *d.borrow_mut() += 1;
+                } else {
+                    assert!(t.retries <= max_retries);
+                    *c.borrow_mut() += 1;
+                }
+            });
+        }
+        sim.run_to_completion();
+        let (c, d) = (*completed.borrow(), *dropped.borrow());
+        assert_eq!(c + d, 2000, "every request must resolve");
+        assert!(d > 0, "a 2000-burst must overflow the 256-deep ring");
+        assert!(c >= 256, "the ring capacity must be served");
+        let stats = fs.nic_stats();
+        assert!(stats.rx_dropped > 0 && stats.retries > 0, "{stats:?}");
+        assert_eq!(stats.rx_delivered, c, "accepted == completed");
+        assert_eq!(fs.dropped(), d);
+        assert_eq!(fs.completed(), c);
+    }
+
+    #[test]
+    fn junction_nic_batches_simultaneous_bursts() {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Junctiond), Rc::new(PlatformConfig::default()));
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(crate::simcore::SECONDS);
+        for _ in 0..64 {
+            fs.submit(&mut sim, "aes", |_, _| {});
+        }
+        sim.run_to_completion();
+        let stats = fs.nic_stats();
+        assert_eq!(stats.rx_delivered, 64);
+        assert_eq!(stats.rx_dropped, 0);
+        assert!(
+            stats.bursts <= 4,
+            "polled RX must coalesce a simultaneous burst: {stats:?}"
+        );
+        assert!(stats.mean_batch() >= 16.0, "{stats:?}");
+        let s = fs.scheduler_stats();
+        assert_eq!(s.nic_rx_packets, 64);
+        assert!(s.nic_polls <= 4, "{s:?}");
+        assert_eq!(stats.tx_packets, 64, "one response frame per invocation");
+    }
+
+    #[test]
+    fn kernel_nic_drains_serially() {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Containerd), Rc::new(PlatformConfig::default()));
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(crate::simcore::SECONDS);
+        for _ in 0..32 {
+            fs.submit(&mut sim, "aes", |_, _| {});
+        }
+        sim.run_to_completion();
+        let stats = fs.nic_stats();
+        assert_eq!(stats.rx_delivered, 32);
+        assert_eq!(stats.bursts, 32, "kernel path processes one packet per IRQ: {stats:?}");
+        assert!((stats.mean_batch() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn undeploy_evicts_gateway_routing_state() {
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Junctiond), Rc::new(PlatformConfig::default()));
+        let spec = FunctionSpec::new("aes", "aes600", RuntimeKind::Go);
+        fs.deploy(&mut sim, spec);
+        sim.run_until(crate::simcore::SECONDS);
+        fs.submit(&mut sim, "aes", |_, _| {});
+        sim.run_to_completion();
+        assert_eq!(fs.w.borrow().gateway.tracked_functions(), 1);
+        assert!(fs.undeploy(&mut sim, "aes"));
+        assert_eq!(
+            fs.w.borrow().gateway.tracked_functions(),
+            0,
+            "undeploy must drop the round-robin counter"
+        );
     }
 
     #[test]

@@ -72,6 +72,14 @@ impl BypassCosts {
         self.jittered(self.p.junction_stack_msg_ns)
     }
 
+    /// Per-packet share of a polled DPDK-style RX burst: same user-space
+    /// stack traversal as [`BypassCosts::recv_msg`], zero-copy (the
+    /// poll-iteration cost itself is charged once per burst by the
+    /// netpath drain engine — see `Scheduler::note_nic_poll`).
+    pub fn rx_poll_packet(&mut self) -> Time {
+        self.recv_msg()
+    }
+
     /// Send one message through the user-space stack + NIC doorbell.
     pub fn send_msg(&mut self) -> Time {
         self.msgs_sent += 1;

@@ -19,12 +19,28 @@
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+// Style lints the codebase deliberately tolerates; the CI clippy gate
+// (-D warnings) is aimed at the correctness/perf lint classes.
+#![allow(
+    clippy::identity_op,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::len_without_is_empty,
+    clippy::new_without_default,
+    clippy::manual_range_contains,
+    clippy::needless_range_loop,
+    clippy::comparison_chain,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if
+)]
+
 pub mod config;
 pub mod containerd_sim;
 pub mod experiments;
 pub mod faas;
 pub mod junction;
 pub mod junctiond;
+pub mod netpath;
 pub mod oskernel;
 pub mod rpc;
 pub mod runtime;

@@ -63,8 +63,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: junctiond-repro <fig5|fig6|coldstart|ablation|serve|calibrate|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
-         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers\n\
-         --mode kernel|bypass --requests N --runs N"
+         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath\n\
+         --mode kernel|bypass --requests N --runs N --workers N --worker-cores N"
     );
     std::process::exit(2);
 }
@@ -106,6 +106,31 @@ fn main() -> Result<()> {
         "ablation" => {
             let which = flags.get("which").map(|s| s.as_str()).unwrap_or("cache");
             let seed = get_u64(&flags, "seed", 2)?;
+            if which == "netpath" {
+                // Cluster-scale Fig. 6: the network data path under load.
+                let dur = get_u64(&flags, "duration-ms", 400)? * MILLIS;
+                let workers = get_u64(&flags, "workers", 2)? as usize;
+                let cores = get_u64(&flags, "worker-cores", 16)? as usize;
+                let (table, points) = ex::netpath_table(
+                    workers,
+                    cores,
+                    &ex::netpath_default_containerd_rates(),
+                    &ex::netpath_default_junction_rates(),
+                    dur,
+                    seed,
+                );
+                println!("{}", table.to_markdown());
+                let sla = 5 * MILLIS;
+                let kc = ex::netpath_knee(&points, Backend::Containerd, sla);
+                let kj = ex::netpath_knee(&points, Backend::Junctiond, sla);
+                println!(
+                    "cluster sustainable throughput (p99 ≤ 5ms): containerd {kc:.0} rps, \
+                     junctiond {kj:.0} rps ({:.1}×)",
+                    kj / kc.max(1.0)
+                );
+                maybe_csv(&flags, &table, "ablation_netpath")?;
+                return Ok(());
+            }
             let table = match which {
                 "cache" => ex::ablation_cache_table(100, seed),
                 "polling" => ex::ablation_polling_table(&[1, 4, 16, 64, 256, 1024, 4096], seed),
@@ -115,7 +140,7 @@ fn main() -> Result<()> {
                 "multitenant" => ex::multitenant_table(60, 1_000.0, seed),
                 "tiers" => ex::coldstart_tiers_table(20, seed),
                 other => bail!(
-                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers)"
+                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath)"
                 ),
             };
             println!("{}", table.to_markdown());

@@ -113,6 +113,8 @@ impl KernelCosts {
     /// CPU cost of receiving one small message in a process: hard IRQ +
     /// softirq, kernel TCP stack traversal, the `epoll_wait`/`read`
     /// syscalls, and the wakeup + context switch to the sleeping task.
+    /// (= [`KernelCosts::nic_rx_packet`] + [`KernelCosts::app_recv`] for a
+    /// loopback hop that never crosses the physical NIC ring.)
     pub fn recv_msg(&mut self) -> Time {
         self.msgs_recv += 1;
         self.wakeups += 1;
@@ -121,6 +123,29 @@ impl KernelCosts {
         let stack = self.p.kernel_stack_msg_ns;
         let wake = self.tailed(self.p.sched_wakeup_ns) + self.p.context_switch_ns;
         irq + stack + wake + self.p.epoll_round_ns + 2 * self.p.syscall_ns
+    }
+
+    /// NIC-level kernel RX work for one packet off the physical ring: hard
+    /// IRQ + softirq processing, kernel stack traversal, and the DMA-buffer
+    /// → socket-buffer copy (`copy_ns`, sized by the frame). This is the
+    /// half of `recv_msg` the netpath drain engine charges per packet; the
+    /// consuming process pays [`KernelCosts::app_recv`] separately.
+    pub fn nic_rx_packet(&mut self, copy_ns: Time) -> Time {
+        self.msgs_recv += 1;
+        self.tailed(self.p.irq_softirq_ns) + self.p.kernel_stack_msg_ns + copy_ns
+    }
+
+    /// App-side receive after the NIC/socket handoff: futex/epoll wakeup,
+    /// context switch into the task, one epoll round and the `read`-class
+    /// syscalls. The other half of `recv_msg` (see
+    /// [`KernelCosts::nic_rx_packet`]).
+    pub fn app_recv(&mut self) -> Time {
+        self.wakeups += 1;
+        self.syscalls += 2;
+        self.tailed(self.p.sched_wakeup_ns)
+            + self.p.context_switch_ns
+            + self.p.epoll_round_ns
+            + 2 * self.p.syscall_ns
     }
 
     /// CPU cost of sending one small message: `write`/`sendmsg` syscall +
@@ -210,6 +235,23 @@ mod tests {
             assert_eq!(a.recv_msg(), b.recv_msg());
             assert_eq!(a.send_msg(), b.send_msg());
         }
+    }
+
+    #[test]
+    fn nic_rx_plus_app_recv_splits_recv_msg() {
+        // The two halves charged by the netpath must together cost what
+        // the single-shot recv_msg charges (same components, zero copy),
+        // so splitting the hop does not double-charge the kernel path.
+        let mut whole = costs();
+        let mut split = costs();
+        let n = 5000;
+        let a: Time = (0..n).map(|_| whole.recv_msg()).sum();
+        let b: Time = (0..n).map(|_| split.nic_rx_packet(0) + split.app_recv()).sum();
+        let (am, bm) = (a as f64 / n as f64, b as f64 / n as f64);
+        assert!((am - bm).abs() / am < 0.05, "means diverge: {am} vs {bm}");
+        assert_eq!(whole.msgs_recv, split.msgs_recv);
+        assert_eq!(whole.wakeups, split.wakeups);
+        assert_eq!(whole.syscalls, split.syscalls);
     }
 
     #[test]

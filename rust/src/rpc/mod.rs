@@ -78,9 +78,28 @@ impl Message {
         Ok((self.body[0], &self.body[2..]))
     }
 
+    /// Total on-wire size of this message's frame (header + body). The
+    /// DES network path charges per-packet costs against this without
+    /// materializing the bytes.
+    pub fn frame_size(&self) -> usize {
+        4 + 1 + 8 + self.body.len()
+    }
+
+    /// Frame size of an invoke-request for `function` carrying
+    /// `payload_len` payload bytes, without materializing the message
+    /// (the DES hot path sizes every packet this way).
+    pub fn request_frame_size(function: &str, payload_len: usize) -> usize {
+        4 + 1 + 8 + function.len() + 1 + payload_len
+    }
+
+    /// Frame size of an invoke-response carrying `payload_len` bytes.
+    pub fn response_frame_size(payload_len: usize) -> usize {
+        4 + 1 + 8 + 2 + payload_len
+    }
+
     /// Encode into a length-prefixed frame.
     pub fn encode(&self) -> Vec<u8> {
-        let total = 4 + 1 + 8 + self.body.len();
+        let total = self.frame_size();
         let mut out = Vec::with_capacity(total);
         out.extend_from_slice(&(total as u32).to_le_bytes());
         out.push(self.kind as u8);
@@ -94,7 +113,7 @@ impl Message {
     /// serving does no allocation here).
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.clear();
-        let total = 4 + 1 + 8 + self.body.len();
+        let total = self.frame_size();
         out.reserve(total);
         out.extend_from_slice(&(total as u32).to_le_bytes());
         out.push(self.kind as u8);
@@ -152,6 +171,26 @@ mod tests {
         let mut buf = Vec::new();
         m.encode_into(&mut buf);
         assert_eq!(buf, m.encode());
+    }
+
+    #[test]
+    fn frame_size_matches_encoded_length() {
+        for m in [
+            Message::invoke_request(1, "aes600", &[0x5A; 600]),
+            Message::invoke_response(1, 0, b"cipher"),
+            Message::shutdown(),
+        ] {
+            assert_eq!(m.frame_size(), m.encode().len());
+        }
+        // The allocation-free size helpers agree with real messages.
+        assert_eq!(
+            Message::request_frame_size("aes600", 600),
+            Message::invoke_request(1, "aes600", &[0x5A; 600]).frame_size()
+        );
+        assert_eq!(
+            Message::response_frame_size(600),
+            Message::invoke_response(1, 0, &[0u8; 600]).frame_size()
+        );
     }
 
     #[test]

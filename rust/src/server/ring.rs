@@ -16,7 +16,7 @@
 //! multi-core box the spin phase wins and the parking path never runs.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Spin iterations before parking. On a 1-core box spinning is pure waste
@@ -35,25 +35,58 @@ fn spin_budget() -> u32 {
     budget
 }
 
-/// One direction of frame flow.
+/// One direction of frame flow. Optionally *bounded* like a NIC RX
+/// descriptor ring: a full bounded ring tail-drops on `try_send`, the
+/// discipline the DES models in `netpath` (the default ring is unbounded,
+/// matching the original transport behavior).
 pub struct Ring {
     q: Mutex<VecDeque<Vec<u8>>>,
     cv: Condvar,
     closed: AtomicBool,
+    capacity: usize,
+    drops: AtomicU64,
 }
 
 impl Ring {
     fn new() -> Arc<Ring> {
+        Self::with_capacity(usize::MAX)
+    }
+
+    fn with_capacity(capacity: usize) -> Arc<Ring> {
         Arc::new(Ring {
             q: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             closed: AtomicBool::new(false),
+            capacity,
+            drops: AtomicU64::new(0),
         })
     }
 
-    pub fn send(&self, frame: Vec<u8>) {
-        self.q.lock().unwrap().push_back(frame);
+    /// Offer one frame. Returns `false` (tail drop, counted) when a
+    /// bounded ring is full.
+    pub fn try_send(&self, frame: Vec<u8>) -> bool {
+        {
+            let mut q = self.q.lock().unwrap();
+            if q.len() >= self.capacity {
+                drop(q);
+                self.drops.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            q.push_back(frame);
+        }
         self.cv.notify_one();
+        true
+    }
+
+    /// Send one frame; on a bounded ring this tail-drops silently when
+    /// full (use [`Ring::try_send`] to observe the outcome).
+    pub fn send(&self, frame: Vec<u8>) {
+        let _ = self.try_send(frame);
+    }
+
+    /// Frames tail-dropped by a bounded ring.
+    pub fn drops(&self) -> u64 {
+        self.drops.load(Ordering::Relaxed)
     }
 
     /// Hybrid receive: bounded poll first (bypass fast path), then park.
@@ -89,6 +122,23 @@ impl Ring {
         self.q.lock().unwrap().pop_front()
     }
 
+    /// Batched receive (DPDK `rx_burst`-style): block for the first frame
+    /// like [`Ring::recv`], then drain up to `max - 1` more in the same
+    /// lock acquisition. One consumer wakeup amortizes over the burst —
+    /// the real-mode counterpart of the DES netpath's batch drain.
+    pub fn recv_batch(&self, max: usize) -> Vec<Vec<u8>> {
+        let Some(first) = self.recv() else { return Vec::new() };
+        let mut out = vec![first];
+        let mut q = self.q.lock().unwrap();
+        while out.len() < max.max(1) {
+            match q.pop_front() {
+                Some(f) => out.push(f),
+                None => break,
+            }
+        }
+        out
+    }
+
     pub fn close(&self) {
         self.closed.store(true, Ordering::Release);
         self.cv.notify_all();
@@ -110,6 +160,12 @@ impl RingPair {
     #[allow(clippy::new_without_default)]
     pub fn new() -> RingPair {
         RingPair { ab: Ring::new(), ba: Ring::new() }
+    }
+
+    /// Bounded pair: both directions tail-drop past `capacity` frames
+    /// (NIC-ring semantics; see the module note and `netpath`).
+    pub fn bounded(capacity: usize) -> RingPair {
+        RingPair { ab: Ring::with_capacity(capacity), ba: Ring::with_capacity(capacity) }
     }
 
     /// Endpoint handles: (a_send, a_recv), (b_send, b_recv).
@@ -167,6 +223,42 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         pair.ba.close();
         assert_eq!(t2.join().unwrap(), None);
+    }
+
+    #[test]
+    fn bounded_ring_sheds_overflow() {
+        let pair = RingPair::bounded(4);
+        let ((a_tx, _), (_, b_rx)) = pair.endpoints();
+        let mut accepted = 0;
+        for i in 0..6u8 {
+            if a_tx.try_send(vec![i]) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 4);
+        assert_eq!(a_tx.drops(), 2);
+        for i in 0..4u8 {
+            assert_eq!(b_rx.recv().unwrap(), vec![i], "FIFO survivors");
+        }
+        // Space freed: sends succeed again.
+        assert!(a_tx.try_send(vec![9]));
+    }
+
+    #[test]
+    fn recv_batch_drains_burst_in_one_call() {
+        let pair = RingPair::new();
+        let ((a_tx, _), (_, b_rx)) = pair.endpoints();
+        for i in 0..10u8 {
+            a_tx.send(vec![i]);
+        }
+        let burst = b_rx.recv_batch(8);
+        assert_eq!(burst.len(), 8);
+        assert_eq!(burst[0], vec![0]);
+        assert_eq!(burst[7], vec![7]);
+        let rest = b_rx.recv_batch(8);
+        assert_eq!(rest.len(), 2);
+        pair.ab.close();
+        assert!(b_rx.recv_batch(8).is_empty(), "closed + drained → empty batch");
     }
 
     #[test]

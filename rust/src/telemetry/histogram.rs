@@ -88,14 +88,22 @@ impl Samples {
     }
 
     /// CDF points (value, cumulative fraction) — the shape plotted in Fig. 5.
+    /// Duplicate observations collapse into one point carrying the *max*
+    /// cumulative fraction for that value, so the CDF is a proper function
+    /// of x (one y per distinct latency) and strictly increasing in both
+    /// coordinates.
     pub fn cdf(&mut self) -> Vec<(u64, f64)> {
         self.ensure_sorted();
         let n = self.values.len();
-        self.values
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| (v, (i + 1) as f64 / n as f64))
-            .collect()
+        let mut out: Vec<(u64, f64)> = Vec::new();
+        for (i, &v) in self.values.iter().enumerate() {
+            let frac = (i + 1) as f64 / n as f64;
+            match out.last_mut() {
+                Some(last) if last.0 == v => last.1 = frac,
+                _ => out.push((v, frac)),
+            }
+        }
+        out
     }
 }
 
@@ -241,12 +249,29 @@ mod tests {
             s.record(rng.range(1, 1_000_000));
         }
         let cdf = s.cdf();
-        assert_eq!(cdf.len(), 1000);
+        assert!(!cdf.is_empty() && cdf.len() <= 1000);
         assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+        // One point per distinct value, strictly increasing in x AND y —
+        // duplicate samples must not produce several y's for the same x.
         for w in cdf.windows(2) {
-            assert!(w[0].0 <= w[1].0);
-            assert!(w[0].1 < w[1].1 + 1e-12);
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 < w[1].1);
         }
+    }
+
+    #[test]
+    fn cdf_collapses_duplicates_to_max_fraction() {
+        let mut s = Samples::new();
+        for v in [5u64, 5, 5, 10] {
+            s.record(v);
+        }
+        assert_eq!(s.cdf(), vec![(5, 0.75), (10, 1.0)]);
+        // Heavily tied data: a constant series is a single CDF point.
+        let mut c = Samples::new();
+        for _ in 0..100 {
+            c.record(42);
+        }
+        assert_eq!(c.cdf(), vec![(42, 1.0)]);
     }
 
     #[test]

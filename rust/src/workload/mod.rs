@@ -9,7 +9,12 @@
 //!   arrivals don't slow down when the system queues.
 //! * [`population`] — a skewed multi-tenant function population (most
 //!   functions rarely invoked, per the Shahrad et al. characterization the
-//!   paper cites [22]).
+//!   paper cites [22]) — and [`PopulationLoop`], the open-loop driver that
+//!   offers that mix.
+//!
+//! Every generator runs against a [`LoadTarget`]: the single-node
+//! `FaasSim` or the multi-worker `Cluster` (the cluster-scale netpath
+//! experiments drive the latter).
 
 pub mod trace;
 
@@ -18,9 +23,44 @@ pub use trace::{replay, replay_with_keepalive, TraceEvent, TraceGenerator, Trace
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::faas::FaasSim;
+use crate::faas::{Cluster, FaasSim, RequestTiming};
 use crate::simcore::{Rng, Sim, Time, SECONDS};
 use crate::telemetry::Samples;
+
+/// Anything a load generator can drive: the single-node [`FaasSim`] or the
+/// multi-worker [`Cluster`]. The generators are written against this trait
+/// so every workload (closed loop, open loop, Zipf population) targets
+/// both deployments.
+pub trait LoadTarget: Clone + 'static {
+    fn submit_to(
+        &self,
+        sim: &mut Sim,
+        function: &str,
+        done: Box<dyn FnOnce(&mut Sim, RequestTiming)>,
+    );
+}
+
+impl LoadTarget for FaasSim {
+    fn submit_to(
+        &self,
+        sim: &mut Sim,
+        function: &str,
+        done: Box<dyn FnOnce(&mut Sim, RequestTiming)>,
+    ) {
+        self.submit(sim, function, done);
+    }
+}
+
+impl LoadTarget for Rc<RefCell<Cluster>> {
+    fn submit_to(
+        &self,
+        sim: &mut Sim,
+        function: &str,
+        done: Box<dyn FnOnce(&mut Sim, RequestTiming)>,
+    ) {
+        self.borrow_mut().submit(sim, function, done);
+    }
+}
 
 /// Collected timings of one workload run.
 #[derive(Debug, Default)]
@@ -31,14 +71,41 @@ pub struct RunResult {
     pub exec: Samples,
     /// Client end-to-end samples (ns).
     pub e2e: Samples,
+    /// NIC hop samples (ns): RX ring wait + per-packet service + any
+    /// retransmit backoffs (see `RequestTiming::nic_hop`).
+    pub nic_hop: Samples,
+    /// Gateway→instance-admission samples (ns): the in-worker RPC passes
+    /// and queueing before the exec window (`RequestTiming::pre_exec`).
+    pub pre_exec: Samples,
     pub submitted: u64,
     pub completed: u64,
     /// Completions that landed *inside* the measurement window — the
     /// honest achieved-throughput numerator for saturated runs (backlog
     /// draining after the window does not count).
     pub completed_in_window: u64,
+    /// Requests abandoned after exhausting the NIC retransmit budget.
+    pub dropped: u64,
+    /// NIC retransmissions across all requests (dropped or served).
+    pub retried: u64,
     /// Virtual duration of the measurement window.
     pub elapsed: Time,
+}
+
+impl RunResult {
+    /// Record one finished request (shared by every generator).
+    fn record(&mut self, t: &RequestTiming) {
+        self.retried += t.retries as u64;
+        if t.dropped {
+            self.dropped += 1;
+            return;
+        }
+        self.gateway_observed.record(t.gateway_observed());
+        self.exec.record(t.exec());
+        self.e2e.record(t.e2e());
+        self.nic_hop.record(t.nic_hop());
+        self.pre_exec.record(t.pre_exec());
+        self.completed += 1;
+    }
 }
 
 impl RunResult {
@@ -73,11 +140,16 @@ impl ClosedLoop {
 
     /// Run to completion on `sim`, returning the collected samples.
     pub fn run(&self, sim: &mut Sim, fs: &FaasSim) -> RunResult {
+        self.run_on(sim, fs)
+    }
+
+    /// Run against any [`LoadTarget`] (single node or cluster).
+    pub fn run_on<T: LoadTarget>(&self, sim: &mut Sim, target: &T) -> RunResult {
         let result = Rc::new(RefCell::new(RunResult::default()));
         let start = sim.now();
         submit_next(
             sim,
-            fs.clone(),
+            target.clone(),
             self.function.clone(),
             self.invocations,
             self.think_ns,
@@ -90,9 +162,9 @@ impl ClosedLoop {
     }
 }
 
-fn submit_next(
+fn submit_next<T: LoadTarget>(
     sim: &mut Sim,
-    fs: FaasSim,
+    target: T,
     function: String,
     remaining: u32,
     think: Time,
@@ -102,21 +174,19 @@ fn submit_next(
         return;
     }
     result.borrow_mut().submitted += 1;
-    let fs2 = fs.clone();
+    let target2 = target.clone();
     let fname = function.clone();
-    fs.submit(sim, &function, move |sim, t| {
-        {
-            let mut r = result.borrow_mut();
-            r.gateway_observed.record(t.gateway_observed());
-            r.exec.record(t.exec());
-            r.e2e.record(t.e2e());
-            r.completed += 1;
-        }
-        let result2 = result.clone();
-        sim.after(think, move |sim| {
-            submit_next(sim, fs2, fname, remaining - 1, think, result2);
-        });
-    });
+    target.submit_to(
+        sim,
+        &function,
+        Box::new(move |sim, t| {
+            result.borrow_mut().record(&t);
+            let result2 = result.clone();
+            sim.after(think, move |sim| {
+                submit_next(sim, target2, fname, remaining - 1, think, result2);
+            });
+        }),
+    );
 }
 
 /// Open-loop Poisson generator at a fixed offered rate.
@@ -137,52 +207,116 @@ impl OpenLoop {
     /// Run the open-loop experiment. Samples recorded only inside the
     /// measurement window (after warmup); the run drains before returning.
     pub fn run(&self, sim: &mut Sim, fs: &FaasSim) -> RunResult {
-        assert!(self.rate_rps > 0.0);
-        let result = Rc::new(RefCell::new(RunResult::default()));
-        let mut rng = Rng::new(self.seed);
-        let warmup = self.duration / 10;
-        let t_start = sim.now();
-        let measure_from = t_start + warmup;
-        let measure_until = measure_from + self.duration;
-        let mean_gap_ns = SECONDS as f64 / self.rate_rps;
+        self.run_on(sim, fs)
+    }
 
-        // Pre-generate the arrival schedule (deterministic, independent of
-        // completion order).
-        let mut t = t_start as f64;
-        let mut arrivals = Vec::new();
-        while (t as Time) < measure_until {
-            t += rng.exp(mean_gap_ns);
-            if (t as Time) < measure_until {
-                arrivals.push(t as Time);
-            }
+    /// Run against any [`LoadTarget`] (single node or cluster).
+    pub fn run_on<T: LoadTarget>(&self, sim: &mut Sim, target: &T) -> RunResult {
+        let function = self.function.clone();
+        open_loop_drive(sim, target, self.rate_rps, self.duration, self.seed, move |_| {
+            function.clone()
+        })
+    }
+}
+
+/// Shared open-loop driver: Poisson arrivals at `rate_rps`, each arrival
+/// invoking whatever `pick` chooses, samples recorded only inside the
+/// measurement window (a warmup of 10% of `duration` precedes it); the
+/// run drains before returning. The arrival schedule is pre-generated, so
+/// it is deterministic and independent of completion order.
+fn open_loop_drive<T: LoadTarget>(
+    sim: &mut Sim,
+    target: &T,
+    rate_rps: f64,
+    duration: Time,
+    seed: u64,
+    mut pick: impl FnMut(&mut Rng) -> String,
+) -> RunResult {
+    assert!(rate_rps > 0.0);
+    let result = Rc::new(RefCell::new(RunResult::default()));
+    let mut rng = Rng::new(seed);
+    let warmup = duration / 10;
+    let t_start = sim.now();
+    let measure_from = t_start + warmup;
+    let measure_until = measure_from + duration;
+    let mean_gap_ns = SECONDS as f64 / rate_rps;
+    let mut t = t_start as f64;
+    let mut arrivals = Vec::new();
+    while (t as Time) < measure_until {
+        t += rng.exp(mean_gap_ns);
+        if (t as Time) < measure_until {
+            arrivals.push((t as Time, pick(&mut rng)));
         }
-        for at in arrivals {
-            let fs2 = fs.clone();
-            let result2 = result.clone();
-            let function = self.function.clone();
-            let in_window = at >= measure_from;
-            sim.at(at, move |sim| {
-                if in_window {
-                    result2.borrow_mut().submitted += 1;
-                }
-                fs2.submit(sim, &function, move |_, timing| {
+    }
+    for (at, function) in arrivals {
+        let target2 = target.clone();
+        let result2 = result.clone();
+        let in_window = at >= measure_from;
+        sim.at(at, move |sim| {
+            if in_window {
+                result2.borrow_mut().submitted += 1;
+            }
+            target2.submit_to(
+                sim,
+                &function,
+                Box::new(move |_, timing| {
                     if in_window {
                         let mut r = result2.borrow_mut();
-                        r.gateway_observed.record(timing.gateway_observed());
-                        r.exec.record(timing.exec());
-                        r.e2e.record(timing.e2e());
-                        r.completed += 1;
-                        if timing.done <= measure_until {
+                        r.record(&timing);
+                        if !timing.dropped && timing.done <= measure_until {
                             r.completed_in_window += 1;
                         }
                     }
-                });
-            });
-        }
-        sim.run_to_completion();
-        let mut out = Rc::try_unwrap(result).ok().expect("pending refs").into_inner();
-        out.elapsed = self.duration;
-        out
+                }),
+            );
+        });
+    }
+    sim.run_to_completion();
+    let mut out = Rc::try_unwrap(result).ok().expect("pending refs").into_inner();
+    out.elapsed = duration;
+    out
+}
+
+/// Zipf-skewed multi-tenant driver: aggregate Poisson arrivals at
+/// `rate_rps`, each invocation sampling a function from a weighted
+/// [`population`]. Targets single-node and cluster deployments alike —
+/// the cluster case is the paper's Figure 1 front end fanning a skewed
+/// tenant mix across the worker pool.
+pub struct PopulationLoop {
+    /// (function, weight) pairs; weights need not be normalized.
+    pub functions: Vec<(String, f64)>,
+    /// Aggregate offered load (requests per second).
+    pub rate_rps: f64,
+    /// Measurement window (virtual time). A warmup of 10% precedes it.
+    pub duration: Time,
+    pub seed: u64,
+}
+
+impl PopulationLoop {
+    pub fn new(functions: Vec<(String, f64)>, rate_rps: f64, duration: Time, seed: u64) -> Self {
+        PopulationLoop { functions, rate_rps, duration, seed }
+    }
+
+    /// Run against any [`LoadTarget`]; every function in the population
+    /// must already be deployed on the target.
+    pub fn run_on<T: LoadTarget>(&self, sim: &mut Sim, target: &T) -> RunResult {
+        assert!(!self.functions.is_empty());
+        let total_w: f64 = self.functions.iter().map(|(_, w)| w).sum();
+        let fns = self.functions.clone();
+        // Weighted pick by linear scan (populations are small; a
+        // cumulative binary search can replace this if it ever shows up
+        // in profiles).
+        let pick = move |rng: &mut Rng| {
+            let mut roll = rng.next_f64() * total_w;
+            for (name, w) in &fns {
+                if roll < *w {
+                    return name.clone();
+                }
+                roll -= *w;
+            }
+            fns[fns.len() - 1].0.clone()
+        };
+        open_loop_drive(sim, target, self.rate_rps, self.duration, self.seed, pick)
     }
 }
 
@@ -274,6 +408,112 @@ mod tests {
         let mut b = OpenLoop::new("aes", 500.0, SECONDS, 3).run(&mut b_sim, &b_fs);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.gateway_observed.quantile(0.99), b.gateway_observed.quantile(0.99));
+    }
+
+    /// Pipeline-free target: completes every request after a fixed
+    /// latency. Isolates the generator's arrival process from system
+    /// queueing, so rate properties test the generator itself.
+    #[derive(Clone)]
+    struct InstantTarget {
+        latency: Time,
+    }
+
+    impl LoadTarget for InstantTarget {
+        fn submit_to(
+            &self,
+            sim: &mut Sim,
+            _function: &str,
+            done: Box<dyn FnOnce(&mut Sim, crate::faas::RequestTiming)>,
+        ) {
+            let submit = sim.now();
+            sim.after(self.latency, move |sim| {
+                let now = sim.now();
+                let t = crate::faas::RequestTiming {
+                    submit,
+                    nic_in: submit,
+                    gateway_in: submit,
+                    exec_start: submit,
+                    exec_end: now,
+                    done: now,
+                    ..Default::default()
+                };
+                done(sim, t);
+            });
+        }
+    }
+
+    #[test]
+    fn property_open_loop_offered_rate_within_5pct() {
+        use crate::simcore::{forall, Gen, MICROS};
+        forall("open-loop offered rate", 25, |g: &mut Gen| {
+            let rate = g.u64(5_000, 12_000) as f64;
+            let seed = g.u64(0, u64::MAX - 1);
+            let mut sim = Sim::new();
+            let target = InstantTarget { latency: 10 * MICROS };
+            let r = OpenLoop::new("f", rate, 2 * SECONDS, seed).run_on(&mut sim, &target);
+            let offered = r.submitted as f64 / (r.elapsed as f64 / SECONDS as f64);
+            let err = (offered - rate).abs() / rate;
+            assert!(
+                err < 0.05,
+                "offered {offered:.0} vs configured {rate:.0} rps (err {err:.3})"
+            );
+            assert_eq!(r.completed, r.submitted, "instant target completes everything");
+        });
+    }
+
+    #[test]
+    fn open_loop_drives_cluster() {
+        use crate::config::Backend;
+        use crate::faas::Cluster;
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Junctiond, 3, 10, 1, 100_000);
+        c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        c.scale_up(&mut sim, "aes");
+        c.scale_up(&mut sim, "aes");
+        sim.run_until(SECONDS);
+        let c = Rc::new(RefCell::new(c));
+        let r = OpenLoop::new("aes", 3_000.0, SECONDS, 5).run_on(&mut sim, &c);
+        assert!(r.completed > 2_500, "completed {}", r.completed);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.nic_hop.len(), r.completed as usize, "per-hop samples recorded");
+        // The least-inflight front end spreads load over all three workers.
+        let served: Vec<u64> =
+            c.borrow().workers.iter().map(|w| w.sim_node.completed()).collect();
+        assert!(served.iter().all(|&s| s > 0), "all workers must serve: {served:?}");
+    }
+
+    #[test]
+    fn closed_loop_drives_cluster() {
+        use crate::config::Backend;
+        use crate::faas::Cluster;
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Containerd, 2, 10, 1, 100_000);
+        c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(SECONDS);
+        let c = Rc::new(RefCell::new(c));
+        let r = ClosedLoop::new("aes", 40).run_on(&mut sim, &c);
+        assert_eq!(r.completed, 40);
+        assert_eq!(r.submitted, 40);
+    }
+
+    #[test]
+    fn population_loop_drives_cluster_with_zipf_mix() {
+        use crate::config::Backend;
+        use crate::faas::Cluster;
+        let mut sim = Sim::new();
+        let mut c = Cluster::new(Backend::Junctiond, 2, 10, 2, 100_000);
+        let mut rng = Rng::new(9);
+        let pop = population(8, &mut rng);
+        for (name, _) in &pop {
+            c.deploy(&mut sim, FunctionSpec::new(name, "aes600", RuntimeKind::Go));
+        }
+        sim.run_until(SECONDS);
+        let c = Rc::new(RefCell::new(c));
+        let r = PopulationLoop::new(pop, 2_000.0, SECONDS, 3).run_on(&mut sim, &c);
+        assert!(r.completed > 1_700, "completed {}", r.completed);
+        assert_eq!(r.dropped, 0);
+        let served: u64 = c.borrow().workers.iter().map(|w| w.sim_node.completed()).sum();
+        assert!(served >= r.completed, "cluster served {served} < recorded {}", r.completed);
     }
 
     #[test]

@@ -102,6 +102,9 @@ pub struct TraceResult {
     /// Deploys that were full cold boots.
     pub cold_hits: u64,
     pub completed: u64,
+    /// Requests the worker NIC abandoned after its retransmit budget
+    /// (never recorded in `latency`/`completed`/`tier_served`).
+    pub dropped: u64,
     pub per_function_count: Vec<u64>,
     /// Provisioning events per tier (index = `ProvisionTier::idx`):
     /// warm-pool / snapshot-restore / cold-boot.
@@ -146,6 +149,10 @@ pub fn replay(
             let r3 = result2.clone();
             fs2.submit(sim, &name, move |_, t| {
                 let mut r = r3.borrow_mut();
+                if t.dropped {
+                    r.dropped += 1;
+                    return;
+                }
                 r.latency.record(t.gateway_observed());
                 r.completed += 1;
                 r.per_function_count[fid] += 1;
@@ -208,10 +215,14 @@ pub fn replay_with_keepalive(
             fs2.submit(sim, &name, move |sim, t| {
                 {
                     let mut r = r3.borrow_mut();
-                    r.latency.record(t.gateway_observed());
-                    r.completed += 1;
-                    r.per_function_count[fid] += 1;
-                    r.tier_served[t.tier.idx()] += 1;
+                    if t.dropped {
+                        r.dropped += 1;
+                    } else {
+                        r.latency.record(t.gateway_observed());
+                        r.completed += 1;
+                        r.per_function_count[fid] += 1;
+                        r.tier_served[t.tier.idx()] += 1;
+                    }
                 }
                 outstanding2.borrow_mut()[fid] -= 1;
                 let done_at = sim.now();
