@@ -1,0 +1,148 @@
+//! Bench E12 — `density_scale`: drive the rebuilt engine to the regime
+//! the ROADMAP's north star demands (millions of registered functions,
+//! tens of millions of invocations) and record the host-side engine
+//! numbers in `BENCH_engine.json`.
+//!
+//! Full mode sweeps up to **1M registered functions / ≥10M simulated
+//! invocations** on an 8×16-core junctiond cluster (minutes of wall
+//! clock); `BENCH_QUICK=1` runs a scaled-down sweep as the CI smoke gate.
+//! In both modes it asserts:
+//!
+//! * the sweep completes with zero NIC drops and every in-window request
+//!   resolved (the harness is *driving* the load, not choking on it);
+//! * the Junction-vs-containerd virtual-time latency table of an E11
+//!   slice is **bit-identical** under the wheel and the seed's reference
+//!   heap (determinism preserved under the new engine — the tables are
+//!   unchanged, only the wall clock moves).
+
+mod common;
+
+use std::io::Write as _;
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::simcore::{set_default_engine, EngineKind, MILLIS, SECONDS};
+
+fn json_point(p: &ex::DensityPoint) -> String {
+    format!(
+        "{{\"backend\":\"{}\",\"engine\":\"{}\",\"workers\":{},\"functions\":{},\
+         \"hot_functions\":{},\"submitted\":{},\"completed\":{},\"dropped\":{},\
+         \"virtual_secs\":{:.3},\"wall_secs\":{:.3},\"events_fired\":{},\
+         \"events_per_sec\":{:.0},\"p50_us\":{:.1},\"p99_us\":{:.1}}}",
+        p.backend.name(),
+        p.engine,
+        p.workers,
+        p.functions,
+        p.hot_functions,
+        p.submitted,
+        p.completed,
+        p.dropped,
+        p.virtual_ns as f64 / SECONDS as f64,
+        p.wall_secs,
+        p.events_fired,
+        p.events_per_sec,
+        p.p50 as f64 / 1_000.0,
+        p.p99 as f64 / 1_000.0,
+    )
+}
+
+fn main() {
+    let quick = common::quick();
+    let mut checks = common::Checks::new();
+    let mut points: Vec<ex::DensityPoint> = Vec::new();
+
+    common::section("E12 — density_scale sweep", || {
+        // (workers, cores, functions, hot, rate rps, duration). The full
+        // ladder ends at the headline point: 1M registered functions,
+        // 250k rps for 40 s ≈ 10M in-window (11M simulated) invocations.
+        let sweep: Vec<(usize, usize, u64, usize, f64, u64)> = if quick {
+            vec![
+                (2, 10, 10_000, 256, 10_000.0, 500 * MILLIS),
+                (4, 16, 50_000, 1_024, 40_000.0, 500 * MILLIS),
+            ]
+        } else {
+            vec![
+                (4, 16, 100_000, 2_048, 100_000.0, 5 * SECONDS),
+                (8, 16, 1_000_000, 4_096, 250_000.0, 40 * SECONDS),
+            ]
+        };
+        for (workers, cores, functions, hot, rate, duration) in sweep {
+            let p = ex::density_scale_run(
+                Backend::Junctiond,
+                workers,
+                cores,
+                functions,
+                hot,
+                rate,
+                duration,
+                3,
+            );
+            println!(
+                "functions={} submitted={} completed={} dropped={} wall={:.1}s \
+                 events={} → {:.0} events/s p99={}µs",
+                p.functions,
+                p.submitted,
+                p.completed,
+                p.dropped,
+                p.wall_secs,
+                p.events_fired,
+                p.events_per_sec,
+                p.p99 / 1_000
+            );
+            checks.check(
+                "every in-window request resolved",
+                p.completed + p.dropped == p.submitted,
+                format!("{} + {} vs {}", p.completed, p.dropped, p.submitted),
+            );
+            checks.check(
+                "bypass cluster sheds nothing at the offered rate",
+                p.dropped == 0,
+                format!("{} dropped", p.dropped),
+            );
+            points.push(p);
+        }
+        let table = ex::density_scale_table(&points);
+        println!("{}", table.to_markdown());
+        if !quick {
+            let last = points.last().unwrap();
+            checks.check(
+                "headline point reaches ≥1M functions / ≥10M simulated invocations",
+                last.functions >= 1_000_000 && last.submitted >= 10_000_000,
+                format!("{} fns, {} submitted", last.functions, last.submitted),
+            );
+        }
+    });
+
+    common::section("E12 — latency tables bit-identical across engines", || {
+        let rates = [1_000.0, 3_000.0];
+        let dur = if quick { 150 * MILLIS } else { 400 * MILLIS };
+        let run = || {
+            let (t, _) = ex::netpath_table(2, 10, &rates, &rates, dur, 7);
+            t.to_markdown()
+        };
+        let wheel = run();
+        let prev = set_default_engine(EngineKind::ReferenceHeap);
+        let heap = run();
+        set_default_engine(prev);
+        checks.check(
+            "Junction-vs-containerd table identical under wheel and seed heap",
+            wheel == heap,
+            format!("{} bytes", wheel.len()),
+        );
+    });
+
+    // Record the measured numbers (satellite: BENCH_engine.json). Written
+    // to the repo root when run from `rust/` (cargo bench's cwd).
+    let path = std::env::var("BENCH_ENGINE_JSON").unwrap_or_else(|_| "../BENCH_engine.json".into());
+    let body = format!(
+        "{{\n  \"experiment\": \"E12 density_scale\",\n  \"quick\": {},\n  \"points\": [\n    {}\n  ]\n}}\n",
+        quick,
+        points.iter().map(json_point).collect::<Vec<_>>().join(",\n    ")
+    );
+    match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+
+    checks.finish();
+}

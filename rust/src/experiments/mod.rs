@@ -708,6 +708,155 @@ pub fn netpath_knee(points: &[NetPathPoint], backend: Backend, sla_ns: u64) -> f
 }
 
 // ---------------------------------------------------------------------------
+// E12 — density scale: the rebuilt event engine driven to ≥1M registered
+// functions / ≥10M simulated invocations (§Perf; FaaSNet-scale regime)
+// ---------------------------------------------------------------------------
+
+/// One measured point of the density sweep: cluster shape, registered
+/// population, driven load, and the *host-side* engine telemetry (events
+/// fired, wall clock, events/sec) alongside the virtual-time latency the
+/// run produced.
+pub struct DensityPoint {
+    pub backend: Backend,
+    pub engine: &'static str,
+    pub workers: usize,
+    /// Functions registered across the cluster (hot subset + idle tail).
+    pub functions: u64,
+    /// Functions receiving the Zipf traffic.
+    pub hot_functions: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Virtual clock at the end of the run.
+    pub virtual_ns: Time,
+    /// Host wall clock for the whole run (deploys + drive + drain).
+    pub wall_secs: f64,
+    /// Engine events fired over the whole run.
+    pub events_fired: u64,
+    /// Host-side engine throughput: `events_fired / wall_secs`.
+    pub events_per_sec: f64,
+    pub p50: u64,
+    pub p99: u64,
+}
+
+/// Run one density point: register `n_functions` across an
+/// `n_workers`-worker cluster (every function deploys a real instance —
+/// the Shahrad characterization: the population exists, a Zipf head
+/// serves nearly all traffic), pre-scale the head across the pool, then
+/// drive `rate_rps` of open-loop Zipf traffic for `duration`.
+///
+/// Uses the platform-default compute cost (no PJRT calibration): the
+/// point of E12 is the *engine*, and calibration noise would make the
+/// cross-engine bit-identity check meaningless.
+#[allow(clippy::too_many_arguments)]
+pub fn density_scale_run(
+    backend: Backend,
+    n_workers: usize,
+    worker_cores: usize,
+    n_functions: u64,
+    hot_functions: usize,
+    rate_rps: f64,
+    duration: Time,
+    seed: u64,
+) -> DensityPoint {
+    use crate::workload::PopulationLoop;
+    assert!(hot_functions as u64 <= n_functions);
+    let compute = PlatformConfig::default().function_compute_ns;
+    let wall_t0 = std::time::Instant::now();
+    let mut sim = Sim::new();
+    let engine = match sim.engine_kind() {
+        crate::simcore::EngineKind::Wheel => "wheel",
+        crate::simcore::EngineKind::ReferenceHeap => "reference-heap",
+    };
+    let mut cluster = Cluster::new(backend, n_workers, worker_cores, seed, compute);
+    cluster.policy.max_replicas = n_workers as u32;
+    let mut rng = crate::simcore::Rng::new(seed ^ 0xD57);
+    let hot = crate::workload::population(hot_functions, &mut rng);
+    for (name, _) in &hot {
+        cluster.deploy(&mut sim, FunctionSpec::new(name, "aes600", RuntimeKind::Go));
+    }
+    // The idle tail: registered, deployed once, never invoked. This is
+    // what "a million functions on the platform" means in production
+    // traces — and what the scheduler/engine must shrug off.
+    for i in hot_functions as u64..n_functions {
+        cluster.deploy(
+            &mut sim,
+            FunctionSpec::new(&format!("cold-{i:07}"), "aes600", RuntimeKind::Python),
+        );
+    }
+    // Pre-scale the Zipf head onto every worker: it carries most of the
+    // offered load, and E12 measures the engine, not autoscaler lag.
+    for (name, _) in hot.iter().take(hot_functions.min(64)) {
+        for _ in 1..n_workers {
+            cluster.scale_up(&mut sim, name);
+        }
+    }
+    sim.run_until(sim.now() + SECONDS); // past every cold start
+    let cluster = Rc::new(RefCell::new(cluster));
+    let driver = PopulationLoop::new(hot, rate_rps, duration, seed);
+    let mut r = driver.run_on(&mut sim, &cluster);
+    let wall_secs = wall_t0.elapsed().as_secs_f64();
+    DensityPoint {
+        backend,
+        engine,
+        workers: n_workers,
+        functions: n_functions,
+        hot_functions,
+        submitted: r.submitted,
+        completed: r.completed,
+        dropped: r.dropped,
+        virtual_ns: sim.now(),
+        wall_secs,
+        events_fired: sim.events_fired(),
+        events_per_sec: sim.events_fired() as f64 / wall_secs.max(1e-9),
+        p50: r.gateway_observed.quantile(0.5),
+        p99: r.gateway_observed.quantile(0.99),
+    }
+}
+
+/// Markdown table for a set of density points.
+pub fn density_scale_table(points: &[DensityPoint]) -> Table {
+    let mut t = Table::new(
+        "E12 — density scale: engine throughput at cluster scale",
+        &[
+            "backend",
+            "engine",
+            "workers",
+            "functions",
+            "hot",
+            "submitted",
+            "completed",
+            "dropped",
+            "virtual s",
+            "wall s",
+            "events",
+            "events/s (host)",
+            "p50 (µs)",
+            "p99 (µs)",
+        ],
+    );
+    for p in points {
+        t.push_row(vec![
+            p.backend.name().into(),
+            p.engine.into(),
+            Cell::Int(p.workers as i64),
+            Cell::Int(p.functions as i64),
+            Cell::Int(p.hot_functions as i64),
+            Cell::Int(p.submitted as i64),
+            Cell::Int(p.completed as i64),
+            Cell::Int(p.dropped as i64),
+            Cell::F2(p.virtual_ns as f64 / SECONDS as f64),
+            Cell::F2(p.wall_secs),
+            Cell::Int(p.events_fired as i64),
+            Cell::F2(p.events_per_sec),
+            Cell::NsAsUs(p.p50),
+            Cell::NsAsUs(p.p99),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
 // E10 — multi-tenant trace replay (§1 motivation; [22] skew)
 // ---------------------------------------------------------------------------
 
@@ -931,6 +1080,44 @@ mod tests {
         assert!(p.p99 < 5 * MILLIS, "junction p99 {} at 12k rps", p.p99);
         assert!(p.goodput_rps > 10_000.0, "goodput {}", p.goodput_rps);
         assert_eq!(p.dropped, 0);
+    }
+
+    #[test]
+    fn density_point_small_scale_completes() {
+        let p = density_scale_run(Backend::Junctiond, 2, 10, 200, 16, 2_000.0, 300 * MILLIS, 9);
+        assert_eq!(p.functions, 200);
+        assert_eq!(p.dropped, 0, "junction path must not shed at this rate");
+        assert!(
+            p.completed == p.submitted,
+            "all in-window requests must resolve: {} vs {}",
+            p.completed,
+            p.submitted
+        );
+        assert!(p.submitted > 400, "offered 2k rps over 300ms: {}", p.submitted);
+        assert!(p.events_fired > p.completed * 5, "pipeline is many events per invocation");
+        assert!(p.p50 > 0 && p.p99 >= p.p50);
+    }
+
+    /// E12's determinism clause at test scale: the wheel and the
+    /// reference heap produce identical *virtual-time* results for the
+    /// same density workload (host wall-clock is the only thing allowed
+    /// to differ).
+    #[test]
+    fn density_virtual_results_identical_across_engines() {
+        use crate::simcore::{set_default_engine, EngineKind};
+        let run = || density_scale_run(Backend::Junctiond, 2, 10, 120, 12, 1_500.0, 200 * MILLIS, 4);
+        let a = run();
+        let prev = set_default_engine(EngineKind::ReferenceHeap);
+        let b = run();
+        set_default_engine(prev);
+        assert_eq!(a.engine, "wheel");
+        assert_eq!(b.engine, "reference-heap");
+        assert_eq!(a.submitted, b.submitted);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.virtual_ns, b.virtual_ns, "virtual clocks diverged");
+        assert_eq!(a.events_fired, b.events_fired, "event counts diverged");
+        assert_eq!((a.p50, a.p99), (b.p50, b.p99), "latency tables diverged");
     }
 
     #[test]

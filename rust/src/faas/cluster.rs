@@ -312,8 +312,18 @@ impl Cluster {
         function: &str,
         done: F,
     ) {
-        let (_, locs) = self.functions.get(function).expect("unknown function").clone();
-        let w = if locs.is_empty() {
+        // Routing reads the replica list in place — cloning the spec per
+        // submission (two Strings) was measurable at density-experiment
+        // invocation counts.
+        let routed = {
+            let (_, locs) = self.functions.get(function).expect("unknown function");
+            locs.iter()
+                .min_by_key(|&&i| *self.workers[i].in_flight.borrow())
+                .copied()
+        };
+        let w = if let Some(w) = routed {
+            w
+        } else {
             // Scaled to zero: re-provision on demand through the tier
             // ladder and route to the fresh replica. Prefer a worker that
             // parked this function in its warm pool — any other placement
@@ -329,12 +339,6 @@ impl Cluster {
             let _ = self.scale_up_on(sim, function, w, &spec);
             self.zero_redeploys += 1;
             w
-        } else {
-            // Route to the replica worker with the least in-flight.
-            *locs
-                .iter()
-                .min_by_key(|&&i| *self.workers[i].in_flight.borrow())
-                .expect("no replicas")
         };
         *self.workers[w].in_flight.borrow_mut() += 1;
         {
@@ -387,18 +391,18 @@ impl Cluster {
         }
     }
 
-    /// Drive `reconcile` on the policy interval for `horizon` virtual time.
-    /// (Self-rescheduling closures would keep the sim alive forever, so the
-    /// controller schedules a fixed tick train up front.)
+    /// Drive `reconcile` on the policy interval for `horizon` virtual
+    /// time. The tick times are the seed's fixed train (`now + k·interval`
+    /// while `< now + horizon`), but driven by
+    /// [`crate::simcore::tick_train`]: one pending reconcile event at a
+    /// time instead of `horizon/interval` closures materialized up front —
+    /// at density-experiment horizons the old train alone was tens of
+    /// thousands of heap-resident events per worker.
     pub fn start_controller(cluster: Rc<RefCell<Cluster>>, sim: &mut Sim, horizon: Time) {
         let interval = cluster.borrow().policy.interval;
-        let mut t = sim.now() + interval;
-        let end = sim.now() + horizon;
-        while t < end {
-            let c = cluster.clone();
-            sim.at(t, move |sim| c.borrow_mut().reconcile(sim));
-            t += interval;
-        }
+        crate::simcore::tick_train(sim, interval, horizon, move |sim| {
+            cluster.borrow_mut().reconcile(sim);
+        });
     }
 
     /// Total cores in the pool (worker-manager capacity view).

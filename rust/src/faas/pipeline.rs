@@ -37,9 +37,9 @@ use crate::junctiond::Junctiond;
 use crate::netpath::{NicQueue, NicStats, Packet};
 use crate::oskernel::KernelCosts;
 use crate::rpc::Message;
-use crate::simcore::{CorePool, Rng, Sim, Time, MILLIS};
+use crate::simcore::{CorePool, Rng, Sim, Time, TimerHandle, MILLIS};
 use crate::snapshot::{
-    ArrivalEstimator, PoolConfig, PoolHandle, PoolStats, PrewarmPolicy, ProvisionTier,
+    ArrivalEstimator, PoolConfig, PoolHandle, PoolStats, PrewarmPolicy, ProvisionTier, SlotId,
     SnapshotStore, TierCosts, WarmPool,
 };
 
@@ -154,6 +154,16 @@ struct World {
     tier_costs: TierCosts,
     estimators: BTreeMap<String, ArrivalEstimator>,
     prewarm: PrewarmPolicy,
+    /// Per-slot idle-TTL eviction timers (armed while pool maintenance is
+    /// active; cancelled in O(1) when the slot is acquired or reclaimed).
+    ttl_timers: BTreeMap<SlotId, TimerHandle>,
+    /// True once `start_pool_maintenance` switched the pool to per-slot
+    /// TTL timers.
+    ttl_active: bool,
+    /// Warm slots acquired inside `provision_single` (which has no `Sim`
+    /// access); the public entry points drain this and cancel the slots'
+    /// TTL timers.
+    ttl_cancel_queue: Vec<SlotId>,
     /// Instances provisioned per tier (index = `ProvisionTier::idx`).
     tier_provisioned: [u64; 3],
     /// Invocations served per replica-provisioning tier.
@@ -205,7 +215,10 @@ impl World {
     ) -> Replica {
         let fn_name = &spec.name;
         if allow_pool {
-            if let Some((_, handle)) = self.pool.acquire_warm(fn_name, now) {
+            if let Some((slot, handle)) = self.pool.acquire_warm(fn_name, now) {
+                // The slot left `Warm`: queue its idle-TTL timer for O(1)
+                // cancellation by the caller (which holds the `Sim`).
+                self.ttl_cancel_queue.push(slot);
                 let lat = self.tier_costs.warm_acquire_ns;
                 let (handle, conc) = match handle {
                     PoolHandle::Junction(id) => {
@@ -354,6 +367,9 @@ impl FaasSim {
             tier_costs: TierCosts::for_backend(cfg.backend, &platform),
             estimators: BTreeMap::new(),
             prewarm: PrewarmPolicy::default(),
+            ttl_timers: BTreeMap::new(),
+            ttl_active: false,
+            ttl_cancel_queue: Vec::new(),
             tier_provisioned: [0; 3],
             tier_served: [0; 3],
             gw_inst,
@@ -391,7 +407,7 @@ impl FaasSim {
         allow_pool: bool,
     ) -> (Time, ProvisionTier) {
         let now = sim.now();
-        let (lat, tier, marks) = {
+        let (lat, tier, marks, ttl_cancels) = {
             let mut w = self.w.borrow_mut();
             w.registry.deploy(spec.clone()).expect("duplicate deploy");
             let replicas = if spec.scale.max(1) == 1 {
@@ -428,8 +444,10 @@ impl FaasSim {
                 spec.name.clone(),
                 DeployedFn { spec: spec.clone(), replicas, meta, outstanding: 0 },
             );
-            (lat, tier, marks)
+            let ttl_cancels = std::mem::take(&mut w.ttl_cancel_queue);
+            (lat, tier, marks, ttl_cancels)
         };
+        self.ttl_cancel(sim, ttl_cancels);
         for (cid, at) in marks {
             let this = self.clone();
             sim.at(at, move |_| this.w.borrow_mut().containerd.mark_running(cid));
@@ -464,20 +482,23 @@ impl FaasSim {
         w.provider.invalidate(name);
         w.gateway.evict(name);
         let mem = w.tier_costs.instance_mem_bytes;
+        let mut parked: Vec<SlotId> = Vec::new();
         for r in &f.replicas {
             match r.handle {
                 ReplicaHandle::Junction(_) => {
                     for id in w.jd.park_instances(&r.jd_name) {
-                        if w.pool.try_park(name, PoolHandle::Junction(id), now, mem).is_none() {
-                            w.jd.retire_instance(id);
+                        match w.pool.try_park(name, PoolHandle::Junction(id), now, mem) {
+                            Some(slot) => parked.push(slot),
+                            None => w.jd.retire_instance(id),
                         }
                     }
                 }
                 ReplicaHandle::Container(cid) => {
                     if w.containerd.get(cid).unwrap().state == ContainerState::Running {
                         w.containerd.pause(cid);
-                        if w.pool.try_park(name, PoolHandle::Container(cid), now, mem).is_none() {
-                            w.containerd.stop(cid);
+                        match w.pool.try_park(name, PoolHandle::Container(cid), now, mem) {
+                            Some(slot) => parked.push(slot),
+                            None => w.containerd.stop(cid),
                         }
                     } else {
                         w.containerd.stop(cid);
@@ -485,8 +506,19 @@ impl FaasSim {
                 }
             }
         }
-        let evicted = w.pool.reclaim_to_budget().into_iter().map(|(_, h)| h).collect();
-        w.teardown(evicted);
+        let reclaimed = w.pool.reclaim_to_budget();
+        let reclaimed_slots: Vec<SlotId> = reclaimed.iter().map(|(s, _)| *s).collect();
+        let handles = reclaimed.into_iter().map(|(_, h)| h).collect();
+        w.teardown(handles);
+        drop(w);
+        // Arm per-slot idle-TTL timers for what survived the budget pass;
+        // cancel timers of previously-warm slots the pass reclaimed.
+        for slot in parked {
+            if !reclaimed_slots.contains(&slot) {
+                self.ttl_arm(sim, slot, now);
+            }
+        }
+        self.ttl_cancel(sim, reclaimed_slots);
         true
     }
 
@@ -504,7 +536,7 @@ impl FaasSim {
         allow_pool: bool,
     ) -> Option<(ProvisionTier, Time)> {
         let now = sim.now();
-        let (tier, lat, mark) = {
+        let (tier, lat, mark, ttl_cancels) = {
             let mut w = self.w.borrow_mut();
             let (spec, idx) = {
                 let f = w.functions.get(name)?;
@@ -528,8 +560,10 @@ impl FaasSim {
             f.replicas.push(r);
             f.meta.replicas += 1;
             w.provider.invalidate(name);
-            (tier, lat, mark)
+            let ttl_cancels = std::mem::take(&mut w.ttl_cancel_queue);
+            (tier, lat, mark, ttl_cancels)
         };
+        self.ttl_cancel(sim, ttl_cancels);
         if let Some((cid, at)) = mark {
             let this = self.clone();
             sim.at(at, move |_| this.w.borrow_mut().containerd.mark_running(cid));
@@ -538,20 +572,75 @@ impl FaasSim {
     }
 
     /// TTL sweep: evict idle warm instances past the keep-alive and tear
-    /// them down.
+    /// them down. (Manual/bench entry point; with maintenance active the
+    /// per-slot TTL timers do this exactly at each slot's deadline.)
     pub fn pool_sweep(&self, sim: &mut Sim) {
-        let mut w = self.w.borrow_mut();
-        let now = sim.now();
-        let evicted = w.pool.sweep_ttl(now).into_iter().map(|(_, h)| h).collect();
-        w.teardown(evicted);
+        let slots = {
+            let mut w = self.w.borrow_mut();
+            let now = sim.now();
+            let evicted = w.pool.sweep_ttl(now);
+            let slots: Vec<SlotId> = evicted.iter().map(|(s, _)| *s).collect();
+            let handles = evicted.into_iter().map(|(_, h)| h).collect();
+            w.teardown(handles);
+            slots
+        };
+        self.ttl_cancel(sim, slots);
     }
 
     /// Evict *every* parked instance (bench helper: forces the next
     /// provision down to the snapshot-restore or cold tier).
-    pub fn flush_warm_pool(&self, _sim: &mut Sim) {
+    pub fn flush_warm_pool(&self, sim: &mut Sim) {
+        let slots = {
+            let mut w = self.w.borrow_mut();
+            let evicted = w.pool.flush();
+            let slots: Vec<SlotId> = evicted.iter().map(|(s, _)| *s).collect();
+            let handles = evicted.into_iter().map(|(_, h)| h).collect();
+            w.teardown(handles);
+            slots
+        };
+        self.ttl_cancel(sim, slots);
+    }
+
+    /// Arm the per-slot idle-TTL eviction timer for a freshly-parked (or
+    /// freshly-promoted) warm slot. No-op until `start_pool_maintenance`
+    /// activates timer-driven keep-alive.
+    fn ttl_arm(&self, sim: &mut Sim, slot: SlotId, parked_at: Time) {
+        let (active, ttl) = {
+            let w = self.w.borrow();
+            (w.ttl_active, w.pool.cfg.idle_ttl_ns)
+        };
+        if !active {
+            return;
+        }
+        let this = self.clone();
+        let h = sim.at_handle(parked_at.saturating_add(ttl), move |_| this.ttl_fire(slot));
+        let prev = self.w.borrow_mut().ttl_timers.insert(slot, h);
+        debug_assert!(prev.is_none(), "slot {slot} double-armed a TTL timer");
+    }
+
+    /// A slot's idle TTL expired without an acquire: evict and tear down.
+    /// With real cancellation this only ever fires on a still-warm slot
+    /// (acquire/reclaim/flush cancel the timer), so there is no tombstone
+    /// state to re-check beyond the pool's own defensive guard.
+    fn ttl_fire(&self, slot: SlotId) {
         let mut w = self.w.borrow_mut();
-        let evicted = w.pool.flush().into_iter().map(|(_, h)| h).collect();
-        w.teardown(evicted);
+        w.ttl_timers.remove(&slot);
+        if let Some(h) = w.pool.evict_idle(slot) {
+            w.teardown(vec![h]);
+        }
+    }
+
+    /// Cancel the TTL timers of slots that just left the warm state
+    /// (acquired, reclaimed, swept, or flushed) — O(1) per slot.
+    fn ttl_cancel<I: IntoIterator<Item = SlotId>>(&self, sim: &mut Sim, slots: I) {
+        let handles: Vec<TimerHandle> = {
+            let mut w = self.w.borrow_mut();
+            slots.into_iter().filter_map(|s| w.ttl_timers.remove(&s)).collect()
+        };
+        for h in handles {
+            let live = sim.cancel(h);
+            debug_assert!(live, "TTL timer map held a stale handle");
+        }
     }
 
     /// Prewarm hook: for every deployed function whose estimated arrival
@@ -614,38 +703,83 @@ impl FaasSim {
         for (slot, handle, ready_at) in scheduled {
             let this = self.clone();
             sim.at(ready_at, move |sim| {
-                let mut w = this.w.borrow_mut();
-                w.pool.promote_ready(sim.now());
-                // Containers park paused; Junction instances just sit
-                // idle. Skip the fixup if the slot was acquired (a deploy
-                // landed at this exact instant) or already evicted — the
-                // acquire/teardown paths own the container state then.
-                if w.pool.slot(slot).state == crate::snapshot::SlotState::Warm {
-                    if let PoolHandle::Container(cid) = handle {
-                        w.containerd.mark_running(cid);
-                        if w.containerd.get(cid).unwrap().state == ContainerState::Running {
-                            w.containerd.pause(cid);
+                let (arm, reclaimed_slots) = {
+                    let mut w = this.w.borrow_mut();
+                    w.pool.promote_ready(sim.now());
+                    // Containers park paused; Junction instances just sit
+                    // idle. Skip the fixup if the slot was acquired (a
+                    // deploy landed at this exact instant) or already
+                    // evicted — the acquire/teardown paths own the
+                    // container state then.
+                    let warm = w.pool.slot(slot).state == crate::snapshot::SlotState::Warm;
+                    if warm {
+                        if let PoolHandle::Container(cid) = handle {
+                            w.containerd.mark_running(cid);
+                            if w.containerd.get(cid).unwrap().state == ContainerState::Running {
+                                w.containerd.pause(cid);
+                            }
                         }
                     }
+                    let reclaimed = w.pool.reclaim_to_budget();
+                    let slots: Vec<SlotId> = reclaimed.iter().map(|(s, _)| *s).collect();
+                    let handles = reclaimed.into_iter().map(|(_, h)| h).collect();
+                    w.teardown(handles);
+                    (warm && !slots.contains(&slot), slots)
+                };
+                // The promoted slot starts its idle TTL now; reclaimed
+                // slots lose their timers.
+                if arm {
+                    this.ttl_arm(sim, slot, sim.now());
                 }
-                let evicted = w.pool.reclaim_to_budget().into_iter().map(|(_, h)| h).collect();
-                w.teardown(evicted);
+                this.ttl_cancel(sim, reclaimed_slots);
             });
         }
     }
 
-    /// Drive TTL sweeps + the prewarm hook on a fixed tick train for
-    /// `horizon` of virtual time (same pattern as the cluster controller).
+    /// Drive pool maintenance for `horizon` of virtual time.
+    ///
+    /// Keep-alive switches to **per-slot idle-TTL timers**: every parked
+    /// instance arms a cancellable timer that evicts it exactly at
+    /// `parked_at + idle_ttl`, and the timer is cancelled in O(1) when
+    /// the slot is acquired (or reclaimed by the memory budget) — no
+    /// periodic sweep scanning the pool, no dead sweep closures burning
+    /// host CPU while the pool idles. The prewarm hook still runs on a
+    /// fixed tick cadence, but as a self-rescheduling
+    /// [`crate::simcore::tick_train`] holding one pending event instead
+    /// of `horizon/interval` closures scheduled up front.
+    ///
+    /// Like the seed's sweep train, maintenance is bounded by `horizon`:
+    /// at its end the remaining TTL timers are cancelled and keep-alive
+    /// deactivates (the seed's sweeps simply stopped ticking), so the run
+    /// never evicts past the window the caller asked for.
     pub fn start_pool_maintenance(&self, sim: &mut Sim, interval: Time, horizon: Time) {
-        let mut t = sim.now() + interval;
-        let end = sim.now() + horizon;
-        while t < end {
-            let this = self.clone();
-            sim.at(t, move |sim| {
-                this.pool_sweep(sim);
-                this.prewarm_tick(sim);
-            });
-            t += interval;
+        let warm = {
+            let mut w = self.w.borrow_mut();
+            w.ttl_active = true;
+            w.pool.warm_slots()
+        };
+        for (slot, parked_at) in warm {
+            self.ttl_arm(sim, slot, parked_at);
+        }
+        let this = self.clone();
+        crate::simcore::tick_train(sim, interval, horizon, move |sim| {
+            this.prewarm_tick(sim);
+        });
+        let this = self.clone();
+        sim.after(horizon, move |sim| this.ttl_deactivate(sim));
+    }
+
+    /// Maintenance horizon reached: stop arming TTL timers and cancel the
+    /// ones still pending (their deadlines lie beyond the horizon or they
+    /// would already have fired).
+    fn ttl_deactivate(&self, sim: &mut Sim) {
+        let handles: Vec<TimerHandle> = {
+            let mut w = self.w.borrow_mut();
+            w.ttl_active = false;
+            std::mem::take(&mut w.ttl_timers).into_values().collect()
+        };
+        for h in handles {
+            sim.cancel(h);
         }
     }
 
@@ -879,6 +1013,16 @@ type DoneFn = Box<dyn FnOnce(&mut Sim, RequestTiming)>;
 /// the worker's bounded RX ring. A full ring tail-drops the frame; the
 /// client retransmits after a backoff up to `nic_max_retries` times, then
 /// gives the request up (`done` fires with `timing.dropped`).
+///
+/// The retransmission is a **real cancellable timer**, modeling what the
+/// client actually does on the wire: arm a retransmit timer with every
+/// send, cancel it when the send is acknowledged. In-model the NIC's
+/// accept/drop outcome is synchronous, so the accept-path cancel lands in
+/// the same instant and both paths produce exactly the seed's virtual
+/// times (the seed scheduled the retry closure only on the drop). The
+/// arm+cancel costs one slab insert + O(1) cancel per frame — the price
+/// of exercising engine cancellation on the simulator's hottest path,
+/// counted in `NicStats::retrans_cancelled`.
 fn nic_ingress(
     fs: FaasSim,
     sim: &mut Sim,
@@ -891,30 +1035,47 @@ fn nic_ingress(
         t.nic_in = sim.now();
     }
     t.retries = attempt;
+    // `done` must flow to whichever continuation wins: the delivery
+    // closure (frame accepted) or the retransmit timer (frame dropped).
+    // Cancellation guarantees exactly one of them ever runs.
+    let done_slot: Rc<RefCell<Option<DoneFn>>> = Rc::new(RefCell::new(Some(done)));
+    let backoff = fs.w.borrow().platform.nic_retry_backoff_ns;
+    let retrans = {
+        let fs2 = fs.clone();
+        let name2 = name.clone();
+        let slot = done_slot.clone();
+        sim.after_handle(backoff, move |sim| {
+            let done = slot.borrow_mut().take().expect("retransmit raced the delivery path");
+            nic_ingress(fs2, sim, name2, t, attempt + 1, done);
+        })
+    };
     enum Decision {
         Accept { kick: bool },
-        Retry(Time),
+        Retry,
         GiveUp,
     }
-    let mut done_slot = Some(done);
     let decision = {
         let mut w = fs.w.borrow_mut();
         if !w.nic.is_full() {
             let bytes = Message::request_frame_size(&name, w.payload_bytes);
             let fs2 = fs.clone();
             let name2 = name.clone();
-            let done2 = done_slot.take().unwrap();
+            let slot = done_slot.clone();
             let kick = w.nic.enqueue(Packet {
                 bytes,
                 enqueued_at: sim.now(),
-                deliver: Box::new(move |sim| stage_gateway(fs2, sim, name2, t, done2)),
+                deliver: Box::new(move |sim| {
+                    let done =
+                        slot.borrow_mut().take().expect("delivery raced the retransmit timer");
+                    stage_gateway(fs2, sim, name2, t, done);
+                }),
             });
             Decision::Accept { kick }
         } else {
             w.nic.note_drop();
             if (attempt as u64) < w.platform.nic_max_retries {
                 w.nic.stats.retries += 1;
-                Decision::Retry(w.platform.nic_retry_backoff_ns)
+                Decision::Retry
             } else {
                 w.dropped += 1;
                 if let Some(f) = w.functions.get_mut(&name) {
@@ -926,6 +1087,12 @@ fn nic_ingress(
     };
     match decision {
         Decision::Accept { kick } => {
+            // Frame accepted: cancel the retransmit timer (O(1); the seed
+            // engine would have carried it to the top of the heap as a
+            // tombstone).
+            let live = sim.cancel(retrans);
+            debug_assert!(live, "retransmit timer must be live at accept");
+            fs.w.borrow_mut().nic.stats.retrans_cancelled += 1;
             if kick {
                 // Defer the first poll one event so a burst of same-instant
                 // arrivals coalesces into one drain batch.
@@ -933,16 +1100,16 @@ fn nic_ingress(
                 sim.after(0, move |sim| nic_drain(fs2, sim));
             }
         }
-        Decision::Retry(backoff) => {
-            let done2 = done_slot.take().unwrap();
-            let fs2 = fs.clone();
-            sim.after(backoff, move |sim| nic_ingress(fs2, sim, name, t, attempt + 1, done2));
+        Decision::Retry => {
+            // Tail drop: the armed timer fires the retransmission at
+            // `now + backoff`.
         }
         Decision::GiveUp => {
+            sim.cancel(retrans);
             t.dropped = true;
             t.done = sim.now();
-            let done2 = done_slot.take().unwrap();
-            done2(sim, t);
+            let done = done_slot.borrow_mut().take().expect("done already consumed");
+            done(sim, t);
         }
     }
 }
@@ -1542,6 +1709,10 @@ mod tests {
         let stats = fs.nic_stats();
         assert!(stats.rx_dropped > 0 && stats.retries > 0, "{stats:?}");
         assert_eq!(stats.rx_delivered, c, "accepted == completed");
+        assert_eq!(
+            stats.retrans_cancelled, stats.rx_enqueued,
+            "every accepted frame must cancel its retransmit timer in O(1)"
+        );
         assert_eq!(fs.dropped(), d);
         assert_eq!(fs.completed(), c);
     }

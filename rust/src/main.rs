@@ -5,6 +5,8 @@
 //! junctiond-repro fig6      [--duration-ms MS] [--seed S] [--csv DIR]
 //! junctiond-repro coldstart [--trials N] [--seed S]
 //! junctiond-repro ablation  --which cache|polling|scaleup
+//! junctiond-repro density   [--workers N] [--worker-cores N] [--functions N]
+//!                           [--hot N] [--rate RPS] [--duration-ms MS] [--seed S]
 //! junctiond-repro serve     --mode kernel|bypass [--requests N]
 //! junctiond-repro calibrate [--runs N]
 //! junctiond-repro monitor
@@ -61,10 +63,11 @@ fn maybe_csv(
 
 fn usage() -> ! {
     eprintln!(
-        "usage: junctiond-repro <fig5|fig6|coldstart|ablation|serve|calibrate|monitor> [flags]\n\
+        "usage: junctiond-repro <fig5|fig6|coldstart|ablation|density|serve|calibrate|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
          --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath\n\
-         --mode kernel|bypass --requests N --runs N --workers N --worker-cores N"
+         --mode kernel|bypass --requests N --runs N --workers N --worker-cores N\n\
+         --functions N --hot N --rate RPS"
     );
     std::process::exit(2);
 }
@@ -145,6 +148,36 @@ fn main() -> Result<()> {
             };
             println!("{}", table.to_markdown());
             maybe_csv(&flags, &table, &format!("ablation_{which}"))?;
+        }
+        "density" => {
+            // E12: the engine at density scale. Defaults are a laptop-sized
+            // slice; the paper-scale sweep (≥1M functions / ≥10M
+            // invocations) is `benches/density_scale.rs` without
+            // BENCH_QUICK, or these flags turned up.
+            let workers = get_u64(&flags, "workers", 4)? as usize;
+            let cores = get_u64(&flags, "worker-cores", 16)? as usize;
+            let functions = get_u64(&flags, "functions", 100_000)?;
+            let hot = get_u64(&flags, "hot", 1_024)? as usize;
+            let rate = get_u64(&flags, "rate", 50_000)? as f64;
+            let dur = get_u64(&flags, "duration-ms", 2_000)? * MILLIS;
+            let seed = get_u64(&flags, "seed", 12)?;
+            let p = ex::density_scale_run(
+                Backend::Junctiond,
+                workers,
+                cores,
+                functions,
+                hot,
+                rate,
+                dur,
+                seed,
+            );
+            let table = ex::density_scale_table(std::slice::from_ref(&p));
+            println!("{}", table.to_markdown());
+            println!(
+                "engine={} events={} wall={:.2}s → {:.0} events/s (host)",
+                p.engine, p.events_fired, p.wall_secs, p.events_per_sec
+            );
+            maybe_csv(&flags, &table, "density")?;
         }
         "serve" => {
             let mode = match flags.get("mode").map(|s| s.as_str()).unwrap_or("bypass") {

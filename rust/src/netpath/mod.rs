@@ -51,6 +51,10 @@ pub struct NicStats {
     pub rx_dropped: u64,
     /// Client retransmissions scheduled after a tail drop.
     pub retries: u64,
+    /// Client retransmit timers cancelled in O(1) because the NIC
+    /// accepted the frame (the engine-cancellation fast path; with the
+    /// seed heap these would have fired as dead tombstone closures).
+    pub retrans_cancelled: u64,
     /// Bytes accepted into the RX ring.
     pub rx_bytes: u64,
     /// Response frames sent back through the NIC (accounting only; the TX

@@ -1,7 +1,38 @@
-//! The event-heap core of the simulator.
+//! The event engine of the simulator: a two-tier scheduler (hierarchical
+//! timer wheel + far-timer heap) over a slab arena of event entries.
+//!
+//! The seed engine was one global `BinaryHeap<Box<dyn FnOnce>>`: every
+//! event paid an O(log n) sift through a pointer-chasing heap, there was
+//! no cancellation (dead timers had to fire as tombstone closures and
+//! check a flag), and at cluster scale the heap becomes the simulator's
+//! hottest data structure. The rebuilt engine keeps the exact same
+//! semantics — events fire in `(time, seq)` order, ties in schedule
+//! order, bit-deterministic — but stores events in an [`EventSlab`]
+//! (reused slots, zero steady-state allocation) ordered by a
+//! [`TimerWheel`] (O(1) insert/fire for near timers, heap tier for far
+//! ones), and returns a generation-checked [`TimerHandle`] supporting
+//! O(1) [`Sim::cancel`] / [`Sim::reschedule`]. A cancelled timer is never
+//! sifted or fired: its slab slot is freed immediately and the stale
+//! wheel reference is skipped with one comparison when it surfaces.
+//!
+//! The seed's heap survives as [`EngineKind::ReferenceHeap`] — same slab,
+//! same API, `BinaryHeap` ordering — kept as the differential-testing
+//! oracle (`property_wheel_matches_reference_heap`, plus the cross-engine
+//! experiment-output tests in `tests/integration.rs`) and as the baseline
+//! the `engine_throughput` bench measures the ≥5× speedup against.
+//!
+//! Scheduling into the past is **clamp-and-count** in every build
+//! profile: the event fires at `now` and [`Sim::past_schedules`]
+//! increments (the seed silently clamped in release but asserted in
+//! debug, so the two profiles disagreed).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+
+use super::slab::{EventFn, EventKey, EventSlab};
+use super::wheel::{TimerWheel, WheelEntry};
+
+pub use super::slab::TimerHandle;
 
 /// Virtual time in nanoseconds.
 pub type Time = u64;
@@ -13,43 +44,74 @@ pub const MILLIS: Time = 1_000_000;
 /// One virtual second in `Time` units.
 pub const SECONDS: Time = 1_000_000_000;
 
-type EventFn = Box<dyn FnOnce(&mut Sim)>;
-
-struct Entry {
-    time: Time,
-    seq: u64,
-    event: EventFn,
+/// Which ordering structure a [`Sim`] uses. Both fire the identical
+/// `(time, seq)` order; they differ only in host-side cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Two-tier scheduler: hierarchical timer wheel + far heap (default).
+    Wheel,
+    /// The seed's `BinaryHeap` ordering over the same slab. Cancelled
+    /// events stay in the heap as tombstones until popped — the cost
+    /// profile the wheel is benchmarked against.
+    ReferenceHeap,
 }
 
-// Order by (time, seq): seq is the insertion counter, so simultaneous events
-// fire in schedule order — this is what makes runs bit-deterministic.
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
-    }
+thread_local! {
+    static DEFAULT_ENGINE: std::cell::Cell<EngineKind> =
+        std::cell::Cell::new(EngineKind::Wheel);
 }
 
-/// A discrete-event simulation: an event heap plus a virtual clock.
+/// Set the engine [`Sim::new`] uses on this thread; returns the previous
+/// default. The differential tests flip this to run whole experiments
+/// under both engines without threading a parameter through every layer.
+pub fn set_default_engine(kind: EngineKind) -> EngineKind {
+    DEFAULT_ENGINE.with(|c| {
+        let prev = c.get();
+        c.set(kind);
+        prev
+    })
+}
+
+/// The engine new `Sim`s on this thread are built with.
+pub fn default_engine() -> EngineKind {
+    DEFAULT_ENGINE.with(|c| c.get())
+}
+
+enum EngineImpl {
+    Wheel(TimerWheel),
+    ReferenceHeap(BinaryHeap<Reverse<WheelEntry>>),
+}
+
+/// Engine-internal counters for the §Perf benches.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    pub kind: EngineKind,
+    /// Live (scheduled, not fired/cancelled) events.
+    pub pending: usize,
+    /// Event-slab slots ever created (high-water mark of concurrency).
+    pub slot_capacity: usize,
+    /// Events cancelled via [`Sim::cancel`] (includes reschedules).
+    pub cancelled: u64,
+    /// Schedules clamped because they targeted the past.
+    pub past_schedules: u64,
+}
+
+/// A discrete-event simulation: the two-tier event scheduler plus a
+/// virtual clock.
 ///
 /// Events are boxed `FnOnce(&mut Sim)` closures; world state lives in
-/// `Rc<RefCell<..>>` structures captured by the closures (the simulation is
-/// single-threaded by construction).
+/// `Rc<RefCell<..>>` structures captured by the closures (the simulation
+/// is single-threaded by construction). The seed's `at`/`after`/
+/// `run_until`/`run_to_completion` API is unchanged; `*_handle`,
+/// `cancel` and `reschedule` are the additions.
 pub struct Sim {
     now: Time,
     seq: u64,
-    heap: BinaryHeap<Reverse<Entry>>,
+    slab: EventSlab,
+    engine: EngineImpl,
     events_fired: u64,
+    cancelled: u64,
+    past_schedules: u64,
 }
 
 impl Default for Sim {
@@ -59,8 +121,39 @@ impl Default for Sim {
 }
 
 impl Sim {
+    /// New simulation on this thread's default engine (the wheel, unless
+    /// a differential test flipped it).
     pub fn new() -> Self {
-        Sim { now: 0, seq: 0, heap: BinaryHeap::new(), events_fired: 0 }
+        Self::with_engine(default_engine())
+    }
+
+    /// New simulation on an explicit engine.
+    pub fn with_engine(kind: EngineKind) -> Self {
+        let engine = match kind {
+            EngineKind::Wheel => EngineImpl::Wheel(TimerWheel::new()),
+            EngineKind::ReferenceHeap => EngineImpl::ReferenceHeap(BinaryHeap::new()),
+        };
+        Sim {
+            now: 0,
+            seq: 0,
+            slab: EventSlab::new(),
+            engine,
+            events_fired: 0,
+            cancelled: 0,
+            past_schedules: 0,
+        }
+    }
+
+    /// New simulation on the seed-shaped reference heap engine.
+    pub fn new_reference() -> Self {
+        Self::with_engine(EngineKind::ReferenceHeap)
+    }
+
+    pub fn engine_kind(&self) -> EngineKind {
+        match self.engine {
+            EngineImpl::Wheel(_) => EngineKind::Wheel,
+            EngineImpl::ReferenceHeap(_) => EngineKind::ReferenceHeap,
+        }
     }
 
     /// Current virtual time.
@@ -75,12 +168,51 @@ impl Sim {
         self.events_fired
     }
 
-    /// Schedule `event` at absolute virtual time `t` (must be >= now).
-    pub fn at<F: FnOnce(&mut Sim) + 'static>(&mut self, t: Time, event: F) {
-        debug_assert!(t >= self.now, "scheduling into the past: {} < {}", t, self.now);
-        let seq = self.seq;
+    /// Schedules that targeted a time before `now` and were clamped to
+    /// fire immediately (the consistent clamp-and-count policy).
+    #[inline]
+    pub fn past_schedules(&self) -> u64 {
+        self.past_schedules
+    }
+
+    pub fn engine_stats(&self) -> EngineStats {
+        EngineStats {
+            kind: self.engine_kind(),
+            pending: self.slab.len(),
+            slot_capacity: self.slab.capacity(),
+            cancelled: self.cancelled,
+            past_schedules: self.past_schedules,
+        }
+    }
+
+    /// Number of pending (live) events.
+    pub fn pending(&self) -> usize {
+        self.slab.len()
+    }
+
+    fn schedule_boxed(&mut self, t: Time, cb: EventFn) -> TimerHandle {
+        let t = if t < self.now {
+            self.past_schedules += 1;
+            self.now
+        } else {
+            t
+        };
+        let key = EventKey { time: t, seq: self.seq };
         self.seq += 1;
-        self.heap.push(Reverse(Entry { time: t.max(self.now), seq, event: Box::new(event) }));
+        let h = self.slab.insert(key, cb);
+        match &mut self.engine {
+            EngineImpl::Wheel(w) => w.insert(key, h.idx, h.gen, self.now),
+            EngineImpl::ReferenceHeap(heap) => {
+                heap.push(Reverse(WheelEntry { key, idx: h.idx, gen: h.gen }));
+            }
+        }
+        h
+    }
+
+    /// Schedule `event` at absolute virtual time `t`. Times in the past
+    /// are clamped to `now` and counted in [`Sim::past_schedules`].
+    pub fn at<F: FnOnce(&mut Sim) + 'static>(&mut self, t: Time, event: F) {
+        let _ = self.schedule_boxed(t, Box::new(event));
     }
 
     /// Schedule `event` after a relative delay.
@@ -89,43 +221,124 @@ impl Sim {
         self.at(self.now + delay, event);
     }
 
-    /// Run until the heap is empty or the clock passes `until`.
+    /// Like [`Sim::at`], returning a handle for O(1) cancel/reschedule.
+    pub fn at_handle<F: FnOnce(&mut Sim) + 'static>(&mut self, t: Time, event: F) -> TimerHandle {
+        self.schedule_boxed(t, Box::new(event))
+    }
+
+    /// Like [`Sim::after`], returning a handle for O(1) cancel/reschedule.
+    #[inline]
+    pub fn after_handle<F: FnOnce(&mut Sim) + 'static>(
+        &mut self,
+        delay: Time,
+        event: F,
+    ) -> TimerHandle {
+        self.at_handle(self.now + delay, event)
+    }
+
+    /// Cancel a scheduled event: O(1), frees its slab slot immediately.
+    /// Returns `false` if the handle is stale (already fired, cancelled,
+    /// or rescheduled) — never an error.
+    pub fn cancel(&mut self, h: TimerHandle) -> bool {
+        if self.slab.cancel(h) {
+            self.cancelled += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move a pending event to a new absolute time, keeping its callback:
+    /// O(1). The event is re-sequenced (it behaves like a fresh schedule
+    /// for tie-breaking) and the old handle goes stale; `None` if the
+    /// handle was already stale. Times in the past clamp-and-count like
+    /// [`Sim::at`].
+    pub fn reschedule(&mut self, h: TimerHandle, t: Time) -> Option<TimerHandle> {
+        let (_, cb) = self.slab.take(h.idx, h.gen)?;
+        self.cancelled += 1;
+        Some(self.schedule_boxed(t, cb))
+    }
+
+    /// Pop the earliest live event at or before `until`, skipping stale
+    /// (cancelled/rescheduled) references lazily.
+    fn pop_live(&mut self, until: Time) -> Option<(EventKey, EventFn)> {
+        loop {
+            let (key, idx, gen) = match &mut self.engine {
+                EngineImpl::Wheel(w) => w.pop_at_or_before(until)?,
+                EngineImpl::ReferenceHeap(heap) => {
+                    let &Reverse(e) = heap.peek()?;
+                    if e.key.time > until {
+                        return None;
+                    }
+                    heap.pop();
+                    (e.key, e.idx, e.gen)
+                }
+            };
+            if let Some((k, cb)) = self.slab.take(idx, gen) {
+                debug_assert_eq!(k, key);
+                return Some((k, cb));
+            }
+            // Stale reference: the event was cancelled or rescheduled.
+        }
+    }
+
+    /// Run until no live event remains at or before `until`.
     ///
     /// Events scheduled exactly at `until` still fire; the first event
-    /// strictly after `until` is left in the heap and the clock stops at
-    /// `until`.
+    /// strictly after `until` stays pending and the clock stops at
+    /// `until`. Calling with `until < now` is a no-op: the clock never
+    /// moves backwards (the seed engine's early-return path set
+    /// `now = until` unclamped, rewinding the clock).
     pub fn run_until(&mut self, until: Time) {
-        loop {
-            match self.heap.peek() {
-                None => break,
-                Some(Reverse(e)) if e.time > until => {
-                    self.now = until;
-                    return;
-                }
-                Some(_) => {}
-            }
-            let Reverse(entry) = self.heap.pop().unwrap();
-            self.now = entry.time;
+        while let Some((key, cb)) = self.pop_live(until) {
+            self.now = key.time;
             self.events_fired += 1;
-            (entry.event)(self);
+            cb(self);
         }
-        // Heap drained before `until`: advance the clock to the horizon.
         self.now = self.now.max(until);
     }
 
-    /// Run until the event heap drains completely.
+    /// Run until every live event has fired.
     pub fn run_to_completion(&mut self) {
-        while let Some(Reverse(entry)) = self.heap.pop() {
-            self.now = entry.time;
+        while let Some((key, cb)) = self.pop_live(Time::MAX) {
+            self.now = key.time;
             self.events_fired += 1;
-            (entry.event)(self);
+            cb(self);
         }
     }
+}
 
-    /// Number of pending events.
-    pub fn pending(&self) -> usize {
-        self.heap.len()
+/// Drive `tick` every `interval` from `sim.now() + interval` until
+/// `sim.now() + horizon` (exclusive) — the fixed tick times of the seed's
+/// pre-scheduled trains (controller reconcile, pool maintenance), but
+/// holding **one** pending event at a time instead of `horizon/interval`
+/// closures scheduled up front.
+pub fn tick_train<F: FnMut(&mut Sim) + 'static>(
+    sim: &mut Sim,
+    interval: Time,
+    horizon: Time,
+    tick: F,
+) {
+    assert!(interval > 0, "tick train needs a positive interval");
+    let end = sim.now() + horizon;
+    let first = sim.now() + interval;
+    schedule_tick(sim, first, interval, end, std::rc::Rc::new(std::cell::RefCell::new(tick)));
+}
+
+fn schedule_tick(
+    sim: &mut Sim,
+    at: Time,
+    interval: Time,
+    end: Time,
+    tick: std::rc::Rc<std::cell::RefCell<dyn FnMut(&mut Sim)>>,
+) {
+    if at >= end {
+        return;
     }
+    sim.at(at, move |sim| {
+        (tick.borrow_mut())(sim);
+        schedule_tick(sim, at + interval, interval, end, tick);
+    });
 }
 
 #[cfg(test)]
@@ -134,28 +347,34 @@ mod tests {
     use std::cell::RefCell;
     use std::rc::Rc;
 
+    const BOTH: [EngineKind; 2] = [EngineKind::Wheel, EngineKind::ReferenceHeap];
+
     #[test]
     fn fires_in_time_order() {
-        let mut sim = Sim::new();
-        let log = Rc::new(RefCell::new(Vec::new()));
-        for &t in &[30u64, 10, 20] {
-            let log = log.clone();
-            sim.at(t, move |s| log.borrow_mut().push(s.now()));
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            for &t in &[30u64, 10, 20] {
+                let log = log.clone();
+                sim.at(t, move |s| log.borrow_mut().push(s.now()));
+            }
+            sim.run_to_completion();
+            assert_eq!(*log.borrow(), vec![10, 20, 30], "{kind:?}");
         }
-        sim.run_to_completion();
-        assert_eq!(*log.borrow(), vec![10, 20, 30]);
     }
 
     #[test]
     fn ties_fire_in_schedule_order() {
-        let mut sim = Sim::new();
-        let log = Rc::new(RefCell::new(Vec::new()));
-        for i in 0..100 {
-            let log = log.clone();
-            sim.at(5, move |_| log.borrow_mut().push(i));
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            for i in 0..100 {
+                let log = log.clone();
+                sim.at(5, move |_| log.borrow_mut().push(i));
+            }
+            sim.run_to_completion();
+            assert_eq!(*log.borrow(), (0..100).collect::<Vec<_>>(), "{kind:?}");
         }
-        sim.run_to_completion();
-        assert_eq!(*log.borrow(), (0..100).collect::<Vec<_>>());
     }
 
     #[test]
@@ -178,33 +397,385 @@ mod tests {
 
     #[test]
     fn run_until_stops_and_resumes() {
-        let mut sim = Sim::new();
-        let log = Rc::new(RefCell::new(Vec::new()));
-        for &t in &[10u64, 20, 30] {
-            let log = log.clone();
-            sim.at(t, move |s| log.borrow_mut().push(s.now()));
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            for &t in &[10u64, 20, 30] {
+                let log = log.clone();
+                sim.at(t, move |s| log.borrow_mut().push(s.now()));
+            }
+            sim.run_until(20);
+            assert_eq!(*log.borrow(), vec![10, 20]);
+            assert_eq!(sim.now(), 20);
+            assert_eq!(sim.pending(), 1);
+            sim.run_to_completion();
+            assert_eq!(*log.borrow(), vec![10, 20, 30]);
         }
-        sim.run_until(20);
-        assert_eq!(*log.borrow(), vec![10, 20]);
-        assert_eq!(sim.now(), 20);
-        assert_eq!(sim.pending(), 1);
-        sim.run_to_completion();
-        assert_eq!(*log.borrow(), vec![10, 20, 30]);
+    }
+
+    /// Regression (satellite): `run_until(until < now)` must not rewind
+    /// the clock. The seed's early-return branch (pending event beyond
+    /// `until`) assigned `self.now = until` unclamped.
+    #[test]
+    fn run_until_never_moves_clock_backwards() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            sim.at(200, |_| {});
+            sim.run_until(100);
+            assert_eq!(sim.now(), 100);
+            // Pending-event path (the seed bug).
+            sim.run_until(50);
+            assert_eq!(sim.now(), 100, "{kind:?}: clock rewound with events pending");
+            // Drained path.
+            sim.run_to_completion();
+            assert_eq!(sim.now(), 200);
+            sim.run_until(120);
+            assert_eq!(sim.now(), 200, "{kind:?}: clock rewound after drain");
+        }
+    }
+
+    /// Satellite: scheduling into the past clamps to `now` and counts, in
+    /// every build profile and on both engines.
+    #[test]
+    fn scheduling_into_past_clamps_and_counts() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            sim.at(100, |_| {});
+            sim.run_to_completion();
+            assert_eq!(sim.now(), 100);
+            let fired_at = Rc::new(RefCell::new(0u64));
+            let f = fired_at.clone();
+            sim.at(40, move |s| *f.borrow_mut() = s.now());
+            assert_eq!(sim.past_schedules(), 1);
+            sim.run_to_completion();
+            assert_eq!(*fired_at.borrow(), 100, "{kind:?}: past event must fire at now");
+            assert_eq!(sim.now(), 100);
+            // Relative scheduling never goes backwards — counter stays.
+            sim.after(10, |_| {});
+            sim.run_to_completion();
+            assert_eq!(sim.past_schedules(), 1);
+        }
     }
 
     #[test]
     fn clock_is_monotone_under_many_events() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let last = Rc::new(RefCell::new(0u64));
+            let mut rng = crate::simcore::Rng::new(42);
+            for _ in 0..10_000 {
+                let t = rng.next_u64() % 1_000_000;
+                let last = last.clone();
+                sim.at(t, move |s| {
+                    assert!(s.now() >= *last.borrow());
+                    *last.borrow_mut() = s.now();
+                });
+            }
+            sim.run_to_completion();
+        }
+    }
+
+    #[test]
+    fn cancel_prevents_fire_and_is_idempotent() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            let l1 = log.clone();
+            sim.at(10, move |_| l1.borrow_mut().push(10));
+            let l2 = log.clone();
+            let h = sim.at_handle(20, move |_| l2.borrow_mut().push(20));
+            let l3 = log.clone();
+            sim.at(30, move |_| l3.borrow_mut().push(30));
+            assert_eq!(sim.pending(), 3);
+            assert!(sim.cancel(h));
+            assert_eq!(sim.pending(), 2, "{kind:?}: cancel must free immediately");
+            assert!(!sim.cancel(h), "double cancel is a no-op");
+            sim.run_to_completion();
+            assert_eq!(*log.borrow(), vec![10, 30], "{kind:?}");
+            assert_eq!(sim.events_fired(), 2, "{kind:?}: cancelled event must not fire");
+            assert!(!sim.cancel(h), "cancel after run is still a no-op");
+        }
+    }
+
+    /// Regression: a cancelled entry later than every live event leaves
+    /// the wheel's internal clock ahead of the engine clock after
+    /// `run_to_completion` drains it. A subsequent (valid) schedule must
+    /// re-anchor and fire at the right time instead of panicking or
+    /// cascading out of the wheel.
+    #[test]
+    fn schedule_after_draining_cancelled_tail() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            sim.at(50, |_| {});
+            let h = sim.at_handle(100, |_| {});
+            sim.cancel(h);
+            sim.run_to_completion();
+            assert_eq!(sim.now(), 50, "{kind:?}: stale tail must not advance the clock");
+            let fired = Rc::new(RefCell::new(Vec::new()));
+            let f = fired.clone();
+            sim.after(10, move |s| f.borrow_mut().push(s.now()));
+            sim.run_to_completion();
+            assert_eq!(*fired.borrow(), vec![60], "{kind:?}");
+            assert_eq!(sim.past_schedules(), 0, "{kind:?}: 60 is the future, not the past");
+        }
+    }
+
+    #[test]
+    fn cancel_after_fire_is_stale() {
         let mut sim = Sim::new();
-        let last = Rc::new(RefCell::new(0u64));
-        let mut rng = crate::simcore::Rng::new(42);
-        for _ in 0..10_000 {
-            let t = rng.next_u64() % 1_000_000;
-            let last = last.clone();
-            sim.at(t, move |s| {
-                assert!(s.now() >= *last.borrow());
-                *last.borrow_mut() = s.now();
-            });
+        let h = sim.at_handle(5, |_| {});
+        sim.run_to_completion();
+        assert!(!sim.cancel(h));
+    }
+
+    #[test]
+    fn reschedule_moves_event_and_invalidates_old_handle() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            let l = log.clone();
+            let h = sim.at_handle(100, move |s| l.borrow_mut().push(s.now()));
+            let h2 = sim.reschedule(h, 40).expect("live handle reschedules");
+            assert!(!sim.cancel(h), "old handle must be stale after reschedule");
+            sim.run_to_completion();
+            assert_eq!(*log.borrow(), vec![40], "{kind:?}");
+            assert_eq!(sim.events_fired(), 1);
+            assert!(sim.reschedule(h2, 50).is_none(), "fired handle cannot reschedule");
+        }
+    }
+
+    #[test]
+    fn rescheduled_event_ties_as_fresh_schedule() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            let l1 = log.clone();
+            let h = sim.at_handle(10, move |_| l1.borrow_mut().push("moved"));
+            let l2 = log.clone();
+            sim.at(50, move |_| l2.borrow_mut().push("fixed"));
+            // Move the first event onto the second's instant: it now ties
+            // as the *later* schedule and fires second.
+            sim.reschedule(h, 50).unwrap();
+            sim.run_to_completion();
+            assert_eq!(*log.borrow(), vec!["fixed", "moved"], "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn far_horizon_timers_fire_in_order() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            // Mix wheel-range and far-tier (≥ 2^36 ns ≈ 69 s) targets.
+            for &t in &[500 * SECONDS, 1, 100 * SECONDS, 70 * SECONDS, MILLIS, 3] {
+                let log = log.clone();
+                sim.at(t, move |s| log.borrow_mut().push(s.now()));
+            }
+            sim.run_to_completion();
+            assert_eq!(
+                *log.borrow(),
+                vec![1, 3, MILLIS, 70 * SECONDS, 100 * SECONDS, 500 * SECONDS],
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn cancel_far_timer_before_fire() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            let fired = Rc::new(RefCell::new(false));
+            let f = fired.clone();
+            let h = sim.at_handle(120 * SECONDS, move |_| *f.borrow_mut() = true);
+            sim.at(SECONDS, |_| {});
+            sim.run_until(2 * SECONDS);
+            assert!(sim.cancel(h));
+            sim.run_to_completion();
+            assert!(!*fired.borrow(), "{kind:?}");
+            assert_eq!(sim.now(), 2 * SECONDS, "no live event after the horizon");
+        }
+    }
+
+    #[test]
+    fn tick_train_fires_seed_tick_times_with_one_pending_event() {
+        for kind in BOTH {
+            let mut sim = Sim::with_engine(kind);
+            sim.at(7, |_| {});
+            sim.run_to_completion(); // now = 7
+            let ticks = Rc::new(RefCell::new(Vec::new()));
+            let t2 = ticks.clone();
+            tick_train(&mut sim, 10, 45, move |s| t2.borrow_mut().push(s.now()));
+            assert_eq!(sim.pending(), 1, "{kind:?}: train holds one event at a time");
+            sim.run_to_completion();
+            // Seed semantics: t = now+i·interval while t < now+horizon.
+            assert_eq!(*ticks.borrow(), vec![17, 27, 37, 47], "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn events_fired_counts_only_live_fires() {
+        let mut sim = Sim::new();
+        for i in 0..10u64 {
+            sim.at(i, |_| {});
+        }
+        let h = sim.at_handle(100, |_| {});
+        sim.cancel(h);
+        sim.run_to_completion();
+        assert_eq!(sim.events_fired(), 10);
+        assert_eq!(sim.pending(), 0);
+        assert_eq!(sim.engine_stats().cancelled, 1);
+    }
+
+    #[test]
+    fn default_engine_is_thread_local_and_restorable() {
+        assert_eq!(default_engine(), EngineKind::Wheel);
+        let prev = set_default_engine(EngineKind::ReferenceHeap);
+        assert_eq!(prev, EngineKind::Wheel);
+        assert_eq!(Sim::new().engine_kind(), EngineKind::ReferenceHeap);
+        set_default_engine(prev);
+        assert_eq!(Sim::new().engine_kind(), EngineKind::Wheel);
+    }
+
+    // ---- differential property test (satellite) -------------------------
+
+    /// What one event does when it fires. Targets refer to event ids in
+    /// the shared plan; acting on an already-fired/cancelled target is a
+    /// deterministic no-op on both engines.
+    #[derive(Clone)]
+    enum Act {
+        Spawn { delta: Time, id: usize },
+        Cancel { target: usize },
+        Resched { target: usize, delta: Time },
+    }
+
+    struct Ctx {
+        log: RefCell<Vec<(usize, Time)>>,
+        handles: RefCell<Vec<Option<TimerHandle>>>,
+        plan: Vec<Vec<Act>>,
+    }
+
+    fn schedule_event(sim: &mut Sim, at: Time, id: usize, ctx: Rc<Ctx>) {
+        let c = ctx.clone();
+        let h = sim.at_handle(at, move |sim| {
+            c.log.borrow_mut().push((id, sim.now()));
+            let acts = c.plan[id].clone();
+            for a in acts {
+                match a {
+                    Act::Spawn { delta, id: cid } => {
+                        let at = sim.now() + delta;
+                        schedule_event(sim, at, cid, c.clone());
+                    }
+                    Act::Cancel { target } => {
+                        let h = c.handles.borrow_mut()[target].take();
+                        if let Some(h) = h {
+                            sim.cancel(h);
+                        }
+                    }
+                    Act::Resched { target, delta } => {
+                        let h = c.handles.borrow_mut()[target].take();
+                        if let Some(h) = h {
+                            let t = sim.now() + delta;
+                            let h2 = sim.reschedule(h, t);
+                            c.handles.borrow_mut()[target] = h2;
+                        }
+                    }
+                }
+            }
+        });
+        ctx.handles.borrow_mut()[id] = Some(h);
+    }
+
+    fn run_plan(
+        kind: EngineKind,
+        roots: &[(Time, usize)],
+        plan: &[Vec<Act>],
+    ) -> (Vec<(usize, Time)>, u64, Time, u64) {
+        let mut sim = Sim::with_engine(kind);
+        let ctx = Rc::new(Ctx {
+            log: RefCell::new(Vec::new()),
+            handles: RefCell::new(vec![None; plan.len()]),
+            plan: plan.to_vec(),
+        });
+        for &(t, id) in roots {
+            schedule_event(&mut sim, t, id, ctx.clone());
         }
         sim.run_to_completion();
+        let log = ctx.log.borrow().clone();
+        (log, sim.events_fired(), sim.now(), sim.past_schedules())
+    }
+
+    /// Satellite: the wheel and the reference heap fire the identical
+    /// event sequence — times, tie order, clock, counters — across seeded
+    /// random schedules with nesting, cancellations and re-schedules
+    /// spanning every wheel level and the far tier.
+    #[test]
+    fn property_wheel_matches_reference_heap() {
+        use crate::simcore::{forall, Gen};
+        forall("wheel ≡ reference heap", 30, |g: &mut Gen| {
+            let m = g.usize(20, 60);
+            let mut plan: Vec<Vec<Act>> = vec![Vec::new(); m];
+            let mut roots: Vec<(Time, usize)> = Vec::new();
+            let delta = |g: &mut Gen| -> Time {
+                match g.u64(0, 3) {
+                    0 => g.u64(0, 63),                       // same/near instant
+                    1 => g.u64(0, 4096),                     // low wheel levels
+                    2 => g.u64(0, 10 * SECONDS),             // high wheel levels
+                    _ => g.u64(60 * SECONDS, 200 * SECONDS), // far tier
+                }
+            };
+            // Every id is either a root or spawned by a lower id: each is
+            // scheduled at most once, deterministically.
+            for id in 0..m {
+                if id == 0 || g.bool() {
+                    roots.push((delta(g), id));
+                } else {
+                    let parent = g.usize(0, id - 1);
+                    let d = delta(g);
+                    plan[parent].push(Act::Spawn { delta: d, id });
+                }
+            }
+            // Sprinkle cancels/reschedules over arbitrary targets.
+            for _ in 0..g.usize(0, m / 2) {
+                let actor = g.usize(0, m - 1);
+                let target = g.usize(0, m - 1);
+                let act = if g.bool() {
+                    Act::Cancel { target }
+                } else {
+                    Act::Resched { target, delta: delta(g) }
+                };
+                plan[actor].push(act);
+            }
+            let a = run_plan(EngineKind::Wheel, &roots, &plan);
+            let b = run_plan(EngineKind::ReferenceHeap, &roots, &plan);
+            assert_eq!(a.0, b.0, "fired (id, time) sequences diverged");
+            assert_eq!(a.1, b.1, "events_fired diverged");
+            assert_eq!(a.2, b.2, "final clock diverged");
+            assert_eq!(a.3, b.3, "past_schedules diverged");
+        });
+    }
+
+    /// The steady-state scheduling hot path reuses slab slots: a long
+    /// self-sustaining event chain must not grow the arena.
+    #[test]
+    fn steady_state_chain_keeps_slab_flat() {
+        let mut sim = Sim::new();
+        fn chain(sim: &mut Sim, remaining: u32) {
+            if remaining == 0 {
+                return;
+            }
+            sim.after(100, move |s| chain(s, remaining - 1));
+        }
+        // Prime, then measure.
+        chain(&mut sim, 10);
+        sim.run_to_completion();
+        let cap = sim.engine_stats().slot_capacity;
+        chain(&mut sim, 50_000);
+        sim.run_to_completion();
+        assert_eq!(
+            sim.engine_stats().slot_capacity,
+            cap,
+            "steady-state chain grew the slab arena"
+        );
+        assert_eq!(sim.events_fired(), 10 + 50_000);
     }
 }

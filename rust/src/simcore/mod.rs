@@ -1,22 +1,32 @@
 //! Deterministic discrete-event simulation engine.
 //!
 //! This is the substrate that replaces the paper's two-machine testbed: a
-//! single-threaded virtual-time simulator with an event heap, closure-based
-//! events, FIFO multi-server resources (used to model CPU cores and NIC
-//! queues), and a deterministic xorshift RNG (no external `rand` crate —
-//! the registry is offline).
+//! single-threaded virtual-time simulator with a two-tier event scheduler
+//! (slab-backed hierarchical timer wheel + far-timer heap — see
+//! `engine`/`wheel`/`slab`), closure-based events with O(1) cancellation,
+//! FIFO multi-server resources (used to model CPU cores and NIC queues),
+//! and a deterministic xorshift RNG (no external `rand` crate — the
+//! registry is offline).
 //!
 //! Time is in **virtual nanoseconds** (`Time = u64`); helper constructors
-//! exist for µs/ms. Determinism is a hard invariant: two runs with the same
-//! seed and inputs produce identical event orders (ties broken by insertion
-//! sequence number), which the property tests in this module verify.
+//! exist for µs/ms. Determinism is a hard invariant: two runs with the
+//! same seed and inputs produce identical event orders (ties broken by
+//! insertion sequence number), and the wheel engine fires the exact
+//! sequence the seed's reference heap does — the differential property
+//! test in `engine` and the cross-engine experiment checks in
+//! `tests/integration.rs` pin this.
 
 mod engine;
 mod proptest;
 mod resource;
 mod rng;
+mod slab;
+mod wheel;
 
-pub use engine::{Sim, Time, MICROS, MILLIS, SECONDS};
+pub use engine::{
+    default_engine, set_default_engine, tick_train, EngineKind, EngineStats, Sim, Time,
+    TimerHandle, MICROS, MILLIS, SECONDS,
+};
 pub use proptest::{forall, Gen};
 pub use resource::CorePool;
 pub use rng::Rng;

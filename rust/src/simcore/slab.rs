@@ -1,0 +1,188 @@
+//! Slab arena of event entries.
+//!
+//! Every scheduled event lives in one [`EventSlab`] slot: the ordering key
+//! (`(time, seq)` — stated once, as a derived lexicographic [`EventKey`]),
+//! a generation counter, and the boxed callback. The ordering tiers
+//! ([`super::wheel::TimerWheel`] buckets, the far/reference heaps) hold
+//! only copies of `(key, idx, gen)` — 24 bytes, no pointer chasing — so
+//! steady-state scheduling reuses freed slots and does **zero per-event
+//! heap allocations** beyond the caller's own closure captures (a
+//! zero-sized closure boxes without allocating).
+//!
+//! Generation checking makes cancellation O(1) and ABA-safe: cancelling a
+//! handle bumps the slot's generation, so any stale `(idx, gen)` copy
+//! still sitting in a wheel bucket or heap is skipped when it surfaces —
+//! the engine never fires a cancelled or superseded event, even after the
+//! slot has been reused.
+
+use super::engine::{Sim, Time};
+
+/// Boxed event callback. Zero-sized closures box without allocating.
+pub(crate) type EventFn = Box<dyn FnOnce(&mut Sim)>;
+
+/// Event ordering key. The derived lexicographic order — earlier `time`
+/// first, insertion `seq` breaking ties — is the engine's entire
+/// determinism contract: simultaneous events fire in schedule order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) struct EventKey {
+    pub time: Time,
+    pub seq: u64,
+}
+
+/// Generation-checked handle to a scheduled event, returned by
+/// [`Sim::at_handle`] / [`Sim::after_handle`]. Supports O(1)
+/// [`Sim::cancel`] and [`Sim::reschedule`]; a handle whose event already
+/// fired, was cancelled, or was rescheduled is simply stale (cancel
+/// returns `false`), never dangling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimerHandle {
+    pub(crate) idx: u32,
+    pub(crate) gen: u32,
+}
+
+struct Slot {
+    gen: u32,
+    key: EventKey,
+    cb: Option<EventFn>,
+}
+
+/// Arena of event slots with a free list. Slots are reused in LIFO order,
+/// so a steady-state schedule/fire workload touches a small, hot set of
+/// slots and never allocates.
+pub(crate) struct EventSlab {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl EventSlab {
+    pub fn new() -> Self {
+        EventSlab { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    /// Live (scheduled, not yet fired/cancelled) events.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// Store an event; returns its generation-checked handle.
+    pub fn insert(&mut self, key: EventKey, cb: EventFn) -> TimerHandle {
+        self.live += 1;
+        if let Some(idx) = self.free.pop() {
+            let s = &mut self.slots[idx as usize];
+            debug_assert!(s.cb.is_none(), "free-list slot still holds a callback");
+            s.key = key;
+            s.cb = Some(cb);
+            TimerHandle { idx, gen: s.gen }
+        } else {
+            let idx = u32::try_from(self.slots.len()).expect("event slab exceeded u32 slots");
+            self.slots.push(Slot { gen: 0, key, cb: Some(cb) });
+            TimerHandle { idx, gen: 0 }
+        }
+    }
+
+    /// Take the callback out if `(idx, gen)` is still live, freeing the
+    /// slot. Returns `None` for stale references (already fired, cancelled
+    /// or rescheduled) — the lazy-deletion check every ordering tier
+    /// relies on.
+    pub fn take(&mut self, idx: u32, gen: u32) -> Option<(EventKey, EventFn)> {
+        let s = self.slots.get_mut(idx as usize)?;
+        if s.gen != gen {
+            return None;
+        }
+        let cb = s.cb.take()?;
+        let key = s.key;
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(idx);
+        self.live -= 1;
+        Some((key, cb))
+    }
+
+    /// Drop the event behind the handle (O(1) cancellation). Returns
+    /// `true` when a live event was cancelled.
+    pub fn cancel(&mut self, h: TimerHandle) -> bool {
+        self.take(h.idx, h.gen).is_some()
+    }
+
+    /// Key of a still-live handle (tests / diagnostics).
+    #[cfg(test)]
+    pub fn key_of(&self, h: TimerHandle) -> Option<EventKey> {
+        let s = self.slots.get(h.idx as usize)?;
+        if s.gen != h.gen || s.cb.is_none() {
+            return None;
+        }
+        Some(s.key)
+    }
+
+    /// Total slots ever created (capacity telemetry for the §Perf bench).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(time: Time, seq: u64) -> EventKey {
+        EventKey { time, seq }
+    }
+
+    #[test]
+    fn key_orders_by_time_then_seq() {
+        assert!(key(1, 9) < key(2, 0));
+        assert!(key(5, 1) < key(5, 2));
+        assert_eq!(key(3, 3), key(3, 3));
+        // The derive states the invariant once: plain lexicographic order.
+        let mut v = vec![key(2, 0), key(1, 1), key(1, 0), key(2, 1)];
+        v.sort();
+        assert_eq!(v, vec![key(1, 0), key(1, 1), key(2, 0), key(2, 1)]);
+    }
+
+    #[test]
+    fn insert_take_roundtrip() {
+        let mut slab = EventSlab::new();
+        let h = slab.insert(key(10, 0), Box::new(|_| {}));
+        assert_eq!(slab.len(), 1);
+        assert_eq!(slab.key_of(h), Some(key(10, 0)));
+        let (k, _cb) = slab.take(h.idx, h.gen).expect("live");
+        assert_eq!(k, key(10, 0));
+        assert_eq!(slab.len(), 0);
+        // Second take is stale.
+        assert!(slab.take(h.idx, h.gen).is_none());
+    }
+
+    #[test]
+    fn cancelled_handle_goes_stale_and_slot_is_reused() {
+        let mut slab = EventSlab::new();
+        let a = slab.insert(key(1, 0), Box::new(|_| {}));
+        assert!(slab.cancel(a));
+        assert!(!slab.cancel(a), "double cancel must be a no-op");
+        // The freed slot is reused with a bumped generation: the old
+        // handle stays stale even though the index matches.
+        let b = slab.insert(key(2, 1), Box::new(|_| {}));
+        assert_eq!(a.idx, b.idx, "LIFO free list must reuse the slot");
+        assert_ne!(a.gen, b.gen);
+        assert!(slab.take(a.idx, a.gen).is_none(), "stale gen must not take");
+        assert!(slab.take(b.idx, b.gen).is_some());
+    }
+
+    #[test]
+    fn steady_state_reuses_slots_without_growth() {
+        let mut slab = EventSlab::new();
+        // Prime two slots, then churn: capacity must not grow.
+        let h1 = slab.insert(key(1, 0), Box::new(|_| {}));
+        let h2 = slab.insert(key(2, 1), Box::new(|_| {}));
+        slab.take(h1.idx, h1.gen);
+        slab.take(h2.idx, h2.gen);
+        let cap = slab.capacity();
+        for i in 0..10_000u64 {
+            let a = slab.insert(key(i, i), Box::new(|_| {}));
+            let b = slab.insert(key(i, i + 1), Box::new(|_| {}));
+            slab.take(a.idx, a.gen);
+            slab.cancel(b);
+        }
+        assert_eq!(slab.capacity(), cap, "steady-state churn must not grow the slab");
+        assert_eq!(slab.len(), 0);
+    }
+}

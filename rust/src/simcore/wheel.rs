@@ -1,0 +1,438 @@
+//! Hierarchical timer wheel with a far-timer heap tier.
+//!
+//! The wheel is the engine's near-future ordering structure: 6 levels of
+//! 64 slots, level `l` slots spanning `2^(6l)` ns, so the wheel covers
+//! deltas up to `2^36` ns (≈ 69 virtual seconds) with O(1) insert and
+//! amortized-O(1) fire. Timers past the horizon overflow into a binary
+//! heap (`far`) — the calendar tier for idle-TTL/keep-alive-scale timers —
+//! and are popped straight from there when they become the global minimum
+//! (they never migrate back into the wheel).
+//!
+//! **Level rule** (the tokio/kernel scheme): an entry for time `t` lives
+//! at the level of the highest bit in `now ^ t`. This caps the forward
+//! slot distance at 63 per level and guarantees cascades always move
+//! entries strictly downward (progress), because once `now` enters a
+//! bucket's window, `now ^ t` has no bits at or above that level.
+//!
+//! **Determinism**: level-0 slots are 1 ns wide, so a level-0 bucket holds
+//! exactly one timestamp. When the wheel advances into it, the bucket is
+//! sorted once by [`EventKey`] `(time, seq)` and drained front-to-back;
+//! events scheduled *during* the drain at the same instant carry larger
+//! `seq` and append in order, so ties always fire in schedule order —
+//! bit-identical to the reference heap (property-tested in `engine.rs`).
+//!
+//! **Cancellation** is lazy here: [`super::slab::EventSlab`] bumps the
+//! slot generation and the stale `(key, idx, gen)` copy is skipped when it
+//! surfaces. A cancelled timer is never sifted through a heap — skipping
+//! it costs one comparison, which is what makes cancel-heavy (retransmit)
+//! workloads cheap.
+//!
+//! **Zero-alloc steady state**: buckets, the cascade scratch buffer and
+//! the far heap all retain capacity across fires, so a steady schedule/
+//! fire/cancel workload performs no heap allocation inside the engine.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::engine::Time;
+use super::slab::EventKey;
+
+const SLOT_BITS: usize = 6;
+const SLOTS: usize = 1 << SLOT_BITS; // 64
+const SLOT_MASK: u64 = (SLOTS as u64) - 1;
+/// Number of wheel levels; deltas with a differing bit at or above
+/// `SLOT_BITS * LEVELS` (= 36) go to the far tier.
+const LEVELS: usize = 6;
+
+/// One `(key, idx, gen)` reference into the event slab. Copied freely
+/// between tiers; the slab's generation check is the source of truth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) struct WheelEntry {
+    pub key: EventKey,
+    pub idx: u32,
+    pub gen: u32,
+}
+
+struct LevelSlots {
+    /// Bit `s` set ⇔ `buckets[s]` is non-empty.
+    occupied: u64,
+    buckets: Vec<Vec<WheelEntry>>,
+}
+
+impl LevelSlots {
+    fn new() -> Self {
+        LevelSlots { occupied: 0, buckets: (0..SLOTS).map(|_| Vec::new()).collect() }
+    }
+}
+
+/// The level-0 bucket currently being drained: sorted by key, entries
+/// `[cursor..]` still pending. All its entries share one timestamp
+/// (`TimerWheel::now`), so same-instant events scheduled mid-drain append
+/// in `seq` order and the vector stays sorted.
+struct Active {
+    slot: usize,
+    cursor: usize,
+}
+
+pub(crate) struct TimerWheel {
+    levels: Vec<LevelSlots>,
+    far: BinaryHeap<Reverse<WheelEntry>>,
+    /// Wheel-internal clock: the last bucket window start processed.
+    /// Invariant: `now` never exceeds any pending wheel entry's time, and
+    /// never exceeds the engine's clock.
+    now: Time,
+    /// Entries resident in wheel buckets (including stale/cancelled ones).
+    wheel_len: usize,
+    active: Option<Active>,
+    /// Reusable cascade buffer (swapped with the bucket being cascaded).
+    scratch: Vec<WheelEntry>,
+}
+
+impl TimerWheel {
+    pub fn new() -> Self {
+        TimerWheel {
+            levels: (0..LEVELS).map(|_| LevelSlots::new()).collect(),
+            far: BinaryHeap::new(),
+            now: 0,
+            wheel_len: 0,
+            active: None,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Entries parked in the far (heap) tier (tests/diagnostics; the
+    /// engine's live count comes from the slab).
+    #[cfg(test)]
+    pub fn far_len(&self) -> usize {
+        self.far.len()
+    }
+
+    /// Insert a slab reference. `outer_now` is the engine clock, used to
+    /// re-anchor the wheel whenever it is empty. The assignment must not
+    /// be a `max`: draining a *stale* (cancelled) tail can leave the
+    /// wheel's internal `now` ahead of the engine clock (the engine only
+    /// advances on live fires), and a later valid insert below that
+    /// stranded anchor would be filed into the wheel's past — cascading
+    /// upward unboundedly. An empty wheel has no entries constraining
+    /// `now`, so snapping straight to the engine clock is always safe
+    /// (far-tier entries are popped by exact key and don't care).
+    pub fn insert(&mut self, key: EventKey, idx: u32, gen: u32, outer_now: Time) {
+        if self.wheel_len == 0 && self.active.is_none() {
+            self.now = outer_now;
+        }
+        // Invariant (upheld by the engine's clamp-and-count plus the
+        // empty-wheel re-anchor above): no insert targets the wheel's
+        // past. No silent clamp here — a violation must fail loudly, not
+        // quietly mis-order events.
+        debug_assert!(key.time >= self.now, "insert into the wheel's past");
+        let masked = key.time ^ self.now;
+        let e = WheelEntry { key, idx, gen };
+        if (masked >> (SLOT_BITS * LEVELS)) != 0 {
+            self.far.push(Reverse(e));
+        } else {
+            self.insert_wheel(e);
+        }
+    }
+
+    fn insert_wheel(&mut self, e: WheelEntry) {
+        let t = e.key.time;
+        let masked = t ^ self.now;
+        let level = if masked == 0 {
+            0
+        } else {
+            (63 - masked.leading_zeros() as usize) / SLOT_BITS
+        };
+        debug_assert!(level < LEVELS);
+        let shift = level * SLOT_BITS;
+        let slot = ((t >> shift) & SLOT_MASK) as usize;
+        self.levels[level].buckets[slot].push(e);
+        self.levels[level].occupied |= 1u64 << slot;
+        self.wheel_len += 1;
+    }
+
+    /// Earliest occupied bucket as `(level, slot, window_start)`, scanning
+    /// the occupancy bitmaps (one rotate + trailing_zeros per level). Ties
+    /// on `window_start` prefer the *higher* level, so coarser buckets
+    /// cascade before an equal-time level-0 bucket activates — required
+    /// for seq-order ties across levels.
+    fn earliest_bucket(&self) -> Option<(usize, usize, Time)> {
+        let mut best: Option<(usize, usize, Time)> = None;
+        for level in (0..LEVELS).rev() {
+            let occ = self.levels[level].occupied;
+            if occ == 0 {
+                continue;
+            }
+            let shift = level * SLOT_BITS;
+            let pos = ((self.now >> shift) & SLOT_MASK) as u32;
+            let k = occ.rotate_right(pos).trailing_zeros() as u64;
+            let slot = (((pos as u64) + k) & SLOT_MASK) as usize;
+            let start = ((self.now >> shift) + k) << shift;
+            match best {
+                Some((_, _, bstart)) if bstart <= start => {}
+                _ => best = Some((level, slot, start)),
+            }
+        }
+        best
+    }
+
+    /// Redistribute a level-`l` bucket into lower levels. The bucket's
+    /// window start is ≤ every entry inside; entering it pins `now` to the
+    /// window, after which every entry's `now ^ t` falls below this level.
+    fn cascade(&mut self, level: usize, slot: usize, start: Time) {
+        debug_assert!(level > 0);
+        self.now = self.now.max(start);
+        self.levels[level].occupied &= !(1u64 << slot);
+        let mut tmp = std::mem::take(&mut self.scratch);
+        debug_assert!(tmp.is_empty());
+        std::mem::swap(&mut tmp, &mut self.levels[level].buckets[slot]);
+        self.wheel_len -= tmp.len();
+        for e in tmp.drain(..) {
+            debug_assert!(e.key.time >= self.now);
+            self.insert_wheel(e);
+        }
+        // Swap capacities back: both the bucket and the scratch buffer
+        // keep their allocations for the next cascade.
+        self.scratch = tmp;
+    }
+
+    /// Pop the globally-earliest entry if its time is ≤ `until`; `None`
+    /// when the structure is empty or the earliest entry is later. The
+    /// caller (engine) validates the reference against the slab and skips
+    /// stale (cancelled/rescheduled) pops.
+    pub fn pop_at_or_before(&mut self, until: Time) -> Option<(EventKey, u32, u32)> {
+        loop {
+            // Drain the active level-0 bucket first (all entries at `now`).
+            if let Some(a) = &self.active {
+                let bucket = &self.levels[0].buckets[a.slot];
+                if a.cursor < bucket.len() {
+                    let e = bucket[a.cursor];
+                    debug_assert_eq!(e.key.time, self.now);
+                    // The far tier can hold an equal-time, smaller-seq key.
+                    if let Some(&Reverse(f)) = self.far.peek() {
+                        if f.key < e.key {
+                            if f.key.time > until {
+                                return None;
+                            }
+                            self.far.pop();
+                            return Some((f.key, f.idx, f.gen));
+                        }
+                    }
+                    if e.key.time > until {
+                        return None;
+                    }
+                    self.active.as_mut().unwrap().cursor += 1;
+                    self.wheel_len -= 1;
+                    return Some((e.key, e.idx, e.gen));
+                }
+                // Exhausted: retire the bucket (keeps its capacity).
+                let slot = a.slot;
+                self.levels[0].buckets[slot].clear();
+                self.levels[0].occupied &= !(1u64 << slot);
+                self.active = None;
+            }
+            match self.earliest_bucket() {
+                None => {
+                    // Far tier only.
+                    let &Reverse(f) = self.far.peek()?;
+                    if f.key.time > until {
+                        return None;
+                    }
+                    self.far.pop();
+                    return Some((f.key, f.idx, f.gen));
+                }
+                Some((level, slot, start)) => {
+                    if let Some(&Reverse(f)) = self.far.peek() {
+                        if f.key.time < start {
+                            if f.key.time > until {
+                                return None;
+                            }
+                            self.far.pop();
+                            return Some((f.key, f.idx, f.gen));
+                        }
+                    }
+                    if start > until {
+                        return None;
+                    }
+                    if level == 0 {
+                        self.now = start;
+                        self.levels[0].buckets[slot].sort_unstable();
+                        self.active = Some(Active { slot, cursor: 0 });
+                    } else {
+                        self.cascade(level, slot, start);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(time: Time, seq: u64) -> EventKey {
+        EventKey { time, seq }
+    }
+
+    /// Drive a wheel directly (no slab): insert raw refs, pop everything.
+    fn drain(w: &mut TimerWheel) -> Vec<EventKey> {
+        let mut out = Vec::new();
+        while let Some((k, _, _)) = w.pop_at_or_before(Time::MAX) {
+            out.push(k);
+        }
+        out
+    }
+
+    #[test]
+    fn fires_in_key_order_across_levels() {
+        let mut w = TimerWheel::new();
+        // Deltas spanning every level plus the far tier.
+        let times = [
+            3u64,
+            63,
+            64,
+            4_095,
+            4_096,
+            262_143,
+            262_144,
+            1 << 24,
+            1 << 30,
+            (1 << 36) + 17, // far tier
+            5,
+            1 << 35,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            w.insert(key(t, i as u64), i as u32, 0, 0);
+        }
+        let fired = drain(&mut w);
+        let mut expect: Vec<EventKey> =
+            times.iter().enumerate().map(|(i, &t)| key(t, i as u64)).collect();
+        expect.sort();
+        assert_eq!(fired, expect);
+    }
+
+    #[test]
+    fn same_time_entries_fire_in_seq_order_even_across_tiers() {
+        let mut w = TimerWheel::new();
+        // Same timestamp reached three ways: direct level-0 insert later,
+        // a level-2 insert that cascades down, and a far-tier insert.
+        let t = (1 << 36) + 1000;
+        w.insert(key(t, 0), 0, 0, 0); // far at insert time (now=0)
+        w.insert(key(500, 1), 1, 0, 0);
+        // Fire the 500 event so `now` advances; then t is wheel-range.
+        let (k, _, _) = w.pop_at_or_before(Time::MAX).unwrap();
+        assert_eq!(k, key(500, 1));
+        w.insert(key(t, 2), 2, 0, 500);
+        w.insert(key(t, 3), 3, 0, 500);
+        let fired = drain(&mut w);
+        assert_eq!(fired, vec![key(t, 0), key(t, 2), key(t, 3)]);
+    }
+
+    #[test]
+    fn pop_respects_until_and_leaves_later_entries() {
+        let mut w = TimerWheel::new();
+        w.insert(key(10, 0), 0, 0, 0);
+        w.insert(key(20, 1), 1, 0, 0);
+        w.insert(key(30, 2), 2, 0, 0);
+        assert_eq!(w.pop_at_or_before(20).unwrap().0, key(10, 0));
+        assert_eq!(w.pop_at_or_before(20).unwrap().0, key(20, 1));
+        assert!(w.pop_at_or_before(20).is_none(), "30 is beyond the horizon");
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(30, 2));
+        assert!(w.pop_at_or_before(Time::MAX).is_none());
+    }
+
+    #[test]
+    fn rotation_boundary_entries_do_not_alias_the_current_slot() {
+        // now = 63, t = 64: same level-0 slot index modulo 64, but the
+        // xor rule sends it to level 1 and cascades it back correctly.
+        let mut w = TimerWheel::new();
+        w.insert(key(63, 0), 0, 0, 0);
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(63, 0));
+        w.insert(key(64, 1), 1, 0, 63);
+        w.insert(key(127, 2), 2, 0, 63);
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(64, 1));
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(127, 2));
+    }
+
+    /// Regression: draining a stale tail leaves the wheel's `now` ahead
+    /// of the engine clock; the next insert (valid by the engine clock)
+    /// must re-anchor downward instead of being filed into the wheel's
+    /// past (which cascaded upward until `levels[6]` indexed out of
+    /// bounds).
+    #[test]
+    fn reanchor_resets_now_when_wheel_drains_ahead_of_engine_clock() {
+        let mut w = TimerWheel::new();
+        w.insert(key(100, 0), 0, 0, 0);
+        // Drain (in the engine this would be a cancelled entry: the wheel
+        // advances to its bucket, the engine clock does not).
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 0));
+        // Engine clock is only at 50; schedule for 60.
+        w.insert(key(60, 1), 1, 0, 50);
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(60, 1));
+        assert!(w.pop_at_or_before(Time::MAX).is_none());
+    }
+
+    #[test]
+    fn empty_wheel_reanchors_to_outer_clock_after_far_pops() {
+        let mut w = TimerWheel::new();
+        let far_t = (1u64 << 36) + 5;
+        w.insert(key(far_t, 0), 0, 0, 0);
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(far_t, 0));
+        // The wheel's `now` never advanced; a near insert (relative to the
+        // outer clock) must still land in the wheel, not the far heap.
+        w.insert(key(far_t + 100, 1), 1, 0, far_t);
+        assert_eq!(w.far_len(), 0, "near timer leaked to the far tier");
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(far_t + 100, 1));
+    }
+
+    #[test]
+    fn insert_during_active_drain_at_same_instant_stays_ordered() {
+        let mut w = TimerWheel::new();
+        w.insert(key(100, 0), 0, 0, 0);
+        w.insert(key(100, 1), 1, 0, 0);
+        let (k0, _, _) = w.pop_at_or_before(Time::MAX).unwrap();
+        assert_eq!(k0, key(100, 0));
+        // Mid-drain append at the same instant with a larger seq.
+        w.insert(key(100, 2), 2, 0, 100);
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 1));
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 2));
+        assert!(w.pop_at_or_before(Time::MAX).is_none());
+    }
+
+    #[test]
+    fn randomized_wheel_matches_sorted_order() {
+        let mut rng = crate::simcore::Rng::new(0xF00D);
+        for _ in 0..20 {
+            let mut w = TimerWheel::new();
+            let mut keys = Vec::new();
+            let mut now = 0u64;
+            let mut seq = 0u64;
+            // Interleave inserts and pops to advance the wheel clock.
+            for _ in 0..400 {
+                if rng.below(4) == 0 && !keys.is_empty() {
+                    // Pop one: must be the minimum of what's pending.
+                    keys.sort();
+                    let expect: EventKey = keys.remove(0);
+                    let (got, _, _) = w.pop_at_or_before(Time::MAX).unwrap();
+                    assert_eq!(got, expect);
+                    now = got.time;
+                } else {
+                    // Mix near, mid, far deltas.
+                    let delta = match rng.below(4) {
+                        0 => rng.below(64),
+                        1 => rng.below(1 << 12),
+                        2 => rng.below(1 << 30),
+                        _ => rng.below(1 << 40),
+                    };
+                    let k = key(now + delta, seq);
+                    seq += 1;
+                    w.insert(k, 0, 0, now);
+                    keys.push(k);
+                }
+            }
+            keys.sort();
+            let rest = drain(&mut w);
+            assert_eq!(rest, keys);
+        }
+    }
+}

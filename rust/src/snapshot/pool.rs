@@ -235,6 +235,27 @@ impl WarmPool {
         self.slots[id].handle
     }
 
+    /// Evict one specific warm slot whose idle TTL expired (the per-slot
+    /// timer path: the pipeline arms a cancellable timer per park instead
+    /// of sweeping). Returns the handle for teardown; `None` when the
+    /// slot is no longer warm — with real timer cancellation that is a
+    /// defensive guard, not an expected path.
+    pub fn evict_idle(&mut self, id: SlotId) -> Option<PoolHandle> {
+        if self.slots.get(id)?.state != SlotState::Warm {
+            return None;
+        }
+        let h = self.evict(id);
+        self.stats.ttl_evictions += 1;
+        Some(h)
+    }
+
+    /// Every currently-warm slot with its park time (used to arm TTL
+    /// timers when maintenance starts on a pool that already has parked
+    /// instances).
+    pub fn warm_slots(&self) -> Vec<(SlotId, Time)> {
+        self.warm.values().flatten().map(|&id| (id, self.slots[id].parked_at)).collect()
+    }
+
     /// Evict every warm slot idle for at least the TTL. Returns the evicted
     /// handles oldest-first; the caller tears the instances down.
     /// Scans only the warm queues, not every slot ever created.
@@ -390,6 +411,22 @@ mod tests {
         assert!(p.try_park("f", h(1), 0, 1).is_some());
         assert!(p.try_park("f", h(2), 0, 1).is_none(), "cap reached");
         assert!(p.try_park("g", h(3), 0, 1).is_some(), "cap is per function");
+    }
+
+    #[test]
+    fn evict_idle_removes_only_warm_slots() {
+        let mut p = pool(u64::MAX, 10 * SECONDS);
+        let a = p.try_park("f", h(0), 0, 1).unwrap();
+        let b = p.try_park("f", h(1), 5, 1).unwrap();
+        assert_eq!(p.warm_slots(), vec![(a, 0), (b, 5)]);
+        assert_eq!(p.evict_idle(a), Some(h(0)), "warm slot evicts by id");
+        assert_eq!(p.stats.ttl_evictions, 1);
+        assert_eq!(p.evict_idle(a), None, "already evicted: defensive no-op");
+        let (got, _) = p.acquire_warm("f", 10).unwrap();
+        assert_eq!(got, b);
+        assert_eq!(p.evict_idle(b), None, "in-use slot must not evict");
+        assert!(p.warm_slots().is_empty());
+        p.check_invariants();
     }
 
     #[test]

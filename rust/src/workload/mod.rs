@@ -219,49 +219,103 @@ impl OpenLoop {
     }
 }
 
+/// Arrivals generated per batch by the open-loop driver.
+const ARRIVAL_BATCH: usize = 4096;
+
+/// Deterministic Poisson arrival generator, paused at batch boundaries.
+/// Consumes the RNG in exactly the seed's order (one `exp` draw per gap,
+/// then `pick`'s draws), so the arrival schedule is bit-identical to the
+/// fully pre-generated list the seed materialized.
+struct ArrivalGen<P> {
+    rng: Rng,
+    t: f64,
+    mean_gap_ns: f64,
+    measure_until: Time,
+    exhausted: bool,
+    pick: P,
+}
+
+impl<P: FnMut(&mut Rng) -> String> ArrivalGen<P> {
+    fn refill(&mut self, batch: &mut Vec<(Time, String)>) {
+        batch.clear();
+        while !self.exhausted && batch.len() < ARRIVAL_BATCH {
+            self.t += self.rng.exp(self.mean_gap_ns);
+            if (self.t as Time) < self.measure_until {
+                batch.push((self.t as Time, (self.pick)(&mut self.rng)));
+            } else {
+                self.exhausted = true;
+            }
+        }
+    }
+}
+
 /// Shared open-loop driver: Poisson arrivals at `rate_rps`, each arrival
 /// invoking whatever `pick` chooses, samples recorded only inside the
 /// measurement window (a warmup of 10% of `duration` precedes it); the
-/// run drains before returning. The arrival schedule is pre-generated, so
-/// it is deterministic and independent of completion order.
-fn open_loop_drive<T: LoadTarget>(
+/// run drains before returning. The arrival schedule is deterministic and
+/// independent of completion order, but instead of materializing one
+/// pre-scheduled closure per request up front (10M pending events at
+/// density scale), arrivals are generated in bounded batches scheduled
+/// straight into the engine's timer wheel: the driver keeps at most one
+/// batch outstanding, and the last arrival of each batch schedules the
+/// next.
+fn open_loop_drive<T: LoadTarget, P: FnMut(&mut Rng) -> String + 'static>(
     sim: &mut Sim,
     target: &T,
     rate_rps: f64,
     duration: Time,
     seed: u64,
-    mut pick: impl FnMut(&mut Rng) -> String,
+    pick: P,
 ) -> RunResult {
     assert!(rate_rps > 0.0);
     let result = Rc::new(RefCell::new(RunResult::default()));
-    let mut rng = Rng::new(seed);
     let warmup = duration / 10;
     let t_start = sim.now();
     let measure_from = t_start + warmup;
     let measure_until = measure_from + duration;
-    let mean_gap_ns = SECONDS as f64 / rate_rps;
-    let mut t = t_start as f64;
-    let mut arrivals = Vec::new();
-    while (t as Time) < measure_until {
-        t += rng.exp(mean_gap_ns);
-        if (t as Time) < measure_until {
-            arrivals.push((t as Time, pick(&mut rng)));
-        }
-    }
-    for (at, function) in arrivals {
+    let arrivals = Rc::new(RefCell::new(ArrivalGen {
+        rng: Rng::new(seed),
+        t: t_start as f64,
+        mean_gap_ns: SECONDS as f64 / rate_rps,
+        measure_until,
+        exhausted: t_start >= measure_until,
+        pick,
+    }));
+    schedule_arrival_batch(sim, target.clone(), result.clone(), arrivals, measure_from, measure_until);
+    sim.run_to_completion();
+    let mut out = Rc::try_unwrap(result).ok().expect("pending refs").into_inner();
+    out.elapsed = duration;
+    out
+}
+
+fn schedule_arrival_batch<T: LoadTarget, P: FnMut(&mut Rng) -> String + 'static>(
+    sim: &mut Sim,
+    target: T,
+    result: Rc<RefCell<RunResult>>,
+    arrivals: Rc<RefCell<ArrivalGen<P>>>,
+    measure_from: Time,
+    measure_until: Time,
+) {
+    let mut batch = Vec::new();
+    arrivals.borrow_mut().refill(&mut batch);
+    let n = batch.len();
+    for (i, (at, function)) in batch.into_iter().enumerate() {
+        let in_window = at >= measure_from;
         let target2 = target.clone();
         let result2 = result.clone();
-        let in_window = at >= measure_from;
+        // The batch's last arrival refills and schedules the next batch.
+        let chain = if i + 1 == n { Some(arrivals.clone()) } else { None };
         sim.at(at, move |sim| {
             if in_window {
                 result2.borrow_mut().submitted += 1;
             }
+            let r3 = result2.clone();
             target2.submit_to(
                 sim,
                 &function,
                 Box::new(move |_, timing| {
                     if in_window {
-                        let mut r = result2.borrow_mut();
+                        let mut r = r3.borrow_mut();
                         r.record(&timing);
                         if !timing.dropped && timing.done <= measure_until {
                             r.completed_in_window += 1;
@@ -269,12 +323,11 @@ fn open_loop_drive<T: LoadTarget>(
                     }
                 }),
             );
+            if let Some(next) = chain {
+                schedule_arrival_batch(sim, target2, result2, next, measure_from, measure_until);
+            }
         });
     }
-    sim.run_to_completion();
-    let mut out = Rc::try_unwrap(result).ok().expect("pending refs").into_inner();
-    out.elapsed = duration;
-    out
 }
 
 /// Zipf-skewed multi-tenant driver: aggregate Poisson arrivals at
@@ -302,19 +355,31 @@ impl PopulationLoop {
     pub fn run_on<T: LoadTarget>(&self, sim: &mut Sim, target: &T) -> RunResult {
         assert!(!self.functions.is_empty());
         let total_w: f64 = self.functions.iter().map(|(_, w)| w).sum();
-        let fns = self.functions.clone();
-        // Weighted pick by linear scan (populations are small; a
-        // cumulative binary search can replace this if it ever shows up
-        // in profiles).
+        // Cumulative weights + binary search: O(log n) per arrival. The
+        // seed's linear scan was fine for dozens of functions but
+        // dominates the generator at the density experiment's
+        // million-function populations. Not floating-point-identical to
+        // the scan (prefix sums round differently than iterative
+        // subtraction), so a roll within an ulp of a bucket boundary may
+        // pick the adjacent function relative to the pre-rewrite seed;
+        // runs remain fully deterministic and engine-independent.
+        let mut cdf = Vec::with_capacity(self.functions.len());
+        let mut acc = 0.0;
+        for (_, w) in &self.functions {
+            acc += w;
+            cdf.push(acc);
+        }
+        let names: Vec<String> = self.functions.iter().map(|(n, _)| n.clone()).collect();
         let pick = move |rng: &mut Rng| {
-            let mut roll = rng.next_f64() * total_w;
-            for (name, w) in &fns {
-                if roll < *w {
-                    return name.clone();
-                }
-                roll -= *w;
+            let roll = rng.next_f64() * total_w;
+            let i = match cdf.binary_search_by(|p| p.partial_cmp(&roll).unwrap()) {
+                // Exact boundary hit: the strict `roll < cum` rule the
+                // linear scan used moves past an exactly-equal edge.
+                Ok(i) => i + 1,
+                Err(i) => i,
             }
-            fns[fns.len() - 1].0.clone()
+            .min(names.len() - 1);
+            names[i].clone()
         };
         open_loop_drive(sim, target, self.rate_rps, self.duration, self.seed, pick)
     }

@@ -15,7 +15,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::faas::FaasSim;
-use crate::simcore::{Rng, Sim, Time, SECONDS};
+use crate::simcore::{Rng, Sim, Time, TimerHandle, SECONDS};
 use crate::telemetry::Samples;
 
 /// One synthetic invocation.
@@ -170,7 +170,15 @@ pub fn replay(
 /// touch cold-boots (and captures a snapshot), a quick re-touch unparks
 /// from the pool, and a touch after the pool's idle TTL restores from the
 /// snapshot. Start `fs.start_pool_maintenance` before calling this so TTL
-/// sweeps (and prewarms) actually run.
+/// eviction (and prewarms) actually run.
+///
+/// Keep-alive is **one cancellable timer per function, rescheduled on
+/// every touch** (submission and completion). The seed scheduled a fresh
+/// "is it still idle?" closure after *every* completion and let the stale
+/// ones fire as tombstones — at trace rates that is one dead event per
+/// request churning through the engine; the rescheduled timer fires
+/// exactly once per idle gap, at the same virtual instant the first
+/// successful seed check would have fired.
 pub fn replay_with_keepalive(
     sim: &mut Sim,
     fs: &FaasSim,
@@ -185,12 +193,13 @@ pub fn replay_with_keepalive(
         ..Default::default()
     }));
     let outstanding: Rc<RefCell<Vec<u32>>> = Rc::new(RefCell::new(vec![0; n_functions as usize]));
-    let last_touch: Rc<RefCell<Vec<Time>>> = Rc::new(RefCell::new(vec![0; n_functions as usize]));
+    let katimers: Rc<RefCell<Vec<Option<TimerHandle>>>> =
+        Rc::new(RefCell::new(vec![None; n_functions as usize]));
     for ev in events {
         let fs2 = fs.clone();
         let result2 = result.clone();
         let outstanding2 = outstanding.clone();
-        let last_touch2 = last_touch.clone();
+        let katimers2 = katimers.clone();
         let name = make_name(ev.function);
         let fid = ev.function as usize;
         sim.at(ev.at, move |sim| {
@@ -208,10 +217,12 @@ pub fn replay_with_keepalive(
                 }
             }
             outstanding2.borrow_mut()[fid] += 1;
-            last_touch2.borrow_mut()[fid] = sim.now();
+            keepalive_touch(sim, &fs2, fid, &name, keepalive_ns, &outstanding2, &katimers2);
             let r3 = result2.clone();
             let fs3 = fs2.clone();
             let name2 = name.clone();
+            let out3 = outstanding2.clone();
+            let tim3 = katimers2.clone();
             fs2.submit(sim, &name, move |sim, t| {
                 {
                     let mut r = r3.borrow_mut();
@@ -224,23 +235,52 @@ pub fn replay_with_keepalive(
                         r.tier_served[t.tier.idx()] += 1;
                     }
                 }
-                outstanding2.borrow_mut()[fid] -= 1;
-                let done_at = sim.now();
-                last_touch2.borrow_mut()[fid] = done_at;
-                // Keep-alive check: if nothing touched the function for a
-                // full TTL after this completion, park it.
-                let out3 = outstanding2.clone();
-                let touch3 = last_touch2.clone();
-                sim.after(keepalive_ns, move |sim| {
-                    if out3.borrow()[fid] == 0 && touch3.borrow()[fid] <= done_at {
-                        fs3.undeploy(sim, &name2);
-                    }
-                });
+                out3.borrow_mut()[fid] -= 1;
+                keepalive_touch(sim, &fs3, fid, &name2, keepalive_ns, &out3, &tim3);
             });
         });
     }
     sim.run_to_completion();
     Rc::try_unwrap(result).ok().expect("pending refs").into_inner()
+}
+
+/// Push the function's keep-alive deadline out to `now + keepalive_ns`:
+/// an armed timer is rescheduled in O(1) (same callback, new deadline);
+/// otherwise a fresh timer is armed. When it finally fires — no touch for
+/// a full keep-alive — the function is undeployed if nothing is in
+/// flight (a mid-flight fire simply lapses; the completion's touch
+/// re-arms).
+fn keepalive_touch(
+    sim: &mut Sim,
+    fs: &FaasSim,
+    fid: usize,
+    name: &str,
+    keepalive_ns: Time,
+    outstanding: &Rc<RefCell<Vec<u32>>>,
+    timers: &Rc<RefCell<Vec<Option<TimerHandle>>>>,
+) {
+    let deadline = sim.now() + keepalive_ns;
+    let existing = timers.borrow_mut()[fid].take();
+    let rearmed = match existing {
+        Some(h) => sim.reschedule(h, deadline),
+        None => None,
+    };
+    let h = match rearmed {
+        Some(h) => h,
+        None => {
+            let fs2 = fs.clone();
+            let name2 = name.to_string();
+            let out2 = outstanding.clone();
+            let tim2 = timers.clone();
+            sim.at_handle(deadline, move |sim| {
+                tim2.borrow_mut()[fid] = None;
+                if out2.borrow()[fid] == 0 {
+                    fs2.undeploy(sim, &name2);
+                }
+            })
+        }
+    };
+    timers.borrow_mut()[fid] = Some(h);
 }
 
 #[cfg(test)]

@@ -201,6 +201,41 @@ fn provisioning_tier_ladder_end_to_end() {
 }
 
 // ---------------------------------------------------------------------------
+// Engine differential: the wheel engine and the seed-shaped reference
+// heap must produce identical virtual-time experiment outputs (satellite
+// of the engine rebuild; the unit-level property test lives in simcore)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn e5_polling_table_identical_across_engines() {
+    use junctiond_repro::simcore::{set_default_engine, EngineKind};
+    let run = || ex::ablation_polling_table(&[1, 16, 64], 5).to_markdown();
+    let wheel = run();
+    let prev = set_default_engine(EngineKind::ReferenceHeap);
+    let heap = run();
+    set_default_engine(prev);
+    assert_eq!(wheel, heap, "E5 virtual-time outputs diverged between engines");
+}
+
+#[test]
+fn e11_netpath_table_identical_across_engines() {
+    use junctiond_repro::simcore::{set_default_engine, EngineKind};
+    let rates = [1_000.0, 3_000.0];
+    let run = || {
+        let (t, points) = ex::netpath_table(2, 10, &rates, &rates, 200 * MILLIS, 7);
+        let details: Vec<(u64, u64, u64, u64)> =
+            points.iter().map(|p| (p.p50, p.p99, p.dropped, p.retries)).collect();
+        (t.to_markdown(), details)
+    };
+    let wheel = run();
+    let prev = set_default_engine(EngineKind::ReferenceHeap);
+    let heap = run();
+    set_default_engine(prev);
+    assert_eq!(wheel.0, heap.0, "E11 table diverged between engines");
+    assert_eq!(wheel.1, heap.1, "E11 per-point results diverged between engines");
+}
+
+// ---------------------------------------------------------------------------
 // Experiment drivers smoke (small sizes)
 // ---------------------------------------------------------------------------
 
