@@ -87,6 +87,18 @@ pub struct PlatformConfig {
     pub nic_retry_backoff_ns: Time,
     /// Retransmit attempts before the client gives the request up.
     pub nic_max_retries: Time,
+    /// TX descriptor ring depth (frames) of a worker NIC queue. A full
+    /// ring exerts *backpressure*: the responder holds the frame and
+    /// re-offers it after `nic_tx_retry_backoff_ns` (nothing is lost on
+    /// the wire, unlike the RX tail drop).
+    pub nic_tx_queue_depth: Time,
+    /// Max frames one bypass TX poll iteration flushes (DPDK
+    /// `tx_burst`-style batch). The poll cost amortizes across the batch.
+    pub nic_tx_batch_max: Time,
+    /// Responder re-offer backoff while the TX ring is full.
+    pub nic_tx_retry_backoff_ns: Time,
+    /// Re-offer attempts before the worker abandons the response.
+    pub nic_tx_max_retries: Time,
     /// Invocation payload carried in each framed `rpc::Message` (bytes);
     /// the AES-600B artifact's 600-byte input.
     pub rpc_payload_bytes: Time,
@@ -185,6 +197,10 @@ impl Default for PlatformConfig {
             nic_copy_ns_per_kb: 280,
             nic_retry_backoff_ns: 200 * MICROS,
             nic_max_retries: 3,
+            nic_tx_queue_depth: 256,
+            nic_tx_batch_max: 32,
+            nic_tx_retry_backoff_ns: 50 * MICROS,
+            nic_tx_max_retries: 8,
             rpc_payload_bytes: 600,
 
             container_cold_start_ns: 250 * MILLIS,
@@ -259,6 +275,10 @@ impl PlatformConfig {
             nic_copy_ns_per_kb,
             nic_retry_backoff_ns,
             nic_max_retries,
+            nic_tx_queue_depth,
+            nic_tx_batch_max,
+            nic_tx_retry_backoff_ns,
+            nic_tx_max_retries,
             rpc_payload_bytes,
             container_cold_start_ns,
             junction_cold_start_ns,
@@ -321,6 +341,9 @@ impl PlatformConfig {
         anyhow::ensure!(self.nic_queue_depth >= 1, "nic_queue_depth must be >= 1");
         anyhow::ensure!(self.nic_batch_max >= 1, "nic_batch_max must be >= 1");
         anyhow::ensure!(self.nic_retry_backoff_ns > 0, "nic_retry_backoff_ns must be > 0");
+        anyhow::ensure!(self.nic_tx_queue_depth >= 1, "nic_tx_queue_depth must be >= 1");
+        anyhow::ensure!(self.nic_tx_batch_max >= 1, "nic_tx_batch_max must be >= 1");
+        anyhow::ensure!(self.nic_tx_retry_backoff_ns > 0, "nic_tx_retry_backoff_ns must be > 0");
         anyhow::ensure!(self.rpc_payload_bytes >= 1, "rpc_payload_bytes must be >= 1");
         anyhow::ensure!(self.container_concurrency >= 1, "container_concurrency must be >= 1");
         anyhow::ensure!(self.junction_max_cores >= 1, "junction_max_cores must be >= 1");

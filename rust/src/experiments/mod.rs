@@ -857,6 +857,242 @@ pub fn density_scale_table(points: &[DensityPoint]) -> Table {
 }
 
 // ---------------------------------------------------------------------------
+// E13 — full-duplex netpath: worker TX rings + gateway-side RX under load
+// ---------------------------------------------------------------------------
+
+/// One measured point of the duplex sweep: the response direction's
+/// telemetry (TX flush amortization, backpressure stalls, gateway-side RX)
+/// alongside the request-side latency numbers.
+pub struct DuplexPoint {
+    pub backend: Backend,
+    pub offered_rps: f64,
+    /// Payload carried by request *and* response frames (echo workload).
+    pub payload_bytes: u64,
+    pub goodput_rps: f64,
+    pub p50: u64,
+    pub p99: u64,
+    /// Median transmit hop: TX ring wait + per-frame flush + return wire.
+    pub tx_p50: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Invocations served across the pool (includes warmup completions).
+    pub served: u64,
+    /// Worker TX rings: achieved flush amortization (frames per burst).
+    pub tx_mean_batch: f64,
+    /// Worker TX backpressure stalls and responder re-offers.
+    pub tx_stalled: u64,
+    pub tx_retries: u64,
+    /// Response frames that left the workers.
+    pub tx_packets: u64,
+    /// Gateway-side RX: frames received and achieved burst amortization.
+    pub gw_rx_packets: u64,
+    pub gw_rx_mean_batch: f64,
+}
+
+/// Default offered-load grids for the duplex sweep (2×16-core workers).
+/// The containerd grid ends past the kernel RX path's aggregate packet
+/// rate (the overload point where the ring must shed); the junctiond grid
+/// shares the low rates and extends far past the containerd knee so the
+/// TX flush amortization has load to grow into.
+pub fn duplex_default_containerd_rates() -> Vec<f64> {
+    vec![1_000.0, 4_000.0, 8_000.0, 320_000.0]
+}
+
+pub fn duplex_default_junction_rates() -> Vec<f64> {
+    vec![1_000.0, 4_000.0, 16_000.0, 48_000.0, 160_000.0]
+}
+
+/// Run the duplex sweep for one backend: the same cluster shape as E11
+/// (per-worker NIC rings behind the least-inflight front end) but with the
+/// response direction live — bounded TX rings on every worker and the
+/// front end's own RX NIC. Uses the platform-default compute cost (no PJRT
+/// calibration) so the output is byte-deterministic for a given seed — the
+/// CI determinism job diffs two same-seed runs of this table.
+pub fn duplex_cluster_run(
+    backend: Backend,
+    n_workers: usize,
+    worker_cores: usize,
+    payload_bytes: u64,
+    rates: &[f64],
+    duration: Time,
+    seed: u64,
+) -> Vec<DuplexPoint> {
+    rates
+        .iter()
+        .map(|&rate| {
+            let platform = Rc::new(PlatformConfig {
+                rpc_payload_bytes: payload_bytes,
+                ..PlatformConfig::default()
+            });
+            let compute = platform.function_compute_ns;
+            let mut sim = Sim::new();
+            let mut cluster = Cluster::new_with_platform(
+                backend,
+                n_workers,
+                worker_cores,
+                seed,
+                compute,
+                platform.clone(),
+            );
+            cluster.policy.max_replicas = n_workers as u32;
+            cluster.deploy(
+                &mut sim,
+                FunctionSpec::new("aes", "aes600", RuntimeKind::Go)
+                    .with_scale(ScaleMode::MaxCores, platform.junction_max_cores as u32),
+            );
+            for _ in 1..n_workers {
+                cluster.scale_up(&mut sim, "aes");
+            }
+            sim.run_until(SECONDS); // past every cold start
+            let cluster = Rc::new(RefCell::new(cluster));
+            let gen = OpenLoop::new("aes", rate, duration, seed ^ (rate as u64) ^ payload_bytes);
+            let mut r: RunResult = gen.run_on(&mut sim, &cluster);
+            let c = cluster.borrow();
+            let (_, tx) = c.nic_totals();
+            let gw = c.frontend_rx_stats();
+            DuplexPoint {
+                backend,
+                offered_rps: rate,
+                payload_bytes,
+                goodput_rps: r.goodput_rps(),
+                p50: r.gateway_observed.quantile(0.5),
+                p99: r.gateway_observed.quantile(0.99),
+                tx_p50: r.tx_hop.quantile(0.5),
+                submitted: r.submitted,
+                completed: r.completed,
+                dropped: r.dropped,
+                served: c.total_completed(),
+                tx_mean_batch: tx.mean_batch(),
+                tx_stalled: tx.tx_stalled,
+                tx_retries: tx.tx_retries,
+                tx_packets: tx.tx_packets,
+                gw_rx_packets: gw.rx_delivered,
+                gw_rx_mean_batch: gw.mean_batch(),
+            }
+        })
+        .collect()
+}
+
+/// The E13 duplex table: both backends, response-direction telemetry.
+pub fn duplex_table(
+    n_workers: usize,
+    worker_cores: usize,
+    payload_bytes: u64,
+    c_rates: &[f64],
+    j_rates: &[f64],
+    duration: Time,
+    seed: u64,
+) -> (Table, Vec<DuplexPoint>) {
+    let mut points = duplex_cluster_run(
+        Backend::Containerd,
+        n_workers,
+        worker_cores,
+        payload_bytes,
+        c_rates,
+        duration,
+        seed,
+    );
+    points.extend(duplex_cluster_run(
+        Backend::Junctiond,
+        n_workers,
+        worker_cores,
+        payload_bytes,
+        j_rates,
+        duration,
+        seed,
+    ));
+    let mut t = Table::new(
+        &format!(
+            "E13 — full-duplex netpath: {n_workers}×{worker_cores}-core workers, \
+             {payload_bytes} B echo payload"
+        ),
+        &[
+            "backend",
+            "offered rps",
+            "goodput rps",
+            "p50 (µs)",
+            "p99 (µs)",
+            "tx p50 (µs)",
+            "tx batch",
+            "gw rx batch",
+            "tx stalls",
+            "dropped",
+        ],
+    );
+    for p in &points {
+        t.push_row(vec![
+            p.backend.name().into(),
+            Cell::F2(p.offered_rps),
+            Cell::F2(p.goodput_rps),
+            Cell::NsAsUs(p.p50),
+            Cell::NsAsUs(p.p99),
+            Cell::NsAsUs(p.tx_p50),
+            Cell::F2(p.tx_mean_batch),
+            Cell::F2(p.gw_rx_mean_batch),
+            Cell::Int(p.tx_stalled as i64),
+            Cell::Int(p.dropped as i64),
+        ]);
+    }
+    (t, points)
+}
+
+/// Echo payload sweep: both backends at a fixed modest rate, payload sizes
+/// swept across three orders of magnitude. The kernel path pays the
+/// per-KiB socket↔DMA copy on *both* directions of every frame; the
+/// zero-copy bypass path's costs are payload-independent — so the gap
+/// widens with payload size.
+pub fn duplex_payload_sweep_table(
+    n_workers: usize,
+    worker_cores: usize,
+    payloads: &[u64],
+    rate: f64,
+    duration: Time,
+    seed: u64,
+) -> (Table, Vec<DuplexPoint>) {
+    let mut points = Vec::new();
+    for backend in [Backend::Containerd, Backend::Junctiond] {
+        for &payload in payloads {
+            points.extend(duplex_cluster_run(
+                backend,
+                n_workers,
+                worker_cores,
+                payload,
+                &[rate],
+                duration,
+                seed,
+            ));
+        }
+    }
+    let mut t = Table::new(
+        &format!("E13b — echo payload sweep @ {rate} rps, {n_workers}×{worker_cores}-core workers"),
+        &[
+            "backend",
+            "payload (B)",
+            "goodput rps",
+            "p50 (µs)",
+            "p99 (µs)",
+            "tx p50 (µs)",
+            "tx stalls",
+            "dropped",
+        ],
+    );
+    for p in &points {
+        t.push_row(vec![
+            p.backend.name().into(),
+            Cell::Int(p.payload_bytes as i64),
+            Cell::F2(p.goodput_rps),
+            Cell::NsAsUs(p.p50),
+            Cell::NsAsUs(p.p99),
+            Cell::NsAsUs(p.tx_p50),
+            Cell::Int(p.tx_stalled as i64),
+            Cell::Int(p.dropped as i64),
+        ]);
+    }
+    (t, points)
+}
+
+// ---------------------------------------------------------------------------
 // E10 — multi-tenant trace replay (§1 motivation; [22] skew)
 // ---------------------------------------------------------------------------
 
@@ -1118,6 +1354,56 @@ mod tests {
         assert_eq!(a.virtual_ns, b.virtual_ns, "virtual clocks diverged");
         assert_eq!(a.events_fired, b.events_fired, "event counts diverged");
         assert_eq!((a.p50, a.p99), (b.p50, b.p99), "latency tables diverged");
+    }
+
+    #[test]
+    fn duplex_kernel_tx_pinned_junction_amortizes() {
+        let c = duplex_cluster_run(Backend::Containerd, 2, 10, 600, &[2_000.0], 200 * MILLIS, 7);
+        let j = duplex_cluster_run(Backend::Junctiond, 2, 10, 600, &[2_000.0], 200 * MILLIS, 7);
+        let (cp, jp) = (&c[0], &j[0]);
+        // Kernel TX flushes one frame per qdisc pass — exactly 1.0.
+        assert!(cp.tx_packets > 0);
+        assert!((cp.tx_mean_batch - 1.0).abs() < 1e-9, "kernel TX batch {}", cp.tx_mean_batch);
+        // Bypass TX is polled: amortization is at least 1 and the polled
+        // hop undercuts the kernel one.
+        assert!(jp.tx_mean_batch >= 1.0, "{}", jp.tx_mean_batch);
+        assert!(jp.tx_p50 < cp.tx_p50, "polled TX {} vs kernel {}", jp.tx_p50, cp.tx_p50);
+        // Conservation at the response direction, both backends.
+        for p in [cp, jp] {
+            assert_eq!(p.submitted, p.completed + p.dropped, "{:?} leaked", p.backend);
+            assert_eq!(p.tx_packets, p.served, "{:?}: TX frames != served", p.backend);
+            assert_eq!(p.gw_rx_packets, p.served, "{:?}: gateway RX != served", p.backend);
+        }
+    }
+
+    #[test]
+    fn duplex_payload_sweep_widens_kernel_gap() {
+        let (_, points) =
+            duplex_payload_sweep_table(2, 10, &[64, 16_384], 1_000.0, 200 * MILLIS, 3);
+        let find = |b: Backend, pl: u64| {
+            points.iter().find(|p| p.backend == b && p.payload_bytes == pl).unwrap()
+        };
+        let c_small = find(Backend::Containerd, 64);
+        let c_big = find(Backend::Containerd, 16_384);
+        let j_small = find(Backend::Junctiond, 64);
+        let j_big = find(Backend::Junctiond, 16_384);
+        // The kernel path pays the per-KiB copy both ways: a 16 KiB echo
+        // costs it visibly more than a 64 B one on the TX hop.
+        assert!(
+            c_big.tx_p50 > c_small.tx_p50 + 3 * MICROS,
+            "kernel TX must pay the copy: {} vs {}",
+            c_big.tx_p50,
+            c_small.tx_p50
+        );
+        // The zero-copy path's TX hop barely moves.
+        assert!(
+            j_big.tx_p50 < j_small.tx_p50 + 3 * MICROS,
+            "bypass TX must stay payload-flat: {} vs {}",
+            j_big.tx_p50,
+            j_small.tx_p50
+        );
+        // And junctiond wins end-to-end at every payload.
+        assert!(j_small.p50 < c_small.p50 && j_big.p50 < c_big.p50);
     }
 
     #[test]

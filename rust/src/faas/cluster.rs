@@ -15,7 +15,11 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
-use crate::simcore::{Sim, Time, MILLIS, SECONDS};
+use crate::junction::BypassCosts;
+use crate::netpath::{NicQueue, NicStats, Packet, TxStats};
+use crate::oskernel::KernelCosts;
+use crate::rpc::Message;
+use crate::simcore::{Rng, Sim, Time, MILLIS, SECONDS};
 
 use super::pipeline::{FaasSim, RequestTiming};
 use super::registry::FunctionSpec;
@@ -61,6 +65,120 @@ pub struct Worker {
     pub in_flight: Rc<RefCell<i64>>,
 }
 
+/// The front end's own RX NIC: response frames coming back from the
+/// workers land in a bounded ring at the cluster gateway and pay *that*
+/// machine's per-packet (kernel) or per-burst (bypass) receive costs
+/// before the client sees them — the gateway-side half of the full-duplex
+/// path. A full ring backpressures the worker side: the held frame is
+/// re-offered after the retry backoff; the front end never abandons a
+/// response the cluster already paid to compute.
+struct FrontendRx {
+    nic: NicQueue,
+    kc: KernelCosts,
+    bc: BypassCosts,
+    backend: Backend,
+    platform: Rc<PlatformConfig>,
+}
+
+type RespFn = Box<dyn FnOnce(&mut Sim, RequestTiming)>;
+
+/// Offer one worker response frame to the front end's RX ring.
+fn frontend_rx_ingress(
+    front: Rc<RefCell<FrontendRx>>,
+    sim: &mut Sim,
+    t: RequestTiming,
+    done: RespFn,
+) {
+    let mut resp = Some((t, done));
+    let kicked = {
+        let mut f = front.borrow_mut();
+        if !f.nic.is_full() {
+            let (t, done) = resp.take().expect("response consumed before accept");
+            let bytes = Message::response_frame_size(f.platform.rpc_payload_bytes as usize);
+            let kick = f.nic.enqueue(Packet {
+                bytes,
+                enqueued_at: sim.now(),
+                deliver: Box::new(move |sim| {
+                    let mut t = t;
+                    t.done = sim.now();
+                    done(sim, t);
+                }),
+            });
+            Some(kick)
+        } else {
+            // Backpressure, not loss: the frame is held, so this is not
+            // an `rx_dropped` (which means shed-on-the-wire everywhere
+            // else) — count only the re-offer it schedules.
+            f.nic.stats.retries += 1;
+            None
+        }
+    };
+    match kicked {
+        Some(true) => {
+            let front2 = front.clone();
+            sim.after(0, move |sim| frontend_rx_drain(front2, sim));
+        }
+        Some(false) => {}
+        None => {
+            let backoff = front.borrow().platform.nic_retry_backoff_ns;
+            let (t, done) = resp.take().expect("response consumed before re-offer");
+            let front2 = front.clone();
+            sim.after(backoff, move |sim| frontend_rx_ingress(front2, sim, t, done));
+        }
+    }
+}
+
+/// Drain one burst off the front end's RX ring, charging that machine's
+/// receive costs: per-packet IRQ + stack + copy + app receive on the
+/// kernel path; a polled zero-copy burst on the bypass path, the flat
+/// poll-iteration cost amortizing across the batch (the front end has no
+/// central scheduler, so the platform constant stands in for its polling
+/// core's iteration).
+fn frontend_rx_drain(front: Rc<RefCell<FrontendRx>>, sim: &mut Sim) {
+    let (deliveries, burst_ns) = {
+        let mut f = front.borrow_mut();
+        let burst_max = match f.backend {
+            Backend::Containerd => 1,
+            Backend::Junctiond => f.platform.nic_batch_max as usize,
+        };
+        let pkts = f.nic.pop_burst(burst_max);
+        let copy_per_kb = f.platform.nic_copy_ns_per_kb;
+        let mut deliveries: Vec<(Time, Box<dyn FnOnce(&mut Sim)>)> =
+            Vec::with_capacity(pkts.len());
+        let mut offset: Time = 0;
+        match f.backend {
+            Backend::Containerd => {
+                for p in pkts {
+                    let copy = p.bytes as Time * copy_per_kb / 1024;
+                    let cost = f.kc.nic_rx_packet(copy) + f.kc.app_recv();
+                    offset += cost;
+                    deliveries.push((offset, p.deliver));
+                }
+            }
+            Backend::Junctiond => {
+                if !pkts.is_empty() {
+                    offset += f.platform.junction_poll_iter_ns;
+                }
+                for p in pkts {
+                    offset += f.bc.rx_poll_packet();
+                    deliveries.push((offset, p.deliver));
+                }
+            }
+        }
+        (deliveries, offset)
+    };
+    for (off, deliver) in deliveries {
+        sim.after(off, deliver);
+    }
+    let front2 = front.clone();
+    sim.after(burst_ns, move |sim| {
+        let more = front2.borrow_mut().nic.burst_done();
+        if more {
+            frontend_rx_drain(front2, sim);
+        }
+    });
+}
+
 /// Replica placement strategies for the controller.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Placement {
@@ -98,6 +216,8 @@ pub struct Cluster {
     /// Scale-ups served per provisioning tier (index =
     /// `crate::snapshot::ProvisionTier::idx`).
     pub tier_scale_ups: [u64; 3],
+    /// The front end's own RX NIC for the response direction.
+    front_rx: Rc<RefCell<FrontendRx>>,
 }
 
 impl Cluster {
@@ -108,8 +228,27 @@ impl Cluster {
         seed: u64,
         compute_ns: Time,
     ) -> Self {
+        Cluster::new_with_platform(
+            backend,
+            n_workers,
+            worker_cores,
+            seed,
+            compute_ns,
+            Rc::new(PlatformConfig::default()),
+        )
+    }
+
+    /// Build a cluster against an explicit platform model (the duplex
+    /// payload sweep varies `rpc_payload_bytes` and the NIC knobs).
+    pub fn new_with_platform(
+        backend: Backend,
+        n_workers: usize,
+        worker_cores: usize,
+        seed: u64,
+        compute_ns: Time,
+        platform: Rc<PlatformConfig>,
+    ) -> Self {
         assert!(n_workers >= 1);
-        let platform = Rc::new(PlatformConfig::default());
         let workers = (0..n_workers)
             .map(|i| {
                 let cfg = ExperimentConfig {
@@ -128,6 +267,13 @@ impl Cluster {
                 }
             })
             .collect();
+        let front_rx = Rc::new(RefCell::new(FrontendRx {
+            nic: NicQueue::new(platform.nic_queue_depth as usize),
+            kc: KernelCosts::new(platform.clone(), Rng::new(seed ^ 0xF00D)),
+            bc: BypassCosts::new(platform.clone(), Rng::new(seed ^ 0xBEEF)),
+            backend,
+            platform: platform.clone(),
+        }));
         Cluster {
             platform,
             backend,
@@ -145,6 +291,7 @@ impl Cluster {
             scale_to_zeros: 0,
             zero_redeploys: 0,
             tier_scale_ups: [0; 3],
+            front_rx,
         }
     }
 
@@ -348,12 +495,21 @@ impl Cluster {
         let worker_inflight = self.workers[w].in_flight.clone();
         let fn_inflight = self.inflight.clone();
         let last_active = self.last_active.clone();
+        let front = self.front_rx.clone();
         let fname = function.to_string();
         self.workers[w].sim_node.submit(sim, function, move |sim, t| {
             *worker_inflight.borrow_mut() -= 1;
             *fn_inflight.borrow_mut().get_mut(&fname).unwrap() -= 1;
             last_active.borrow_mut().insert(fname.clone(), sim.now());
-            done(sim, t);
+            if t.dropped {
+                // Nothing crossed back over the wire: the request died at
+                // a worker ring (RX tail drop or TX stall budget).
+                done(sim, t);
+            } else {
+                // The response frame lands in the front end's RX NIC and
+                // pays its receive costs before the client sees it.
+                frontend_rx_ingress(front, sim, t, Box::new(done));
+            }
         });
     }
 
@@ -403,6 +559,52 @@ impl Cluster {
         crate::simcore::tick_train(sim, interval, horizon, move |sim| {
             cluster.borrow_mut().reconcile(sim);
         });
+    }
+
+    /// Front-end RX NIC counters (the gateway-side half of the duplex
+    /// path: responses received, burst amortization, backpressure
+    /// re-offers in `retries`; `rx_dropped` stays 0 — the front end never
+    /// loses a held frame).
+    pub fn frontend_rx_stats(&self) -> NicStats {
+        self.front_rx.borrow().nic.stats
+    }
+
+    /// Aggregate worker NIC counters across the pool: (RX totals, TX
+    /// totals). `max_depth` aggregates as the per-worker maximum.
+    pub fn nic_totals(&self) -> (NicStats, TxStats) {
+        let mut rx = NicStats::default();
+        let mut tx = TxStats::default();
+        for w in &self.workers {
+            let s = w.sim_node.nic_stats();
+            rx.rx_enqueued += s.rx_enqueued;
+            rx.rx_delivered += s.rx_delivered;
+            rx.rx_dropped += s.rx_dropped;
+            rx.retries += s.retries;
+            rx.retrans_cancelled += s.retrans_cancelled;
+            rx.rx_bytes += s.rx_bytes;
+            rx.bursts += s.bursts;
+            rx.max_depth = rx.max_depth.max(s.max_depth);
+            let x = w.sim_node.tx_stats();
+            tx.tx_enqueued += x.tx_enqueued;
+            tx.tx_packets += x.tx_packets;
+            tx.tx_bytes += x.tx_bytes;
+            tx.tx_stalled += x.tx_stalled;
+            tx.tx_retries += x.tx_retries;
+            tx.tx_abandoned += x.tx_abandoned;
+            tx.tx_bursts += x.tx_bursts;
+            tx.tx_max_depth = tx.tx_max_depth.max(x.tx_max_depth);
+        }
+        (rx, tx)
+    }
+
+    /// Invocations served across the pool (sum of worker completions).
+    pub fn total_completed(&self) -> u64 {
+        self.workers.iter().map(|w| w.sim_node.completed()).sum()
+    }
+
+    /// Requests abandoned across the pool (RX give-ups + TX abandons).
+    pub fn total_dropped(&self) -> u64 {
+        self.workers.iter().map(|w| w.sim_node.dropped()).sum()
     }
 
     /// Total cores in the pool (worker-manager capacity view).
@@ -599,6 +801,52 @@ mod tests {
             "redeploy after scale-to-zero should hit the warm pool: {:?}",
             cl.tier_scale_ups
         );
+    }
+
+    #[test]
+    fn duplex_conservation_under_overload() {
+        use crate::workload::OpenLoop;
+        // Overloaded duplex runs on both backends: every submitted request
+        // must resolve exactly once (completed or dropped — nothing leaks,
+        // nothing double-counts), and the response direction's counters
+        // must agree with completions end to end: worker RX deliveries ==
+        // completions + TX abandons, worker TX frames == completions ==
+        // front-end RX deliveries.
+        for (backend, rate) in [(Backend::Containerd, 320_000.0), (Backend::Junctiond, 64_000.0)]
+        {
+            let mut sim = Sim::new();
+            let mut c = Cluster::new(backend, 2, 10, 11, 100_000);
+            c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+            c.scale_up(&mut sim, "aes");
+            sim.run_until(SECONDS);
+            let c = Rc::new(RefCell::new(c));
+            let r = OpenLoop::new("aes", rate, 150 * MILLIS, 7).run_on(&mut sim, &c);
+            assert_eq!(
+                r.submitted,
+                r.completed + r.dropped,
+                "{backend:?}: submitted requests leaked"
+            );
+            let cl = c.borrow();
+            let (rx, tx) = cl.nic_totals();
+            let gw = cl.frontend_rx_stats();
+            let served = cl.total_completed();
+            assert_eq!(tx.tx_packets, served, "{backend:?}: worker TX frames != completions");
+            assert_eq!(gw.rx_delivered, served, "{backend:?}: front-end RX != completions");
+            assert_eq!(gw.rx_dropped, 0, "{backend:?}: the front end never loses a held frame");
+            assert_eq!(
+                rx.rx_delivered,
+                served + tx.tx_abandoned,
+                "{backend:?}: RX deliveries must all complete or abandon at TX"
+            );
+            assert!(
+                cl.total_dropped() >= tx.tx_abandoned,
+                "{backend:?}: worker drop counter must cover the TX abandons"
+            );
+            if backend == Backend::Containerd {
+                assert!(rx.rx_dropped > 0, "320k rps must overflow the kernel RX rings");
+                assert!(r.dropped > 0, "RX give-ups must surface as dropped requests");
+            }
+        }
     }
 
     #[test]

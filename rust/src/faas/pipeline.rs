@@ -34,7 +34,7 @@ use crate::config::{Backend, ExperimentConfig, PlatformConfig};
 use crate::containerd_sim::{ContainerId, ContainerState, Containerd};
 use crate::junction::{BypassCosts, InstanceId};
 use crate::junctiond::Junctiond;
-use crate::netpath::{NicQueue, NicStats, Packet};
+use crate::netpath::{NicQueue, NicStats, Packet, TxQueue, TxStats};
 use crate::oskernel::KernelCosts;
 use crate::rpc::Message;
 use crate::simcore::{CorePool, Rng, Sim, Time, TimerHandle, MILLIS};
@@ -66,10 +66,16 @@ pub struct RequestTiming {
     pub done: Time,
     /// Provisioning tier of the replica that served this invocation.
     pub tier: ProvisionTier,
-    /// Client retransmissions this request needed (NIC tail drops).
+    /// Client retransmissions this request needed (NIC RX tail drops).
     pub retries: u32,
-    /// True when the request was abandoned after exhausting retransmits;
-    /// only `submit`, `nic_in`, `retries` and `done` are meaningful then.
+    /// Response frame first offered to the worker's TX ring.
+    pub tx_in: Time,
+    /// Responder re-offers after TX-ring backpressure stalls.
+    pub tx_retries: u32,
+    /// True when the request was abandoned — either the client exhausted
+    /// its RX retransmits, or the worker exhausted its TX stall budget
+    /// (`tx_retries` > 0 distinguishes the latter); only `submit`,
+    /// `nic_in`, `retries`, `tx_retries` and `done` are meaningful then.
     pub dropped: bool,
 }
 
@@ -99,6 +105,13 @@ impl RequestTiming {
     /// Response path from instance completion back to the client.
     pub fn response_hop(&self) -> Time {
         self.done.saturating_sub(self.exec_end)
+    }
+    /// Transmit hop (a sub-span of [`RequestTiming::response_hop`]): TX
+    /// ring wait + per-frame flush service + the return wire, plus any
+    /// backpressure stalls the response ate — symmetric with
+    /// [`RequestTiming::nic_hop`] on the request side.
+    pub fn tx_hop(&self) -> Time {
+        self.done.saturating_sub(self.tx_in)
     }
 }
 
@@ -173,9 +186,10 @@ struct World {
     prov_inst: Option<InstanceId>,
     compute_ns: Time,
     pub completed: u64,
-    // Network data path (netpath): the worker's bounded NIC RX ring plus
-    // its per-packet cost samplers.
+    // Network data path (netpath): the worker's bounded NIC RX + TX rings
+    // plus their per-packet cost samplers (shared by both directions).
     nic: NicQueue,
+    tx: TxQueue,
     kc_nic: KernelCosts,
     bc_nic: BypassCosts,
     /// Payload bytes each invocation carries in its framed `rpc::Message`
@@ -377,6 +391,7 @@ impl FaasSim {
             compute_ns: cfg.function_compute_ns,
             completed: 0,
             nic: NicQueue::new(platform.nic_queue_depth as usize),
+            tx: TxQueue::new(platform.nic_tx_queue_depth as usize),
             kc_nic: KernelCosts::new(platform.clone(), rng.fork()),
             bc_nic: BypassCosts::new(platform.clone(), rng.fork()),
             payload_bytes: platform.rpc_payload_bytes as usize,
@@ -900,9 +915,15 @@ impl FaasSim {
         self.w.borrow().dropped
     }
 
-    /// Worker NIC counters (ring occupancy, drops, batching).
+    /// Worker NIC RX counters (ring occupancy, drops, batching).
     pub fn nic_stats(&self) -> NicStats {
         self.w.borrow().nic.stats
+    }
+
+    /// Worker NIC TX counters (ring occupancy, backpressure stalls, flush
+    /// batching).
+    pub fn tx_stats(&self) -> TxStats {
+        self.w.borrow().tx.stats
     }
 
     pub fn cores(&self) -> CorePool {
@@ -1148,7 +1169,9 @@ fn nic_drain(fs: FaasSim, sim: &mut Sim) {
                 }
             }
             Backend::Junctiond => {
-                offset += w.jd.scheduler.note_nic_poll(pkts.len() as u32);
+                if !pkts.is_empty() {
+                    offset += w.jd.scheduler.note_nic_poll(pkts.len() as u32);
+                }
                 for p in pkts {
                     offset += w.bc_nic.rx_poll_packet();
                     deliveries.push((offset, p.deliver));
@@ -1356,7 +1379,9 @@ fn exec_segment(
     });
 }
 
-/// Response path: provider proxy pass, gateway proxy pass, wire to client.
+/// Response path: provider proxy pass, gateway proxy pass, then the
+/// worker's bounded TX ring ([`tx_ingress`]/[`tx_drain`]) and the wire
+/// back to the client.
 fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
     let (lat_p, cpu_p, cores) = {
         let mut w = fs.w.borrow_mut();
@@ -1379,7 +1404,7 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
     sim.after(lat_p, move |sim| {
         let fs2 = fs.clone();
         cores.run(sim, cpu_p, move |sim| {
-            let (lat_g, cpu_g, cores2, wire) = {
+            let (lat_g, cpu_g, cores2) = {
                 let mut w = fs2.w.borrow_mut();
                 let prov_inst = w.prov_inst;
                 w.service_done(prov_inst);
@@ -1388,21 +1413,23 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
                 let p = w.platform.clone();
                 let cpu = match w.backend {
                     Backend::Containerd => {
+                        // App-side send half only: the NIC-level TX work
+                        // (qdisc + copy + ACK softirq) is charged per
+                        // frame by the TX flush engine (tx_drain).
                         w.kc_gw.recv_msg()
                             + p.rpc_serde_ns
-                            + w.kc_gw.send_msg()
+                            + w.kc_gw.app_send()
                             + w.kc_gw.segment_interference()
                     }
                     Backend::Junctiond => {
-                        w.bc_gw.recv_msg() + p.rpc_serde_ns + w.bc_gw.send_msg()
+                        // The TX doorbell is rung by the polling core's
+                        // flush (tx_poll_packet); the gateway instance
+                        // pays receive + serde only.
+                        w.bc_gw.recv_msg() + p.rpc_serde_ns
                     }
                 };
-                // The response leaves the worker as one framed TX packet
-                // (the send cost above already covers the TX path).
-                let tx_bytes = Message::response_frame_size(w.payload_bytes);
-                w.nic.note_tx(tx_bytes);
                 let lat = lat + w.bc_gw.sched_tail_delay();
-                (lat, cpu, w.cores.clone(), p.wire_ns)
+                (lat, cpu, w.cores.clone())
             };
             let fs3 = fs2.clone();
             sim.after(lat_g, move |sim| {
@@ -1411,8 +1438,58 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
                         let mut w = fs3.w.borrow_mut();
                         let gw_inst = w.gw_inst;
                         w.service_done(gw_inst);
+                    }
+                    tx_ingress(fs3, sim, name, t, 0, done);
+                });
+            });
+        });
+    });
+}
+
+/// TX ingress: offer the framed response to the worker's bounded TX ring.
+/// A full ring exerts *backpressure*: the worker still holds the only
+/// copy of the frame, so nothing is lost — the responder stalls, re-offers
+/// the frame after `nic_tx_retry_backoff_ns`, and only abandons the
+/// response after `nic_tx_max_retries` stalls (the request then resolves
+/// with `timing.dropped`, the wasted execution being exactly the incast
+/// pathology the bounded ring models). Unlike the RX side there is no
+/// retransmit race to cancel.
+fn tx_ingress(
+    fs: FaasSim,
+    sim: &mut Sim,
+    name: String,
+    mut t: RequestTiming,
+    attempt: u32,
+    done: DoneFn,
+) {
+    if attempt == 0 {
+        t.tx_in = sim.now();
+    }
+    t.tx_retries = attempt;
+    enum Decision {
+        Accept { kick: bool },
+        Hold,
+        Abandon,
+    }
+    let mut done_opt = Some(done);
+    let decision = {
+        let mut w = fs.w.borrow_mut();
+        if !w.tx.is_full() {
+            let bytes = Message::response_frame_size(w.payload_bytes);
+            let fs2 = fs.clone();
+            let name2 = name.clone();
+            let done = done_opt.take().expect("done consumed before accept");
+            let wire = w.platform.wire_ns;
+            let kick = w.tx.enqueue(Packet {
+                bytes,
+                enqueued_at: sim.now(),
+                deliver: Box::new(move |sim| {
+                    // The frame left the worker NIC: the invocation is
+                    // served; only the wire hop remains.
+                    {
+                        let mut w = fs2.w.borrow_mut();
                         w.completed += 1;
-                        if let Some(f) = w.functions.get_mut(&name) {
+                        if let Some(f) = w.functions.get_mut(&name2) {
                             f.outstanding = f.outstanding.saturating_sub(1);
                         }
                     }
@@ -1421,9 +1498,107 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
                         t.done = sim.now();
                         done(sim, t);
                     });
-                });
+                }),
             });
-        });
+            Decision::Accept { kick }
+        } else {
+            w.tx.note_stall();
+            if (attempt as u64) < w.platform.nic_tx_max_retries {
+                w.tx.stats.tx_retries += 1;
+                Decision::Hold
+            } else {
+                w.tx.stats.tx_abandoned += 1;
+                w.dropped += 1;
+                if let Some(f) = w.functions.get_mut(&name) {
+                    f.outstanding = f.outstanding.saturating_sub(1);
+                }
+                Decision::Abandon
+            }
+        }
+    };
+    match decision {
+        Decision::Accept { kick } => {
+            if kick {
+                // Defer the first flush one event so a burst of
+                // same-instant completions coalesces into one TX batch.
+                let fs2 = fs.clone();
+                sim.after(0, move |sim| tx_drain(fs2, sim));
+            }
+        }
+        Decision::Hold => {
+            let backoff = fs.w.borrow().platform.nic_tx_retry_backoff_ns;
+            let done = done_opt.take().expect("done consumed before hold");
+            let fs2 = fs.clone();
+            sim.after(backoff, move |sim| tx_ingress(fs2, sim, name, t, attempt + 1, done));
+        }
+        Decision::Abandon => {
+            let done = done_opt.take().expect("done consumed before abandon");
+            t.dropped = true;
+            t.done = sim.now();
+            done(sim, t);
+        }
+    }
+}
+
+/// TX flush engine: run one burst off the worker's TX ring.
+///
+/// * **containerd** — one frame at a time: qdisc + driver TX path, the
+///   socket-buffer → DMA copy sized by the frame, and the ACK softirq —
+///   the same work also burning a shared worker core (TX softirq steals
+///   CPU from the functions, like the RX side).
+/// * **junctiond** — the scheduler's dedicated polling core flushes up to
+///   `nic_tx_batch_max` frames per iteration; the iteration cost
+///   (`Scheduler::note_nic_tx_poll`) is charged once per burst and
+///   amortizes across it; per-frame work is the zero-copy user-space
+///   stack + doorbell.
+fn tx_drain(fs: FaasSim, sim: &mut Sim) {
+    let (deliveries, burst_ns, softirq_cpu_ns, cores) = {
+        let mut w = fs.w.borrow_mut();
+        let burst_max = match w.backend {
+            Backend::Containerd => 1,
+            Backend::Junctiond => w.platform.nic_tx_batch_max as usize,
+        };
+        let pkts = w.tx.pop_burst(burst_max);
+        let copy_per_kb = w.platform.nic_copy_ns_per_kb;
+        let mut deliveries: Vec<(Time, Box<dyn FnOnce(&mut Sim)>)> =
+            Vec::with_capacity(pkts.len());
+        let mut offset: Time = 0;
+        let mut cpu: Time = 0;
+        match w.backend {
+            Backend::Containerd => {
+                for p in pkts {
+                    let copy = p.bytes as Time * copy_per_kb / 1024;
+                    let cost = w.kc_nic.nic_tx_packet(copy);
+                    offset += cost;
+                    cpu += cost;
+                    deliveries.push((offset, p.deliver));
+                }
+            }
+            Backend::Junctiond => {
+                if !pkts.is_empty() {
+                    offset += w.jd.scheduler.note_nic_tx_poll(pkts.len() as u32);
+                }
+                for p in pkts {
+                    offset += w.bc_nic.tx_poll_packet();
+                    deliveries.push((offset, p.deliver));
+                }
+            }
+        }
+        (deliveries, offset, cpu, w.cores.clone())
+    };
+    // Kernel path only: the softirq TX work contends for the shared cores.
+    if softirq_cpu_ns > 0 {
+        cores.run(sim, softirq_cpu_ns, |_| {});
+    }
+    for (off, deliver) in deliveries {
+        sim.after(off, deliver);
+    }
+    let fs2 = fs.clone();
+    sim.after(burst_ns, move |sim| {
+        let more = fs2.w.borrow_mut().tx.burst_done();
+        if more {
+            tx_drain(fs2, sim);
+        }
     });
 }
 
@@ -1666,7 +1841,13 @@ mod tests {
                 assert!(t.nic_in > t.submit, "{backend:?}: wire precedes the NIC");
                 assert!(t.nic_in <= t.gateway_in, "{backend:?}: NIC precedes the gateway");
                 assert_eq!(t.retries, 0, "{backend:?}: no drops at sequential load");
+                assert_eq!(t.tx_retries, 0, "{backend:?}: no TX stalls at sequential load");
                 assert!(!t.dropped);
+                assert!(t.tx_in >= t.exec_end, "{backend:?}: TX follows the exec window");
+                assert!(
+                    t.tx_hop() > 0 && t.tx_hop() <= t.response_hop(),
+                    "{backend:?}: the TX hop is a sub-span of the response hop"
+                );
                 assert_eq!(
                     wire + t.nic_hop() + t.pre_exec() + t.exec() + t.response_hop(),
                     t.e2e(),
@@ -1738,7 +1919,11 @@ mod tests {
         let s = fs.scheduler_stats();
         assert_eq!(s.nic_rx_packets, 64);
         assert!(s.nic_polls <= 4, "{s:?}");
-        assert_eq!(stats.tx_packets, 64, "one response frame per invocation");
+        let tx = fs.tx_stats();
+        assert_eq!(tx.tx_packets, 64, "one response frame per invocation");
+        assert_eq!(tx.tx_abandoned, 0);
+        assert_eq!(s.nic_tx_packets, 64, "scheduler TX poll accounting agrees");
+        assert!(tx.mean_batch() >= 1.0, "{tx:?}");
     }
 
     #[test]
@@ -1755,6 +1940,60 @@ mod tests {
         assert_eq!(stats.rx_delivered, 32);
         assert_eq!(stats.bursts, 32, "kernel path processes one packet per IRQ: {stats:?}");
         assert!((stats.mean_batch() - 1.0).abs() < 1e-9);
+        // The TX direction is just as serial: one frame per qdisc pass.
+        let tx = fs.tx_stats();
+        assert_eq!(tx.tx_packets, 32);
+        assert_eq!(tx.tx_bursts, 32, "kernel TX flushes one frame per burst: {tx:?}");
+        assert!((tx.mean_batch() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tx_backpressure_stalls_then_resolves() {
+        // A one-descriptor TX ring flushing one frame per burst under a
+        // simultaneous 200-request storm: responses must stall
+        // (backpressure), re-offer, and every request must still resolve
+        // (completed or abandoned — nothing leaks, nothing double-counts).
+        let platform = PlatformConfig {
+            nic_tx_queue_depth: 1,
+            nic_tx_batch_max: 1,
+            nic_tx_retry_backoff_ns: 5 * MICROS,
+            ..PlatformConfig::default()
+        };
+        let mut sim = Sim::new();
+        let fs = FaasSim::new(&cfg(Backend::Junctiond), Rc::new(platform));
+        // 8-way instance concurrency so completions cluster (an incast of
+        // responses, not a serial trickle).
+        fs.deploy(
+            &mut sim,
+            FunctionSpec::new("aes", "aes600", RuntimeKind::Go)
+                .with_scale(crate::faas::ScaleMode::MaxCores, 8),
+        );
+        sim.run_until(crate::simcore::SECONDS);
+        let completed = Rc::new(RefCell::new(0u64));
+        let dropped = Rc::new(RefCell::new(0u64));
+        for _ in 0..200 {
+            let c = completed.clone();
+            let d = dropped.clone();
+            fs.submit(&mut sim, "aes", move |_, t| {
+                if t.dropped {
+                    *d.borrow_mut() += 1;
+                } else {
+                    *c.borrow_mut() += 1;
+                }
+            });
+        }
+        sim.run_to_completion();
+        let (c, d) = (*completed.borrow(), *dropped.borrow());
+        assert_eq!(c + d, 200, "every request must resolve");
+        let tx = fs.tx_stats();
+        assert!(tx.tx_stalled > 0, "a 1-deep TX ring must backpressure: {tx:?}");
+        assert!(tx.tx_retries > 0, "stalled responses must re-offer: {tx:?}");
+        assert_eq!(tx.tx_packets, c, "frames that left the worker == completions");
+        assert_eq!(tx.tx_abandoned, d, "abandons == dropped requests");
+        assert_eq!(fs.completed(), c);
+        assert_eq!(fs.dropped(), d);
+        // No response was both sent and abandoned.
+        assert_eq!(tx.tx_enqueued, tx.tx_packets);
     }
 
     #[test]

@@ -86,6 +86,14 @@ impl BypassCosts {
         self.jittered(self.p.junction_stack_msg_ns)
     }
 
+    /// Per-frame share of a polled TX flush burst: same user-space stack
+    /// traversal + doorbell as [`BypassCosts::send_msg`], zero-copy (the
+    /// poll-iteration cost itself is charged once per burst by the
+    /// netpath TX flush engine — see `Scheduler::note_nic_tx_poll`).
+    pub fn tx_poll_packet(&mut self) -> Time {
+        self.send_msg()
+    }
+
     /// uThread wakeup when the instance already holds a core.
     pub fn wakeup_warm(&mut self) -> Time {
         self.wakeups += 1;

@@ -52,6 +52,12 @@ pub struct SchedulerStats {
     /// Packets drained across all NIC RX polls. `nic_rx_packets /
     /// nic_polls` is the achieved rx_burst amortization.
     pub nic_rx_packets: u64,
+    /// NIC TX poll iterations (response-frame flushes) executed by the
+    /// dedicated polling core.
+    pub nic_tx_polls: u64,
+    /// Frames flushed across all NIC TX polls. `nic_tx_packets /
+    /// nic_tx_polls` is the achieved tx_burst amortization.
+    pub nic_tx_packets: u64,
 }
 
 /// Central core scheduler for all Junction instances on one server.
@@ -143,6 +149,17 @@ impl Scheduler {
         self.poll_iteration_cost()
     }
 
+    /// One NIC TX poll iteration flushing a burst of `batch` response
+    /// frames from a worker's TX ring — the transmit-side twin of
+    /// [`Scheduler::note_nic_poll`]: the cost is the standing
+    /// poll-iteration cost regardless of the burst size, so it amortizes
+    /// across the flushed frames.
+    pub fn note_nic_tx_poll(&mut self, batch: u32) -> Time {
+        self.stats.nic_tx_polls += 1;
+        self.stats.nic_tx_packets += batch as u64;
+        self.poll_iteration_cost()
+    }
+
     /// A packet arrived for `id` (NIC event queue signaled). Accounts the
     /// in-flight request and decides the wakeup path.
     pub fn packet_arrival(&mut self, id: InstanceId) -> GrantOutcome {
@@ -209,6 +226,15 @@ impl Scheduler {
     /// holds more than its fair share, revoke one core from the most
     /// over-allocated instance and grant it to `hungry`.
     fn try_preempt_for(&mut self, hungry: InstanceId) -> bool {
+        {
+            // Never grant past the hungry instance's configured core cap —
+            // preempting a donor for a grant the cap forbids would both
+            // break the cap invariant and waste the donor's core.
+            let h = self.instances.get(hungry as usize).expect("unknown instance");
+            if h.granted_cores >= h.max_cores {
+                return false;
+            }
+        }
         let demanding = self.instances.iter().filter(|i| i.in_flight > 0).count() as u32;
         if demanding == 0 {
             return false;
@@ -235,8 +261,12 @@ impl Scheduler {
 
     /// Return `n` cores to the pool without an owner (crash path: the
     /// instance's grant bookkeeping was already zeroed by the caller).
+    /// Records the cores in `stats.releases` like [`Scheduler::request_done`]
+    /// does, so grant/release telemetry stays balanced on the crash path.
     pub fn force_release(&mut self, n: u32) {
-        self.granted_total = self.granted_total.saturating_sub(n);
+        let returned = n.min(self.granted_total);
+        self.granted_total -= returned;
+        self.stats.releases += returned as u64;
     }
 
     /// Debug/test invariant check: grant accounting is consistent.
@@ -244,6 +274,14 @@ impl Scheduler {
         let sum: u32 = self.instances.iter().map(|i| i.granted_cores).sum();
         assert_eq!(sum, self.granted_total, "granted core accounting drifted");
         assert!(self.granted_total <= self.grantable_cores, "over-granted cores");
+        // Telemetry balance: every core ever granted was either released
+        // (request_done or force_release) or is still held. Preemption
+        // transfers a core without touching either counter.
+        assert_eq!(
+            self.stats.grants,
+            self.stats.releases + self.granted_total as u64,
+            "grant/release telemetry drifted"
+        );
         for inst in self.instances.iter() {
             assert!(
                 inst.granted_cores <= inst.max_cores,
@@ -376,7 +414,21 @@ mod tests {
             let mut in_flight: Vec<u32> = vec![0; n_inst];
             for _ in 0..200 {
                 let k = g.usize(0, n_inst - 1);
-                if g.bool() || in_flight[k] == 0 {
+                if g.u64(0, 19) == 0 {
+                    // Crash path: the reaper zeroes the instance's
+                    // bookkeeping, then force-releases its cores — the
+                    // telemetry invariant in check_invariants must hold
+                    // through it (force_release records releases).
+                    let held = {
+                        let inst = s.instance_mut(ids[k]).unwrap();
+                        let c = inst.granted_cores;
+                        inst.granted_cores = 0;
+                        inst.in_flight = 0;
+                        c
+                    };
+                    s.force_release(held);
+                    in_flight[k] = 0;
+                } else if g.bool() || in_flight[k] == 0 {
                     s.packet_arrival(ids[k]);
                     in_flight[k] += 1;
                 } else {
@@ -386,6 +438,45 @@ mod tests {
                 s.check_invariants();
             }
         });
+    }
+
+    #[test]
+    fn force_release_records_releases() {
+        let mut s = sched(4);
+        let id = running_instance(&mut s, "fn", 2);
+        s.packet_arrival(id);
+        assert_eq!(s.granted_total(), 1);
+        assert_eq!(s.stats.releases, 0);
+        // Crash path: the caller zeroes the instance's bookkeeping, then
+        // returns its cores to the pool.
+        let held = {
+            let inst = s.instance_mut(id).unwrap();
+            let c = inst.granted_cores;
+            inst.granted_cores = 0;
+            inst.in_flight = 0;
+            c
+        };
+        s.force_release(held);
+        assert_eq!(s.granted_total(), 0);
+        assert_eq!(s.stats.releases, held as u64, "crash-path releases must be recorded");
+        s.check_invariants();
+    }
+
+    #[test]
+    fn preemption_refuses_hungry_at_core_cap() {
+        let mut s = sched(3); // 2 grantable
+        let a = running_instance(&mut s, "a", 2);
+        let b = running_instance(&mut s, "b", 0); // cap 0: may never hold a core
+        s.packet_arrival(a);
+        s.instance_mut(a).unwrap().in_flight += 1; // concurrent demand
+        s.grow_grants(a);
+        assert_eq!(s.instance(a).unwrap().granted_cores, 2);
+        s.instance_mut(b).unwrap().in_flight += 1; // demand from b
+        assert!(!s.try_preempt_for(b), "must not grant past b's core cap");
+        assert_eq!(s.instance(b).unwrap().granted_cores, 0);
+        assert_eq!(s.instance(a).unwrap().granted_cores, 2, "donor must keep its cores");
+        assert_eq!(s.stats.preemptions, 0);
+        s.check_invariants();
     }
 
     #[test]

@@ -249,10 +249,8 @@ impl Junctiond {
             inst.granted_cores = 0;
             g
         };
-        // Return the crashed instance's cores to the pool.
-        for _ in 0..granted {
-            self.scheduler.stats.releases += 1;
-        }
+        // Return the crashed instance's cores to the pool (force_release
+        // records them in stats.releases).
         self.scheduler.force_release(granted);
     }
 

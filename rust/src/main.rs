@@ -65,9 +65,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: junctiond-repro <fig5|fig6|coldstart|ablation|density|serve|calibrate|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
-         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath\n\
+         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex\n\
          --mode kernel|bypass --requests N --runs N --workers N --worker-cores N\n\
-         --functions N --hot N --rate RPS"
+         --functions N --hot N --rate RPS --payload BYTES"
     );
     std::process::exit(2);
 }
@@ -134,6 +134,50 @@ fn main() -> Result<()> {
                 maybe_csv(&flags, &table, "ablation_netpath")?;
                 return Ok(());
             }
+            if which == "duplex" {
+                // E13: the full-duplex data path — worker TX rings with
+                // backpressure + the front end's own RX NIC, plus the echo
+                // payload sweep. Deliberately free of wall-clock output
+                // and PJRT calibration: the CI determinism job diffs two
+                // same-seed runs of this output byte-for-byte.
+                let dur = get_u64(&flags, "duration-ms", 300)? * MILLIS;
+                let workers = get_u64(&flags, "workers", 2)? as usize;
+                let cores = get_u64(&flags, "worker-cores", 16)? as usize;
+                let payload = get_u64(&flags, "payload", 600)?;
+                let rate = get_u64(&flags, "rate", 2_000)? as f64;
+                let (table, points) = ex::duplex_table(
+                    workers,
+                    cores,
+                    payload,
+                    &ex::duplex_default_containerd_rates(),
+                    &ex::duplex_default_junction_rates(),
+                    dur,
+                    seed,
+                );
+                println!("{}", table.to_markdown());
+                let top_j = points
+                    .iter()
+                    .filter(|p| p.backend == Backend::Junctiond)
+                    .max_by(|a, b| a.offered_rps.partial_cmp(&b.offered_rps).unwrap());
+                if let Some(p) = top_j {
+                    println!(
+                        "bypass TX amortization at {:.0} rps: {:.2} frames/burst",
+                        p.offered_rps, p.tx_mean_batch
+                    );
+                }
+                let (sweep, _) = ex::duplex_payload_sweep_table(
+                    workers,
+                    cores,
+                    &[64, 600, 4 << 10, 16 << 10, 64 << 10],
+                    rate,
+                    dur,
+                    seed,
+                );
+                println!("{}", sweep.to_markdown());
+                maybe_csv(&flags, &table, "ablation_duplex")?;
+                maybe_csv(&flags, &sweep, "ablation_duplex_payload")?;
+                return Ok(());
+            }
             let table = match which {
                 "cache" => ex::ablation_cache_table(100, seed),
                 "polling" => ex::ablation_polling_table(&[1, 4, 16, 64, 256, 1024, 4096], seed),
@@ -143,7 +187,7 @@ fn main() -> Result<()> {
                 "multitenant" => ex::multitenant_table(60, 1_000.0, seed),
                 "tiers" => ex::coldstart_tiers_table(20, seed),
                 other => bail!(
-                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath)"
+                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex)"
                 ),
             };
             println!("{}", table.to_markdown());

@@ -1,30 +1,41 @@
-//! The cluster-scale network data path: a bounded per-worker NIC queue.
+//! The cluster-scale network data path: bounded per-worker NIC queues,
+//! full duplex.
 //!
 //! Every invocation crosses gateway → worker → instance as a framed
 //! [`crate::rpc::Message`]; this module is the worker-side NIC those frames
-//! land in. The paper's headline gap — 10× throughput at 2× lower median
-//! and 3.5× lower tail — comes from *how each backend drains this queue*:
+//! land in ([`NicQueue`], the RX ring) and leave through ([`TxQueue`], the
+//! TX ring). The paper's headline gap — 10× throughput at 2× lower median
+//! and 3.5× lower tail — comes from *how each backend drains these
+//! queues*:
 //!
 //! * **containerd (kernel path)** — one packet at a time: hard IRQ +
-//!   softirq, kernel stack traversal, and a DMA-buffer → socket-buffer
-//!   copy per packet, all burning shared worker cores.
+//!   softirq, kernel stack traversal, and a DMA-buffer ↔ socket-buffer
+//!   copy per packet in both directions, all burning shared worker cores.
 //! * **junctiond (bypass path)** — the scheduler's dedicated polling core
-//!   drains the queue in DPDK-style `rx_burst` batches; the poll-iteration
-//!   cost (see [`crate::junction::Scheduler::poll_iteration_cost`])
-//!   amortizes across the batch and the RX is zero-copy.
+//!   drains RX and flushes TX in DPDK-style `rx_burst`/`tx_burst` batches;
+//!   the poll-iteration cost (see
+//!   [`crate::junction::Scheduler::poll_iteration_cost`]) amortizes across
+//!   each batch and both directions are zero-copy.
 //!
-//! Overflow is a *tail drop*: the ring is `depth` descriptors deep, and an
-//! arrival into a full ring is shed. The client retries with backoff a
-//! bounded number of times, then gives the request up — both outcomes are
-//! accounted in [`NicStats`] and surfaced per-request on
+//! The two rings shed differently. RX overflow is a *tail drop*: an
+//! arrival into a full ring is lost on the wire, and the remote client
+//! retries with backoff a bounded number of times before giving the
+//! request up. TX overflow is *backpressure*: the responder still holds
+//! the only copy of the frame, so a full ring stalls it — the worker
+//! re-offers the frame after a backoff, and only abandons the response
+//! after exhausting its stall budget. Both outcomes are accounted in
+//! [`NicStats`]/[`TxStats`] and surfaced per-request on
 //! [`crate::faas::RequestTiming`].
 //!
 //! This module owns only the queue *mechanics* (bounded FIFO, burst pop,
-//! drop bookkeeping); the per-packet cost sampling lives with the backend
-//! cost models in `oskernel`/`junction`, and the drain engine is driven by
-//! `faas::pipeline`, which knows which backend it simulates. The real-mode
-//! counterpart of the same discipline is `server::ring` (bounded rings +
-//! `recv_batch`).
+//! drop/stall bookkeeping); the per-packet cost sampling lives with the
+//! backend cost models in `oskernel`/`junction` (the RX split
+//! `nic_rx_packet`/`app_recv` and the TX split `nic_tx_packet`/`app_send`
+//! of the one-shot `recv_msg`/`send_msg` costs), and the drain engines are
+//! driven by `faas::pipeline`, which knows which backend it simulates. The
+//! cluster front end owns an RX ring of its own for the return direction
+//! (`faas::cluster`). The real-mode counterpart of the same discipline is
+//! `server::ring` (bounded rings + `recv_batch`).
 
 use std::collections::VecDeque;
 
@@ -57,10 +68,6 @@ pub struct NicStats {
     pub retrans_cancelled: u64,
     /// Bytes accepted into the RX ring.
     pub rx_bytes: u64,
-    /// Response frames sent back through the NIC (accounting only; the TX
-    /// serialization cost is charged in the pipeline's response segments).
-    pub tx_packets: u64,
-    pub tx_bytes: u64,
     /// Drain bursts executed. `rx_delivered / bursts` is the achieved
     /// batch amortization (1.0 on the kernel path; grows with load on the
     /// bypass path).
@@ -141,8 +148,14 @@ impl NicQueue {
         }
     }
 
-    /// Pop the next burst (up to `max` packets) for the drain engine.
+    /// Pop the next burst (up to `max` packets) for the drain engine. An
+    /// empty ring pops nothing and counts *no* burst: a zero-packet poll
+    /// would deflate [`NicStats::mean_batch`], the amortization stat the
+    /// bypass path's throughput argument rests on.
     pub fn pop_burst(&mut self, max: usize) -> Vec<Packet> {
+        if self.q.is_empty() {
+            return Vec::new();
+        }
         let k = self.q.len().min(max.max(1));
         let pkts: Vec<Packet> = self.q.drain(..k).collect();
         self.stats.bursts += 1;
@@ -160,11 +173,125 @@ impl NicQueue {
             true
         }
     }
+}
 
-    /// Account one response frame leaving through the NIC.
-    pub fn note_tx(&mut self, bytes: usize) {
-        self.stats.tx_packets += 1;
-        self.stats.tx_bytes += bytes as u64;
+/// TX-side counters (per worker).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TxStats {
+    /// Response frames accepted into the TX ring.
+    pub tx_enqueued: u64,
+    /// Frames flushed out of the ring (left the worker on the wire).
+    pub tx_packets: u64,
+    /// Bytes accepted into the TX ring.
+    pub tx_bytes: u64,
+    /// Enqueue attempts refused by a full ring (backpressure stalls).
+    /// Counts every refused offer, so one response stalled three times
+    /// contributes three.
+    pub tx_stalled: u64,
+    /// Responder re-offers scheduled after a stall.
+    pub tx_retries: u64,
+    /// Responses abandoned after exhausting the stall budget.
+    pub tx_abandoned: u64,
+    /// Flush bursts executed. `tx_packets / tx_bursts` is the achieved
+    /// batch amortization (1.0 on the kernel path; grows with load on the
+    /// bypass path).
+    pub tx_bursts: u64,
+    /// High-water mark of ring occupancy.
+    pub tx_max_depth: usize,
+}
+
+impl TxStats {
+    /// Mean frames flushed per burst — the bypass path's TX amortization
+    /// factor (the kernel path pins this at 1).
+    pub fn mean_batch(&self) -> f64 {
+        if self.tx_bursts == 0 {
+            return 0.0;
+        }
+        self.tx_packets as f64 / self.tx_bursts as f64
+    }
+}
+
+/// A bounded FIFO of response [`Packet`]s with burst pop — the DES model
+/// of one worker's NIC TX ring. Same mechanics as [`NicQueue`] with the
+/// opposite overflow discipline: the responder holds a frame the ring
+/// refuses (backpressure) instead of the wire losing it (tail drop).
+pub struct TxQueue {
+    depth: usize,
+    q: VecDeque<Packet>,
+    /// True while the flush engine has a burst in flight.
+    draining: bool,
+    pub stats: TxStats,
+}
+
+impl TxQueue {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth >= 1, "a NIC ring needs at least one descriptor");
+        TxQueue { depth, q: VecDeque::new(), draining: false, stats: TxStats::default() }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Would an offer right now stall the responder?
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.depth
+    }
+
+    /// Record a refused offer (the caller decides re-offer vs abandon).
+    pub fn note_stall(&mut self) {
+        self.stats.tx_stalled += 1;
+    }
+
+    /// Accept one response frame. Returns `true` when the ring was idle
+    /// and the caller must start the flush engine; `false` when a burst is
+    /// already in flight and will pick this frame up. Callers must check
+    /// [`TxQueue::is_full`] first.
+    pub fn enqueue(&mut self, p: Packet) -> bool {
+        debug_assert!(!self.is_full(), "enqueue into a full TX ring");
+        self.stats.tx_enqueued += 1;
+        self.stats.tx_bytes += p.bytes as u64;
+        self.q.push_back(p);
+        if self.q.len() > self.stats.tx_max_depth {
+            self.stats.tx_max_depth = self.q.len();
+        }
+        if self.draining {
+            false
+        } else {
+            self.draining = true;
+            true
+        }
+    }
+
+    /// Pop the next flush burst (up to `max` frames). Same empty-pop guard
+    /// as [`NicQueue::pop_burst`]: an empty ring counts no burst.
+    pub fn pop_burst(&mut self, max: usize) -> Vec<Packet> {
+        if self.q.is_empty() {
+            return Vec::new();
+        }
+        let k = self.q.len().min(max.max(1));
+        let pkts: Vec<Packet> = self.q.drain(..k).collect();
+        self.stats.tx_bursts += 1;
+        self.stats.tx_packets += pkts.len() as u64;
+        pkts
+    }
+
+    /// A flush burst finished. Returns `true` when more frames are waiting.
+    pub fn burst_done(&mut self) -> bool {
+        if self.q.is_empty() {
+            self.draining = false;
+            false
+        } else {
+            true
+        }
     }
 }
 
@@ -237,5 +364,52 @@ mod tests {
         assert_eq!(nic.stats.rx_delivered, 5);
         assert!((nic.stats.mean_batch() - 2.5).abs() < 1e-9);
         assert_eq!(nic.stats.max_depth, 5);
+    }
+
+    #[test]
+    fn empty_pop_counts_no_burst() {
+        // Regression: an empty pop used to increment `bursts` (k = 0),
+        // deflating `mean_batch` below the achieved amortization.
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let mut nic = NicQueue::new(8);
+        assert!(nic.pop_burst(4).is_empty());
+        assert_eq!(nic.stats.bursts, 0, "empty pop must not count a burst");
+        for i in 0..4 {
+            nic.enqueue(pkt(10, &log, i));
+        }
+        let b = nic.pop_burst(8);
+        assert_eq!(b.len(), 4);
+        assert!(nic.pop_burst(8).is_empty());
+        assert_eq!(nic.stats.bursts, 1);
+        assert!((nic.stats.mean_batch() - 4.0).abs() < 1e-9, "{:?}", nic.stats);
+    }
+
+    #[test]
+    fn tx_ring_backpressure_and_flush() {
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let mut tx = TxQueue::new(2);
+        assert!(tx.enqueue(pkt(50, &log, 0)), "idle ring must kick the flush engine");
+        assert!(!tx.enqueue(pkt(50, &log, 1)), "flushing ring must not double-kick");
+        assert!(tx.is_full());
+        tx.note_stall();
+        assert_eq!(tx.stats.tx_stalled, 1);
+        assert_eq!(tx.stats.tx_enqueued, 2);
+        assert_eq!(tx.stats.tx_bytes, 100);
+        assert_eq!(tx.stats.tx_max_depth, 2);
+        let burst = tx.pop_burst(8);
+        assert_eq!(burst.len(), 2);
+        assert_eq!(tx.stats.tx_packets, 2);
+        assert_eq!(tx.stats.tx_bursts, 1);
+        assert!((tx.stats.mean_batch() - 2.0).abs() < 1e-9);
+        assert!(!tx.burst_done(), "empty ring goes idle");
+        assert!(tx.enqueue(pkt(50, &log, 2)), "idle again: next frame kicks");
+    }
+
+    #[test]
+    fn tx_empty_pop_counts_no_burst() {
+        let mut tx = TxQueue::new(4);
+        assert!(tx.pop_burst(4).is_empty());
+        assert_eq!(tx.stats.tx_bursts, 0);
+        assert_eq!(tx.stats.mean_batch(), 0.0);
     }
 }

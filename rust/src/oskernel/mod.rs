@@ -51,13 +51,23 @@ const TAIL_TABLE_N: usize = 4096;
 
 impl TailTable {
     fn new(alpha: f64, cap: f64) -> TailTable {
-        let norm = alpha / (alpha - 1.0); // mean of the unit Pareto
-        let q = (0..TAIL_TABLE_N)
+        let norm = alpha / (alpha - 1.0); // mean of the unbounded unit Pareto
+        let mut q: Vec<f64> = (0..TAIL_TABLE_N)
             .map(|i| {
                 let u = 1.0 - (i as f64 + 0.5) / TAIL_TABLE_N as f64; // (0,1]
                 (u.powf(-1.0 / alpha) / norm).min(cap)
             })
             .collect();
+        // The clamp at `cap` removes tail mass, so a table normalized by
+        // the *unbounded* Pareto mean averages a few percent below 1 and
+        // every `tailed(m)` call under-charges its jitter component.
+        // Renormalize by the capped table's actual mean so that
+        // E[sample] == 1 exactly (entries may then exceed `cap` by the
+        // same few percent — the cap bounds the shape, not the mean).
+        let mean = q.iter().sum::<f64>() / TAIL_TABLE_N as f64;
+        for v in &mut q {
+            *v /= mean;
+        }
         TailTable { q }
     }
 
@@ -151,12 +161,35 @@ impl KernelCosts {
     /// CPU cost of sending one small message: `write`/`sendmsg` syscall +
     /// kernel TCP TX path (checksum, qdisc, driver) + ACK processing
     /// amortized onto the sender.
+    /// (= [`KernelCosts::app_send`] + [`KernelCosts::nic_tx_packet`] for a
+    /// loopback hop that never crosses the physical NIC ring.)
     pub fn send_msg(&mut self) -> Time {
         self.msgs_sent += 1;
         self.syscalls += 1;
         // The eventual ACK costs roughly half a softirq on this side.
         let ack = self.tailed(self.p.irq_softirq_ns / 2);
         self.p.syscall_ns + self.p.kernel_stack_msg_ns + ack
+    }
+
+    /// App-side half of a kernel send: the `write`/`sendmsg` syscall trap
+    /// into the socket layer. The NIC-level TX work is charged separately
+    /// by the netpath TX flush engine (see [`KernelCosts::nic_tx_packet`]);
+    /// together the two halves cost what the single-shot
+    /// [`KernelCosts::send_msg`] charges, so splitting the hop does not
+    /// double-charge the kernel path.
+    pub fn app_send(&mut self) -> Time {
+        self.syscalls += 1;
+        self.p.syscall_ns
+    }
+
+    /// NIC-level kernel TX work for one packet onto the physical ring:
+    /// qdisc + driver TX path (`kernel_stack_msg_ns`), the socket-buffer →
+    /// DMA-buffer copy (`copy_ns`, sized by the frame), and the eventual
+    /// ACK softirq amortized onto this side. The other half of `send_msg`
+    /// (see [`KernelCosts::app_send`]).
+    pub fn nic_tx_packet(&mut self, copy_ns: Time) -> Time {
+        self.msgs_sent += 1;
+        self.p.kernel_stack_msg_ns + self.tailed(self.p.irq_softirq_ns / 2) + copy_ns
     }
 
     /// Extra cost when the message crosses a veth/bridge pair into a
@@ -252,6 +285,37 @@ mod tests {
         assert_eq!(whole.msgs_recv, split.msgs_recv);
         assert_eq!(whole.wakeups, split.wakeups);
         assert_eq!(whole.syscalls, split.syscalls);
+    }
+
+    #[test]
+    fn nic_tx_plus_app_send_splits_send_msg() {
+        // The two halves charged by the netpath TX engine must together
+        // cost what the single-shot send_msg charges (same components,
+        // zero copy), so splitting the hop does not double-charge.
+        let mut whole = costs();
+        let mut split = costs();
+        let n = 5000;
+        let a: Time = (0..n).map(|_| whole.send_msg()).sum();
+        let b: Time = (0..n).map(|_| split.app_send() + split.nic_tx_packet(0)).sum();
+        let (am, bm) = (a as f64 / n as f64, b as f64 / n as f64);
+        assert!((am - bm).abs() / am < 0.05, "means diverge: {am} vs {bm}");
+        assert_eq!(whole.msgs_sent, split.msgs_sent);
+        assert_eq!(whole.syscalls, split.syscalls);
+    }
+
+    #[test]
+    fn tailed_mean_matches_nominal() {
+        // Regression: the tail table used to normalize by the *unbounded*
+        // Pareto mean while samples were clamped at `cap`, so `tailed(m)`
+        // systematically under-charged the jitter component and every
+        // kernel-path cost sat a few percent below its nominal mean.
+        let mut c = costs();
+        let mean = 10 * MICROS;
+        let n = 200_000u64;
+        let total: Time = (0..n).map(|_| c.tailed(mean)).sum();
+        let emp = total as f64 / n as f64;
+        let err = (emp - mean as f64).abs() / mean as f64;
+        assert!(err < 0.03, "tailed({mean}) empirical mean {emp:.0} (err {err:.4})");
     }
 
     #[test]

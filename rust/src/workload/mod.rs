@@ -77,6 +77,10 @@ pub struct RunResult {
     /// Gateway→instance-admission samples (ns): the in-worker RPC passes
     /// and queueing before the exec window (`RequestTiming::pre_exec`).
     pub pre_exec: Samples,
+    /// Transmit-hop samples (ns): TX ring wait + per-frame flush service +
+    /// the return wire, plus any backpressure stalls
+    /// (`RequestTiming::tx_hop`).
+    pub tx_hop: Samples,
     pub submitted: u64,
     pub completed: u64,
     /// Completions that landed *inside* the measurement window — the
@@ -87,6 +91,8 @@ pub struct RunResult {
     pub dropped: u64,
     /// NIC retransmissions across all requests (dropped or served).
     pub retried: u64,
+    /// Worker-side TX backpressure re-offers across all requests.
+    pub tx_retried: u64,
     /// Virtual duration of the measurement window.
     pub elapsed: Time,
 }
@@ -95,6 +101,7 @@ impl RunResult {
     /// Record one finished request (shared by every generator).
     fn record(&mut self, t: &RequestTiming) {
         self.retried += t.retries as u64;
+        self.tx_retried += t.tx_retries as u64;
         if t.dropped {
             self.dropped += 1;
             return;
@@ -104,6 +111,7 @@ impl RunResult {
         self.e2e.record(t.e2e());
         self.nic_hop.record(t.nic_hop());
         self.pre_exec.record(t.pre_exec());
+        self.tx_hop.record(t.tx_hop());
         self.completed += 1;
     }
 }
