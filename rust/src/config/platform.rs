@@ -145,7 +145,35 @@ pub struct PlatformConfig {
     /// output, clock_gettime, allocator traps...).
     pub function_syscalls: Time,
 
-    // ---- kernel interference (tail model) ----
+    // ---- compute fabric (per-core structural model) ----
+    /// Kernel-backend preemption quantum (CFS-style timeslice). A running
+    /// segment is preempted at the next quantum edge when equal-or-higher
+    /// priority work waits for its core. 0 = run to completion.
+    pub sched_quantum_ns: Time,
+    /// Surcharge when a segment resumes on (or is stolen to) a different
+    /// core than it last ran on: cache refill + wakeup IPI.
+    pub sched_migration_cost_ns: Time,
+    /// Kernel backend: idle cores steal from another core's local backlog
+    /// (CFS load balancing / wakeup migration). 0 = off.
+    pub sched_steal: Time,
+    /// Bitmask of cores that take NIC IRQ/softirq work on the kernel
+    /// backend (bit i = core i). Softirq segments land on these specific
+    /// cores as high-priority work, stealing cycles from whatever tenant
+    /// runs there. 0 = unpinned (the seed's abstract shared-pool charge).
+    pub softirq_core_mask: Time,
+    /// Bypass-backend preemption quantum: the Junction scheduler's
+    /// regrant granularity. A preempted grantee structurally waits for
+    /// the donor core's next quantum edge. 0 = run to completion.
+    pub junction_quantum_ns: Time,
+    /// Keep the seed's *sampled* interference add-ons
+    /// (`KernelCosts::sched_noise` / `segment_interference` and the
+    /// bypass service instances' `sched_tail_delay`) as residual jitter
+    /// on top of the structural model. Defaults **off** now that
+    /// interference emerges from per-core contention — leaving both on
+    /// would double-count the tail.
+    pub residual_jitter: Time,
+
+    // ---- kernel interference (residual tail model; see residual_jitter) ----
     /// Per-CPU-segment probability (in 1/10000) of a kernel-path
     /// interference burst: CFS throttling, GC pause coinciding with a
     /// timer tick, IRQ storm. Junction instances don't take these.
@@ -219,6 +247,13 @@ impl Default for PlatformConfig {
 
             function_compute_ns: 100 * MICROS,
             function_syscalls: 50,
+
+            sched_quantum_ns: 1 * MILLIS, // CFS min-granularity scale
+            sched_migration_cost_ns: 2_500,
+            sched_steal: 1,
+            softirq_core_mask: 0b1, // NIC IRQ affinity: core 0
+            junction_quantum_ns: 20 * MICROS, // Caladan-class regrant edge
+            residual_jitter: 0,
 
             kernel_interference_prob_bp: 150, // 1.5% of kernel CPU segments
             kernel_interference_min_ns: 100 * MICROS,
@@ -294,6 +329,12 @@ impl PlatformConfig {
             pool_idle_ttl_ns,
             function_compute_ns,
             function_syscalls,
+            sched_quantum_ns,
+            sched_migration_cost_ns,
+            sched_steal,
+            softirq_core_mask,
+            junction_quantum_ns,
+            residual_jitter,
             kernel_interference_prob_bp,
             kernel_interference_min_ns,
             kernel_interference_max_ns,
@@ -351,6 +392,18 @@ impl PlatformConfig {
             self.kernel_interference_min_ns <= self.kernel_interference_max_ns,
             "interference bounds inverted"
         );
+        anyhow::ensure!(
+            self.sched_quantum_ns == 0 || self.sched_quantum_ns >= MICROS,
+            "sched_quantum_ns below a plausible timeslice (ns pasted as µs?)"
+        );
+        anyhow::ensure!(
+            self.junction_quantum_ns == 0
+                || self.sched_quantum_ns == 0
+                || self.junction_quantum_ns <= self.sched_quantum_ns,
+            "the bypass regrant quantum must not exceed the kernel timeslice"
+        );
+        anyhow::ensure!(self.residual_jitter <= 1, "residual_jitter is a 0/1 flag");
+        anyhow::ensure!(self.sched_steal <= 1, "sched_steal is a 0/1 flag");
         Ok(())
     }
 }

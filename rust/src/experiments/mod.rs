@@ -580,7 +580,7 @@ pub fn netpath_default_containerd_rates() -> Vec<f64> {
 pub fn netpath_default_junction_rates() -> Vec<f64> {
     vec![
         500.0, 1_000.0, 2_000.0, 4_000.0, 6_000.0, 9_000.0, 16_000.0, 32_000.0, 48_000.0,
-        64_000.0, 80_000.0,
+        64_000.0, 80_000.0, 100_000.0,
     ]
 }
 
@@ -1093,6 +1093,197 @@ pub fn duplex_payload_sweep_table(
 }
 
 // ---------------------------------------------------------------------------
+// E14 — structural interference: co-located antagonists vs the tail
+// ---------------------------------------------------------------------------
+
+/// One measured point of the interference sweep: a latency-sensitive
+/// function co-located with `antagonists` heavy tenants on one 10-core
+/// worker, with residual jitter off — every microsecond of tail comes
+/// from per-core contention in the compute fabric.
+pub struct InterferencePoint {
+    pub backend: Backend,
+    /// Co-located antagonist tenants (each a serial instance running a
+    /// chunky body at `ant_rps_per_tenant`).
+    pub antagonists: u32,
+    pub ant_rps_per_tenant: f64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Latency-sensitive function's gateway-observed quantiles.
+    pub p50: u64,
+    pub p99: u64,
+    /// The worker fabric's counters at the end of the run (preemption/
+    /// steal/migration churn + the conservation fields the E14 gate
+    /// checks: per-core busy sums to the total, submitted == completed).
+    pub fabric: crate::simcore::FabricStats,
+}
+
+/// Default antagonist-count sweep for E14 (the top point oversubscribes
+/// the 10-core worker so the kernel backend's queues grow unboundedly).
+pub fn interference_default_counts() -> Vec<u32> {
+    vec![0, 4, 8, 12, 16]
+}
+
+/// Run one E14 point: deploy the latency-sensitive function (`lat`,
+/// platform-default ~100 µs body) plus `antagonists` tenants with
+/// `ant_compute_ns` bodies, drive every antagonist open-loop at
+/// `ant_rps_per_tenant`, and measure `lat` at a fixed modest 400 rps.
+///
+/// Deterministic: platform-default compute (no PJRT calibration), no
+/// wall-clock output — the CI determinism job diffs two same-seed runs
+/// of the table byte-for-byte.
+pub fn interference_run(
+    backend: Backend,
+    antagonists: u32,
+    ant_rps_per_tenant: f64,
+    ant_compute_ns: Time,
+    duration: Time,
+    seed: u64,
+) -> InterferencePoint {
+    let platform = Rc::new(PlatformConfig::default());
+    assert_eq!(
+        platform.residual_jitter, 0,
+        "E14 measures structural interference only (residual jitter must be off)"
+    );
+    let cfg = ExperimentConfig {
+        backend,
+        provider_cache: true,
+        worker_cores: 10,
+        seed,
+        function_compute_ns: platform.function_compute_ns,
+        instance_concurrency: 4,
+    };
+    let mut sim = Sim::new();
+    let fs = FaasSim::new(&cfg, platform);
+    fs.deploy(
+        &mut sim,
+        FunctionSpec::new("lat", "aes600", RuntimeKind::Go).with_scale(ScaleMode::MaxCores, 2),
+    );
+    for k in 0..antagonists {
+        fs.deploy(
+            &mut sim,
+            FunctionSpec::new(&format!("ant-{k:02}"), "aes600", RuntimeKind::Go)
+                .with_compute(ant_compute_ns),
+        );
+    }
+    sim.run_until(SECONDS); // past every cold start
+    // Drive each antagonist with a self-scheduling Poisson chain across
+    // the lat function's whole measurement horizon (warmup + window):
+    // one pending event per tenant at any time, not one closure per
+    // arrival materialized up front (the same bounded-generation rule
+    // the open-loop driver follows). The OpenLoop run below drives the
+    // sim to completion, draining everything.
+    let horizon = sim.now() + duration + duration / 10;
+    for k in 0..antagonists {
+        let rng = crate::simcore::Rng::new(seed ^ 0xE14_0000 ^ k as u64);
+        antagonist_arrival(
+            &mut sim,
+            fs.clone(),
+            format!("ant-{k:02}"),
+            rng,
+            SECONDS as f64 / ant_rps_per_tenant,
+            sim.now() as f64,
+            horizon,
+        );
+    }
+    let mut r = OpenLoop::new("lat", 400.0, duration, seed ^ 0x7A7).run(&mut sim, &fs);
+    InterferencePoint {
+        backend,
+        antagonists,
+        ant_rps_per_tenant,
+        completed: r.completed,
+        dropped: r.dropped,
+        p50: r.gateway_observed.quantile(0.5),
+        p99: r.gateway_observed.quantile(0.99),
+        fabric: fs.fabric_stats(),
+    }
+}
+
+/// One link of an antagonist's Poisson arrival chain: submit at `t +
+/// exp(gap)` and schedule the next link from inside that event, keeping
+/// exactly one pending arrival per tenant (`t` stays f64 so the
+/// exponential sum never loses sub-ns precision).
+fn antagonist_arrival(
+    sim: &mut Sim,
+    fs: FaasSim,
+    name: String,
+    mut rng: crate::simcore::Rng,
+    gap: f64,
+    t: f64,
+    horizon: Time,
+) {
+    let next = t + rng.exp(gap);
+    if (next as Time) >= horizon {
+        return;
+    }
+    sim.at(next as Time, move |sim| {
+        fs.submit(sim, &name, |_, _| {});
+        antagonist_arrival(sim, fs, name, rng, gap, next, horizon);
+    });
+}
+
+/// The E14 table: both backends over the antagonist sweep, with the
+/// degradation factor relative to each backend's idle (0-antagonist)
+/// baseline and the fabric's structural-churn counters.
+pub fn interference_table(
+    counts: &[u32],
+    ant_rps_per_tenant: f64,
+    ant_compute_ns: Time,
+    duration: Time,
+    seed: u64,
+) -> (Table, Vec<InterferencePoint>) {
+    let mut points = Vec::new();
+    for backend in [Backend::Containerd, Backend::Junctiond] {
+        for &n in counts {
+            points.push(interference_run(
+                backend,
+                n,
+                ant_rps_per_tenant,
+                ant_compute_ns,
+                duration,
+                seed,
+            ));
+        }
+    }
+    let mut t = Table::new(
+        &format!(
+            "E14 — structural interference: co-located latency fn vs antagonists \
+             ({} µs bodies @ {ant_rps_per_tenant:.0} rps/tenant, 10-core worker, residual jitter off)",
+            ant_compute_ns / MICROS
+        ),
+        &[
+            "backend",
+            "antagonists",
+            "lat p50 (µs)",
+            "lat p99 (µs)",
+            "p99 × idle",
+            "preempt",
+            "steals",
+            "migrations",
+            "dropped",
+        ],
+    );
+    for p in &points {
+        let base = points
+            .iter()
+            .find(|q| q.backend == p.backend && q.antagonists == 0)
+            .map(|q| q.p99)
+            .unwrap_or(p.p99);
+        t.push_row(vec![
+            p.backend.name().into(),
+            Cell::Int(p.antagonists as i64),
+            Cell::NsAsUs(p.p50),
+            Cell::NsAsUs(p.p99),
+            Cell::F2(p.p99 as f64 / base.max(1) as f64),
+            Cell::Int(p.fabric.preemptions as i64),
+            Cell::Int(p.fabric.steals as i64),
+            Cell::Int(p.fabric.migrations as i64),
+            Cell::Int(p.dropped as i64),
+        ]);
+    }
+    (t, points)
+}
+
+// ---------------------------------------------------------------------------
 // E10 — multi-tenant trace replay (§1 motivation; [22] skew)
 // ---------------------------------------------------------------------------
 
@@ -1404,6 +1595,51 @@ mod tests {
         );
         // And junctiond wins end-to-end at every payload.
         assert!(j_small.p50 < c_small.p50 && j_big.p50 < c_big.p50);
+    }
+
+    #[test]
+    fn interference_emerges_structurally_and_conserves() {
+        // E14 at test scale: co-locating heavy antagonists must blow up
+        // the kernel backend's tail structurally (no sampled interference
+        // — residual jitter is off by default) while the bypass backend's
+        // fair-share grants keep the latency function's tail bounded.
+        let dur = 250 * MILLIS;
+        let run = |b, n| interference_run(b, n, 400.0, 2 * crate::simcore::MILLIS, dur, 3);
+        let k0 = run(Backend::Containerd, 0);
+        let k12 = run(Backend::Containerd, 12);
+        let j0 = run(Backend::Junctiond, 0);
+        let j12 = run(Backend::Junctiond, 12);
+        assert!(
+            k12.p99 as f64 > 3.0 * k0.p99 as f64,
+            "kernel tail must degrade under antagonists: {} → {}",
+            k0.p99,
+            k12.p99
+        );
+        assert!(
+            (j12.p99 as f64) < 4.0 * j0.p99 as f64,
+            "bypass tail must stay bounded: {} → {}",
+            j0.p99,
+            j12.p99
+        );
+        assert!(
+            j12.fabric.preemptions > 0,
+            "bypass regrants must preempt at quantum edges"
+        );
+        assert!(k12.fabric.preemptions > 0, "kernel timeslicing must preempt");
+        for p in [&k0, &k12, &j0, &j12] {
+            assert_eq!(
+                p.fabric.per_core_busy_ns.iter().sum::<u64>(),
+                p.fabric.busy_ns,
+                "{:?}: per-core busy_ns must sum to the fabric total",
+                p.backend
+            );
+            assert_eq!(
+                p.fabric.jobs_submitted, p.fabric.jobs_completed,
+                "{:?}: every issued segment must complete",
+                p.backend
+            );
+            assert_eq!(p.dropped, 0, "{:?}: nothing drops at these packet rates", p.backend);
+        }
     }
 
     #[test]

@@ -597,6 +597,18 @@ impl Cluster {
         (rx, tx)
     }
 
+    /// Aggregate compute-fabric counters across the pool (the CPU-side
+    /// twin of [`Cluster::nic_totals`]): busy time, job conservation,
+    /// preemption/steal/migration churn, and per-core busy rollups
+    /// (worker core `i` accumulates across workers).
+    pub fn fabric_totals(&self) -> crate::simcore::FabricStats {
+        let mut agg = crate::simcore::FabricStats::default();
+        for w in &self.workers {
+            agg.merge(&w.sim_node.fabric_stats());
+        }
+        agg
+    }
+
     /// Invocations served across the pool (sum of worker completions).
     pub fn total_completed(&self) -> u64 {
         self.workers.iter().map(|w| w.sim_node.completed()).sum()
@@ -846,6 +858,39 @@ mod tests {
                 assert!(rx.rx_dropped > 0, "320k rps must overflow the kernel RX rings");
                 assert!(r.dropped > 0, "RX give-ups must surface as dropped requests");
             }
+        }
+    }
+
+    #[test]
+    fn fabric_totals_roll_up_and_conserve() {
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let (mut sim, c) = cluster(backend, 3);
+            for _ in 0..60 {
+                c.borrow_mut().submit(&mut sim, "aes", |_, _| {});
+            }
+            sim.run_to_completion();
+            let cl = c.borrow();
+            let agg = cl.fabric_totals();
+            let per_worker: Vec<_> =
+                cl.workers.iter().map(|w| w.sim_node.fabric_stats()).collect();
+            assert_eq!(
+                agg.busy_ns,
+                per_worker.iter().map(|s| s.busy_ns).sum::<u64>(),
+                "{backend:?}: rollup busy_ns != sum of workers"
+            );
+            assert_eq!(
+                agg.jobs_submitted,
+                per_worker.iter().map(|s| s.jobs_submitted).sum::<u64>(),
+                "{backend:?}: rollup job counts != sum of workers"
+            );
+            assert_eq!(agg.jobs_submitted, agg.jobs_completed, "{backend:?}: segments leaked");
+            assert_eq!(
+                agg.per_core_busy_ns.iter().sum::<u64>(),
+                agg.busy_ns,
+                "{backend:?}: index-wise per-core rollup drifted from the total"
+            );
+            assert_eq!(agg.cores, per_worker.iter().map(|s| s.cores).sum::<usize>());
+            assert!(agg.busy_ns > 0, "{backend:?}: the cluster did run work");
         }
     }
 

@@ -37,7 +37,9 @@ use crate::junctiond::Junctiond;
 use crate::netpath::{NicQueue, NicStats, Packet, TxQueue, TxStats};
 use crate::oskernel::KernelCosts;
 use crate::rpc::Message;
-use crate::simcore::{CorePool, Rng, Sim, Time, TimerHandle, MILLIS};
+use crate::simcore::{
+    ComputeFabric, FabricConfig, FabricStats, JobClass, Rng, Sim, Time, TimerHandle, MILLIS,
+};
 use crate::snapshot::{
     ArrivalEstimator, PoolConfig, PoolHandle, PoolStats, PrewarmPolicy, ProvisionTier, SlotId,
     SnapshotStore, TierCosts, WarmPool,
@@ -145,7 +147,12 @@ struct DeployedFn {
 struct World {
     platform: Rc<PlatformConfig>,
     backend: Backend,
-    cores: CorePool,
+    cores: ComputeFabric,
+    /// Kernel backend: cores (from `softirq_core_mask`) that take NIC
+    /// IRQ/softirq work, and the round-robin cursor spreading bursts
+    /// across them. Empty = unpinned (the seed's abstract pool charge).
+    softirq_cores: Vec<usize>,
+    softirq_rr: u64,
     // Per-component cost samplers (independent RNG streams).
     kc_gw: KernelCosts,
     kc_prov: KernelCosts,
@@ -208,6 +215,29 @@ impl World {
             (Backend::Junctiond, Some(id)) => self.jd.scheduler.packet_arrival(id).latency(),
             _ => 0,
         }
+    }
+
+    /// Physical core a junction instance's next segment should run on
+    /// (round-robin over its grant); `None` on the kernel backend or for
+    /// a grant-less (contended) instance — the segment then takes the
+    /// fabric's shared queue.
+    fn segment_core(&mut self, inst: Option<InstanceId>) -> Option<usize> {
+        match (self.backend, inst) {
+            (Backend::Junctiond, Some(id)) => {
+                self.jd.scheduler.pick_core(id).map(|c| c as usize)
+            }
+            _ => None,
+        }
+    }
+
+    /// Kernel backend: the core the next NIC softirq burst lands on.
+    fn next_softirq_core(&mut self) -> Option<usize> {
+        if self.softirq_cores.is_empty() {
+            return None;
+        }
+        let i = (self.softirq_rr as usize) % self.softirq_cores.len();
+        self.softirq_rr += 1;
+        Some(self.softirq_cores[i])
     }
 
     fn service_done(&mut self, inst: Option<InstanceId>) {
@@ -349,7 +379,30 @@ pub struct FaasSim {
 impl FaasSim {
     pub fn new(cfg: &ExperimentConfig, platform: Rc<PlatformConfig>) -> Self {
         let mut rng = Rng::new(cfg.seed);
-        let cores = CorePool::new(cfg.worker_cores);
+        // Per-backend fabric shape: the kernel backend is CFS-flavored
+        // (timeslices, wakeup migration/stealing), the bypass backend
+        // maps grants to soft-pinned cores with run-to-completion sliced
+        // only at the Junction scheduler's fine regrant quantum.
+        let fabric_cfg = match cfg.backend {
+            Backend::Containerd => FabricConfig {
+                quantum_ns: platform.sched_quantum_ns,
+                steal: platform.sched_steal != 0,
+                migration_cost_ns: platform.sched_migration_cost_ns,
+            },
+            Backend::Junctiond => FabricConfig {
+                quantum_ns: platform.junction_quantum_ns,
+                steal: false,
+                migration_cost_ns: 0,
+            },
+        };
+        let cores =
+            ComputeFabric::new_kind(crate::simcore::default_fabric(), cfg.worker_cores, fabric_cfg);
+        let softirq_cores: Vec<usize> = match cfg.backend {
+            Backend::Containerd => (0..cfg.worker_cores.min(64))
+                .filter(|i| (platform.softirq_core_mask & (1u64 << i)) != 0)
+                .collect(),
+            Backend::Junctiond => Vec::new(),
+        };
         let mut jd = Junctiond::new(platform.clone(), cfg.worker_cores as u32, rng.fork());
         let containerd = Containerd::new(platform.clone(), rng.fork());
         let mut gw_inst = None;
@@ -358,12 +411,17 @@ impl FaasSim {
             // The scheduler busy-polls on a dedicated, reserved core (§2.2.1).
             cores.reserve(1);
             // Gateway and provider run inside Junction instances (§3).
-            gw_inst = Some(jd.deploy_service("gateway", 2).0);
-            prov_inst = Some(jd.deploy_service("provider", 2).0);
+            // Their segments execute on granted physical cores now, so the
+            // multi-queue services carry a 4-core cap to keep the service
+            // plane off the critical path at high offered load.
+            gw_inst = Some(jd.deploy_service("gateway", 4).0);
+            prov_inst = Some(jd.deploy_service("provider", 4).0);
         }
         let world = World {
             backend: cfg.backend,
             cores,
+            softirq_cores,
+            softirq_rr: 0,
             kc_gw: KernelCosts::new(platform.clone(), rng.fork()),
             kc_prov: KernelCosts::new(platform.clone(), rng.fork()),
             kc_fn: KernelCosts::new(platform.clone(), rng.fork()),
@@ -926,8 +984,14 @@ impl FaasSim {
         self.w.borrow().tx.stats
     }
 
-    pub fn cores(&self) -> CorePool {
+    pub fn cores(&self) -> ComputeFabric {
         self.w.borrow().cores.clone()
+    }
+
+    /// Compute-fabric counter snapshot (per-core busy time, preemptions,
+    /// steals, migrations, job conservation).
+    pub fn fabric_stats(&self) -> FabricStats {
+        self.w.borrow().cores.stats()
     }
 
     pub fn provider_stats(&self) -> (u64, u64) {
@@ -1029,6 +1093,43 @@ pub struct CostTelemetry {
 }
 
 type DoneFn = Box<dyn FnOnce(&mut Sim, RequestTiming)>;
+
+/// Run one CPU segment on the fabric. Affinity is resolved here, at
+/// dispatch time (the grant may have grown, shrunk, or been preempted
+/// during the preceding wakeup latency): a junction instance's segment
+/// takes its granted core's local queue (soft affinity — grant
+/// exclusivity and quantum-edge waits are structural); everything else
+/// takes the shared queue.
+fn run_segment<F: FnOnce(&mut Sim) + 'static>(
+    fs: &FaasSim,
+    sim: &mut Sim,
+    inst: Option<InstanceId>,
+    cpu: Time,
+    done: F,
+) {
+    let (cores, core) = {
+        let mut w = fs.w.borrow_mut();
+        let core = w.segment_core(inst);
+        (w.cores.clone(), core)
+    };
+    match core {
+        Some(c) => cores.run_on(sim, c, JobClass::Normal, cpu, done),
+        None => cores.run(sim, cpu, done),
+    }
+}
+
+/// Charge one burst of kernel NIC softirq CPU to its IRQ-affinity core
+/// (high-priority work stealing cycles from whatever tenant runs there),
+/// or to the shared pool when the affinity mask is empty.
+fn run_softirq(cores: &ComputeFabric, sim: &mut Sim, core: Option<usize>, cpu: Time) {
+    if cpu == 0 {
+        return;
+    }
+    match core {
+        Some(c) => cores.run_on(sim, c, JobClass::Irq, cpu, |_| {}),
+        None => cores.run(sim, cpu, |_| {}),
+    }
+}
 
 /// NIC ingress: frame the invocation as an `rpc::Message` and offer it to
 /// the worker's bounded RX ring. A full ring tail-drops the frame; the
@@ -1146,7 +1247,7 @@ fn nic_ingress(
 ///   charged once per burst and amortizes across it; per-packet work is
 ///   the zero-copy user-space stack.
 fn nic_drain(fs: FaasSim, sim: &mut Sim) {
-    let (deliveries, burst_ns, softirq_cpu_ns, cores) = {
+    let (deliveries, burst_ns, softirq_cpu_ns, softirq_core, cores) = {
         let mut w = fs.w.borrow_mut();
         let burst_max = match w.backend {
             Backend::Containerd => 1,
@@ -1178,12 +1279,13 @@ fn nic_drain(fs: FaasSim, sim: &mut Sim) {
                 }
             }
         }
-        (deliveries, offset, cpu, w.cores.clone())
+        let sc = if cpu > 0 { w.next_softirq_core() } else { None };
+        (deliveries, offset, cpu, sc, w.cores.clone())
     };
-    // Kernel path only: the softirq RX work contends for the shared cores.
-    if softirq_cpu_ns > 0 {
-        cores.run(sim, softirq_cpu_ns, |_| {});
-    }
+    // Kernel path only: the softirq RX work burns CPU on a *specific*
+    // core (the IRQ affinity mask) as high-priority work — stealing
+    // cycles from whatever tenant runs there at the next quantum edge.
+    run_softirq(&cores, sim, softirq_core, softirq_cpu_ns);
     for (off, deliver) in deliveries {
         sim.after(off, deliver);
     }
@@ -1199,7 +1301,7 @@ fn nic_drain(fs: FaasSim, sim: &mut Sim) {
 /// Gateway pass: auth + route + forward to the provider.
 fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming, done: DoneFn) {
     t.gateway_in = sim.now();
-    let (lat, cpu, cores) = {
+    let (lat, cpu, gw_inst) = {
         let mut w = fs.w.borrow_mut();
         let gw_inst = w.gw_inst;
         let lat = w.service_wakeup(gw_inst);
@@ -1226,16 +1328,12 @@ fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming,
             }
         };
         let lat = lat + w.bc_gw.sched_tail_delay();
-        (lat, cpu, w.cores.clone())
+        (lat, cpu, gw_inst)
     };
     sim.after(lat, move |sim| {
         let fs2 = fs.clone();
-        cores.run(sim, cpu, move |sim| {
-            {
-                let mut w = fs2.w.borrow_mut();
-                let gw_inst = w.gw_inst;
-                w.service_done(gw_inst);
-            }
+        run_segment(&fs, sim, gw_inst, cpu, move |sim| {
+            fs2.w.borrow_mut().service_done(gw_inst);
             stage_provider(fs2, sim, name, t, done);
         });
     });
@@ -1243,7 +1341,7 @@ fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming,
 
 /// Provider pass: resolve (cache or backend state query) + forward.
 fn stage_provider(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
-    let (lat, query_lat, cpu, cores) = {
+    let (lat, query_lat, cpu, prov_inst) = {
         let mut w = fs.w.borrow_mut();
         let prov_inst = w.prov_inst;
         let lat = w.service_wakeup(prov_inst);
@@ -1275,16 +1373,12 @@ fn stage_provider(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
             }
         };
         let lat = lat + w.bc_prov.sched_tail_delay();
-        (lat, query_lat, cpu, w.cores.clone())
+        (lat, query_lat, cpu, prov_inst)
     };
     sim.after(lat + query_lat, move |sim| {
         let fs2 = fs.clone();
-        cores.run(sim, cpu, move |sim| {
-            {
-                let mut w = fs2.w.borrow_mut();
-                let prov_inst = w.prov_inst;
-                w.service_done(prov_inst);
-            }
+        run_segment(&fs, sim, prov_inst, cpu, move |sim| {
+            fs2.w.borrow_mut().service_done(prov_inst);
             stage_function(fs2, sim, name, t, done);
         });
     });
@@ -1326,11 +1420,13 @@ fn exec_segment(
     done: DoneFn,
 ) {
     t.exec_start = sim.now();
-    let (lat, cpu, cores, inst) = {
+    let (lat, cpu, inst) = {
         let mut w = fs.w.borrow_mut();
         let p = w.platform.clone();
         let nsys = p.function_syscalls as u32;
-        let compute = w.compute_ns;
+        // Per-function body override (antagonist tenants in E14 carry
+        // chunkier bodies); default is the sim-wide calibrated cost.
+        let compute = w.functions[&name].spec.compute_ns.unwrap_or(w.compute_ns);
         w.tier_served[t.tier.idx()] += 1;
         match w.backend {
             Backend::Containerd => {
@@ -1347,7 +1443,7 @@ fn exec_segment(
                     + w.kc_fn.segment_interference()
                     + w.kc_fn.send_msg()
                     + w.kc_fn.veth_hop();
-                (0, cpu, w.cores.clone(), None)
+                (0, cpu, None)
             }
             Backend::Junctiond => {
                 let id = match w.functions[&name].replicas[replica].handle {
@@ -1359,13 +1455,13 @@ fn exec_segment(
                     + w.bc_fn.syscalls(nsys)
                     + compute
                     + w.bc_fn.send_msg();
-                (lat, cpu, w.cores.clone(), Some(id))
+                (lat, cpu, Some(id))
             }
         }
     };
     sim.after(lat, move |sim| {
         let fs2 = fs.clone();
-        cores.run(sim, cpu, move |sim| {
+        run_segment(&fs, sim, inst, cpu, move |sim| {
             t.exec_end = sim.now();
             {
                 let mut w = fs2.w.borrow_mut();
@@ -1383,7 +1479,7 @@ fn exec_segment(
 /// worker's bounded TX ring ([`tx_ingress`]/[`tx_drain`]) and the wire
 /// back to the client.
 fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
-    let (lat_p, cpu_p, cores) = {
+    let (lat_p, cpu_p, prov_inst) = {
         let mut w = fs.w.borrow_mut();
         let prov_inst = w.prov_inst;
         let lat = w.service_wakeup(prov_inst);
@@ -1399,14 +1495,13 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
             Backend::Junctiond => w.bc_prov.recv_msg() + p.rpc_serde_ns + w.bc_prov.send_msg(),
         };
         let lat = lat + w.bc_prov.sched_tail_delay();
-        (lat, cpu, w.cores.clone())
+        (lat, cpu, prov_inst)
     };
     sim.after(lat_p, move |sim| {
         let fs2 = fs.clone();
-        cores.run(sim, cpu_p, move |sim| {
-            let (lat_g, cpu_g, cores2) = {
+        run_segment(&fs, sim, prov_inst, cpu_p, move |sim| {
+            let (lat_g, cpu_g, gw_inst) = {
                 let mut w = fs2.w.borrow_mut();
-                let prov_inst = w.prov_inst;
                 w.service_done(prov_inst);
                 let gw_inst = w.gw_inst;
                 let lat = w.service_wakeup(gw_inst);
@@ -1429,17 +1524,14 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
                     }
                 };
                 let lat = lat + w.bc_gw.sched_tail_delay();
-                (lat, cpu, w.cores.clone())
+                (lat, cpu, gw_inst)
             };
             let fs3 = fs2.clone();
             sim.after(lat_g, move |sim| {
-                cores2.run(sim, cpu_g, move |sim| {
-                    {
-                        let mut w = fs3.w.borrow_mut();
-                        let gw_inst = w.gw_inst;
-                        w.service_done(gw_inst);
-                    }
-                    tx_ingress(fs3, sim, name, t, 0, done);
+                let fs4 = fs3.clone();
+                run_segment(&fs3, sim, gw_inst, cpu_g, move |sim| {
+                    fs4.w.borrow_mut().service_done(gw_inst);
+                    tx_ingress(fs4, sim, name, t, 0, done);
                 });
             });
         });
@@ -1552,7 +1644,7 @@ fn tx_ingress(
 ///   amortizes across it; per-frame work is the zero-copy user-space
 ///   stack + doorbell.
 fn tx_drain(fs: FaasSim, sim: &mut Sim) {
-    let (deliveries, burst_ns, softirq_cpu_ns, cores) = {
+    let (deliveries, burst_ns, softirq_cpu_ns, softirq_core, cores) = {
         let mut w = fs.w.borrow_mut();
         let burst_max = match w.backend {
             Backend::Containerd => 1,
@@ -1584,12 +1676,12 @@ fn tx_drain(fs: FaasSim, sim: &mut Sim) {
                 }
             }
         }
-        (deliveries, offset, cpu, w.cores.clone())
+        let sc = if cpu > 0 { w.next_softirq_core() } else { None };
+        (deliveries, offset, cpu, sc, w.cores.clone())
     };
-    // Kernel path only: the softirq TX work contends for the shared cores.
-    if softirq_cpu_ns > 0 {
-        cores.run(sim, softirq_cpu_ns, |_| {});
-    }
+    // Kernel path only: the TX/ACK softirq work burns a specific IRQ-
+    // affinity core, like the RX side.
+    run_softirq(&cores, sim, softirq_core, softirq_cpu_ns);
     for (off, deliver) in deliveries {
         sim.after(off, deliver);
     }

@@ -2,6 +2,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::simcore::Time;
+
 /// Language runtime of the function image — determines the §3 scale-up
 /// mode junctiond picks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +48,10 @@ pub struct FunctionSpec {
     pub scale_mode: ScaleMode,
     /// Desired concurrency (uProcs or max cores, per mode).
     pub scale: u32,
+    /// Per-function body compute override (ns). `None` uses the sim-wide
+    /// calibrated cost; multi-tenant experiments give antagonist tenants
+    /// chunkier bodies than the latency-sensitive function (E14).
+    pub compute_ns: Option<Time>,
 }
 
 impl FunctionSpec {
@@ -56,12 +62,18 @@ impl FunctionSpec {
             runtime,
             scale_mode: runtime.default_scale_mode(),
             scale: 1,
+            compute_ns: None,
         }
     }
 
     pub fn with_scale(mut self, mode: ScaleMode, scale: u32) -> Self {
         self.scale_mode = mode;
         self.scale = scale.max(1);
+        self
+    }
+
+    pub fn with_compute(mut self, compute_ns: Time) -> Self {
+        self.compute_ns = Some(compute_ns);
         self
     }
 }

@@ -20,6 +20,12 @@ pub struct BypassCosts {
     /// gateway/provider — which repeatedly park and re-acquire cores; see
     /// `PlatformConfig::junction_sched_tail_*`).
     sched_tail: bool,
+    /// Keep the sampled contention tail. Grant contention is structural
+    /// now (service segments queue on granted cores in the compute
+    /// fabric; preemptive regrants wait for real quantum edges), so the
+    /// sampled stand-in defaults off — same no-double-counting rule as
+    /// `KernelCosts`.
+    residual_jitter: bool,
     // telemetry
     pub msgs_recv: u64,
     pub msgs_sent: u64,
@@ -30,10 +36,11 @@ pub struct BypassCosts {
 impl BypassCosts {
     pub fn new(platform: Rc<PlatformConfig>, rng: Rng) -> Self {
         BypassCosts {
-            p: platform,
             rng,
             jitter_frac: 0.15,
             sched_tail: false,
+            residual_jitter: platform.residual_jitter != 0,
+            p: platform,
             msgs_recv: 0,
             msgs_sent: 0,
             wakeups: 0,
@@ -47,8 +54,13 @@ impl BypassCosts {
         self
     }
 
-    /// Sample the rare contention delay (0 in the common case).
+    /// Sample the rare contention delay (0 in the common case). Residual
+    /// jitter: returns 0 unless `PlatformConfig::residual_jitter` is set —
+    /// with the compute fabric on, grant contention emerges structurally.
     pub fn sched_tail_delay(&mut self) -> Time {
+        if !self.residual_jitter {
+            return 0;
+        }
         if self.sched_tail && self.rng.below(10_000) < self.p.junction_sched_tail_prob_bp {
             self.rng.range(self.p.junction_sched_tail_min_ns, self.p.junction_sched_tail_max_ns)
         } else {

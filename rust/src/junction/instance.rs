@@ -41,6 +41,13 @@ pub struct Instance {
     pub max_cores: u32,
     /// Cores currently granted by the scheduler.
     pub granted_cores: u32,
+    /// The *physical* cores backing the grant (`granted_cores ==
+    /// core_ids.len()` is a checked invariant). The compute fabric runs
+    /// this instance's segments on these cores with local-queue priority,
+    /// so grant exclusivity and preemptive-regrant waits are structural.
+    pub core_ids: Vec<u32>,
+    /// Round-robin cursor for spreading segments across the grant.
+    pub next_core: usize,
     /// Requests currently executing inside the instance.
     pub in_flight: u32,
     /// NIC queue pairs assigned (∝ max core allocation, §2.2.1).
@@ -61,6 +68,8 @@ impl Instance {
             uprocs: Vec::new(),
             max_cores,
             granted_cores: 0,
+            core_ids: Vec::new(),
+            next_core: 0,
             in_flight: 0,
             queue_pairs: max_cores, // one QP per potential core
             ready_at: 0,

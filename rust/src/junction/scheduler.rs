@@ -22,10 +22,17 @@ use crate::simcore::Time;
 pub enum GrantOutcome {
     /// Instance already held a core: user-level wakeup.
     Warm { latency: Time },
-    /// Instance was idle; a core was granted (IPI + queue mapping).
+    /// Instance was idle; a free core was granted (IPI + queue mapping).
     Granted { latency: Time },
-    /// No core available right now; the request runs once the shared
-    /// core pool frees up (contention is modeled by the pool's queue).
+    /// Instance was granted a core revoked from an over-share donor. The
+    /// latency is the grant path only: the *quantum-edge wait* for the
+    /// donor to vacate is structural — the grantee's first segment queues
+    /// on the transferred core behind the donor's current slice in the
+    /// compute fabric (this replaced the seed's sampled "grant plus one
+    /// wakeup" stand-in).
+    Preempted { latency: Time },
+    /// No core available right now; the request runs once the fabric
+    /// frees up (contention is modeled by the fabric's shared queue).
     Contended { latency: Time },
 }
 
@@ -34,6 +41,7 @@ impl GrantOutcome {
         match self {
             GrantOutcome::Warm { latency }
             | GrantOutcome::Granted { latency }
+            | GrantOutcome::Preempted { latency }
             | GrantOutcome::Contended { latency } => *latency,
         }
     }
@@ -71,6 +79,10 @@ pub struct Scheduler {
     /// own dedicated polling core).
     grantable_cores: u32,
     granted_total: u32,
+    /// Free *physical* core ids (the poller owns core 0, so grants hand
+    /// out 1..server_cores). LIFO reuse keeps the hot set small and the
+    /// order deterministic.
+    free_cores: Vec<u32>,
     next_id: InstanceId,
     pub stats: SchedulerStats,
 }
@@ -84,6 +96,7 @@ impl Scheduler {
             instances: Vec::new(),
             grantable_cores: server_cores - 1,
             granted_total: 0,
+            free_cores: (1..server_cores).rev().collect(),
             next_id: 0,
             stats: SchedulerStats::default(),
         }
@@ -160,40 +173,64 @@ impl Scheduler {
         self.poll_iteration_cost()
     }
 
+    /// Grant one free physical core to `id` (caller checked capacity).
+    fn grant_one(&mut self, id: InstanceId) {
+        let core = self.free_cores.pop().expect("grant without a free core");
+        let inst = self.instances.get_mut(id as usize).unwrap();
+        inst.granted_cores += 1;
+        inst.core_ids.push(core);
+        self.granted_total += 1;
+        self.stats.grants += 1;
+    }
+
     /// A packet arrived for `id` (NIC event queue signaled). Accounts the
     /// in-flight request and decides the wakeup path.
     pub fn packet_arrival(&mut self, id: InstanceId) -> GrantOutcome {
-        let granted_total = self.granted_total;
-        let grantable = self.grantable_cores;
         let p_wakeup = self.platform.junction_wakeup_ns;
         let p_grant = self.platform.junction_grant_ns;
-        let inst = self.instances.get_mut(id as usize).expect("unknown instance");
-        assert_eq!(inst.state, InstanceState::Running, "packet for non-running instance");
-        inst.in_flight += 1;
-        inst.total_invocations += 1;
-        if inst.granted_cores > 0 {
+        {
+            let inst = self.instances.get_mut(id as usize).expect("unknown instance");
+            assert_eq!(inst.state, InstanceState::Running, "packet for non-running instance");
+            inst.in_flight += 1;
+            inst.total_invocations += 1;
+        }
+        if self.instances[id as usize].granted_cores > 0 {
             self.stats.warm_wakeups += 1;
+            // The poll loop's growth path: demand (in-flight > grant)
+            // grows the grant toward max_cores while capacity allows, so
+            // concurrent requests spread across physical cores.
+            self.grow_grants(id);
             return GrantOutcome::Warm { latency: p_wakeup };
         }
-        if granted_total < grantable {
-            inst.granted_cores += 1;
-            self.granted_total += 1;
-            self.stats.grants += 1;
+        if self.granted_total < self.grantable_cores {
+            self.grant_one(id);
             return GrantOutcome::Granted { latency: p_grant };
         }
         // All cores granted elsewhere: fairness rebalance may preempt.
         self.stats.contended += 1;
-        let preempted = self.try_preempt_for(id);
-        if preempted {
-            // Preemption path: grant latency plus one quantum-edge wait.
-            GrantOutcome::Granted { latency: p_grant + p_wakeup }
+        if self.try_preempt_for(id) {
+            GrantOutcome::Preempted { latency: p_grant }
         } else {
             GrantOutcome::Contended { latency: p_grant }
         }
     }
 
-    /// A request finished inside `id`. Releases the core when the instance
-    /// goes idle (the scheduler parks idle instances to keep polling cheap).
+    /// Physical core the instance's next segment should run on (round-
+    /// robin across the grant). `None` while the instance holds no core —
+    /// the segment then waits in the fabric's shared queue.
+    pub fn pick_core(&mut self, id: InstanceId) -> Option<u32> {
+        let inst = self.instances.get_mut(id as usize)?;
+        if inst.core_ids.is_empty() {
+            return None;
+        }
+        let core = inst.core_ids[inst.next_core % inst.core_ids.len()];
+        inst.next_core = inst.next_core.wrapping_add(1);
+        Some(core)
+    }
+
+    /// A request finished inside `id`. Releases the grant when the
+    /// instance goes idle (the scheduler parks idle instances to keep
+    /// polling cheap).
     pub fn request_done(&mut self, id: InstanceId) {
         let inst = self.instances.get_mut(id as usize).expect("unknown instance");
         assert!(inst.in_flight > 0, "request_done with nothing in flight");
@@ -202,6 +239,8 @@ impl Scheduler {
             self.granted_total -= inst.granted_cores;
             self.stats.releases += inst.granted_cores as u64;
             inst.granted_cores = 0;
+            let freed = std::mem::take(&mut inst.core_ids);
+            self.free_cores.extend(freed);
         }
     }
 
@@ -210,21 +249,23 @@ impl Scheduler {
     pub fn grow_grants(&mut self, id: InstanceId) -> u32 {
         let mut grown = 0;
         while self.granted_total < self.grantable_cores {
-            let inst = self.instances.get_mut(id as usize).expect("unknown instance");
+            let inst = self.instances.get(id as usize).expect("unknown instance");
             if !inst.wants_core() {
                 break;
             }
-            inst.granted_cores += 1;
-            self.granted_total += 1;
-            self.stats.grants += 1;
+            self.grant_one(id);
             grown += 1;
         }
         grown
     }
 
-    /// Fair-share preemption: if `hungry` wants a core and some instance
-    /// holds more than its fair share, revoke one core from the most
-    /// over-allocated instance and grant it to `hungry`.
+    /// Fair-share preemption: a hungry instance below its fair share
+    /// revokes one core from the most-allocated donor at-or-above fair
+    /// share (Caladan-style rebalance: under full allocation, cores
+    /// round-robin among demanding instances at arrival granularity, so
+    /// a lightly-loaded tenant is never starved behind heavy ones — the
+    /// structural basis of the bypass backend's bounded tail under
+    /// antagonist load, E14).
     fn try_preempt_for(&mut self, hungry: InstanceId) -> bool {
         {
             // Never grant past the hungry instance's configured core cap —
@@ -240,33 +281,40 @@ impl Scheduler {
             return false;
         }
         let fair = (self.grantable_cores / demanding).max(1);
-        // Most over-allocated donor (holding strictly more than fair share).
         let donor = self
             .instances
             .iter()
-            .filter(|i| i.id != hungry && i.granted_cores > fair)
+            .filter(|i| i.id != hungry && i.granted_cores >= fair && i.granted_cores > 0)
             .max_by_key(|i| i.granted_cores)
             .map(|i| i.id);
         let Some(donor_id) = donor else { return false };
-        {
+        // The *physical* core moves with the grant: the donor's newest
+        // core transfers to the hungry instance, whose first segment will
+        // queue on it behind the donor's current slice — the structural
+        // quantum-edge wait of a preemptive regrant.
+        let core = {
             let d = self.instances.get_mut(donor_id as usize).unwrap();
             d.granted_cores -= 1;
             d.preemptions += 1;
-        }
+            d.core_ids.pop().expect("donor grant without a physical core")
+        };
         self.stats.preemptions += 1;
         let h = self.instances.get_mut(hungry as usize).unwrap();
         h.granted_cores += 1;
+        h.core_ids.push(core);
         true
     }
 
-    /// Return `n` cores to the pool without an owner (crash path: the
-    /// instance's grant bookkeeping was already zeroed by the caller).
-    /// Records the cores in `stats.releases` like [`Scheduler::request_done`]
-    /// does, so grant/release telemetry stays balanced on the crash path.
-    pub fn force_release(&mut self, n: u32) {
-        let returned = n.min(self.granted_total);
+    /// Return physical cores to the pool without an owner (crash path:
+    /// the caller took the instance's `core_ids` and zeroed its grant
+    /// bookkeeping). Records them in `stats.releases` like
+    /// [`Scheduler::request_done`] does, so grant/release telemetry stays
+    /// balanced on the crash path.
+    pub fn force_release(&mut self, cores: Vec<u32>) {
+        let returned = (cores.len() as u32).min(self.granted_total);
         self.granted_total -= returned;
         self.stats.releases += returned as u64;
+        self.free_cores.extend(cores);
     }
 
     /// Debug/test invariant check: grant accounting is consistent.
@@ -274,6 +322,11 @@ impl Scheduler {
         let sum: u32 = self.instances.iter().map(|i| i.granted_cores).sum();
         assert_eq!(sum, self.granted_total, "granted core accounting drifted");
         assert!(self.granted_total <= self.grantable_cores, "over-granted cores");
+        assert_eq!(
+            self.free_cores.len() as u32 + self.granted_total,
+            self.grantable_cores,
+            "physical core conservation drifted"
+        );
         // Telemetry balance: every core ever granted was either released
         // (request_done or force_release) or is still held. Preemption
         // transfers a core without touching either counter.
@@ -282,13 +335,28 @@ impl Scheduler {
             self.stats.releases + self.granted_total as u64,
             "grant/release telemetry drifted"
         );
+        let mut held: Vec<u32> = self.free_cores.clone();
         for inst in self.instances.iter() {
             assert!(
                 inst.granted_cores <= inst.max_cores,
                 "instance {} over its core cap",
                 inst.name
             );
+            assert_eq!(
+                inst.core_ids.len() as u32,
+                inst.granted_cores,
+                "instance {} physical cores drifted from its grant count",
+                inst.name
+            );
+            held.extend(&inst.core_ids);
         }
+        held.sort_unstable();
+        held.dedup();
+        assert_eq!(
+            held.len() as u32,
+            self.grantable_cores,
+            "a physical core is double-granted or lost"
+        );
     }
 }
 
@@ -341,10 +409,14 @@ mod tests {
         assert_eq!(s.instance(a).unwrap().granted_cores, 2);
         // b's packet must steal one back (fair share = 1 each).
         let out = s.packet_arrival(b);
-        assert!(matches!(out, GrantOutcome::Granted { .. }), "{out:?}");
+        assert!(matches!(out, GrantOutcome::Preempted { .. }), "{out:?}");
         assert_eq!(s.instance(a).unwrap().granted_cores, 1);
         assert_eq!(s.instance(b).unwrap().granted_cores, 1);
         assert_eq!(s.stats.preemptions, 1);
+        // The physical core moved with the grant.
+        let a_core = s.instance(a).unwrap().core_ids[0];
+        let b_core = s.instance(b).unwrap().core_ids[0];
+        assert_ne!(a_core, b_core);
         s.check_invariants();
     }
 
@@ -421,10 +493,9 @@ mod tests {
                     // through it (force_release records releases).
                     let held = {
                         let inst = s.instance_mut(ids[k]).unwrap();
-                        let c = inst.granted_cores;
                         inst.granted_cores = 0;
                         inst.in_flight = 0;
-                        c
+                        std::mem::take(&mut inst.core_ids)
                     };
                     s.force_release(held);
                     in_flight[k] = 0;
@@ -448,17 +519,17 @@ mod tests {
         assert_eq!(s.granted_total(), 1);
         assert_eq!(s.stats.releases, 0);
         // Crash path: the caller zeroes the instance's bookkeeping, then
-        // returns its cores to the pool.
+        // returns its physical cores to the pool.
         let held = {
             let inst = s.instance_mut(id).unwrap();
-            let c = inst.granted_cores;
             inst.granted_cores = 0;
             inst.in_flight = 0;
-            c
+            std::mem::take(&mut inst.core_ids)
         };
+        let n = held.len() as u64;
         s.force_release(held);
         assert_eq!(s.granted_total(), 0);
-        assert_eq!(s.stats.releases, held as u64, "crash-path releases must be recorded");
+        assert_eq!(s.stats.releases, n, "crash-path releases must be recorded");
         s.check_invariants();
     }
 

@@ -129,7 +129,12 @@ impl Junctiond {
         let mut cold_total = 0;
         match spec.scale_mode {
             ScaleMode::MultiProcess => {
-                let (id, cold) = self.junction_run_with(&spec.name, 1, boot_base);
+                // One grantable core per uProc: with the compute fabric,
+                // an instance's segments really run on its granted cores,
+                // so a 1-core cap would serialize all uProcs (the seed's
+                // flat pool hid this).
+                let (id, cold) =
+                    self.junction_run_with(&spec.name, spec.scale.max(1), boot_base);
                 for k in 0..spec.scale.max(1) {
                     self.scheduler
                         .instance_mut(id)
@@ -184,6 +189,14 @@ impl Junctiond {
                 let have = inst.uprocs.len() as u32;
                 for k in have..new_scale {
                     inst.spawn_uproc(&format!("{}-w{k}", spec.name));
+                }
+                // Keep the core cap in step with the uProc count.
+                if new_scale > inst.max_cores {
+                    inst.set_max_cores(new_scale);
+                    if let Some(cfg) = self.configs.get_mut(&id) {
+                        cfg.max_cores = new_scale;
+                        cfg.queue_pairs = new_scale;
+                    }
                 }
             }
             ScaleMode::MaxCores => {
@@ -240,18 +253,17 @@ impl Junctiond {
     /// The scheduler releases its cores; junctiond's monitor will report
     /// it non-running until [`Junctiond::restart_crashed`] revives it.
     pub fn fail_instance(&mut self, id: InstanceId) {
-        let granted = {
+        let held = {
             let inst = self.scheduler.instance_mut(id).expect("unknown instance");
             inst.state = InstanceState::Stopped;
             inst.uprocs.clear();
             inst.in_flight = 0;
-            let g = inst.granted_cores;
             inst.granted_cores = 0;
-            g
+            std::mem::take(&mut inst.core_ids)
         };
-        // Return the crashed instance's cores to the pool (force_release
-        // records them in stats.releases).
-        self.scheduler.force_release(granted);
+        // Return the crashed instance's physical cores to the pool
+        // (force_release records them in stats.releases).
+        self.scheduler.force_release(held);
     }
 
     /// Crash-recovery sweep (the §4 monitoring loop's remediation): every
@@ -325,16 +337,15 @@ impl Junctiond {
     /// Tear down an evicted pooled instance: stop it, return any cores,
     /// and free its network config.
     pub fn retire_instance(&mut self, id: InstanceId) {
-        let granted = {
+        let held = {
             let inst = self.scheduler.instance_mut(id).expect("unknown instance");
             inst.state = InstanceState::Stopped;
             inst.uprocs.clear();
             inst.in_flight = 0;
-            let g = inst.granted_cores;
             inst.granted_cores = 0;
-            g
+            std::mem::take(&mut inst.core_ids)
         };
-        self.scheduler.force_release(granted);
+        self.scheduler.force_release(held);
         self.configs.remove(&id);
     }
 

@@ -65,7 +65,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: junctiond-repro <fig5|fig6|coldstart|ablation|density|serve|calibrate|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
-         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex\n\
+         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|interference\n\
          --mode kernel|bypass --requests N --runs N --workers N --worker-cores N\n\
          --functions N --hot N --rate RPS --payload BYTES"
     );
@@ -134,6 +134,45 @@ fn main() -> Result<()> {
                 maybe_csv(&flags, &table, "ablation_netpath")?;
                 return Ok(());
             }
+            if which == "interference" {
+                // E14: structural interference — a latency-sensitive
+                // function co-located with antagonist tenants, residual
+                // jitter off, the tail arising only from per-core
+                // contention in the compute fabric. Deterministic output
+                // (platform-default compute, no wall clock): the CI
+                // determinism job diffs two same-seed runs.
+                let dur = get_u64(&flags, "duration-ms", 400)? * MILLIS;
+                let rate = get_u64(&flags, "rate", 400)? as f64;
+                let (table, points) = ex::interference_table(
+                    &ex::interference_default_counts(),
+                    rate,
+                    2 * MILLIS,
+                    dur,
+                    seed,
+                );
+                println!("{}", table.to_markdown());
+                let factor = |b: Backend| {
+                    let base = points
+                        .iter()
+                        .find(|p| p.backend == b && p.antagonists == 0)
+                        .map(|p| p.p99)
+                        .unwrap_or(1);
+                    let top = points
+                        .iter()
+                        .filter(|p| p.backend == b)
+                        .max_by_key(|p| p.antagonists)
+                        .map(|p| p.p99)
+                        .unwrap_or(base);
+                    top as f64 / base.max(1) as f64
+                };
+                println!(
+                    "p99 degradation at the top antagonist load: containerd {:.1}×, junctiond {:.1}×",
+                    factor(Backend::Containerd),
+                    factor(Backend::Junctiond)
+                );
+                maybe_csv(&flags, &table, "ablation_interference")?;
+                return Ok(());
+            }
             if which == "duplex" {
                 // E13: the full-duplex data path — worker TX rings with
                 // backpressure + the front end's own RX NIC, plus the echo
@@ -187,7 +226,7 @@ fn main() -> Result<()> {
                 "multitenant" => ex::multitenant_table(60, 1_000.0, seed),
                 "tiers" => ex::coldstart_tiers_table(20, seed),
                 other => bail!(
-                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex)"
+                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|interference)"
                 ),
             };
             println!("{}", table.to_markdown());

@@ -84,6 +84,14 @@ pub struct KernelCosts {
     jitter: JitterModel,
     tail: TailTable,
     rng: Rng,
+    /// Keep the sampled scheduling-noise/interference add-ons. Since the
+    /// compute fabric models co-location interference *structurally*
+    /// (per-core contention, quantum preemption, softirq stealing), the
+    /// sampled draws default off — `sched_noise` and
+    /// `segment_interference` return 0 — so the tail is never counted
+    /// twice. The per-operation heavy-tail jitter (`tailed`) is *not*
+    /// residual: it models intra-op kernel variance, and stays on.
+    residual_jitter: bool,
     // telemetry
     pub msgs_recv: u64,
     pub msgs_sent: u64,
@@ -95,10 +103,11 @@ impl KernelCosts {
     pub fn new(platform: Rc<PlatformConfig>, rng: Rng) -> Self {
         let jitter = JitterModel::default();
         KernelCosts {
-            p: platform,
             tail: TailTable::new(jitter.alpha, jitter.cap),
             jitter,
             rng,
+            residual_jitter: platform.residual_jitter != 0,
+            p: platform,
             msgs_recv: 0,
             msgs_sent: 0,
             wakeups: 0,
@@ -206,18 +215,30 @@ impl KernelCosts {
     }
 
     /// Per-request process-scheduling overhead inside a busy instance:
-    /// timer ticks + involuntary context switches.
+    /// timer ticks + involuntary context switches. **Residual jitter**:
+    /// returns 0 unless `PlatformConfig::residual_jitter` re-enables the
+    /// sampled draw — the compute fabric now produces this effect
+    /// structurally (quantum preemption + migration cost).
     pub fn sched_noise(&mut self) -> Time {
+        if !self.residual_jitter {
+            return 0;
+        }
         self.tailed(self.p.context_switch_ns)
     }
 
     /// Rare kernel-path interference burst charged per CPU segment: CFS
     /// throttling, a GC pause landing on a timer tick, an IRQ storm, or a
-    /// cross-core migration. This is the dominant source of the kernel
-    /// path's P99 (the paper's §5 tail claims); Junction segments never
-    /// take it — their instances are not subject to host-kernel
-    /// scheduling noise.
+    /// cross-core migration. **Residual jitter**: returns 0 unless
+    /// `PlatformConfig::residual_jitter` re-enables the sampled draw.
+    /// With the compute fabric on (the default), this interference
+    /// *emerges* from per-core contention — softirq work stealing tenant
+    /// cores, timeslice waits, cross-core migrations — instead of being
+    /// sampled, so the knob defaults off to avoid double counting
+    /// (unit-tested below).
     pub fn segment_interference(&mut self) -> Time {
+        if !self.residual_jitter {
+            return 0;
+        }
         if self.rng.below(10_000) < self.p.kernel_interference_prob_bp {
             self.rng.range(self.p.kernel_interference_min_ns, self.p.kernel_interference_max_ns)
         } else {
@@ -316,6 +337,25 @@ mod tests {
         let emp = total as f64 / n as f64;
         let err = (emp - mean as f64).abs() / mean as f64;
         assert!(err < 0.03, "tailed({mean}) empirical mean {emp:.0} (err {err:.4})");
+    }
+
+    #[test]
+    fn residual_jitter_defaults_off_no_double_count() {
+        // With the structural fabric on (platform default), the sampled
+        // interference add-ons must charge nothing — the tail comes from
+        // per-core contention only.
+        let mut c = costs();
+        for _ in 0..10_000 {
+            assert_eq!(c.sched_noise(), 0);
+            assert_eq!(c.segment_interference(), 0);
+        }
+        // Re-enabling the knob restores the seed's sampled draws.
+        let p = PlatformConfig { residual_jitter: 1, ..PlatformConfig::default() };
+        let mut c = KernelCosts::new(Rc::new(p), Rng::new(7));
+        let noise: Time = (0..10_000).map(|_| c.sched_noise()).sum();
+        let bursts = (0..10_000).filter(|_| c.segment_interference() > 0).count();
+        assert!(noise > 0, "residual sched_noise must sample when enabled");
+        assert!(bursts > 0, "residual interference must sample when enabled");
     }
 
     #[test]

@@ -1,0 +1,1386 @@
+//! The compute fabric: per-core timelines for the simulator.
+//!
+//! [`ComputeFabric`] replaces the seed's flat `CorePool` semaphore with a
+//! structural model of a multi-core host: every core has its own timeline
+//! (a running slice plus per-class local run queues), unpinned work waits
+//! in shared per-class queues, and three knobs decide how contention
+//! resolves:
+//!
+//! * **preemption quantum** — a running slice ends at the quantum edge
+//!   when equal-or-higher-priority work is waiting; the preempted job
+//!   requeues at the tail of its queue (CFS-style round-robin). Quantum
+//!   edges are exact: an arrival at a busy core *advances* the core's
+//!   slice-end timer to the next edge (O(1) cancel + reschedule on the
+//!   PR 3 slab engine), so the uncontended fast path still costs one
+//!   event per job.
+//! * **classes** — [`JobClass::Irq`] beats [`JobClass::Normal`] beats
+//!   [`JobClass::Batch`] at every pick and at every quantum edge. The
+//!   kernel backend lands softirq work on specific cores as `Irq`, which
+//!   is exactly how NIC processing steals cycles from whatever tenant
+//!   runs there.
+//! * **stealing** — an idle core with nothing shared to run may steal the
+//!   oldest job from the longest local backlog, paying the migration
+//!   cost (cache refill + wakeup IPI). Kernel backend: on. Bypass
+//!   backend: off (core grants are sticky).
+//!
+//! `run_on(core, ..)` gives *soft affinity*: the job waits in that core's
+//! local queue and runs there with local-before-shared priority, but the
+//! core still takes shared work when its local queues are empty (work
+//! conserving, no deadlock when grants churn). [`ComputeFabric::pin`]
+//! makes a core hard-dedicated (local work only); `reserve` removes it
+//! from the fabric entirely (the bypass scheduler's polling core).
+//!
+//! Interference now *emerges*: co-located tenants contend for the same
+//! per-core timelines, so the kernel backend's tail grows structurally
+//! with antagonist load while the bypass backend's pinned run-to-
+//! completion grants hold it flat (E14, `benches/fig_isolation.rs`).
+//! The sampled `sched_noise`/`segment_interference` draws that used to
+//! stand in for this are demoted to a residual-jitter knob that defaults
+//! off (see `oskernel`), so nothing is double-counted.
+//!
+//! Two seed bugs are fixed here and pinned by tests: `reserve` mid-flight
+//! takes effect at the next dispatch (the seed kept refilling from the
+//! queue until it drained), and busy time accrues at slice *completion*
+//! (the seed charged the full duration at admission, so utilization
+//! sampled mid-run could exceed 1.0).
+//!
+//! [`FabricKind::ReferenceFifo`] runs the seed algorithm unchanged (see
+//! `resource.rs`); [`FabricKind::CompatFifo`] runs the per-core engine
+//! with quantum = ∞, stealing off, and affinity/classes degraded to the
+//! single shared FIFO. A differential property test plus the E5/E11
+//! table-equality checks in `tests/integration.rs` pin that the two are
+//! bit-for-bit identical — the same technique PR 3 used to swap the
+//! event engine.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use super::engine::{Sim, Time, TimerHandle};
+use super::resource::{JobFn, RefJob, RefState};
+
+/// Which engine a [`ComputeFabric`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricKind {
+    /// Per-core timelines with the configured quantum/steal/affinity
+    /// semantics (production default).
+    Structural,
+    /// The per-core engine degraded to the seed semantics: quantum = ∞,
+    /// stealing off, `run_on`/`run_class` collapse to the shared FIFO.
+    /// Must reproduce [`FabricKind::ReferenceFifo`] bit-for-bit.
+    CompatFifo,
+    /// The seed `CorePool` algorithm, kept as the differential reference.
+    ReferenceFifo,
+}
+
+thread_local! {
+    static DEFAULT_FABRIC: Cell<FabricKind> = const { Cell::new(FabricKind::Structural) };
+}
+
+/// The fabric kind new `FaasSim`s build (thread-local, like the event
+/// engine's `set_default_engine`).
+pub fn default_fabric() -> FabricKind {
+    DEFAULT_FABRIC.with(|k| k.get())
+}
+
+/// Override the default fabric kind; returns the previous value so tests
+/// can restore it.
+pub fn set_default_fabric(kind: FabricKind) -> FabricKind {
+    DEFAULT_FABRIC.with(|k| k.replace(kind))
+}
+
+/// Priority class of a fabric job. Lower value = higher priority.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum JobClass {
+    /// IRQ/softirq work: preempts tenant work at the next quantum edge.
+    Irq = 0,
+    /// Tenant segments (the default).
+    Normal = 1,
+    /// Background/best-effort work: never preempts tenants.
+    Batch = 2,
+}
+
+const NCLASS: usize = 3;
+
+impl JobClass {
+    #[inline]
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Structural knobs of the per-core engine.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricConfig {
+    /// Preemption quantum in ns; 0 = run to completion (no slicing).
+    pub quantum_ns: Time,
+    /// Idle cores may steal from another core's local backlog.
+    pub steal: bool,
+    /// Surcharge when a job resumes on a different core than it last ran
+    /// on (cache refill + wakeup IPI), and when a job is stolen.
+    pub migration_cost_ns: Time,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig { quantum_ns: 0, steal: false, migration_cost_ns: 0 }
+    }
+}
+
+/// Counter snapshot for telemetry rollups (`Cluster::fabric_totals`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FabricStats {
+    /// Schedulable (non-reserved) cores.
+    pub cores: usize,
+    pub busy_ns: u64,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    /// Jobs that started running (seed `jobs_run` semantics).
+    pub jobs_run: u64,
+    pub preemptions: u64,
+    pub steals: u64,
+    pub migrations: u64,
+    /// High-water mark of jobs waiting (shared + local queues).
+    pub max_queue: usize,
+    /// Busy ns per physical core (empty in `ReferenceFifo` mode).
+    pub per_core_busy_ns: Vec<u64>,
+}
+
+impl FabricStats {
+    /// Fold another fabric's counters into this one (cluster rollup):
+    /// scalars add, `max_queue` takes the max, per-core vectors add
+    /// index-wise (worker core `i` accumulates across the pool).
+    pub fn merge(&mut self, other: &FabricStats) {
+        self.cores += other.cores;
+        self.busy_ns += other.busy_ns;
+        self.jobs_submitted += other.jobs_submitted;
+        self.jobs_completed += other.jobs_completed;
+        self.jobs_run += other.jobs_run;
+        self.preemptions += other.preemptions;
+        self.steals += other.steals;
+        self.migrations += other.migrations;
+        self.max_queue = self.max_queue.max(other.max_queue);
+        if self.per_core_busy_ns.len() < other.per_core_busy_ns.len() {
+            self.per_core_busy_ns.resize(other.per_core_busy_ns.len(), 0);
+        }
+        for (i, v) in other.per_core_busy_ns.iter().enumerate() {
+            self.per_core_busy_ns[i] += v;
+        }
+    }
+}
+
+struct Job {
+    remaining: Time,
+    class: JobClass,
+    /// Soft affinity: wait in this core's local queue.
+    pin: Option<usize>,
+    /// Core the job last ran on (migration surcharge on cross-core resume).
+    last_core: Option<usize>,
+    started: bool,
+    done: JobFn,
+}
+
+struct Running {
+    job: Job,
+    slice_start: Time,
+    /// Scheduled slice-end time (advanced to the quantum edge on arrival).
+    end: Time,
+    handle: TimerHandle,
+}
+
+struct Core {
+    /// Removed from the fabric (scheduler polling core); never dispatches.
+    reserved: bool,
+    /// Hard-dedicated: serves its local queues only, never shared work.
+    pinned: bool,
+    /// The completed job's `done` callback is currently executing: the
+    /// core is still owned by that job (seed semantics — the seed freed
+    /// the core only *after* `done` ran), so a callback that submits new
+    /// fabric work queues instead of double-dispatching this core.
+    completing: bool,
+    running: Option<Running>,
+    local: [VecDeque<Job>; NCLASS],
+    busy_ns: u64,
+    jobs_run: u64,
+    preemptions: u64,
+}
+
+impl Core {
+    fn new() -> Core {
+        Core {
+            reserved: false,
+            pinned: false,
+            completing: false,
+            running: None,
+            local: std::array::from_fn(|_| VecDeque::new()),
+            busy_ns: 0,
+            jobs_run: 0,
+            preemptions: 0,
+        }
+    }
+
+    fn local_len(&self) -> usize {
+        self.local.iter().map(|q| q.len()).sum()
+    }
+}
+
+struct PerCore {
+    cfg: FabricConfig,
+    cores: Vec<Core>,
+    shared: [VecDeque<Job>; NCLASS],
+    /// Jobs waiting in any queue (shared + local).
+    waiting: usize,
+    max_queue: usize,
+    busy_ns: u64,
+    jobs_submitted: u64,
+    jobs_completed: u64,
+    jobs_run: u64,
+    preemptions: u64,
+    steals: u64,
+    migrations: u64,
+}
+
+impl PerCore {
+    fn new(cores: usize, cfg: FabricConfig) -> PerCore {
+        assert!(cores > 0, "a compute fabric needs at least one core");
+        PerCore {
+            cfg,
+            cores: (0..cores).map(|_| Core::new()).collect(),
+            shared: std::array::from_fn(|_| VecDeque::new()),
+            waiting: 0,
+            max_queue: 0,
+            busy_ns: 0,
+            jobs_submitted: 0,
+            jobs_completed: 0,
+            jobs_run: 0,
+            preemptions: 0,
+            steals: 0,
+            migrations: 0,
+        }
+    }
+
+    fn unreserved(&self) -> usize {
+        self.cores.iter().filter(|c| !c.reserved).count()
+    }
+
+    fn push_shared(&mut self, job: Job) {
+        self.shared[job.class.idx()].push_back(job);
+        self.note_queued();
+    }
+
+    fn push_local(&mut self, core: usize, job: Job) {
+        self.cores[core].local[job.class.idx()].push_back(job);
+        self.note_queued();
+    }
+
+    fn note_queued(&mut self) {
+        self.waiting += 1;
+        if self.waiting > self.max_queue {
+            self.max_queue = self.waiting;
+        }
+    }
+
+    /// Lowest-index idle core that may take shared work.
+    fn first_open_idle(&self) -> Option<usize> {
+        self.cores
+            .iter()
+            .position(|c| !c.reserved && !c.pinned && c.running.is_none() && !c.completing)
+    }
+
+    /// Is there waiting work that would meaningfully preempt a job of
+    /// `class` (with local affinity `running_pin`) on this core? Local
+    /// work of equal-or-higher class always does (round-robin rotation is
+    /// meaningful there); *shared* work of the same class cannot rotate
+    /// ahead of a core-affine job — the requeued job would win the next
+    /// pick anyway — so only strictly higher classes preempt it from the
+    /// shared queue. This keeps a granted core from burning a preempt/
+    /// requeue/redispatch event cycle every quantum while shared work
+    /// waits for some other core to free up.
+    fn waiting_preempts(&self, core: usize, class: JobClass, running_pin: Option<usize>) -> bool {
+        let c = &self.cores[core];
+        let affine_here = running_pin == Some(core);
+        for cl in 0..=class.idx() {
+            if !c.local[cl].is_empty() {
+                return true;
+            }
+            if !c.pinned && !self.shared[cl].is_empty() && (cl < class.idx() || !affine_here) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Pop the next job for `core`: local before shared per class, then a
+    /// steal from the longest local backlog if enabled.
+    fn pick(&mut self, core: usize) -> Option<Job> {
+        if self.cores[core].reserved {
+            return None;
+        }
+        let pinned = self.cores[core].pinned;
+        for cl in 0..NCLASS {
+            if let Some(job) = self.cores[core].local[cl].pop_front() {
+                self.waiting -= 1;
+                return Some(job);
+            }
+            if !pinned {
+                if let Some(job) = self.shared[cl].pop_front() {
+                    self.waiting -= 1;
+                    return Some(job);
+                }
+            }
+        }
+        if self.cfg.steal && !pinned {
+            return self.steal_for(core);
+        }
+        None
+    }
+
+    /// Steal the oldest highest-class job from the longest local backlog
+    /// among other stealable cores, paying the migration surcharge.
+    fn steal_for(&mut self, thief: usize) -> Option<Job> {
+        let donor = self
+            .cores
+            .iter()
+            .enumerate()
+            .filter(|(i, c)| *i != thief && !c.reserved && !c.pinned && c.local_len() > 0)
+            .max_by_key(|(i, c)| (c.local_len(), usize::MAX - i)) // longest, lowest index on ties
+            .map(|(i, _)| i)?;
+        for cl in 0..NCLASS {
+            if let Some(mut job) = self.cores[donor].local[cl].pop_front() {
+                self.waiting -= 1;
+                self.steals += 1;
+                job.pin = None;
+                job.last_core = None;
+                if self.cfg.migration_cost_ns > 0 {
+                    job.remaining += self.cfg.migration_cost_ns;
+                    self.migrations += 1;
+                }
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+enum Engine {
+    PerCore(PerCore),
+    Reference(RefState),
+}
+
+struct Inner {
+    kind: FabricKind,
+    engine: Engine,
+}
+
+/// A multi-core compute resource with per-core timelines. Cloning is
+/// cheap (`Rc`); all clones refer to the same fabric.
+#[derive(Clone)]
+pub struct ComputeFabric {
+    inner: Rc<RefCell<Inner>>,
+}
+
+enum Submitted {
+    Start(usize, Job),
+    Advance(usize),
+    /// Queued shared: every busy core running equal-or-lower-priority
+    /// work gets its slice end advanced to the next quantum edge.
+    AdvanceShared(JobClass),
+    Queued,
+}
+
+enum SliceOutcome {
+    Done(JobFn),
+    Requeued,
+    Continue(Job),
+}
+
+impl ComputeFabric {
+    /// A neutral per-core fabric (quantum = ∞, stealing off) — drop-in
+    /// for the seed pool in tests and benches.
+    pub fn new(cores: usize) -> Self {
+        ComputeFabric::new_kind(FabricKind::Structural, cores, FabricConfig::default())
+    }
+
+    pub fn new_kind(kind: FabricKind, cores: usize, cfg: FabricConfig) -> Self {
+        let engine = match kind {
+            FabricKind::Structural => Engine::PerCore(PerCore::new(cores, cfg)),
+            // Compat ignores the caller's knobs: it *is* the neutral config.
+            FabricKind::CompatFifo => Engine::PerCore(PerCore::new(cores, FabricConfig::default())),
+            FabricKind::ReferenceFifo => Engine::Reference(RefState::new(cores)),
+        };
+        ComputeFabric { inner: Rc::new(RefCell::new(Inner { kind, engine })) }
+    }
+
+    pub fn kind(&self) -> FabricKind {
+        self.inner.borrow().kind
+    }
+
+    /// Schedulable cores (reserved cores excluded — seed semantics).
+    pub fn cores(&self) -> usize {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.unreserved(),
+            Engine::Reference(r) => r.cores,
+        }
+    }
+
+    /// Cores currently running a job (reserved cores still draining count).
+    pub fn busy(&self) -> usize {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.cores.iter().filter(|c| c.running.is_some()).count(),
+            Engine::Reference(r) => r.busy,
+        }
+    }
+
+    /// Jobs waiting for a core (shared + local queues).
+    pub fn queued(&self) -> usize {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.waiting,
+            Engine::Reference(r) => r.queue.len(),
+        }
+    }
+
+    /// High-water mark of the waiting-job count (saturation telemetry).
+    pub fn max_queue(&self) -> usize {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.max_queue,
+            Engine::Reference(r) => r.max_queue,
+        }
+    }
+
+    /// Total core-busy nanoseconds. Accrued at slice completion (the seed
+    /// charged at admission — see the module header).
+    pub fn busy_ns(&self) -> u64 {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.busy_ns,
+            Engine::Reference(r) => r.busy_ns,
+        }
+    }
+
+    pub fn jobs_run(&self) -> u64 {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.jobs_run,
+            Engine::Reference(r) => r.jobs_run,
+        }
+    }
+
+    pub fn jobs_submitted(&self) -> u64 {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.jobs_submitted,
+            Engine::Reference(r) => r.jobs_submitted,
+        }
+    }
+
+    pub fn jobs_completed(&self) -> u64 {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.jobs_completed,
+            Engine::Reference(r) => r.jobs_completed,
+        }
+    }
+
+    /// Busy ns per physical core (includes reserved cores, which stay 0
+    /// unless they were reserved mid-drain). Empty in reference mode.
+    pub fn per_core_busy_ns(&self) -> Vec<u64> {
+        match &self.inner.borrow().engine {
+            Engine::PerCore(pc) => pc.cores.iter().map(|c| c.busy_ns).collect(),
+            Engine::Reference(_) => Vec::new(),
+        }
+    }
+
+    /// Counter snapshot for rollups.
+    pub fn stats(&self) -> FabricStats {
+        let inner = self.inner.borrow();
+        match &inner.engine {
+            Engine::PerCore(pc) => FabricStats {
+                cores: pc.unreserved(),
+                busy_ns: pc.busy_ns,
+                jobs_submitted: pc.jobs_submitted,
+                jobs_completed: pc.jobs_completed,
+                jobs_run: pc.jobs_run,
+                preemptions: pc.preemptions,
+                steals: pc.steals,
+                migrations: pc.migrations,
+                max_queue: pc.max_queue,
+                per_core_busy_ns: pc.cores.iter().map(|c| c.busy_ns).collect(),
+            },
+            Engine::Reference(r) => FabricStats {
+                cores: r.cores,
+                busy_ns: r.busy_ns,
+                jobs_submitted: r.jobs_submitted,
+                jobs_completed: r.jobs_completed,
+                jobs_run: r.jobs_run,
+                max_queue: r.max_queue,
+                ..FabricStats::default()
+            },
+        }
+    }
+
+    /// Utilization in [0,1] over `elapsed` virtual time. With completion-
+    /// accrued busy time a mid-run sample can no longer exceed 1.0.
+    pub fn utilization(&self, elapsed: Time) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        let cores = self.cores();
+        self.busy_ns() as f64 / (elapsed as f64 * cores as f64)
+    }
+
+    /// Reserve `n` cores permanently (e.g. the bypass scheduler's
+    /// dedicated polling core). Lowest-index unreserved cores are taken.
+    /// Unlike the seed, a mid-flight reservation takes effect at the next
+    /// dispatch: a reserved core finishes its current job, then never
+    /// picks another (`busy <= cores` is a checked invariant from there).
+    pub fn reserve(&self, n: usize) {
+        let mut inner = self.inner.borrow_mut();
+        match &mut inner.engine {
+            Engine::PerCore(pc) => {
+                assert!(n < pc.unreserved(), "cannot reserve all {} cores", pc.unreserved());
+                let mut left = n;
+                for i in 0..pc.cores.len() {
+                    if left == 0 {
+                        break;
+                    }
+                    if pc.cores[i].reserved {
+                        continue;
+                    }
+                    pc.cores[i].reserved = true;
+                    pc.cores[i].pinned = false;
+                    // Orphan local work migrates to the shared queues so
+                    // nothing starves on a core that will never dispatch.
+                    for cl in 0..NCLASS {
+                        while let Some(job) = pc.cores[i].local[cl].pop_front() {
+                            pc.shared[cl].push_back(job);
+                        }
+                    }
+                    left -= 1;
+                }
+            }
+            Engine::Reference(r) => {
+                assert!(n < r.cores, "cannot reserve all {} cores", r.cores);
+                r.cores -= n;
+            }
+        }
+    }
+
+    /// Hard-dedicate a core: it serves its local queues only. No-op in
+    /// the FIFO modes (the seed model has no per-core identity).
+    pub fn pin(&self, core: usize) {
+        let mut inner = self.inner.borrow_mut();
+        if inner.kind != FabricKind::Structural {
+            return;
+        }
+        let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
+        assert!(!pc.cores[core].reserved, "cannot pin a reserved core");
+        pc.cores[core].pinned = true;
+    }
+
+    /// Release a hard-dedicated core back to shared work; kicks a dispatch
+    /// if it was idling with shared work waiting.
+    pub fn unpin(&self, sim: &mut Sim, core: usize) {
+        let kick = {
+            let mut inner = self.inner.borrow_mut();
+            let structural = inner.kind == FabricKind::Structural;
+            match &mut inner.engine {
+                Engine::PerCore(pc) if structural => {
+                    pc.cores[core].pinned = false;
+                    // Never kick mid-completion: the in-flight pc_next
+                    // would double-dispatch the core.
+                    pc.cores[core].running.is_none() && !pc.cores[core].completing
+                }
+                _ => false,
+            }
+        };
+        if kick {
+            self.pc_next(sim, core);
+        }
+    }
+
+    /// Run `done` after holding a core for `duration` (shared FIFO,
+    /// [`JobClass::Normal`] — the seed-compatible entry point).
+    pub fn run<F: FnOnce(&mut Sim) + 'static>(&self, sim: &mut Sim, duration: Time, done: F) {
+        self.run_class(sim, JobClass::Normal, duration, done);
+    }
+
+    /// Run in a priority class (shared queue of that class).
+    pub fn run_class<F: FnOnce(&mut Sim) + 'static>(
+        &self,
+        sim: &mut Sim,
+        class: JobClass,
+        duration: Time,
+        done: F,
+    ) {
+        self.submit(sim, None, class, duration, Box::new(done));
+    }
+
+    /// Run with soft affinity to `core`: the job waits in that core's
+    /// local queue (priority over shared work there). Degrades to the
+    /// shared FIFO in the compat/reference modes.
+    pub fn run_on<F: FnOnce(&mut Sim) + 'static>(
+        &self,
+        sim: &mut Sim,
+        core: usize,
+        class: JobClass,
+        duration: Time,
+        done: F,
+    ) {
+        self.submit(sim, Some(core), class, duration, Box::new(done));
+    }
+
+    fn submit(
+        &self,
+        sim: &mut Sim,
+        pin: Option<usize>,
+        class: JobClass,
+        duration: Time,
+        done: JobFn,
+    ) {
+        let kind = self.inner.borrow().kind;
+        match kind {
+            FabricKind::ReferenceFifo => {
+                let start = {
+                    let mut inner = self.inner.borrow_mut();
+                    let Engine::Reference(r) = &mut inner.engine else { unreachable!() };
+                    r.admit(RefJob { duration, done })
+                };
+                if let Some(job) = start {
+                    self.ref_finish_later(sim, job);
+                }
+            }
+            FabricKind::CompatFifo | FabricKind::Structural => {
+                let (pin, class) = if kind == FabricKind::CompatFifo {
+                    (None, JobClass::Normal) // degrade: single shared FIFO
+                } else {
+                    (pin, class)
+                };
+                let job =
+                    Job { remaining: duration, class, pin, last_core: None, started: false, done };
+                self.pc_submit(sim, job);
+            }
+        }
+    }
+
+    // ---- per-core engine ------------------------------------------------
+
+    fn pc_submit(&self, sim: &mut Sim, mut job: Job) {
+        let decision = {
+            let mut inner = self.inner.borrow_mut();
+            let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
+            pc.jobs_submitted += 1;
+            if let Some(c) = job.pin {
+                if pc.cores[c].reserved {
+                    // The target left the fabric (reserved mid-flight):
+                    // fall back to the shared queue.
+                    job.pin = None;
+                }
+            }
+            match job.pin {
+                Some(c) => {
+                    if pc.cores[c].running.is_none() && !pc.cores[c].completing {
+                        Submitted::Start(c, job)
+                    } else {
+                        // No advance while `completing` (running is None):
+                        // the in-progress completion's pc_next picks the
+                        // queued job immediately anyway.
+                        let advance = pc.cfg.quantum_ns > 0
+                            && pc.cores[c]
+                                .running
+                                .as_ref()
+                                .map(|r| job.class <= r.job.class)
+                                .unwrap_or(false);
+                        pc.push_local(c, job);
+                        if advance {
+                            Submitted::Advance(c)
+                        } else {
+                            Submitted::Queued
+                        }
+                    }
+                }
+                None => match pc.first_open_idle() {
+                    Some(c) => Submitted::Start(c, job),
+                    None => {
+                        let class = job.class;
+                        pc.push_shared(job);
+                        if pc.cfg.quantum_ns > 0 {
+                            Submitted::AdvanceShared(class)
+                        } else {
+                            Submitted::Queued
+                        }
+                    }
+                },
+            }
+        };
+        match decision {
+            Submitted::Start(core, job) => self.pc_dispatch(sim, core, job),
+            Submitted::Advance(core) => self.pc_advance(sim, core),
+            Submitted::AdvanceShared(class) => {
+                // Only one core can pick the queued job, so advance just
+                // the preemptable core with the *nearest* quantum edge
+                // (lowest index on ties) at one cancel+reschedule per
+                // arrival. Bursts spread across cores on their own: an
+                // already-advanced core has `end == edge` and fails the
+                // `edge < end` filter, so the next arrival advances the
+                // next-nearest core, and dispatch slices at the quantum
+                // while any preemptable backlog remains.
+                let now = sim.now();
+                let target = {
+                    let inner = self.inner.borrow();
+                    let Engine::PerCore(pc) = &inner.engine else { unreachable!() };
+                    let q = pc.cfg.quantum_ns;
+                    pc.cores
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, c)| {
+                            if c.pinned {
+                                return None;
+                            }
+                            let run = c.running.as_ref()?;
+                            // Same preemptability rule as waiting_preempts:
+                            // same-class shared work never displaces a
+                            // core-affine job. A core reserved mid-slice
+                            // is always preemptable — its slice end sheds
+                            // the job to the shared queue.
+                            let preemptable = c.reserved
+                                || (class <= run.job.class
+                                    && (class < run.job.class || run.job.pin != Some(i)));
+                            if !preemptable {
+                                return None;
+                            }
+                            let edge =
+                                run.slice_start + ((now - run.slice_start) / q + 1) * q;
+                            (edge < run.end).then_some((edge, i))
+                        })
+                        .min()
+                        .map(|(_, i)| i)
+                };
+                if let Some(c) = target {
+                    self.pc_advance(sim, c);
+                }
+            }
+            Submitted::Queued => {}
+        }
+    }
+
+    /// Pull the busy core's slice end forward to the next quantum edge
+    /// (an equal-or-higher-priority arrival wants the core).
+    fn pc_advance(&self, sim: &mut Sim, core: usize) {
+        let now = sim.now();
+        let resched = {
+            let inner = self.inner.borrow();
+            let Engine::PerCore(pc) = &inner.engine else { unreachable!() };
+            let q = pc.cfg.quantum_ns;
+            let run = pc.cores[core].running.as_ref().expect("advance on an idle core");
+            let edge = run.slice_start + ((now - run.slice_start) / q + 1) * q;
+            (edge < run.end).then_some((run.handle, edge))
+        };
+        if let Some((old, edge)) = resched {
+            let live = sim.cancel(old);
+            debug_assert!(live, "slice-end timer must be live when advanced");
+            let fab = self.clone();
+            let h = sim.at_handle(edge, move |sim| fab.pc_slice_end(sim, core));
+            let mut inner = self.inner.borrow_mut();
+            let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
+            let run = pc.cores[core].running.as_mut().unwrap();
+            run.handle = h;
+            run.end = edge;
+        }
+    }
+
+    fn pc_dispatch(&self, sim: &mut Sim, core: usize, job: Job) {
+        let now = sim.now();
+        let (job, slice) = {
+            let mut inner = self.inner.borrow_mut();
+            let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
+            debug_assert!(!pc.cores[core].reserved, "dispatch on a reserved core");
+            debug_assert!(pc.cores[core].running.is_none(), "dispatch on a busy core");
+            let mut job = job;
+            if !job.started {
+                job.started = true;
+                pc.jobs_run += 1;
+                pc.cores[core].jobs_run += 1;
+            }
+            if let Some(last) = job.last_core {
+                if last != core && pc.cfg.migration_cost_ns > 0 {
+                    job.remaining += pc.cfg.migration_cost_ns;
+                    pc.migrations += 1;
+                }
+            }
+            job.last_core = Some(core);
+            let q = pc.cfg.quantum_ns;
+            // Slice at the quantum only when waiting work could actually
+            // take the core at the edge; later arrivals advance the slice
+            // end themselves, so the uncontended path stays one event.
+            let slice = if q == 0 || !pc.waiting_preempts(core, job.class, job.pin) {
+                job.remaining
+            } else {
+                job.remaining.min(q)
+            };
+            (job, slice)
+        };
+        let fab = self.clone();
+        let handle = sim.at_handle(now + slice, move |sim| fab.pc_slice_end(sim, core));
+        let mut inner = self.inner.borrow_mut();
+        let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
+        pc.cores[core].running =
+            Some(Running { job, slice_start: now, end: now + slice, handle });
+    }
+
+    fn pc_slice_end(&self, sim: &mut Sim, core: usize) {
+        let now = sim.now();
+        let outcome = {
+            let mut inner = self.inner.borrow_mut();
+            let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
+            let mut run = pc.cores[core].running.take().expect("slice end on an idle core");
+            let elapsed = now - run.slice_start;
+            pc.cores[core].busy_ns += elapsed;
+            pc.busy_ns += elapsed;
+            run.job.remaining = run.job.remaining.saturating_sub(elapsed);
+            if run.job.remaining == 0 {
+                pc.jobs_completed += 1;
+                // The core stays owned until the callback returns (seed
+                // semantics): pc_next clears the flag before picking.
+                pc.cores[core].completing = true;
+                SliceOutcome::Done(run.job.done)
+            } else if pc.cores[core].reserved {
+                // The core was reserved mid-slice: force the job off it
+                // (pin stripped — a reserved core never dispatches again,
+                // so affinity to it would strand the job forever).
+                pc.preemptions += 1;
+                pc.cores[core].preemptions += 1;
+                let mut job = run.job;
+                job.pin = None;
+                job.last_core = Some(core);
+                pc.push_shared(job);
+                SliceOutcome::Requeued
+            } else if pc.waiting_preempts(core, run.job.class, run.job.pin) {
+                pc.preemptions += 1;
+                pc.cores[core].preemptions += 1;
+                let mut job = run.job;
+                job.last_core = Some(core);
+                match job.pin {
+                    Some(p) if !pc.cores[p].reserved => pc.push_local(p, job),
+                    _ => {
+                        job.pin = None;
+                        pc.push_shared(job);
+                    }
+                }
+                SliceOutcome::Requeued
+            } else {
+                SliceOutcome::Continue(run.job)
+            }
+        };
+        match outcome {
+            SliceOutcome::Done(done) => {
+                done(sim);
+                self.pc_next(sim, core);
+            }
+            SliceOutcome::Requeued => self.pc_next(sim, core),
+            SliceOutcome::Continue(job) => self.pc_dispatch(sim, core, job),
+        }
+    }
+
+    fn pc_next(&self, sim: &mut Sim, core: usize) {
+        let job = {
+            let mut inner = self.inner.borrow_mut();
+            let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
+            pc.cores[core].completing = false;
+            pc.pick(core)
+        };
+        if let Some(job) = job {
+            self.pc_dispatch(sim, core, job);
+        }
+    }
+
+    // ---- reference (seed) engine ----------------------------------------
+
+    fn ref_finish_later(&self, sim: &mut Sim, job: RefJob) {
+        {
+            let mut inner = self.inner.borrow_mut();
+            let Engine::Reference(r) = &mut inner.engine else { unreachable!() };
+            // Seed semantics, preserved: the full duration charges at
+            // admission (the fabric accrues at completion instead).
+            r.busy_ns += job.duration;
+        }
+        let fab = self.clone();
+        let done = job.done;
+        sim.after(job.duration, move |sim| {
+            done(sim);
+            let next = {
+                let mut inner = fab.inner.borrow_mut();
+                let Engine::Reference(r) = &mut inner.engine else { unreachable!() };
+                r.release_one()
+            };
+            if let Some(job) = next {
+                fab.ref_finish_later(sim, job);
+            }
+        });
+    }
+
+    /// Debug/test invariants: per-core busy time sums to the total, job
+    /// accounting conserves, and no job runs on capacity that does not
+    /// exist (`busy <= cores`, counting reserved cores only while they
+    /// drain the job they held at reservation time).
+    pub fn check_invariants(&self) {
+        let inner = self.inner.borrow();
+        match &inner.engine {
+            Engine::PerCore(pc) => {
+                let per_core: u64 = pc.cores.iter().map(|c| c.busy_ns).sum();
+                assert_eq!(per_core, pc.busy_ns, "per-core busy_ns drifted from the total");
+                let starts: u64 = pc.cores.iter().map(|c| c.jobs_run).sum();
+                assert_eq!(starts, pc.jobs_run, "per-core job starts drifted from the total");
+                let preempts: u64 = pc.cores.iter().map(|c| c.preemptions).sum();
+                assert_eq!(preempts, pc.preemptions, "per-core preemptions drifted");
+                let running = pc.cores.iter().filter(|c| c.running.is_some()).count() as u64;
+                assert_eq!(
+                    pc.jobs_submitted,
+                    pc.jobs_completed + running + pc.waiting as u64,
+                    "job accounting drifted"
+                );
+                let busy_unreserved =
+                    pc.cores.iter().filter(|c| !c.reserved && c.running.is_some()).count();
+                assert!(
+                    busy_unreserved <= pc.unreserved(),
+                    "more jobs running than schedulable cores"
+                );
+            }
+            Engine::Reference(r) => {
+                assert_eq!(
+                    r.jobs_submitted,
+                    r.jobs_completed + r.busy as u64 + r.queue.len() as u64,
+                    "reference job accounting drifted"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::{forall, Gen};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn structural(cores: usize, cfg: FabricConfig) -> ComputeFabric {
+        ComputeFabric::new_kind(FabricKind::Structural, cores, cfg)
+    }
+
+    // ---- seed-compatible behavior (ported seed tests) -------------------
+
+    #[test]
+    fn single_core_serializes() {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(1);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..3 {
+            let log = log.clone();
+            pool.run(&mut sim, 10, move |s| log.borrow_mut().push(s.now()));
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![10, 20, 30]);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn multi_core_runs_in_parallel() {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(3);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..3 {
+            let log = log.clone();
+            pool.run(&mut sim, 10, move |s| log.borrow_mut().push(s.now()));
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![10, 10, 10]);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(1);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..5u32 {
+            let log = log.clone();
+            pool.run(&mut sim, 7, move |_| log.borrow_mut().push(i));
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn utilization_accounts_busy_time() {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(2);
+        for _ in 0..4 {
+            pool.run(&mut sim, 50, |_| {});
+        }
+        sim.run_to_completion();
+        assert_eq!(sim.now(), 100);
+        assert!((pool.utilization(100) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reserve_removes_capacity() {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(2);
+        pool.reserve(1);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..2 {
+            let log = log.clone();
+            pool.run(&mut sim, 10, move |s| log.borrow_mut().push(s.now()));
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![10, 20]); // serialized on 1 core
+        assert_eq!(pool.cores(), 1);
+    }
+
+    #[test]
+    fn queue_telemetry() {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(1);
+        for _ in 0..10 {
+            pool.run(&mut sim, 5, |_| {});
+        }
+        assert_eq!(pool.queued(), 9);
+        assert_eq!(pool.max_queue(), 9);
+        sim.run_to_completion();
+        assert_eq!(pool.queued(), 0);
+        assert_eq!(pool.jobs_run(), 10);
+        assert_eq!(pool.jobs_completed(), 10);
+        assert_eq!(pool.busy(), 0);
+        pool.check_invariants();
+    }
+
+    // ---- seed bug fixes (satellites) ------------------------------------
+
+    #[test]
+    fn reserve_under_load_takes_effect_at_next_dispatch() {
+        // Seed bug: `reserve` only lowered the core count, so with a
+        // backlog both cores kept refilling from the queue until it
+        // drained. The fabric stops the reserved core at its current job.
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(2);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..6u32 {
+            let log = log.clone();
+            pool.run(&mut sim, 10, move |s| log.borrow_mut().push((i, s.now())));
+        }
+        let pool2 = pool.clone();
+        sim.at(5, move |_| pool2.reserve(1));
+        sim.run_to_completion();
+        // Core 0 reserved mid-job: it finishes job 0 at t=10, then stops.
+        // Core 1 alone serves the rest: 10, 20, 30, 40, 50.
+        assert_eq!(
+            *log.borrow(),
+            vec![(0, 10), (1, 10), (2, 20), (3, 30), (4, 40), (5, 50)],
+            "reservation must take effect at the next dispatch, not at queue drain"
+        );
+        assert_eq!(pool.cores(), 1);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn utilization_mid_run_never_exceeds_one() {
+        // Seed bug: busy time charged at admission made utilization
+        // sampled mid-run exceed 1.0 (a 100 ns job read 2.0 at t=50).
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(1);
+        pool.run(&mut sim, 100, |_| {});
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        for t in [25u64, 50, 75, 100, 150] {
+            let pool2 = pool.clone();
+            let seen2 = seen.clone();
+            sim.at(t, move |s| seen2.borrow_mut().push(pool2.utilization(s.now())));
+        }
+        sim.run_to_completion();
+        for (i, u) in seen.borrow().iter().enumerate() {
+            assert!(*u <= 1.0 + 1e-9, "sample {i} over-read utilization: {u}");
+        }
+        // Fully accrued at completion.
+        assert!((pool.utilization(100) - 1.0).abs() < 1e-9);
+    }
+
+    // ---- structural semantics -------------------------------------------
+
+    #[test]
+    fn quantum_round_robins_equal_class() {
+        let cfg = FabricConfig { quantum_ns: 10, steal: false, migration_cost_ns: 0 };
+        let mut sim = Sim::new();
+        let pool = structural(1, cfg);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..2u32 {
+            let log = log.clone();
+            pool.run(&mut sim, 30, move |s| log.borrow_mut().push((i, s.now())));
+        }
+        sim.run_to_completion();
+        // Timesliced: j0 and j1 interleave in 10 ns quanta instead of the
+        // FIFO's (30, 60).
+        assert_eq!(*log.borrow(), vec![(0, 50), (1, 60)]);
+        assert!(pool.stats().preemptions >= 2, "{:?}", pool.stats());
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn irq_arrival_advances_to_quantum_edge() {
+        let cfg = FabricConfig { quantum_ns: 10, steal: false, migration_cost_ns: 0 };
+        let mut sim = Sim::new();
+        let pool = structural(1, cfg);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        {
+            let log = log.clone();
+            pool.run(&mut sim, 50, move |s| log.borrow_mut().push(("normal", s.now())));
+        }
+        {
+            let pool2 = pool.clone();
+            let log = log.clone();
+            sim.at(12, move |sim| {
+                let log = log.clone();
+                pool2.run_on(sim, 0, JobClass::Irq, 5, move |s| {
+                    log.borrow_mut().push(("irq", s.now()));
+                });
+            });
+        }
+        sim.run_to_completion();
+        // The uncontended 50 ns slice is advanced to the t=20 edge, the
+        // IRQ work runs [20,25), the tenant resumes and finishes at 55.
+        assert_eq!(*log.borrow(), vec![("irq", 25), ("normal", 55)]);
+        assert_eq!(pool.stats().preemptions, 1);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn batch_class_never_preempts_tenants() {
+        let cfg = FabricConfig { quantum_ns: 10, steal: false, migration_cost_ns: 0 };
+        let mut sim = Sim::new();
+        let pool = structural(1, cfg);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        {
+            let log = log.clone();
+            pool.run(&mut sim, 30, move |s| log.borrow_mut().push(("normal", s.now())));
+        }
+        {
+            let log = log.clone();
+            pool.run_class(&mut sim, JobClass::Batch, 10, move |s| {
+                log.borrow_mut().push(("batch", s.now()));
+            });
+        }
+        sim.run_to_completion();
+        assert_eq!(*log.borrow(), vec![("normal", 30), ("batch", 40)]);
+        assert_eq!(pool.stats().preemptions, 0);
+    }
+
+    #[test]
+    fn steal_migrates_local_backlog_with_cost() {
+        let cfg = FabricConfig { quantum_ns: 0, steal: true, migration_cost_ns: 7 };
+        let mut sim = Sim::new();
+        let pool = structural(2, cfg);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        // Core 0: a running job plus a local backlog job.
+        for i in 0..2u32 {
+            let log = log.clone();
+            pool.run_on(&mut sim, 0, JobClass::Normal, 10, move |s| {
+                log.borrow_mut().push((i, s.now()));
+            });
+        }
+        // Core 1: a short job; at its completion it steals core 0's backlog.
+        {
+            let log = log.clone();
+            pool.run_on(&mut sim, 1, JobClass::Normal, 1, move |s| {
+                log.borrow_mut().push((9, s.now()));
+            });
+        }
+        sim.run_to_completion();
+        // Stolen job pays the 7 ns migration surcharge: 1 + 10 + 7 = 18.
+        assert_eq!(*log.borrow(), vec![(9, 1), (0, 10), (1, 18)]);
+        let s = pool.stats();
+        assert_eq!(s.steals, 1, "{s:?}");
+        assert_eq!(s.migrations, 1, "{s:?}");
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn pinned_core_serves_local_only_until_unpinned() {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new(2);
+        pool.pin(1);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..2u32 {
+            let log = log.clone();
+            pool.run(&mut sim, 10, move |s| log.borrow_mut().push((i, s.now())));
+        }
+        {
+            let log = log.clone();
+            pool.run_on(&mut sim, 1, JobClass::Normal, 5, move |s| {
+                log.borrow_mut().push((9, s.now()));
+            });
+        }
+        sim.run_to_completion();
+        // Shared jobs serialize on core 0; the pinned core runs only its
+        // local job.
+        assert_eq!(*log.borrow(), vec![(9, 5), (0, 10), (1, 20)]);
+        // Unpinning an idle core kicks waiting shared work.
+        for i in 10..12u32 {
+            let log = log.clone();
+            pool.run(&mut sim, 10, move |s| log.borrow_mut().push((i, s.now())));
+        }
+        let pool2 = pool.clone();
+        sim.after(0, move |sim| pool2.unpin(sim, 1));
+        sim.run_to_completion();
+        assert_eq!(log.borrow().len(), 5);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn per_core_busy_conserves_total() {
+        let cfg = FabricConfig { quantum_ns: 25, steal: true, migration_cost_ns: 3 };
+        let mut sim = Sim::new();
+        let pool = structural(3, cfg);
+        for i in 0..40u64 {
+            pool.run(&mut sim, 10 + (i % 7) * 13, |_| {});
+            if i % 3 == 0 {
+                pool.run_on(&mut sim, (i % 3) as usize, JobClass::Irq, 5, |_| {});
+            }
+        }
+        sim.run_to_completion();
+        let s = pool.stats();
+        assert_eq!(s.per_core_busy_ns.iter().sum::<u64>(), s.busy_ns);
+        assert_eq!(s.jobs_submitted, s.jobs_completed);
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn done_callback_submitting_work_keeps_seed_order() {
+        // A completion callback that synchronously submits new fabric
+        // work must not grab the completing core ahead of the queue (the
+        // seed freed the core only after `done` ran). Pin both engines.
+        for kind in [FabricKind::CompatFifo, FabricKind::ReferenceFifo] {
+            let mut sim = Sim::new();
+            let pool = ComputeFabric::new_kind(kind, 1, FabricConfig::default());
+            let log: Rc<RefCell<Vec<(u32, Time)>>> = Rc::new(RefCell::new(Vec::new()));
+            {
+                let pool2 = pool.clone();
+                let log2 = log.clone();
+                pool.run(&mut sim, 10, move |sim| {
+                    log2.borrow_mut().push((0, sim.now()));
+                    let log3 = log2.clone();
+                    // Submitted from inside the done callback: must queue
+                    // behind job 1, not double-dispatch this core.
+                    pool2.run(sim, 5, move |s| log3.borrow_mut().push((2, s.now())));
+                });
+            }
+            {
+                let log2 = log.clone();
+                pool.run(&mut sim, 10, move |s| log2.borrow_mut().push((1, s.now())));
+            }
+            sim.run_to_completion();
+            assert_eq!(
+                *log.borrow(),
+                vec![(0, 10), (1, 20), (2, 25)],
+                "{kind:?}: callback-submitted work must wait its turn"
+            );
+            pool.check_invariants();
+        }
+    }
+
+    #[test]
+    fn reserve_mid_slice_migrates_affine_work_off_the_core() {
+        // A core reserved while running a core-affine job must shed that
+        // job at its next quantum edge (pin stripped) instead of
+        // stranding it on a core that never dispatches again.
+        let cfg = FabricConfig { quantum_ns: 5, steal: false, migration_cost_ns: 0 };
+        let mut sim = Sim::new();
+        let pool = structural(2, cfg);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        {
+            let log = log.clone();
+            pool.run_on(&mut sim, 0, JobClass::Normal, 20, move |s| {
+                log.borrow_mut().push(("x", s.now()));
+            });
+        }
+        {
+            let log = log.clone();
+            pool.run_on(&mut sim, 1, JobClass::Normal, 30, move |s| {
+                log.borrow_mut().push(("z", s.now()));
+            });
+        }
+        let pool2 = pool.clone();
+        sim.at(2, move |_| pool2.reserve(1)); // reserves core 0 mid-slice
+        {
+            let pool3 = pool.clone();
+            let log = log.clone();
+            sim.at(3, move |sim| {
+                let log = log.clone();
+                pool3.run(sim, 5, move |s| log.borrow_mut().push(("y", s.now())));
+            });
+        }
+        sim.run_to_completion();
+        // Core 0's job is forced off at the t=5 edge and finishes on core
+        // 1 behind z and the queued shared job — nothing hangs.
+        let done = log.borrow().clone();
+        assert_eq!(done.len(), 3, "all jobs must complete: {done:?}");
+        assert_eq!(pool.jobs_submitted(), pool.jobs_completed());
+        assert!(pool.stats().preemptions >= 1, "{:?}", pool.stats());
+        pool.check_invariants();
+    }
+
+    // ---- differential: compat engine ≡ seed reference -------------------
+
+    /// Drive one schedule against a fabric and log (job id, completion
+    /// time) in completion order, plus the final telemetry that must
+    /// match (jobs_run and max_queue are event-order-sensitive).
+    fn drive(
+        kind: FabricKind,
+        cores: usize,
+        jobs: &[(Time, Time)],
+    ) -> (Vec<(u32, Time)>, u64, usize) {
+        let mut sim = Sim::new();
+        let pool = ComputeFabric::new_kind(kind, cores, FabricConfig::default());
+        let log: Rc<RefCell<Vec<(u32, Time)>>> = Rc::new(RefCell::new(Vec::new()));
+        for (i, &(at, dur)) in jobs.iter().enumerate() {
+            let pool2 = pool.clone();
+            let log2 = log.clone();
+            sim.at(at, move |sim| {
+                let log3 = log2.clone();
+                pool2.run(sim, dur, move |s| log3.borrow_mut().push((i as u32, s.now())));
+            });
+        }
+        sim.run_to_completion();
+        let out = log.borrow().clone();
+        (out, pool.jobs_run(), pool.max_queue())
+    }
+
+    #[test]
+    fn property_compat_fifo_matches_seed_reference_bit_for_bit() {
+        forall("fabric compat ≡ seed FIFO", 80, |g: &mut Gen| {
+            let cores = g.usize(1, 6);
+            let n = g.usize(1, 40);
+            let jobs: Vec<(Time, Time)> =
+                (0..n).map(|_| (g.u64(0, 500), g.u64(0, 120))).collect();
+            let (a, a_run, a_maxq) = drive(FabricKind::CompatFifo, cores, &jobs);
+            let (b, b_run, b_maxq) = drive(FabricKind::ReferenceFifo, cores, &jobs);
+            assert_eq!(a, b, "completion order/timing diverged from the seed");
+            assert_eq!(a_run, b_run, "jobs_run diverged");
+            assert_eq!(a_maxq, b_maxq, "max_queue diverged");
+        });
+    }
+
+    #[test]
+    fn structural_neutral_config_also_matches_reference() {
+        // Structural kind with the neutral config (quantum = ∞, steal
+        // off) and only shared Normal jobs is the compat path by another
+        // name — pin it too.
+        let jobs: Vec<(Time, Time)> =
+            (0..30).map(|i| ((i * 37) % 200, 10 + (i * 13) % 50)).collect();
+        let (a, ..) = drive(FabricKind::Structural, 3, &jobs);
+        let (b, ..) = drive(FabricKind::ReferenceFifo, 3, &jobs);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn default_fabric_is_thread_local_and_restorable() {
+        assert_eq!(default_fabric(), FabricKind::Structural);
+        let prev = set_default_fabric(FabricKind::ReferenceFifo);
+        assert_eq!(prev, FabricKind::Structural);
+        assert_eq!(default_fabric(), FabricKind::ReferenceFifo);
+        set_default_fabric(prev);
+        assert_eq!(default_fabric(), FabricKind::Structural);
+    }
+}

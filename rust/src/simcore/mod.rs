@@ -4,9 +4,10 @@
 //! single-threaded virtual-time simulator with a two-tier event scheduler
 //! (slab-backed hierarchical timer wheel + far-timer heap — see
 //! `engine`/`wheel`/`slab`), closure-based events with O(1) cancellation,
-//! FIFO multi-server resources (used to model CPU cores and NIC queues),
-//! and a deterministic xorshift RNG (no external `rand` crate — the
-//! registry is offline).
+//! a per-core compute fabric (`fabric` — run queues, priority classes,
+//! preemption quanta; the seed's flat FIFO pool survives in `resource`
+//! as the differential reference), and a deterministic xorshift RNG (no
+//! external `rand` crate — the registry is offline).
 //!
 //! Time is in **virtual nanoseconds** (`Time = u64`); helper constructors
 //! exist for µs/ms. Determinism is a hard invariant: two runs with the
@@ -17,6 +18,7 @@
 //! `tests/integration.rs` pin this.
 
 mod engine;
+mod fabric;
 mod proptest;
 mod resource;
 mod rng;
@@ -27,6 +29,9 @@ pub use engine::{
     default_engine, set_default_engine, tick_train, EngineKind, EngineStats, Sim, Time,
     TimerHandle, MICROS, MILLIS, SECONDS,
 };
+pub use fabric::{
+    default_fabric, set_default_fabric, ComputeFabric, FabricConfig, FabricKind, FabricStats,
+    JobClass,
+};
 pub use proptest::{forall, Gen};
-pub use resource::CorePool;
 pub use rng::Rng;

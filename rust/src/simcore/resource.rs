@@ -1,240 +1,102 @@
-//! FIFO multi-server resources for the simulator.
+//! Seed-shaped reference FIFO pool state.
 //!
-//! `CorePool` models a set of CPU cores with a shared FIFO run queue:
-//! callers request `duration` of core time; when a core frees up, the next
-//! queued job runs to completion for its duration. Run-to-completion at the
-//! *step* granularity is the right fidelity for this paper's µs-scale
-//! per-hop costs (see DESIGN.md §2): preemption effects are modeled by the
-//! `junction::Scheduler` above this layer, which slices its jobs into
-//! quantum-sized steps before they reach the pool.
+//! This is the *retained reference implementation* of the seed's
+//! `CorePool`: a flat multi-server resource with one shared FIFO run
+//! queue and run-to-completion jobs. Production code no longer uses it —
+//! the compute model is [`super::fabric::ComputeFabric`], which gives
+//! every core its own timeline (run queues, priority classes, a
+//! preemption quantum, pinning and stealing) so that scheduling
+//! interference *emerges* from per-core contention instead of being
+//! sampled from a noise distribution.
+//!
+//! The reference survives for the same reason the seed event heap
+//! survived the PR 3 engine rebuild: `FabricKind::ReferenceFifo` runs the
+//! pipeline on this exact seed algorithm, and a differential property
+//! test plus E5/E11 table-equality checks pin that the fabric with
+//! quantum = ∞, stealing off, and a single class reproduces these FIFO
+//! timings bit-for-bit. Two seed bugs are deliberately preserved here
+//! (and fixed in the fabric): `reserve` only lowers the core count, so a
+//! mid-flight reservation takes effect only after the queue drains; and
+//! busy time is charged at admission, so utilization sampled mid-run can
+//! exceed 1.0.
+//!
+//! State transitions only — the event scheduling (and the closure
+//! plumbing that goes with it) lives in `fabric.rs` so both engines share
+//! one code path for timers.
 
-use std::cell::RefCell;
 use std::collections::VecDeque;
-use std::rc::Rc;
 
 use super::engine::{Sim, Time};
 
-type JobFn = Box<dyn FnOnce(&mut Sim)>;
+pub(crate) type JobFn = Box<dyn FnOnce(&mut Sim)>;
 
-struct Job {
-    duration: Time,
-    done: JobFn,
+pub(crate) struct RefJob {
+    pub duration: Time,
+    pub done: JobFn,
 }
 
-struct PoolInner {
-    cores: usize,
-    busy: usize,
-    queue: VecDeque<Job>,
+/// The seed `CorePool`'s fields, verbatim.
+pub(crate) struct RefState {
+    pub cores: usize,
+    pub busy: usize,
+    pub queue: VecDeque<RefJob>,
     // Telemetry.
-    busy_ns: u64,
-    max_queue: usize,
-    jobs_run: u64,
+    pub busy_ns: u64,
+    pub max_queue: usize,
+    pub jobs_run: u64,
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
 }
 
-/// A pool of identical cores with a shared FIFO queue.
-///
-/// Cloning is cheap (`Rc`); all clones refer to the same pool.
-#[derive(Clone)]
-pub struct CorePool {
-    inner: Rc<RefCell<PoolInner>>,
-}
-
-impl CorePool {
+impl RefState {
     pub fn new(cores: usize) -> Self {
         assert!(cores > 0, "a core pool needs at least one core");
-        CorePool {
-            inner: Rc::new(RefCell::new(PoolInner {
-                cores,
-                busy: 0,
-                queue: VecDeque::new(),
-                busy_ns: 0,
-                max_queue: 0,
-                jobs_run: 0,
-            })),
+        RefState {
+            cores,
+            busy: 0,
+            queue: VecDeque::new(),
+            busy_ns: 0,
+            max_queue: 0,
+            jobs_run: 0,
+            jobs_submitted: 0,
+            jobs_completed: 0,
         }
     }
 
-    /// Number of cores in the pool.
-    pub fn cores(&self) -> usize {
-        self.inner.borrow().cores
-    }
-
-    /// Cores currently running a job.
-    pub fn busy(&self) -> usize {
-        self.inner.borrow().busy
-    }
-
-    /// Jobs waiting for a core.
-    pub fn queued(&self) -> usize {
-        self.inner.borrow().queue.len()
-    }
-
-    /// High-water mark of the run queue (saturation telemetry).
-    pub fn max_queue(&self) -> usize {
-        self.inner.borrow().max_queue
-    }
-
-    /// Total core-busy nanoseconds accumulated (utilization telemetry).
-    pub fn busy_ns(&self) -> u64 {
-        self.inner.borrow().busy_ns
-    }
-
-    pub fn jobs_run(&self) -> u64 {
-        self.inner.borrow().jobs_run
-    }
-
-    /// Reserve `n` cores permanently (e.g. a dedicated polling core). The
-    /// reserved cores never run queued jobs.
-    pub fn reserve(&self, n: usize) {
-        let mut p = self.inner.borrow_mut();
-        assert!(n < p.cores, "cannot reserve all {} cores", p.cores);
-        p.cores -= n;
-    }
-
-    /// Run `done` after holding a core for `duration`. If all cores are
-    /// busy the job queues FIFO; queueing delay emerges from the event
-    /// order, which is how saturation shows up in the latency figures.
-    pub fn run<F: FnOnce(&mut Sim) + 'static>(&self, sim: &mut Sim, duration: Time, done: F) {
-        let mut p = self.inner.borrow_mut();
-        if p.busy < p.cores {
-            p.busy += 1;
-            p.jobs_run += 1;
-            drop(p);
-            self.finish_later(sim, duration, Box::new(done));
+    /// Seed admission: take a core if one is free, else queue FIFO.
+    /// Returns the job back when it should start now (the caller schedules
+    /// its completion).
+    pub fn admit(&mut self, job: RefJob) -> Option<RefJob> {
+        self.jobs_submitted += 1;
+        if self.busy < self.cores {
+            self.busy += 1;
+            self.jobs_run += 1;
+            Some(job)
         } else {
-            p.queue.push_back(Job { duration, done: Box::new(done) });
-            let qlen = p.queue.len();
-            if qlen > p.max_queue {
-                p.max_queue = qlen;
+            self.queue.push_back(job);
+            let qlen = self.queue.len();
+            if qlen > self.max_queue {
+                self.max_queue = qlen;
+            }
+            None
+        }
+    }
+
+    /// Seed release: pop the next queued job (keeping the core) or free
+    /// the core. Preserves the seed's reserve-under-load behavior: the
+    /// queue keeps refilling even while `busy > cores` after a mid-flight
+    /// `reserve` lowered the count.
+    pub fn release_one(&mut self) -> Option<RefJob> {
+        self.jobs_completed += 1;
+        match self.queue.pop_front() {
+            Some(job) => {
+                self.jobs_run += 1;
+                Some(job)
+            }
+            None => {
+                self.busy -= 1;
+                None
             }
         }
-    }
-
-    fn finish_later(&self, sim: &mut Sim, duration: Time, done: JobFn) {
-        let pool = self.clone();
-        {
-            let mut p = pool.inner.borrow_mut();
-            p.busy_ns += duration;
-        }
-        sim.after(duration, move |sim| {
-            done(sim);
-            pool.release_one(sim);
-        });
-    }
-
-    fn release_one(&self, sim: &mut Sim) {
-        let next = {
-            let mut p = self.inner.borrow_mut();
-            match p.queue.pop_front() {
-                Some(job) => {
-                    p.jobs_run += 1;
-                    Some(job)
-                }
-                None => {
-                    p.busy -= 1;
-                    None
-                }
-            }
-        };
-        if let Some(job) = next {
-            self.finish_later(sim, job.duration, job.done);
-        }
-    }
-
-    /// Utilization in [0,1] over `elapsed` virtual time.
-    pub fn utilization(&self, elapsed: Time) -> f64 {
-        if elapsed == 0 {
-            return 0.0;
-        }
-        let p = self.inner.borrow();
-        p.busy_ns as f64 / (elapsed as f64 * p.cores as f64)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::cell::RefCell;
-    use std::rc::Rc;
-
-    #[test]
-    fn single_core_serializes() {
-        let mut sim = Sim::new();
-        let pool = CorePool::new(1);
-        let log = Rc::new(RefCell::new(Vec::new()));
-        for _ in 0..3 {
-            let log = log.clone();
-            pool.run(&mut sim, 10, move |s| log.borrow_mut().push(s.now()));
-        }
-        sim.run_to_completion();
-        assert_eq!(*log.borrow(), vec![10, 20, 30]);
-    }
-
-    #[test]
-    fn multi_core_runs_in_parallel() {
-        let mut sim = Sim::new();
-        let pool = CorePool::new(3);
-        let log = Rc::new(RefCell::new(Vec::new()));
-        for _ in 0..3 {
-            let log = log.clone();
-            pool.run(&mut sim, 10, move |s| log.borrow_mut().push(s.now()));
-        }
-        sim.run_to_completion();
-        assert_eq!(*log.borrow(), vec![10, 10, 10]);
-    }
-
-    #[test]
-    fn fifo_order_preserved() {
-        let mut sim = Sim::new();
-        let pool = CorePool::new(1);
-        let log = Rc::new(RefCell::new(Vec::new()));
-        for i in 0..5u32 {
-            let log = log.clone();
-            pool.run(&mut sim, 7, move |_| log.borrow_mut().push(i));
-        }
-        sim.run_to_completion();
-        assert_eq!(*log.borrow(), vec![0, 1, 2, 3, 4]);
-    }
-
-    #[test]
-    fn utilization_accounts_busy_time() {
-        let mut sim = Sim::new();
-        let pool = CorePool::new(2);
-        for _ in 0..4 {
-            pool.run(&mut sim, 50, |_| {});
-        }
-        sim.run_to_completion();
-        // 4 jobs × 50ns on 2 cores → 100ns wall, utilization 1.0.
-        assert_eq!(sim.now(), 100);
-        assert!((pool.utilization(100) - 1.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn reserve_removes_capacity() {
-        let mut sim = Sim::new();
-        let pool = CorePool::new(2);
-        pool.reserve(1);
-        let log = Rc::new(RefCell::new(Vec::new()));
-        for _ in 0..2 {
-            let log = log.clone();
-            pool.run(&mut sim, 10, move |s| log.borrow_mut().push(s.now()));
-        }
-        sim.run_to_completion();
-        assert_eq!(*log.borrow(), vec![10, 20]); // serialized on 1 core
-    }
-
-    #[test]
-    fn queue_telemetry() {
-        let mut sim = Sim::new();
-        let pool = CorePool::new(1);
-        for _ in 0..10 {
-            pool.run(&mut sim, 5, |_| {});
-        }
-        assert_eq!(pool.queued(), 9);
-        assert_eq!(pool.max_queue(), 9);
-        sim.run_to_completion();
-        assert_eq!(pool.queued(), 0);
-        assert_eq!(pool.jobs_run(), 10);
-        assert_eq!(pool.busy(), 0);
     }
 }

@@ -236,6 +236,45 @@ fn e11_netpath_table_identical_across_engines() {
 }
 
 // ---------------------------------------------------------------------------
+// Fabric differential: the per-core compute fabric degraded to the seed
+// semantics (CompatFifo: quantum = ∞, stealing off, affinity/classes
+// collapsed) must produce identical virtual-time experiment outputs to
+// the retained seed pool (ReferenceFifo) — the same technique the PR 3
+// engine swap used (the unit-level property test lives in simcore).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn e5_polling_table_identical_across_fabrics() {
+    use junctiond_repro::simcore::{set_default_fabric, FabricKind};
+    let run = || ex::ablation_polling_table(&[1, 16, 64], 5).to_markdown();
+    let prev = set_default_fabric(FabricKind::CompatFifo);
+    let compat = run();
+    set_default_fabric(FabricKind::ReferenceFifo);
+    let reference = run();
+    set_default_fabric(prev);
+    assert_eq!(compat, reference, "E5 outputs diverged between compat fabric and seed pool");
+}
+
+#[test]
+fn e11_netpath_table_identical_across_fabrics() {
+    use junctiond_repro::simcore::{set_default_fabric, FabricKind};
+    let rates = [1_000.0, 3_000.0];
+    let run = || {
+        let (t, points) = ex::netpath_table(2, 10, &rates, &rates, 200 * MILLIS, 7);
+        let details: Vec<(u64, u64, u64, u64)> =
+            points.iter().map(|p| (p.p50, p.p99, p.dropped, p.retries)).collect();
+        (t.to_markdown(), details)
+    };
+    let prev = set_default_fabric(FabricKind::CompatFifo);
+    let compat = run();
+    set_default_fabric(FabricKind::ReferenceFifo);
+    let reference = run();
+    set_default_fabric(prev);
+    assert_eq!(compat.0, reference.0, "E11 table diverged between compat fabric and seed pool");
+    assert_eq!(compat.1, reference.1, "E11 per-point results diverged between fabrics");
+}
+
+// ---------------------------------------------------------------------------
 // Experiment drivers smoke (small sizes)
 // ---------------------------------------------------------------------------
 
