@@ -1,0 +1,90 @@
+//! Bench E15: invocation tracing — per-hop blame decomposition of the
+//! tail. Both backends run a 150k-rps open loop of 20 µs bodies with
+//! span-per-invocation tracing on; that rate is past the kernel
+//! netpath's serial RX drain capacity but far below the 10-core
+//! fabric's compute capacity, so where each backend's p99 goes is the
+//! paper's argument in one table.
+//!
+//! Asserts the decomposition's accounting (shares sum to 100%; exemplar
+//! hop spans tile the root exactly and sum to the end-to-end latency)
+//! and its shape: the kernel backend's p99 is blamed mostly on the
+//! netpath + pre-exec scheduler stages, the bypass backend's on
+//! execution itself.
+
+mod common;
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::simcore::MILLIS;
+
+fn main() {
+    let duration = if common::quick() { 60 * MILLIS } else { 300 * MILLIS };
+
+    common::section("E15 — tail-latency blame decomposition", || {
+        let (table, points) = ex::tail_attribution_table(duration, 2);
+        println!("{}", table.to_markdown());
+
+        let mut checks = common::Checks::new();
+        let find = |b: Backend| points.iter().find(|p| p.backend == b).expect("point");
+        let c = find(Backend::Containerd);
+        let j = find(Backend::Junctiond);
+
+        // Accounting: each quantile's six hop shares sum to 100% ± 1%.
+        let sums_ok = points.iter().all(|p| {
+            let s50: f64 = p.report.p50.iter().sum();
+            let s99: f64 = p.report.p99.iter().sum();
+            (s50 - 1.0).abs() < 0.01 && (s99 - 1.0).abs() < 0.01
+        });
+        checks.check(
+            "blame shares sum to 100% at p50 and p99, both backends",
+            sums_ok,
+            format!("{} rows", points.len() * 2),
+        );
+
+        // Shape: kernel p99 is netpath/scheduler queueing, bypass isn't.
+        let c_net = c.report.p99[1] + c.report.p99[2];
+        let j_net = j.report.p99[1] + j.report.p99[2];
+        checks.check(
+            "kernel p99 blame is dominated by nic_rx + pre_exec",
+            c_net > 0.5,
+            format!("{:.1}%", c_net * 100.0),
+        );
+        checks.check(
+            "bypass p99 carries less net/sched blame than kernel",
+            j_net < c_net,
+            format!("{:.1}% vs {:.1}%", j_net * 100.0, c_net * 100.0),
+        );
+        let j_max = j.report.p99.iter().cloned().fold(0.0f64, f64::max);
+        checks.check(
+            "bypass p99 blame is execution-dominated",
+            (j.report.p99[3] - j_max).abs() < 1e-12,
+            format!("exec {:.1}% of e2e", j.report.p99[3] * 100.0),
+        );
+
+        // Exemplars: the retained slowest traces are internally exact —
+        // hop spans tile [submit, done] with no gaps and sum to e2e.
+        let tiled = points.iter().all(|p| {
+            p.exemplars.iter().all(|tr| {
+                let root = &tr.spans[0];
+                let kids = tr.root_children();
+                let mut cursor = root.start;
+                let mut sum = 0;
+                for k in &kids {
+                    if k.start != cursor {
+                        return false;
+                    }
+                    cursor = k.end;
+                    sum += k.duration();
+                }
+                kids.len() == 5 && cursor == root.end && sum == tr.e2e
+            })
+        });
+        let n_ex: usize = points.iter().map(|p| p.exemplars.len()).sum();
+        checks.check(
+            "exemplar hop spans tile the root and sum to e2e",
+            tiled && n_ex > 0,
+            format!("{n_ex} exemplars"),
+        );
+        checks.finish();
+    });
+}

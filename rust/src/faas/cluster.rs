@@ -20,8 +20,9 @@ use crate::netpath::{NicQueue, NicStats, Packet, TxStats};
 use crate::oskernel::KernelCosts;
 use crate::rpc::Message;
 use crate::simcore::{Rng, Sim, Time, MILLIS, SECONDS};
+use crate::telemetry::{Hop, Tracer};
 
-use super::pipeline::{FaasSim, RequestTiming};
+use super::pipeline::{trace_finish, FaasSim, RequestTiming};
 use super::registry::FunctionSpec;
 
 /// Scaling policy knobs for the controller (per function).
@@ -78,6 +79,10 @@ struct FrontendRx {
     bc: BypassCosts,
     backend: Backend,
     platform: Rc<PlatformConfig>,
+    /// Shared cluster tracer. The front end owns trace completion: a
+    /// worker's `done` fires before the return wire + frontend RX, which
+    /// belong to the trace's tx hop.
+    tracer: Tracer,
 }
 
 type RespFn = Box<dyn FnOnce(&mut Sim, RequestTiming)>;
@@ -95,12 +100,19 @@ fn frontend_rx_ingress(
         if !f.nic.is_full() {
             let (t, done) = resp.take().expect("response consumed before accept");
             let bytes = Message::response_frame_size(f.platform.rpc_payload_bytes as usize);
+            // The frontend ring wait closes the trace's tx hop; the span
+            // and the trace itself complete at delivery.
+            let ring_trace = (t.seq != 0).then(|| (f.tracer.clone(), sim.now()));
             let kick = f.nic.enqueue(Packet {
                 bytes,
                 enqueued_at: sim.now(),
                 deliver: Box::new(move |sim| {
                     let mut t = t;
                     t.done = sim.now();
+                    if let Some((tracer, enq)) = ring_trace {
+                        tracer.event(t.seq, Hop::Tx, "front.rx", "frontend_ring", enq, t.done);
+                        trace_finish(&tracer, &t);
+                    }
                     done(sim, t);
                 }),
             });
@@ -122,6 +134,11 @@ fn frontend_rx_ingress(
         None => {
             let backoff = front.borrow().platform.nic_retry_backoff_ns;
             let (t, done) = resp.take().expect("response consumed before re-offer");
+            if t.seq != 0 {
+                let now = sim.now();
+                let tr = front.borrow().tracer.clone();
+                tr.event(t.seq, Hop::Tx, "front.backoff", "ring_full", now, now + backoff);
+            }
             let front2 = front.clone();
             sim.after(backoff, move |sim| frontend_rx_ingress(front2, sim, t, done));
         }
@@ -141,7 +158,7 @@ fn frontend_rx_drain(front: Rc<RefCell<FrontendRx>>, sim: &mut Sim) {
             Backend::Containerd => 1,
             Backend::Junctiond => f.platform.nic_batch_max as usize,
         };
-        let pkts = f.nic.pop_burst(burst_max);
+        let pkts = f.nic.pop_burst(burst_max, sim.now());
         let copy_per_kb = f.platform.nic_copy_ns_per_kb;
         let mut deliveries: Vec<(Time, Box<dyn FnOnce(&mut Sim)>)> =
             Vec::with_capacity(pkts.len());
@@ -218,6 +235,8 @@ pub struct Cluster {
     pub tier_scale_ups: [u64; 3],
     /// The front end's own RX NIC for the response direction.
     front_rx: Rc<RefCell<FrontendRx>>,
+    /// Shared invocation tracer (disabled until [`Cluster::enable_tracing`]).
+    tracer: Tracer,
 }
 
 impl Cluster {
@@ -273,6 +292,7 @@ impl Cluster {
             bc: BypassCosts::new(platform.clone(), Rng::new(seed ^ 0xBEEF)),
             backend,
             platform: platform.clone(),
+            tracer: Tracer::new(),
         }));
         Cluster {
             platform,
@@ -292,11 +312,30 @@ impl Cluster {
             zero_redeploys: 0,
             tier_scale_ups: [0; 3],
             front_rx,
+            tracer: Tracer::new(),
         }
     }
 
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// Turn on span-per-invocation tracing across the whole cluster: every
+    /// worker shares one tracer (one seq space), workers leave traces open
+    /// at their local `done`, and the front end closes them after the
+    /// return wire + its own RX ring. Returns the shared handle.
+    pub fn enable_tracing(&mut self, k: usize) -> Tracer {
+        self.tracer.enable(k);
+        self.front_rx.borrow_mut().tracer = self.tracer.clone();
+        for w in &self.workers {
+            w.sim_node.set_tracer(self.tracer.clone(), false);
+        }
+        self.tracer.clone()
+    }
+
+    /// The cluster's tracer handle (disabled unless `enable_tracing` ran).
+    pub fn tracer(&self) -> Tracer {
+        self.tracer.clone()
     }
 
     fn pick_worker(&mut self, _function: &str) -> usize {
@@ -503,7 +542,9 @@ impl Cluster {
             last_active.borrow_mut().insert(fname.clone(), sim.now());
             if t.dropped {
                 // Nothing crossed back over the wire: the request died at
-                // a worker ring (RX tail drop or TX stall budget).
+                // a worker ring (RX tail drop or TX stall budget). Close
+                // (and discard) its trace here — the frontend never sees it.
+                trace_finish(&front.borrow().tracer, &t);
                 done(sim, t);
             } else {
                 // The response frame lands in the front end's RX NIC and
@@ -641,9 +682,13 @@ impl Cluster {
             function_compute_ns: self.compute_ns,
             instance_concurrency: 4,
         };
+        let sim_node = FaasSim::new(&cfg, self.platform.clone());
+        if self.tracer.is_enabled() {
+            sim_node.set_tracer(self.tracer.clone(), false);
+        }
         self.workers.push(Worker {
             id: i as u32,
-            sim_node: FaasSim::new(&cfg, self.platform.clone()),
+            sim_node,
             hosted: Vec::new(),
             in_flight: Rc::new(RefCell::new(0)),
         });
@@ -857,6 +902,64 @@ mod tests {
             if backend == Backend::Containerd {
                 assert!(rx.rx_dropped > 0, "320k rps must overflow the kernel RX rings");
                 assert!(r.dropped > 0, "RX give-ups must surface as dropped requests");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_spans_tile_and_sum_under_overload() {
+        use crate::workload::OpenLoop;
+        // Cluster-wide tracing under overload on both backends: all
+        // workers share one sequence space, the front end closes traces
+        // after the return wire (drops close at the drop point), and
+        // every retained exemplar's hop spans tile the root exactly —
+        // no gaps, no overlap, even with retransmits and backpressure.
+        for (backend, rate) in [(Backend::Containerd, 320_000.0), (Backend::Junctiond, 64_000.0)]
+        {
+            let mut sim = Sim::new();
+            let mut c = Cluster::new(backend, 2, 10, 11, 100_000);
+            c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+            c.scale_up(&mut sim, "aes");
+            sim.run_until(SECONDS);
+            let tracer = c.enable_tracing(8);
+            let c = Rc::new(RefCell::new(c));
+            let r = OpenLoop::new("aes", rate, 150 * MILLIS, 7).run_on(&mut sim, &c);
+            assert!(r.completed > 0, "{backend:?}: no completions under load");
+            let cl = c.borrow();
+            assert_eq!(
+                tracer.completions(),
+                cl.total_completed(),
+                "{backend:?}: every completed request must close exactly one trace"
+            );
+            let exemplars = tracer.exemplars();
+            assert_eq!(exemplars.len(), 8, "{backend:?}: tail reservoir should be full");
+            for tr in &exemplars {
+                let root = &tr.spans[0];
+                assert_eq!(root.duration(), tr.e2e, "{backend:?}: root must span e2e");
+                let kids = tr.root_children();
+                assert_eq!(kids.len(), 5, "{backend:?}: five hop spans under the root");
+                let mut cursor = root.start;
+                let mut sum = 0;
+                for k in &kids {
+                    assert_eq!(k.start, cursor, "{backend:?}: hop spans must tile");
+                    cursor = k.end;
+                    sum += k.duration();
+                }
+                assert_eq!(cursor, root.end, "{backend:?}: hop spans must reach done");
+                assert_eq!(sum, tr.e2e, "{backend:?}: hop durations must sum to e2e");
+                for s in &tr.spans[7..] {
+                    let p = &tr.spans[s.parent.unwrap() as usize];
+                    assert!(
+                        s.start >= p.start && s.end <= p.end,
+                        "{backend:?}: event {} [{}, {}] escapes parent {} [{}, {}]",
+                        s.name,
+                        s.start,
+                        s.end,
+                        p.name,
+                        p.start,
+                        p.end
+                    );
+                }
             }
         }
     }

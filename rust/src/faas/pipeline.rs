@@ -38,12 +38,14 @@ use crate::netpath::{NicQueue, NicStats, Packet, TxQueue, TxStats};
 use crate::oskernel::KernelCosts;
 use crate::rpc::Message;
 use crate::simcore::{
-    ComputeFabric, FabricConfig, FabricStats, JobClass, Rng, Sim, Time, TimerHandle, MILLIS,
+    ComputeFabric, FabricConfig, FabricStats, JobClass, Rng, Sim, SliceObs, SliceRecord, Time,
+    TimerHandle, MILLIS,
 };
 use crate::snapshot::{
     ArrivalEstimator, PoolConfig, PoolHandle, PoolStats, PrewarmPolicy, ProvisionTier, SlotId,
     SnapshotStore, TierCosts, WarmPool,
 };
+use crate::telemetry::{Hop, HopTimes, Tracer};
 
 use super::{CacheOutcome, FunctionSpec, Gate, Gateway, Provider, Registry, ReplicaMeta};
 
@@ -79,6 +81,8 @@ pub struct RequestTiming {
     /// (`tx_retries` > 0 distinguishes the latter); only `submit`,
     /// `nic_in`, `retries`, `tx_retries` and `done` are meaningful then.
     pub dropped: bool,
+    /// Trace sequence number assigned at submit; 0 when tracing is off.
+    pub seq: u64,
 }
 
 impl RequestTiming {
@@ -205,15 +209,29 @@ struct World {
     payload_bytes: usize,
     /// Requests abandoned after exhausting NIC retransmits.
     pub dropped: u64,
+    /// Span-per-invocation tracer (disabled by default: every call is a
+    /// cheap early return and `seq` stays 0, so the traced pipeline is
+    /// byte-identical to the untraced one).
+    tracer: Tracer,
+    /// Whether this sim closes traces when `done` fires. A cluster shares
+    /// one tracer across workers and closes traces at its frontend
+    /// instead (the worker-local `done` fires before the return wire and
+    /// frontend RX, which belong to the trace's tx hop).
+    trace_finalize: bool,
 }
 
 impl World {
     /// Wakeup latency + in-flight accounting for a service instance on the
-    /// junction path; no-op for containerd.
-    fn service_wakeup(&mut self, inst: Option<InstanceId>) -> Time {
+    /// junction path; no-op for containerd. Also returns the grant
+    /// outcome's stable cause tag (`"none"` off the junction path) for
+    /// the `sched.wakeup` trace span.
+    fn service_wakeup(&mut self, inst: Option<InstanceId>) -> (Time, &'static str) {
         match (self.backend, inst) {
-            (Backend::Junctiond, Some(id)) => self.jd.scheduler.packet_arrival(id).latency(),
-            _ => 0,
+            (Backend::Junctiond, Some(id)) => {
+                let out = self.jd.scheduler.packet_arrival(id);
+                (out.latency(), out.kind())
+            }
+            _ => (0, "none"),
         }
     }
 
@@ -454,6 +472,8 @@ impl FaasSim {
             bc_nic: BypassCosts::new(platform.clone(), rng.fork()),
             payload_bytes: platform.rpc_payload_bytes as usize,
             dropped: 0,
+            tracer: Tracer::new(),
+            trace_finalize: true,
             platform,
         };
         FaasSim { w: Rc::new(RefCell::new(world)) }
@@ -945,10 +965,10 @@ impl FaasSim {
         function: &str,
         done: F,
     ) {
-        let timing = RequestTiming { submit: sim.now(), ..Default::default() };
+        let mut timing = RequestTiming { submit: sim.now(), ..Default::default() };
         let this = self.clone();
         let name = function.to_string();
-        let wire = {
+        let (wire, finalizer) = {
             let mut w = self.w.borrow_mut();
             let now = sim.now();
             w.estimators
@@ -958,10 +978,48 @@ impl FaasSim {
             if let Some(f) = w.functions.get_mut(&name) {
                 f.outstanding += 1;
             }
-            w.platform.wire_ns
+            timing.seq = w.tracer.begin(&name);
+            let finalizer =
+                if timing.seq != 0 && w.trace_finalize { Some(w.tracer.clone()) } else { None };
+            (w.platform.wire_ns, finalizer)
+        };
+        // Single-node runs close the trace when `done` fires at the
+        // client; a cluster's workers leave it open for the frontend.
+        let done: DoneFn = match finalizer {
+            Some(tracer) => Box::new(move |sim: &mut Sim, t: RequestTiming| {
+                trace_finish(&tracer, &t);
+                done(sim, t);
+            }),
+            None => Box::new(done),
         };
         // client → worker wire hop, then the worker NIC RX ring.
-        sim.after(wire, move |sim| nic_ingress(this, sim, name, timing, 0, Box::new(done)));
+        sim.after(wire, move |sim| nic_ingress(this, sim, name, timing, 0, done));
+    }
+
+    /// Turn on span-per-invocation tracing, keeping the `k` slowest
+    /// complete traces as tail exemplars. Returns the shared tracer
+    /// handle (blame reports, exemplars, Chrome export). Tracing only
+    /// reads the virtual clock — it never schedules events or draws
+    /// randomness, so an enabled run replays the disabled run's timings
+    /// exactly.
+    pub fn enable_tracing(&self, k: usize) -> Tracer {
+        let w = self.w.borrow();
+        w.tracer.enable(k);
+        w.tracer.clone()
+    }
+
+    /// The sim's tracer handle (disabled unless `enable_tracing` ran).
+    pub fn tracer(&self) -> Tracer {
+        self.w.borrow().tracer.clone()
+    }
+
+    /// Cluster wiring: share `tracer` across workers. With `finalize`
+    /// false the worker-local `done` leaves traces open and the cluster
+    /// frontend closes them after the return wire + frontend RX.
+    pub(crate) fn set_tracer(&self, tracer: Tracer, finalize: bool) {
+        let mut w = self.w.borrow_mut();
+        w.tracer = tracer;
+        w.trace_finalize = finalize;
     }
 
     pub fn completed(&self) -> u64 {
@@ -1094,6 +1152,42 @@ pub struct CostTelemetry {
 
 type DoneFn = Box<dyn FnOnce(&mut Sim, RequestTiming)>;
 
+/// Close a finished request's trace: fold its `RequestTiming` boundaries
+/// into the tracer's hop view. No-op for untraced requests (`seq == 0`).
+pub(crate) fn trace_finish(tracer: &Tracer, t: &RequestTiming) {
+    if t.seq == 0 {
+        return;
+    }
+    let ht = HopTimes {
+        submit: t.submit,
+        nic_in: t.nic_in,
+        gateway_in: t.gateway_in,
+        exec_start: t.exec_start,
+        exec_end: t.exec_end,
+        tx_in: t.tx_in,
+        done: t.done,
+    };
+    tracer.finish(t.seq, ht, t.dropped);
+}
+
+/// Record a closed sub-span on a traced request. The borrow is taken only
+/// when the request carries a live trace, so the untraced hot path pays a
+/// single integer compare.
+fn trace_event(
+    fs: &FaasSim,
+    seq: u64,
+    hop: Hop,
+    name: &'static str,
+    cause: &'static str,
+    start: Time,
+    end: Time,
+) {
+    if seq == 0 {
+        return;
+    }
+    fs.w.borrow().tracer.event(seq, hop, name, cause, start, end);
+}
+
 /// Run one CPU segment on the fabric. Affinity is resolved here, at
 /// dispatch time (the grant may have grown, shrunk, or been preempted
 /// during the preceding wakeup latency): a junction instance's segment
@@ -1107,15 +1201,36 @@ fn run_segment<F: FnOnce(&mut Sim) + 'static>(
     cpu: Time,
     done: F,
 ) {
-    let (cores, core) = {
+    run_segment_traced(fs, sim, inst, cpu, 0, Hop::Exec, done)
+}
+
+/// [`run_segment`] with per-slice tracing: each fabric slice the segment
+/// runs (including preemptions and quantum-edge requeues) lands as a
+/// `fabric.slice` sub-span under `hop`. The observer only records — it
+/// cannot perturb the fabric's scheduling decisions.
+fn run_segment_traced<F: FnOnce(&mut Sim) + 'static>(
+    fs: &FaasSim,
+    sim: &mut Sim,
+    inst: Option<InstanceId>,
+    cpu: Time,
+    seq: u64,
+    hop: Hop,
+    done: F,
+) {
+    let (cores, core, obs) = {
         let mut w = fs.w.borrow_mut();
         let core = w.segment_core(inst);
-        (w.cores.clone(), core)
+        let obs: Option<SliceObs> = if seq != 0 && w.tracer.is_enabled() {
+            let tracer = w.tracer.clone();
+            Some(Rc::new(move |r: SliceRecord| {
+                tracer.event(seq, hop, "fabric.slice", r.outcome.as_str(), r.start, r.end);
+            }))
+        } else {
+            None
+        };
+        (w.cores.clone(), core, obs)
     };
-    match core {
-        Some(c) => cores.run_on(sim, c, JobClass::Normal, cpu, done),
-        None => cores.run(sim, cpu, done),
-    }
+    cores.run_observed(sim, core, JobClass::Normal, cpu, obs, done)
 }
 
 /// Charge one burst of kernel NIC softirq CPU to its IRQ-affinity core
@@ -1183,10 +1298,22 @@ fn nic_ingress(
             let fs2 = fs.clone();
             let name2 = name.clone();
             let slot = done_slot.clone();
+            // Ring-wait trace span: enqueue instant → drain delivery, tagged
+            // with how the backend moves frames off the ring.
+            let ring_trace = (t.seq != 0).then(|| {
+                let cause = match w.backend {
+                    Backend::Containerd => "irq_softirq",
+                    Backend::Junctiond => "poll_burst",
+                };
+                (w.tracer.clone(), sim.now(), cause)
+            });
             let kick = w.nic.enqueue(Packet {
                 bytes,
                 enqueued_at: sim.now(),
                 deliver: Box::new(move |sim| {
+                    if let Some((tracer, enq, cause)) = ring_trace {
+                        tracer.event(t.seq, Hop::NicRx, "rx.ring", cause, enq, sim.now());
+                    }
                     let done =
                         slot.borrow_mut().take().expect("delivery raced the retransmit timer");
                     stage_gateway(fs2, sim, name2, t, done);
@@ -1225,6 +1352,8 @@ fn nic_ingress(
         Decision::Retry => {
             // Tail drop: the armed timer fires the retransmission at
             // `now + backoff`.
+            let now = sim.now();
+            trace_event(&fs, t.seq, Hop::NicRx, "rx.backoff", "rx_tail_drop", now, now + backoff);
         }
         Decision::GiveUp => {
             sim.cancel(retrans);
@@ -1253,7 +1382,7 @@ fn nic_drain(fs: FaasSim, sim: &mut Sim) {
             Backend::Containerd => 1,
             Backend::Junctiond => w.platform.nic_batch_max as usize,
         };
-        let pkts = w.nic.pop_burst(burst_max);
+        let pkts = w.nic.pop_burst(burst_max, sim.now());
         let copy_per_kb = w.platform.nic_copy_ns_per_kb;
         let mut deliveries: Vec<(Time, Box<dyn FnOnce(&mut Sim)>)> =
             Vec::with_capacity(pkts.len());
@@ -1301,10 +1430,10 @@ fn nic_drain(fs: FaasSim, sim: &mut Sim) {
 /// Gateway pass: auth + route + forward to the provider.
 fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming, done: DoneFn) {
     t.gateway_in = sim.now();
-    let (lat, cpu, gw_inst) = {
+    let (lat, cpu, gw_inst, wake) = {
         let mut w = fs.w.borrow_mut();
         let gw_inst = w.gw_inst;
-        let lat = w.service_wakeup(gw_inst);
+        let (lat, wake) = w.service_wakeup(gw_inst);
         let p = w.platform.clone();
         let n_replicas = w.functions.get(&name).map(|f| f.meta.replicas).unwrap_or(0);
         w.gateway.authenticate("token");
@@ -1328,11 +1457,14 @@ fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming,
             }
         };
         let lat = lat + w.bc_gw.sched_tail_delay();
-        (lat, cpu, gw_inst)
+        (lat, cpu, gw_inst, wake)
     };
+    if lat > 0 && wake != "none" {
+        trace_event(&fs, t.seq, Hop::PreExec, "sched.wakeup", wake, sim.now(), sim.now() + lat);
+    }
     sim.after(lat, move |sim| {
         let fs2 = fs.clone();
-        run_segment(&fs, sim, gw_inst, cpu, move |sim| {
+        run_segment_traced(&fs, sim, gw_inst, cpu, t.seq, Hop::PreExec, move |sim| {
             fs2.w.borrow_mut().service_done(gw_inst);
             stage_provider(fs2, sim, name, t, done);
         });
@@ -1341,10 +1473,10 @@ fn stage_gateway(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming,
 
 /// Provider pass: resolve (cache or backend state query) + forward.
 fn stage_provider(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
-    let (lat, query_lat, cpu, prov_inst) = {
+    let (lat, query_lat, cpu, prov_inst, wake) = {
         let mut w = fs.w.borrow_mut();
         let prov_inst = w.prov_inst;
-        let lat = w.service_wakeup(prov_inst);
+        let (lat, wake) = w.service_wakeup(prov_inst);
         let p = w.platform.clone();
         // §4 metadata cache: a miss pays the backend state query.
         let query_lat = match w.provider.resolve(&name) {
@@ -1373,11 +1505,14 @@ fn stage_provider(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
             }
         };
         let lat = lat + w.bc_prov.sched_tail_delay();
-        (lat, query_lat, cpu, prov_inst)
+        (lat, query_lat, cpu, prov_inst, wake)
     };
+    if lat > 0 && wake != "none" {
+        trace_event(&fs, t.seq, Hop::PreExec, "sched.wakeup", wake, sim.now(), sim.now() + lat);
+    }
     sim.after(lat + query_lat, move |sim| {
         let fs2 = fs.clone();
-        run_segment(&fs, sim, prov_inst, cpu, move |sim| {
+        run_segment_traced(&fs, sim, prov_inst, cpu, t.seq, Hop::PreExec, move |sim| {
             fs2.w.borrow_mut().service_done(prov_inst);
             stage_function(fs2, sim, name, t, done);
         });
@@ -1400,10 +1535,21 @@ fn stage_function(fs: FaasSim, sim: &mut Sim, name: String, mut t: RequestTiming
     t.tier = tier;
     // Cold start: requests arriving early wait for instance readiness.
     let wait = ready_at.saturating_sub(sim.now());
+    if wait > 0 {
+        let now = sim.now();
+        trace_event(&fs, t.seq, Hop::PreExec, "replica.ready", "provision", now, now + wait);
+    }
     let gate2 = gate.clone();
     sim.after(wait, move |sim| {
+        let gate_enter = sim.now();
+        let fs2 = fs.clone();
         gate2.acquire(sim, move |sim| {
-            exec_segment(fs, sim, name, handle_idx, gate, t, done);
+            // Concurrency-gate queueing: admitted later than offered.
+            let now = sim.now();
+            if now > gate_enter {
+                trace_event(&fs2, t.seq, Hop::PreExec, "gate.wait", "concurrency", gate_enter, now);
+            }
+            exec_segment(fs2, sim, name, handle_idx, gate, t, done);
         });
     });
 }
@@ -1420,7 +1566,7 @@ fn exec_segment(
     done: DoneFn,
 ) {
     t.exec_start = sim.now();
-    let (lat, cpu, inst) = {
+    let (lat, cpu, inst, wake) = {
         let mut w = fs.w.borrow_mut();
         let p = w.platform.clone();
         let nsys = p.function_syscalls as u32;
@@ -1443,25 +1589,28 @@ fn exec_segment(
                     + w.kc_fn.segment_interference()
                     + w.kc_fn.send_msg()
                     + w.kc_fn.veth_hop();
-                (0, cpu, None)
+                (0, cpu, None, "none")
             }
             Backend::Junctiond => {
                 let id = match w.functions[&name].replicas[replica].handle {
                     ReplicaHandle::Junction(i) => i,
                     _ => unreachable!(),
                 };
-                let lat = w.jd.scheduler.packet_arrival(id).latency();
+                let out = w.jd.scheduler.packet_arrival(id);
                 let cpu = w.bc_fn.recv_msg()
                     + w.bc_fn.syscalls(nsys)
                     + compute
                     + w.bc_fn.send_msg();
-                (lat, cpu, Some(id))
+                (out.latency(), cpu, Some(id), out.kind())
             }
         }
     };
+    if lat > 0 && wake != "none" {
+        trace_event(&fs, t.seq, Hop::Exec, "sched.wakeup", wake, sim.now(), sim.now() + lat);
+    }
     sim.after(lat, move |sim| {
         let fs2 = fs.clone();
-        run_segment(&fs, sim, inst, cpu, move |sim| {
+        run_segment_traced(&fs, sim, inst, cpu, t.seq, Hop::Exec, move |sim| {
             t.exec_end = sim.now();
             {
                 let mut w = fs2.w.borrow_mut();
@@ -1479,10 +1628,10 @@ fn exec_segment(
 /// worker's bounded TX ring ([`tx_ingress`]/[`tx_drain`]) and the wire
 /// back to the client.
 fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, done: DoneFn) {
-    let (lat_p, cpu_p, prov_inst) = {
+    let (lat_p, cpu_p, prov_inst, wake_p) = {
         let mut w = fs.w.borrow_mut();
         let prov_inst = w.prov_inst;
-        let lat = w.service_wakeup(prov_inst);
+        let (lat, wake) = w.service_wakeup(prov_inst);
         let p = w.platform.clone();
         let cpu = match w.backend {
             Backend::Containerd => {
@@ -1495,16 +1644,19 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
             Backend::Junctiond => w.bc_prov.recv_msg() + p.rpc_serde_ns + w.bc_prov.send_msg(),
         };
         let lat = lat + w.bc_prov.sched_tail_delay();
-        (lat, cpu, prov_inst)
+        (lat, cpu, prov_inst, wake)
     };
+    if lat_p > 0 && wake_p != "none" {
+        trace_event(&fs, t.seq, Hop::Resp, "sched.wakeup", wake_p, sim.now(), sim.now() + lat_p);
+    }
     sim.after(lat_p, move |sim| {
         let fs2 = fs.clone();
-        run_segment(&fs, sim, prov_inst, cpu_p, move |sim| {
-            let (lat_g, cpu_g, gw_inst) = {
+        run_segment_traced(&fs, sim, prov_inst, cpu_p, t.seq, Hop::Resp, move |sim| {
+            let (lat_g, cpu_g, gw_inst, wake_g) = {
                 let mut w = fs2.w.borrow_mut();
                 w.service_done(prov_inst);
                 let gw_inst = w.gw_inst;
-                let lat = w.service_wakeup(gw_inst);
+                let (lat, wake) = w.service_wakeup(gw_inst);
                 let p = w.platform.clone();
                 let cpu = match w.backend {
                     Backend::Containerd => {
@@ -1524,12 +1676,16 @@ fn stage_response(fs: FaasSim, sim: &mut Sim, name: String, t: RequestTiming, do
                     }
                 };
                 let lat = lat + w.bc_gw.sched_tail_delay();
-                (lat, cpu, gw_inst)
+                (lat, cpu, gw_inst, wake)
             };
+            if lat_g > 0 && wake_g != "none" {
+                let now = sim.now();
+                trace_event(&fs2, t.seq, Hop::Resp, "sched.wakeup", wake_g, now, now + lat_g);
+            }
             let fs3 = fs2.clone();
             sim.after(lat_g, move |sim| {
                 let fs4 = fs3.clone();
-                run_segment(&fs3, sim, gw_inst, cpu_g, move |sim| {
+                run_segment_traced(&fs3, sim, gw_inst, cpu_g, t.seq, Hop::Resp, move |sim| {
                     fs4.w.borrow_mut().service_done(gw_inst);
                     tx_ingress(fs4, sim, name, t, 0, done);
                 });
@@ -1572,10 +1728,22 @@ fn tx_ingress(
             let name2 = name.clone();
             let done = done_opt.take().expect("done consumed before accept");
             let wire = w.platform.wire_ns;
+            // Ring-wait trace span: enqueue instant → flush, tagged with
+            // how the backend moves frames off the TX ring.
+            let ring_trace = (t.seq != 0).then(|| {
+                let cause = match w.backend {
+                    Backend::Containerd => "qdisc",
+                    Backend::Junctiond => "poll_burst",
+                };
+                (w.tracer.clone(), sim.now(), cause)
+            });
             let kick = w.tx.enqueue(Packet {
                 bytes,
                 enqueued_at: sim.now(),
                 deliver: Box::new(move |sim| {
+                    if let Some((tracer, enq, cause)) = ring_trace {
+                        tracer.event(t.seq, Hop::Tx, "tx.ring", cause, enq, sim.now());
+                    }
                     // The frame left the worker NIC: the invocation is
                     // served; only the wire hop remains.
                     {
@@ -1619,6 +1787,8 @@ fn tx_ingress(
         }
         Decision::Hold => {
             let backoff = fs.w.borrow().platform.nic_tx_retry_backoff_ns;
+            let now = sim.now();
+            trace_event(&fs, t.seq, Hop::Tx, "tx.backoff", "tx_backpressure", now, now + backoff);
             let done = done_opt.take().expect("done consumed before hold");
             let fs2 = fs.clone();
             sim.after(backoff, move |sim| tx_ingress(fs2, sim, name, t, attempt + 1, done));
@@ -1650,7 +1820,7 @@ fn tx_drain(fs: FaasSim, sim: &mut Sim) {
             Backend::Containerd => 1,
             Backend::Junctiond => w.platform.nic_tx_batch_max as usize,
         };
-        let pkts = w.tx.pop_burst(burst_max);
+        let pkts = w.tx.pop_burst(burst_max, sim.now());
         let copy_per_kb = w.platform.nic_copy_ns_per_kb;
         let mut deliveries: Vec<(Time, Box<dyn FnOnce(&mut Sim)>)> =
             Vec::with_capacity(pkts.len());
@@ -1946,6 +2116,101 @@ mod tests {
                     "{backend:?}: per-hop breakdown must cover the whole request"
                 );
             }
+        }
+    }
+
+    // ---- invocation tracing ---------------------------------------------
+
+    /// `run_n` with tracing enabled (reservoir of 8 tail exemplars).
+    fn run_n_traced(backend: Backend, n: usize) -> (Vec<RequestTiming>, Tracer) {
+        let mut sim = Sim::new();
+        let platform = Rc::new(PlatformConfig::default());
+        let fs = FaasSim::new(&cfg(backend), platform);
+        let tracer = fs.enable_tracing(8);
+        fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        sim.run_until(2 * crate::simcore::SECONDS);
+        let out = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..n {
+            let out2 = out.clone();
+            fs.submit(&mut sim, "aes", move |_, t| out2.borrow_mut().push(t));
+        }
+        sim.run_to_completion();
+        (Rc::try_unwrap(out).ok().unwrap().into_inner(), tracer)
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_pipeline() {
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let base = run_n(backend, 20);
+            let (traced, tracer) = run_n_traced(backend, 20);
+            assert_eq!(base.len(), traced.len());
+            for (a, b) in base.iter().zip(&traced) {
+                assert_eq!(a.submit, b.submit, "{backend:?}");
+                assert_eq!(a.nic_in, b.nic_in, "{backend:?}");
+                assert_eq!(a.gateway_in, b.gateway_in, "{backend:?}");
+                assert_eq!(a.exec_start, b.exec_start, "{backend:?}");
+                assert_eq!(a.exec_end, b.exec_end, "{backend:?}");
+                assert_eq!(a.tx_in, b.tx_in, "{backend:?}");
+                assert_eq!(a.done, b.done, "{backend:?}: tracing must not move completions");
+                assert_eq!(a.retries, b.retries, "{backend:?}");
+                assert_eq!(a.tx_retries, b.tx_retries, "{backend:?}");
+                assert_eq!(a.dropped, b.dropped, "{backend:?}");
+                assert_eq!(a.seq, 0, "untraced runs never assign seqs");
+                assert!(b.seq != 0, "traced runs tag every request");
+            }
+            assert_eq!(tracer.completions(), 20, "{backend:?}");
+        }
+    }
+
+    #[test]
+    fn trace_trees_tile_and_sum_to_e2e() {
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let (timings, tracer) = run_n_traced(backend, 30);
+            let by_seq: BTreeMap<u64, RequestTiming> =
+                timings.iter().map(|t| (t.seq, *t)).collect();
+            let exemplars = tracer.exemplars();
+            assert_eq!(exemplars.len(), 8, "{backend:?}: the reservoir fills to K");
+            for tr in &exemplars {
+                let t = by_seq[&tr.seq];
+                assert_eq!(tr.e2e, t.e2e(), "{backend:?}");
+                let root = &tr.spans[0];
+                assert_eq!(root.start, t.submit);
+                assert_eq!(root.end, t.done);
+                let kids = tr.root_children();
+                assert_eq!(kids.len(), 5, "{backend:?}");
+                assert_eq!(kids[0].start, root.start);
+                for pair in kids.windows(2) {
+                    assert_eq!(pair[0].end, pair[1].start, "{backend:?}: children must tile");
+                }
+                assert_eq!(kids.last().unwrap().end, root.end);
+                let sum: Time = kids.iter().map(|s| s.duration()).sum();
+                assert_eq!(sum, tr.e2e, "{backend:?}: hop spans must sum to e2e");
+                // Every recorded sub-span nests inside its parent hop.
+                for s in &tr.spans[7..] {
+                    let parent = &tr.spans[s.parent.unwrap() as usize];
+                    assert!(
+                        s.start >= parent.start && s.end <= parent.end,
+                        "{backend:?}: {} [{},{}] escapes {} [{},{}]",
+                        s.name,
+                        s.start,
+                        s.end,
+                        parent.name,
+                        parent.start,
+                        parent.end
+                    );
+                }
+                // The exec window's fabric slices were observed.
+                assert!(
+                    tr.spans.iter().any(|s| s.name == "fabric.slice"),
+                    "{backend:?}: exec slices must be recorded"
+                );
+            }
+            let r = tracer.blame_report();
+            assert_eq!(r.count, 30, "{backend:?}");
+            let sum50: f64 = r.p50.iter().sum();
+            let sum99: f64 = r.p99.iter().sum();
+            assert!((sum50 - 1.0).abs() < 1e-9, "{backend:?}: p50 shares sum {sum50}");
+            assert!((sum99 - 1.0).abs() < 1e-9, "{backend:?}: p99 shares sum {sum99}");
         }
     }
 

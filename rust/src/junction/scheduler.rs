@@ -45,6 +45,16 @@ impl GrantOutcome {
             | GrantOutcome::Contended { latency } => *latency,
         }
     }
+
+    /// Stable cause tag for tracing (`sched.wakeup` span cause).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            GrantOutcome::Warm { .. } => "warm",
+            GrantOutcome::Granted { .. } => "granted",
+            GrantOutcome::Preempted { .. } => "preempted",
+            GrantOutcome::Contended { .. } => "contended",
+        }
+    }
 }
 
 /// Scheduler counters (polled by the density/polling benches).

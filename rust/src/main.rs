@@ -4,7 +4,7 @@
 //! junctiond-repro fig5      [--invocations N] [--seed S] [--csv DIR]
 //! junctiond-repro fig6      [--duration-ms MS] [--seed S] [--csv DIR]
 //! junctiond-repro coldstart [--trials N] [--seed S]
-//! junctiond-repro ablation  --which cache|polling|scaleup
+//! junctiond-repro ablation  --which cache|polling|scaleup|...|blame [--trace-out FILE]
 //! junctiond-repro density   [--workers N] [--worker-cores N] [--functions N]
 //!                           [--hot N] [--rate RPS] [--duration-ms MS] [--seed S]
 //! junctiond-repro serve     --mode kernel|bypass [--requests N]
@@ -65,9 +65,10 @@ fn usage() -> ! {
     eprintln!(
         "usage: junctiond-repro <fig5|fig6|coldstart|ablation|density|serve|calibrate|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
-         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|interference\n\
+         --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|\
+         interference|blame\n\
          --mode kernel|bypass --requests N --runs N --workers N --worker-cores N\n\
-         --functions N --hot N --rate RPS --payload BYTES"
+         --functions N --hot N --rate RPS --payload BYTES --trace-out FILE"
     );
     std::process::exit(2);
 }
@@ -173,6 +174,37 @@ fn main() -> Result<()> {
                 maybe_csv(&flags, &table, "ablation_interference")?;
                 return Ok(());
             }
+            if which == "blame" {
+                // E15: invocation tracing — per-hop blame decomposition
+                // of the tail, both backends, tracing ON. Deliberately
+                // deterministic (platform-default compute, no wall-clock
+                // output): the CI determinism job diffs two same-seed
+                // runs byte-for-byte, which doubles as the proof that
+                // tracing never perturbs the simulation.
+                let dur = get_u64(&flags, "duration-ms", 300)? * MILLIS;
+                let (table, points) = ex::tail_attribution_table(dur, seed);
+                println!("{}", table.to_markdown());
+                for p in &points {
+                    println!(
+                        "{} p99 blame outside exec: {:.1}%",
+                        p.backend.name(),
+                        p.report.p99_non_exec_share() * 100.0
+                    );
+                }
+                if let Some(path) = flags.get("trace-out") {
+                    let groups: Vec<(u32, &[junctiond_repro::telemetry::Trace])> = points
+                        .iter()
+                        .enumerate()
+                        .map(|(i, p)| (i as u32 + 1, p.exemplars.as_slice()))
+                        .collect();
+                    let json = junctiond_repro::telemetry::chrome_trace_json(&groups);
+                    std::fs::write(path, json)
+                        .with_context(|| format!("writing trace to {path}"))?;
+                    eprintln!("# wrote {path} (load in chrome://tracing or Perfetto)");
+                }
+                maybe_csv(&flags, &table, "ablation_blame")?;
+                return Ok(());
+            }
             if which == "duplex" {
                 // E13: the full-duplex data path — worker TX rings with
                 // backpressure + the front end's own RX NIC, plus the echo
@@ -226,7 +258,8 @@ fn main() -> Result<()> {
                 "multitenant" => ex::multitenant_table(60, 1_000.0, seed),
                 "tiers" => ex::coldstart_tiers_table(20, seed),
                 other => bail!(
-                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|interference)"
+                    "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale\
+                     |multitenant|tiers|netpath|duplex|interference|blame)"
                 ),
             };
             println!("{}", table.to_markdown());

@@ -74,6 +74,11 @@ pub struct NicStats {
     pub bursts: u64,
     /// High-water mark of ring occupancy.
     pub max_depth: usize,
+    /// Total time packets spent waiting in the RX ring (enqueue → burst
+    /// pop), summed over delivered packets. `rx_ring_wait_ns /
+    /// rx_delivered` is the mean ring wait — the queueing component the
+    /// tracing spans attribute per request.
+    pub rx_ring_wait_ns: u64,
 }
 
 impl NicStats {
@@ -148,11 +153,12 @@ impl NicQueue {
         }
     }
 
-    /// Pop the next burst (up to `max` packets) for the drain engine. An
-    /// empty ring pops nothing and counts *no* burst: a zero-packet poll
-    /// would deflate [`NicStats::mean_batch`], the amortization stat the
-    /// bypass path's throughput argument rests on.
-    pub fn pop_burst(&mut self, max: usize) -> Vec<Packet> {
+    /// Pop the next burst (up to `max` packets) for the drain engine at
+    /// virtual time `now` (ring-wait accounting). An empty ring pops
+    /// nothing and counts *no* burst: a zero-packet poll would deflate
+    /// [`NicStats::mean_batch`], the amortization stat the bypass path's
+    /// throughput argument rests on.
+    pub fn pop_burst(&mut self, max: usize, now: Time) -> Vec<Packet> {
         if self.q.is_empty() {
             return Vec::new();
         }
@@ -160,6 +166,9 @@ impl NicQueue {
         let pkts: Vec<Packet> = self.q.drain(..k).collect();
         self.stats.bursts += 1;
         self.stats.rx_delivered += pkts.len() as u64;
+        for p in &pkts {
+            self.stats.rx_ring_wait_ns += now.saturating_sub(p.enqueued_at);
+        }
         pkts
     }
 
@@ -198,6 +207,9 @@ pub struct TxStats {
     pub tx_bursts: u64,
     /// High-water mark of ring occupancy.
     pub tx_max_depth: usize,
+    /// Total time frames spent waiting in the TX ring (enqueue → flush
+    /// pop), summed over flushed frames.
+    pub tx_ring_wait_ns: u64,
 }
 
 impl TxStats {
@@ -271,9 +283,10 @@ impl TxQueue {
         }
     }
 
-    /// Pop the next flush burst (up to `max` frames). Same empty-pop guard
-    /// as [`NicQueue::pop_burst`]: an empty ring counts no burst.
-    pub fn pop_burst(&mut self, max: usize) -> Vec<Packet> {
+    /// Pop the next flush burst (up to `max` frames) at virtual time
+    /// `now`. Same empty-pop guard as [`NicQueue::pop_burst`]: an empty
+    /// ring counts no burst.
+    pub fn pop_burst(&mut self, max: usize, now: Time) -> Vec<Packet> {
         if self.q.is_empty() {
             return Vec::new();
         }
@@ -281,6 +294,9 @@ impl TxQueue {
         let pkts: Vec<Packet> = self.q.drain(..k).collect();
         self.stats.tx_bursts += 1;
         self.stats.tx_packets += pkts.len() as u64;
+        for p in &pkts {
+            self.stats.tx_ring_wait_ns += now.saturating_sub(p.enqueued_at);
+        }
         pkts
     }
 
@@ -333,7 +349,7 @@ mod tests {
         let mut nic = NicQueue::new(16);
         assert!(nic.enqueue(pkt(10, &log, 0)), "idle ring must kick the engine");
         assert!(!nic.enqueue(pkt(10, &log, 1)), "draining ring must not double-kick");
-        let burst = nic.pop_burst(8);
+        let burst = nic.pop_burst(8, 0);
         assert_eq!(burst.len(), 2);
         assert!(!nic.burst_done(), "empty ring goes idle");
         assert!(nic.enqueue(pkt(10, &log, 2)), "idle again: next arrival kicks");
@@ -347,13 +363,13 @@ mod tests {
         for i in 0..5 {
             nic.enqueue(pkt(10, &log, i));
         }
-        let b1 = nic.pop_burst(3);
+        let b1 = nic.pop_burst(3, 0);
         assert_eq!(b1.len(), 3);
         for p in b1 {
             (p.deliver)(&mut sim);
         }
         assert!(nic.burst_done(), "two packets still queued");
-        let b2 = nic.pop_burst(3);
+        let b2 = nic.pop_burst(3, 0);
         assert_eq!(b2.len(), 2);
         for p in b2 {
             (p.deliver)(&mut sim);
@@ -372,14 +388,14 @@ mod tests {
         // deflating `mean_batch` below the achieved amortization.
         let log = Rc::new(RefCell::new(Vec::new()));
         let mut nic = NicQueue::new(8);
-        assert!(nic.pop_burst(4).is_empty());
+        assert!(nic.pop_burst(4, 0).is_empty());
         assert_eq!(nic.stats.bursts, 0, "empty pop must not count a burst");
         for i in 0..4 {
             nic.enqueue(pkt(10, &log, i));
         }
-        let b = nic.pop_burst(8);
+        let b = nic.pop_burst(8, 0);
         assert_eq!(b.len(), 4);
-        assert!(nic.pop_burst(8).is_empty());
+        assert!(nic.pop_burst(8, 0).is_empty());
         assert_eq!(nic.stats.bursts, 1);
         assert!((nic.stats.mean_batch() - 4.0).abs() < 1e-9, "{:?}", nic.stats);
     }
@@ -396,7 +412,7 @@ mod tests {
         assert_eq!(tx.stats.tx_enqueued, 2);
         assert_eq!(tx.stats.tx_bytes, 100);
         assert_eq!(tx.stats.tx_max_depth, 2);
-        let burst = tx.pop_burst(8);
+        let burst = tx.pop_burst(8, 0);
         assert_eq!(burst.len(), 2);
         assert_eq!(tx.stats.tx_packets, 2);
         assert_eq!(tx.stats.tx_bursts, 1);
@@ -408,8 +424,30 @@ mod tests {
     #[test]
     fn tx_empty_pop_counts_no_burst() {
         let mut tx = TxQueue::new(4);
-        assert!(tx.pop_burst(4).is_empty());
+        assert!(tx.pop_burst(4, 0).is_empty());
         assert_eq!(tx.stats.tx_bursts, 0);
         assert_eq!(tx.stats.mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn ring_wait_accumulates_enqueue_to_pop() {
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let mut nic = NicQueue::new(8);
+        let mut a = pkt(10, &log, 0);
+        a.enqueued_at = 100;
+        let mut b = pkt(10, &log, 1);
+        b.enqueued_at = 250;
+        nic.enqueue(a);
+        nic.enqueue(b);
+        let burst = nic.pop_burst(8, 400);
+        assert_eq!(burst.len(), 2);
+        assert_eq!(nic.stats.rx_ring_wait_ns, (400 - 100) + (400 - 250));
+
+        let mut tx = TxQueue::new(8);
+        let mut c = pkt(10, &log, 2);
+        c.enqueued_at = 50;
+        tx.enqueue(c);
+        assert_eq!(tx.pop_burst(8, 80).len(), 1);
+        assert_eq!(tx.stats.tx_ring_wait_ns, 30);
     }
 }

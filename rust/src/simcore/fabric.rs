@@ -169,6 +169,44 @@ impl FabricStats {
     }
 }
 
+/// How an observed slice ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SliceEnd {
+    /// The job finished on this slice.
+    Complete,
+    /// Preempted (quantum edge with waiting work, or shed off a core
+    /// reserved mid-slice) and requeued.
+    Preempt,
+    /// Reached its quantum edge with no preemptor; continues immediately
+    /// on the same core.
+    Continue,
+}
+
+impl SliceEnd {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SliceEnd::Complete => "complete",
+            SliceEnd::Preempt => "preempt",
+            SliceEnd::Continue => "quantum_edge",
+        }
+    }
+}
+
+/// One executed slice of an observed job.
+#[derive(Debug, Clone, Copy)]
+pub struct SliceRecord {
+    pub core: usize,
+    pub start: Time,
+    pub end: Time,
+    pub outcome: SliceEnd,
+}
+
+/// Per-slice observer attached via [`ComputeFabric::run_observed`]. The
+/// observer is invoked after each slice, outside the fabric's internal
+/// borrow but *before* the job's `done` callback; it must only record
+/// (it must not re-enter the fabric).
+pub type SliceObs = Rc<dyn Fn(SliceRecord)>;
+
 struct Job {
     remaining: Time,
     class: JobClass,
@@ -177,6 +215,9 @@ struct Job {
     /// Core the job last ran on (migration surcharge on cross-core resume).
     last_core: Option<usize>,
     started: bool,
+    /// Slice observer (tracing); travels with the job across requeues and
+    /// steals. `None` costs nothing on the hot path.
+    obs: Option<SliceObs>,
     done: JobFn,
 }
 
@@ -608,7 +649,7 @@ impl ComputeFabric {
         duration: Time,
         done: F,
     ) {
-        self.submit(sim, None, class, duration, Box::new(done));
+        self.submit(sim, None, class, duration, None, Box::new(done));
     }
 
     /// Run with soft affinity to `core`: the job waits in that core's
@@ -622,7 +663,23 @@ impl ComputeFabric {
         duration: Time,
         done: F,
     ) {
-        self.submit(sim, Some(core), class, duration, Box::new(done));
+        self.submit(sim, Some(core), class, duration, None, Box::new(done));
+    }
+
+    /// Like [`Self::run_on`] (or [`Self::run_class`] when `pin` is
+    /// `None`), additionally invoking `obs` after every executed slice —
+    /// the tracing hook. Reference mode has no slices and drops the
+    /// observer; timing is unchanged either way.
+    pub fn run_observed<F: FnOnce(&mut Sim) + 'static>(
+        &self,
+        sim: &mut Sim,
+        pin: Option<usize>,
+        class: JobClass,
+        duration: Time,
+        obs: Option<SliceObs>,
+        done: F,
+    ) {
+        self.submit(sim, pin, class, duration, obs, Box::new(done));
     }
 
     fn submit(
@@ -631,11 +688,14 @@ impl ComputeFabric {
         pin: Option<usize>,
         class: JobClass,
         duration: Time,
+        obs: Option<SliceObs>,
         done: JobFn,
     ) {
         let kind = self.inner.borrow().kind;
         match kind {
             FabricKind::ReferenceFifo => {
+                // The seed engine has no per-slice structure to observe.
+                drop(obs);
                 let start = {
                     let mut inner = self.inner.borrow_mut();
                     let Engine::Reference(r) = &mut inner.engine else { unreachable!() };
@@ -651,8 +711,15 @@ impl ComputeFabric {
                 } else {
                     (pin, class)
                 };
-                let job =
-                    Job { remaining: duration, class, pin, last_core: None, started: false, done };
+                let job = Job {
+                    remaining: duration,
+                    class,
+                    pin,
+                    last_core: None,
+                    started: false,
+                    obs,
+                    done,
+                };
                 self.pc_submit(sim, job);
             }
         }
@@ -825,7 +892,7 @@ impl ComputeFabric {
 
     fn pc_slice_end(&self, sim: &mut Sim, core: usize) {
         let now = sim.now();
-        let outcome = {
+        let (outcome, observed) = {
             let mut inner = self.inner.borrow_mut();
             let Engine::PerCore(pc) = &mut inner.engine else { unreachable!() };
             let mut run = pc.cores[core].running.take().expect("slice end on an idle core");
@@ -833,7 +900,9 @@ impl ComputeFabric {
             pc.cores[core].busy_ns += elapsed;
             pc.busy_ns += elapsed;
             run.job.remaining = run.job.remaining.saturating_sub(elapsed);
-            if run.job.remaining == 0 {
+            let obs = run.job.obs.clone();
+            let slice_start = run.slice_start;
+            let outcome = if run.job.remaining == 0 {
                 pc.jobs_completed += 1;
                 // The core stays owned until the callback returns (seed
                 // semantics): pc_next clears the flag before picking.
@@ -865,8 +934,20 @@ impl ComputeFabric {
                 SliceOutcome::Requeued
             } else {
                 SliceOutcome::Continue(run.job)
-            }
+            };
+            let kind = match &outcome {
+                SliceOutcome::Done(_) => SliceEnd::Complete,
+                SliceOutcome::Requeued => SliceEnd::Preempt,
+                SliceOutcome::Continue(_) => SliceEnd::Continue,
+            };
+            let observed =
+                obs.map(|o| (o, SliceRecord { core, start: slice_start, end: now, outcome: kind }));
+            (outcome, observed)
         };
+        // Outside the borrow, before `done`: the observer only records.
+        if let Some((obs, rec)) = observed {
+            obs(rec);
+        }
         match outcome {
             SliceOutcome::Done(done) => {
                 done(sim);
@@ -1099,6 +1180,64 @@ mod tests {
     }
 
     // ---- structural semantics -------------------------------------------
+
+    #[test]
+    fn observed_slices_tile_the_job_and_tag_outcomes() {
+        // Two 25 ns jobs round-robin on one core with a 10 ns quantum.
+        // The observer must see every slice, the slices must sum to the
+        // job's duration, and the outcomes must be Preempt at contended
+        // quantum edges with exactly one final Complete.
+        let cfg = FabricConfig { quantum_ns: 10, steal: false, migration_cost_ns: 0 };
+        let mut sim = Sim::new();
+        let pool = structural(1, cfg);
+        let recs: Rc<RefCell<Vec<SliceRecord>>> = Rc::new(RefCell::new(Vec::new()));
+        for _ in 0..2 {
+            let recs2 = recs.clone();
+            let obs: SliceObs = Rc::new(move |r| recs2.borrow_mut().push(r));
+            pool.run_observed(&mut sim, None, JobClass::Normal, 25, Some(obs), |_| {});
+        }
+        sim.run_to_completion();
+        let recs = recs.borrow();
+        let total: Time = recs.iter().map(|r| r.end - r.start).sum();
+        assert_eq!(total, 50, "observed slices must sum to submitted work");
+        let completes = recs.iter().filter(|r| r.outcome == SliceEnd::Complete).count();
+        assert_eq!(completes, 2, "one Complete per job");
+        assert!(
+            recs.iter().any(|r| r.outcome == SliceEnd::Preempt),
+            "quantum contention must surface as Preempt slices"
+        );
+        for r in recs.iter() {
+            assert_eq!(r.core, 0);
+            assert!(r.start < r.end);
+        }
+        pool.check_invariants();
+    }
+
+    #[test]
+    fn unobserved_jobs_are_unaffected_by_observed_peers() {
+        // Timing with an observer attached must equal timing without:
+        // same workload run twice, once observed, completion times equal.
+        let run = |observe: bool| {
+            let cfg = FabricConfig { quantum_ns: 10, steal: false, migration_cost_ns: 0 };
+            let mut sim = Sim::new();
+            let pool = structural(1, cfg);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            for _ in 0..3 {
+                let log = log.clone();
+                let obs: Option<SliceObs> = observe.then(|| {
+                    let o: SliceObs = Rc::new(|_| {});
+                    o
+                });
+                pool.run_observed(&mut sim, None, JobClass::Normal, 25, obs, move |s| {
+                    log.borrow_mut().push(s.now())
+                });
+            }
+            sim.run_to_completion();
+            let v = log.borrow().clone();
+            v
+        };
+        assert_eq!(run(false), run(true));
+    }
 
     #[test]
     fn quantum_round_robins_equal_class() {

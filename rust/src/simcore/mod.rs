@@ -31,7 +31,7 @@ pub use engine::{
 };
 pub use fabric::{
     default_fabric, set_default_fabric, ComputeFabric, FabricConfig, FabricKind, FabricStats,
-    JobClass,
+    JobClass, SliceEnd, SliceObs, SliceRecord,
 };
 pub use proptest::{forall, Gen};
 pub use rng::Rng;

@@ -210,6 +210,22 @@ impl LogHistogram {
         }
     }
 
+    /// Cumulative `(upper bound, count ≤ bound)` pairs over the non-empty
+    /// buckets — the Prometheus histogram `le` ladder. The last pair's
+    /// count equals [`Self::count`].
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            acc += c;
+            out.push((Self::value_of(i), acc));
+        }
+        out
+    }
+
     /// Merge another histogram into this one (sharded recording).
     pub fn merge(&mut self, other: &LogHistogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
@@ -285,13 +301,33 @@ mod tests {
                 h.record(v);
                 s.record(v);
             }
-            for q in [0.5, 0.9, 0.99] {
+            for q in [0.5, 0.9, 0.99, 0.999] {
                 let exact = s.quantile(q) as f64;
                 let approx = h.quantile(q) as f64;
                 let err = (approx - exact).abs() / exact.max(1.0);
                 assert!(err < 0.04, "q={q} exact={exact} approx={approx} err={err}");
             }
         });
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_end_at_count() {
+        let mut rng = Rng::new(21);
+        let mut h = LogHistogram::new();
+        for _ in 0..4000 {
+            h.record(rng.range(1, 50_000_000));
+        }
+        let cum = h.cumulative_buckets();
+        assert!(!cum.is_empty());
+        for w in cum.windows(2) {
+            assert!(w[0].0 < w[1].0, "bounds must increase");
+            assert!(w[0].1 < w[1].1, "counts must be cumulative");
+        }
+        assert_eq!(cum.last().unwrap().1, h.count());
+        // Every bound's cumulative count is the number of samples ≤ bound
+        // of the *bucketized* stream; spot-check the first bucket holds at
+        // least one sample and never exceeds the total.
+        assert!(cum[0].1 >= 1 && cum[0].1 <= h.count());
     }
 
     #[test]

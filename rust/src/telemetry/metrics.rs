@@ -31,13 +31,44 @@ impl Default for Registry {
     }
 }
 
+/// Escape a HELP string per the v0.0.4 text format: `\` and newline.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value per the v0.0.4 text format: `\`, `"`, newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Counters are exposed with the conventional `_total` suffix whether or
+/// not the registration name carried it.
+fn counter_exposed_name(name: &str) -> String {
+    if name.ends_with("_total") {
+        name.to_string()
+    } else {
+        format!("{name}_total")
+    }
+}
+
 fn label_key(labels: &[(&str, &str)]) -> String {
     if labels.is_empty() {
         return String::new();
     }
     let parts: Vec<String> =
-        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\""))).collect();
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
     format!("{{{}}}", parts.join(","))
+}
+
+/// Splice one extra `key="value"` pair into a rendered label set
+/// (`""` or `{a="b",...}`). `v` must already be escaped.
+fn splice_label(labels: &str, k: &str, v: &str) -> String {
+    if labels.is_empty() {
+        format!("{{{k}=\"{v}\"}}")
+    } else {
+        let inner = &labels[1..labels.len() - 1];
+        format!("{{{inner},{k}=\"{v}\"}}")
+    }
 }
 
 impl Registry {
@@ -106,38 +137,59 @@ impl Registry {
             let kind = match fam.values().next() {
                 Some(Metric::Counter(_)) => "counter",
                 Some(Metric::Gauge(_)) => "gauge",
-                Some(Metric::Histogram(_)) => "summary",
+                Some(Metric::Histogram(_)) => "histogram",
                 None => continue,
             };
-            let _ = writeln!(out, "# HELP {name} {help}");
-            let _ = writeln!(out, "# TYPE {name} {kind}");
+            let exposed =
+                if kind == "counter" { counter_exposed_name(name) } else { name.clone() };
+            let _ = writeln!(out, "# HELP {exposed} {}", escape_help(help));
+            let _ = writeln!(out, "# TYPE {exposed} {kind}");
             for (labels, metric) in fam {
                 match metric {
                     Metric::Counter(c) => {
-                        let _ = writeln!(out, "{name}{labels} {c}");
+                        let _ = writeln!(out, "{exposed}{labels} {c}");
                     }
                     Metric::Gauge(g) => {
-                        let _ = writeln!(out, "{name}{labels} {g}");
+                        let _ = writeln!(out, "{exposed}{labels} {g}");
                     }
                     Metric::Histogram(h) => {
-                        // Summary quantiles in seconds (Prometheus units).
-                        for q in [0.5, 0.9, 0.99] {
-                            let v = h.quantile(q) as f64 / 1e9;
-                            let lq = if labels.is_empty() {
-                                format!("{{quantile=\"{q}\"}}")
-                            } else {
-                                // Splice the quantile label into the set.
-                                let inner = &labels[1..labels.len() - 1];
-                                format!("{{{inner},quantile=\"{q}\"}}")
-                            };
-                            let _ = writeln!(out, "{name}{lq} {v}");
+                        // Cumulative `le` buckets in seconds: each bucket
+                        // counts every observation ≤ its bound, and the
+                        // `+Inf` bucket equals `_count`.
+                        for (ub, cum) in h.cumulative_buckets() {
+                            let le = ub as f64 / 1e9;
+                            let lb = splice_label(labels, "le", &format!("{le}"));
+                            let _ = writeln!(out, "{exposed}_bucket{lb} {cum}");
                         }
-                        let _ = writeln!(out, "{name}_count{labels} {}", h.count());
+                        let lb = splice_label(labels, "le", "+Inf");
+                        let _ = writeln!(out, "{exposed}_bucket{lb} {}", h.count());
+                        let _ = writeln!(out, "{exposed}_count{labels} {}", h.count());
                         let _ = writeln!(
                             out,
-                            "{name}_sum{labels} {}",
+                            "{exposed}_sum{labels} {}",
                             h.mean() * h.count() as f64 / 1e9
                         );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Flatten every metric into a scalar `(exposed name, labels, value)`
+    /// series: counters (with `_total`), gauges, and histogram observation
+    /// counts as `<name>_count`. Feeds the [`super::Timeline`] scraper.
+    pub fn scalar_series(&self) -> Vec<(String, String, f64)> {
+        let mut out = Vec::new();
+        for (name, (_, fam)) in &self.families {
+            for (labels, metric) in fam {
+                match metric {
+                    Metric::Counter(c) => {
+                        out.push((counter_exposed_name(name), labels.clone(), *c as f64))
+                    }
+                    Metric::Gauge(g) => out.push((name.clone(), labels.clone(), *g)),
+                    Metric::Histogram(h) => {
+                        out.push((format!("{name}_count"), labels.clone(), h.count() as f64))
                     }
                 }
             }
@@ -181,8 +233,69 @@ mod tests {
         assert!(text.contains("requests_total{code=\"200\"} 7"));
         assert!(text.contains("# TYPE in_flight gauge"));
         assert!(text.contains("in_flight 3"));
+        assert!(text.contains("# TYPE latency_seconds histogram"));
+        assert!(text.contains("latency_seconds_bucket{le=\"+Inf\"} 3"));
         assert!(text.contains("latency_seconds_count 3"));
-        assert!(text.contains("quantile=\"0.99\""));
+    }
+
+    #[test]
+    fn help_and_label_values_escape_per_v004_spec() {
+        // Mirrors the escaping examples in the Prometheus text-format
+        // v0.0.4 spec: `\` → `\\` and newline → `\n` in HELP; label
+        // values additionally escape `"` → `\"`.
+        let mut r = Registry::new();
+        r.counter_add("msgs", "line one\nline \\two", &[("path", "C:\\dir\n\"x\"")], 1);
+        let text = r.expose();
+        assert!(text.contains("# HELP msgs_total line one\\nline \\\\two"));
+        assert!(text.contains("msgs_total{path=\"C:\\\\dir\\n\\\"x\\\"\"} 1"));
+    }
+
+    #[test]
+    fn counters_expose_with_total_suffix() {
+        let mut r = Registry::new();
+        r.counter_add("frames", "frames seen", &[], 7);
+        let text = r.expose();
+        assert!(text.contains("# TYPE frames_total counter"));
+        assert!(text.contains("frames_total 7"));
+        assert!(!text.contains("# TYPE frames counter"));
+        // Lookup still uses the registration name.
+        assert_eq!(r.counter_value("frames", &[]), Some(7));
+        // Already-suffixed names are not doubled.
+        r.counter_add("drops_total", "drops", &[], 2);
+        let text = r.expose();
+        assert!(text.contains("drops_total 2"));
+        assert!(!text.contains("drops_total_total"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_inf_equals_count() {
+        let mut r = Registry::new();
+        for v in [1_000u64, 1_000, 900_000, 50_000_000] {
+            r.observe("lat", "latency", &[], v);
+        }
+        let text = r.expose();
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("lat_bucket"))
+            .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.len() >= 3, "expected several buckets, got {counts:?}");
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "non-cumulative: {counts:?}");
+        assert_eq!(*counts.last().unwrap(), 4, "+Inf bucket must equal _count");
+        assert!(text.contains("lat_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("lat_count 4"));
+    }
+
+    #[test]
+    fn scalar_series_flattens_all_families() {
+        let mut r = Registry::new();
+        r.counter_add("frames", "f", &[("dir", "rx")], 3);
+        r.gauge_set("depth", "d", &[], 2.5);
+        r.observe("lat", "l", &[], 500);
+        let series = r.scalar_series();
+        assert!(series.contains(&("frames_total".to_string(), "{dir=\"rx\"}".to_string(), 3.0)));
+        assert!(series.contains(&("depth".to_string(), String::new(), 2.5)));
+        assert!(series.contains(&("lat_count".to_string(), String::new(), 1.0)));
     }
 
     #[test]

@@ -14,10 +14,14 @@
 mod histogram;
 pub mod metrics;
 mod table;
+pub mod timeline;
+pub mod trace;
 
 pub use histogram::{LogHistogram, Samples};
 pub use metrics::Registry as MetricsRegistry;
 pub use table::{format_markdown_table, write_csv, Cell, Table};
+pub use timeline::Timeline;
+pub use trace::{chrome_trace_json, BlameReport, Hop, HopTimes, Span, Trace, Tracer, HOP_NAMES};
 
 /// Summary statistics used across every experiment report.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,0 +1,139 @@
+//! Periodic timeline scraper: snapshot the Prometheus [`Registry`] into
+//! per-interval series over *virtual* time.
+//!
+//! The metrics registry answers "what are the totals now"; transient
+//! analysis (provisioning storms, saturation onset, queue growth) needs
+//! "how did they move". A [`Timeline`] is driven from inside a running
+//! experiment — typically a `simcore::tick_train` callback calling
+//! [`Timeline::scrape`] every interval — and keeps one `(virtual ns,
+//! value)` series per scalar metric (counters, gauges, histogram
+//! observation counts), plus any ad-hoc series recorded directly with
+//! [`Timeline::record`] (queue depths, fabric busy, pool occupancy).
+//! Scraping only *reads* simulation state, so a scrape schedule is
+//! deterministic and two same-seed runs render byte-identical tables.
+
+use std::collections::BTreeMap;
+
+use crate::simcore::Time;
+
+use super::metrics::Registry;
+use super::{Cell, Table};
+
+/// Named `(virtual time, value)` series collected over a run.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    series: BTreeMap<String, Vec<(Time, f64)>>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline { series: BTreeMap::new() }
+    }
+
+    /// Append one point to the named series.
+    pub fn record(&mut self, name: &str, now: Time, v: f64) {
+        self.series.entry(name.to_string()).or_default().push((now, v));
+    }
+
+    /// Snapshot every scalar series in `reg` at virtual time `now`:
+    /// counters and gauges by their exposed name (labels appended),
+    /// histograms as `<name>_count`.
+    pub fn scrape(&mut self, now: Time, reg: &Registry) {
+        for (name, labels, v) in reg.scalar_series() {
+            let key = if labels.is_empty() { name } else { format!("{name}{labels}") };
+            self.record(&key, now, v);
+        }
+    }
+
+    /// Number of distinct series.
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn series(&self, name: &str) -> Option<&[(Time, f64)]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    /// Render the named series side by side: one row per scrape instant
+    /// (taken from the first present series), `t_ms` first. A series
+    /// missing a point at some instant renders 0.
+    pub fn to_table(&self, title: &str, names: &[&str]) -> Table {
+        let mut cols: Vec<&str> = vec!["t_ms"];
+        cols.extend_from_slice(names);
+        let mut table = Table::new(title, &cols);
+        let times: Vec<Time> = names
+            .iter()
+            .find_map(|n| self.series(n))
+            .map(|s| s.iter().map(|p| p.0).collect())
+            .unwrap_or_default();
+        for (i, ts) in times.iter().enumerate() {
+            let mut row: Vec<Cell> = vec![Cell::F2(*ts as f64 / 1e6)];
+            for n in names {
+                let v = self.series(n).and_then(|s| s.get(i)).map(|p| p.1).unwrap_or(0.0);
+                row.push(Cell::F2(v));
+            }
+            table.push_row(row);
+        }
+        table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_render() {
+        let mut tl = Timeline::new();
+        tl.record("queue_depth", 0, 0.0);
+        tl.record("queue_depth", 1_000_000, 3.0);
+        tl.record("busy", 0, 0.5);
+        tl.record("busy", 1_000_000, 0.9);
+        assert_eq!(tl.len(), 2);
+        let t = tl.to_table("tl", &["queue_depth", "busy"]);
+        assert_eq!(t.rows.len(), 2);
+        let md = t.to_markdown();
+        assert!(md.contains("queue_depth"));
+        assert!(md.contains("3.00"));
+        assert!(md.contains("0.90"));
+    }
+
+    #[test]
+    fn scrape_tracks_counters_gauges_and_histogram_counts() {
+        let mut reg = Registry::new();
+        let mut tl = Timeline::new();
+        reg.counter_add("frames_total", "frames", &[], 2);
+        reg.gauge_set("depth", "ring depth", &[], 1.0);
+        reg.observe("lat", "latency", &[], 1_000);
+        tl.scrape(0, &reg);
+        reg.counter_add("frames_total", "frames", &[], 3);
+        reg.gauge_set("depth", "ring depth", &[], 7.0);
+        reg.observe("lat", "latency", &[], 2_000);
+        tl.scrape(1_000_000, &reg);
+        assert_eq!(
+            tl.series("frames_total").unwrap(),
+            &[(0, 2.0), (1_000_000, 5.0)][..]
+        );
+        assert_eq!(tl.series("depth").unwrap(), &[(0, 1.0), (1_000_000, 7.0)][..]);
+        assert_eq!(tl.series("lat_count").unwrap(), &[(0, 1.0), (1_000_000, 2.0)][..]);
+    }
+
+    #[test]
+    fn labeled_series_keep_label_sets_apart() {
+        let mut reg = Registry::new();
+        let mut tl = Timeline::new();
+        reg.counter_add("served_total", "s", &[("tier", "warm")], 1);
+        reg.counter_add("served_total", "s", &[("tier", "cold")], 9);
+        tl.scrape(5, &reg);
+        assert_eq!(tl.series("served_total{tier=\"warm\"}").unwrap(), &[(5, 1.0)][..]);
+        assert_eq!(tl.series("served_total{tier=\"cold\"}").unwrap(), &[(5, 9.0)][..]);
+    }
+}

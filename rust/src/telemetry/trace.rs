@@ -1,0 +1,639 @@
+//! Span-per-invocation tracing + tail-latency attribution.
+//!
+//! The paper's headline numbers are distributional (−37% p50 / −63% p99),
+//! but `RequestTiming` alone can only *report* a tail, not *explain* it.
+//! This module turns each invocation into a reconstructable span tree:
+//! the pipeline opens a trace at submit ([`Tracer::begin`]), records
+//! closed sub-spans as the request crosses each stage ([`Tracer::event`]
+//! — retransmit backoffs, ring waits, scheduler wakeups, fabric slices,
+//! TX backpressure), and closes the trace when the response reaches the
+//! client ([`Tracer::finish`]). At close time the tracer assembles the
+//! tree: a root span `[submit, done]` whose direct children are the five
+//! tiling hop spans (`wire | nic_rx | pre_exec | exec | resp_svc+tx`),
+//! with every recorded sub-span parented under its hop. The hop spans are
+//! derived from the same `RequestTiming` timestamps the pinned
+//! `per_hop_breakdown_sums_to_e2e` identity rests on, so the children
+//! tile the root's extent and sum to the end-to-end latency by
+//! construction.
+//!
+//! Three consumers sit on top:
+//!
+//! * **Top-K tail-exemplar reservoir** — the K slowest *complete* traces
+//!   of a run, selected by `(e2e desc, seq asc)`. Determinism argument:
+//!   `seq` is assigned in submit order and completions are offered in
+//!   virtual-time order, both of which are fixed by the seed, and the
+//!   tie-break prefers the earliest seq (an equal-latency later trace
+//!   never displaces a resident one), so same-seed runs keep
+//!   byte-identical exemplar sets.
+//! * **Blame decomposition** ([`Tracer::blame_report`]) — per-hop share
+//!   of end-to-end time over the completions at or above an e2e
+//!   quantile. Shares are ratios of *sums* (`Σ hop_i / Σ e2e`), and each
+//!   completion's six hops sum exactly to its e2e, so the six shares sum
+//!   to 1.0 up to float rounding — the E15 acceptance gate.
+//! * **Chrome `trace_event` export** ([`chrome_trace_json`]) — exemplars
+//!   rendered as nested B/E duration events (`ts` in µs), one `tid` per
+//!   trace, loadable in `chrome://tracing` / Perfetto.
+//!
+//! Zero-cost-when-off: a disabled tracer ([`Tracer::new`]) answers every
+//! call with a cheap early return and assigns `seq == 0` to every
+//! request, and no caller schedules events, draws randomness, or changes
+//! control flow on its behalf — enabling tracing cannot perturb the
+//! simulation, and disabling it cannot change any experiment's output.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::rc::Rc;
+
+use crate::simcore::Time;
+
+use super::Samples;
+
+/// Which pipeline hop a recorded sub-span belongs to. Determines the
+/// sub-span's parent in the assembled tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hop {
+    /// Client → worker wire flight: `[submit, nic_in]`.
+    Wire,
+    /// NIC RX ring wait + drain (IRQ/softirq or poll batch):
+    /// `[nic_in, gateway_in]`.
+    NicRx,
+    /// Gateway + provider service, readiness and concurrency-gate wait:
+    /// `[gateway_in, exec_start]`.
+    PreExec,
+    /// Function execution, including scheduler grant wait and fabric
+    /// slices: `[exec_start, exec_end]`.
+    Exec,
+    /// Response passes back through provider + gateway:
+    /// `[exec_end, tx_in]`.
+    Resp,
+    /// TX ring (backpressure retries, flush) + return wire + frontend RX:
+    /// `[tx_in, done]`.
+    Tx,
+}
+
+/// Names of the six blame stages, in [`BlameReport`] share order.
+pub const HOP_NAMES: [&str; 6] = ["wire", "nic_rx", "pre_exec", "exec", "resp_svc", "tx"];
+
+/// One node of an assembled trace tree. Times are virtual-clock ns.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: u32,
+    /// `None` only on the root.
+    pub parent: Option<u32>,
+    pub name: &'static str,
+    /// Why the time was spent (e.g. `rx_tail_drop`, `tx_backpressure`, a
+    /// grant outcome, a fabric slice outcome). Empty on structural spans.
+    pub cause: &'static str,
+    pub start: Time,
+    pub end: Time,
+}
+
+impl Span {
+    pub fn duration(&self) -> Time {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// A complete invocation trace. `spans[0]` is the root.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Submit-order sequence number (unique per tracer, never 0).
+    pub seq: u64,
+    pub function: String,
+    /// End-to-end latency (`done - submit`).
+    pub e2e: Time,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// Direct children of the root, in span-id order (construction order
+    /// — the tiling hop spans).
+    pub fn root_children(&self) -> Vec<&Span> {
+        self.spans.iter().filter(|s| s.parent == Some(0)).collect()
+    }
+}
+
+/// Absolute hop-boundary timestamps of one finished invocation (the
+/// tracing view of `faas::RequestTiming`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HopTimes {
+    pub submit: Time,
+    pub nic_in: Time,
+    pub gateway_in: Time,
+    pub exec_start: Time,
+    pub exec_end: Time,
+    pub tx_in: Time,
+    pub done: Time,
+}
+
+impl HopTimes {
+    /// The six hop durations, [`HOP_NAMES`] order. For a completed
+    /// invocation the boundaries are monotone, so these sum exactly to
+    /// `done - submit`.
+    pub fn hop_durations(&self) -> [Time; 6] {
+        [
+            self.nic_in.saturating_sub(self.submit),
+            self.gateway_in.saturating_sub(self.nic_in),
+            self.exec_start.saturating_sub(self.gateway_in),
+            self.exec_end.saturating_sub(self.exec_start),
+            self.tx_in.saturating_sub(self.exec_end),
+            self.done.saturating_sub(self.tx_in),
+        ]
+    }
+
+    pub fn e2e(&self) -> Time {
+        self.done.saturating_sub(self.submit)
+    }
+}
+
+/// Per-hop blame decomposition: what share of end-to-end time each stage
+/// owns, over the completions at or above the p50 / p99 e2e thresholds.
+#[derive(Debug, Clone, Default)]
+pub struct BlameReport {
+    /// Completions the report covers.
+    pub count: u64,
+    pub e2e_p50: Time,
+    pub e2e_p99: Time,
+    /// Per-hop shares over completions with `e2e >= e2e_p50`
+    /// ([`HOP_NAMES`] order; sums to 1.0).
+    pub p50: [f64; 6],
+    /// Per-hop shares over completions with `e2e >= e2e_p99`.
+    pub p99: [f64; 6],
+}
+
+impl BlameReport {
+    /// Share of the p99 tail owned by the network+scheduling stages
+    /// (everything but function execution) — the quantity the paper's
+    /// P99 claim attributes to the kernel's network path.
+    pub fn p99_non_exec_share(&self) -> f64 {
+        1.0 - self.p99[3]
+    }
+}
+
+struct LiveTrace {
+    function: String,
+    /// (hop, name, cause, start, end) — closed sub-spans in record order.
+    events: Vec<(Hop, &'static str, &'static str, Time, Time)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct HopBreakdown {
+    e2e: Time,
+    hops: [Time; 6],
+}
+
+struct TracerInner {
+    enabled: bool,
+    /// Reservoir capacity (K slowest complete traces kept).
+    k: usize,
+    next_seq: u64,
+    live: BTreeMap<u64, LiveTrace>,
+    completions: Vec<HopBreakdown>,
+    /// Sorted by `(e2e desc, seq asc)`; at most `k` entries.
+    reservoir: Vec<Trace>,
+}
+
+/// Cloneable handle to one tracing domain (one `FaasSim`, or one whole
+/// cluster sharing a handle). All clones refer to the same state.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Rc<RefCell<TracerInner>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    /// A disabled tracer: every call is a cheap no-op.
+    pub fn new() -> Self {
+        Tracer {
+            inner: Rc::new(RefCell::new(TracerInner {
+                enabled: false,
+                k: 0,
+                next_seq: 0,
+                live: BTreeMap::new(),
+                completions: Vec::new(),
+                reservoir: Vec::new(),
+            })),
+        }
+    }
+
+    /// An enabled tracer keeping the `k` slowest complete traces.
+    pub fn new_enabled(k: usize) -> Self {
+        let t = Tracer::new();
+        t.enable(k);
+        t
+    }
+
+    /// Turn tracing on, keeping the `k` slowest complete traces.
+    pub fn enable(&self, k: usize) {
+        let mut i = self.inner.borrow_mut();
+        i.enabled = true;
+        i.k = k;
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.borrow().enabled
+    }
+
+    /// Open a trace at submit time. Returns its seq — 0 when disabled
+    /// (never a live id, so downstream calls with it are no-ops).
+    pub fn begin(&self, function: &str) -> u64 {
+        let mut i = self.inner.borrow_mut();
+        if !i.enabled {
+            return 0;
+        }
+        i.next_seq += 1;
+        let seq = i.next_seq;
+        i.live.insert(seq, LiveTrace { function: function.to_string(), events: Vec::new() });
+        seq
+    }
+
+    /// Record a closed sub-span under `hop` of trace `seq`.
+    pub fn event(
+        &self,
+        seq: u64,
+        hop: Hop,
+        name: &'static str,
+        cause: &'static str,
+        start: Time,
+        end: Time,
+    ) {
+        if seq == 0 {
+            return;
+        }
+        let mut i = self.inner.borrow_mut();
+        if !i.enabled {
+            return;
+        }
+        if let Some(lt) = i.live.get_mut(&seq) {
+            lt.events.push((hop, name, cause, start, end));
+        }
+    }
+
+    /// Close trace `seq`. A dropped request's trace is discarded; a
+    /// completed one is folded into the blame accumulator and offered to
+    /// the top-K reservoir.
+    pub fn finish(&self, seq: u64, ht: HopTimes, dropped: bool) {
+        if seq == 0 {
+            return;
+        }
+        let mut i = self.inner.borrow_mut();
+        if !i.enabled {
+            return;
+        }
+        let Some(lt) = i.live.remove(&seq) else { return };
+        if dropped {
+            return;
+        }
+        let e2e = ht.e2e();
+        i.completions.push(HopBreakdown { e2e, hops: ht.hop_durations() });
+        let k = i.k;
+        if k == 0 {
+            return;
+        }
+        // Keep the K slowest by (e2e desc, seq asc). Seqs strictly
+        // increase, so an equal-e2e resident always has a smaller seq and
+        // stays ahead of (or keeps out) the newcomer — the deterministic
+        // tie-break.
+        let admit = i.reservoir.len() < k
+            || i.reservoir.last().map(|t| e2e > t.e2e).unwrap_or(true);
+        if admit {
+            let trace = assemble(seq, lt, &ht);
+            let pos = i.reservoir.partition_point(|t| t.e2e >= e2e);
+            i.reservoir.insert(pos, trace);
+            i.reservoir.truncate(k);
+        }
+    }
+
+    /// Completed (non-dropped) invocations folded into the blame data.
+    pub fn completions(&self) -> u64 {
+        self.inner.borrow().completions.len() as u64
+    }
+
+    /// Snapshot of the tail-exemplar reservoir, slowest first.
+    pub fn exemplars(&self) -> Vec<Trace> {
+        self.inner.borrow().reservoir.clone()
+    }
+
+    /// Per-hop blame shares over completions with e2e at or above the
+    /// `q`-quantile, plus the threshold itself. `None` before any
+    /// completion. Shares are `Σ hop_i / Σ e2e` over the selected set.
+    pub fn blame(&self, q: f64) -> Option<(Time, [f64; 6])> {
+        let i = self.inner.borrow();
+        if i.completions.is_empty() {
+            return None;
+        }
+        let mut e2es = Samples::with_capacity(i.completions.len());
+        for c in &i.completions {
+            e2es.record(c.e2e);
+        }
+        let threshold = e2es.quantile(q);
+        let mut hop_sums = [0u128; 6];
+        let mut e2e_sum = 0u128;
+        for c in i.completions.iter().filter(|c| c.e2e >= threshold) {
+            e2e_sum += c.e2e as u128;
+            for (s, h) in hop_sums.iter_mut().zip(c.hops) {
+                *s += h as u128;
+            }
+        }
+        if e2e_sum == 0 {
+            return Some((threshold, [0.0; 6]));
+        }
+        let mut shares = [0.0; 6];
+        for (out, s) in shares.iter_mut().zip(hop_sums) {
+            *out = s as f64 / e2e_sum as f64;
+        }
+        Some((threshold, shares))
+    }
+
+    /// The full p50/p99 blame decomposition.
+    pub fn blame_report(&self) -> BlameReport {
+        let count = self.completions();
+        let Some((p50, s50)) = self.blame(0.50) else { return BlameReport::default() };
+        let (p99, s99) = self.blame(0.99).expect("p50 present implies p99 present");
+        BlameReport { count, e2e_p50: p50, e2e_p99: p99, p50: s50, p99: s99 }
+    }
+}
+
+/// Span ids of the fixed tree skeleton: root 0, hops 1..=5, tx 6.
+fn hop_span_id(hop: Hop) -> u32 {
+    match hop {
+        Hop::Wire => 1,
+        Hop::NicRx => 2,
+        Hop::PreExec => 3,
+        Hop::Exec => 4,
+        Hop::Resp => 5,
+        Hop::Tx => 6,
+    }
+}
+
+/// Build the span tree: root `[submit, done]`; direct children `wire |
+/// nic_rx | pre_exec | exec | resp` tiling it exactly; `tx` nested under
+/// `resp`; recorded sub-spans parented under their hop.
+fn assemble(seq: u64, lt: LiveTrace, ht: &HopTimes) -> Trace {
+    let mut spans = Vec::with_capacity(7 + lt.events.len());
+    spans.push(Span {
+        id: 0,
+        parent: None,
+        name: "invocation",
+        cause: "",
+        start: ht.submit,
+        end: ht.done,
+    });
+    let bounds: [(&'static str, Time, Time, u32); 6] = [
+        ("wire", ht.submit, ht.nic_in, 0),
+        ("nic_rx", ht.nic_in, ht.gateway_in, 0),
+        ("pre_exec", ht.gateway_in, ht.exec_start, 0),
+        ("exec", ht.exec_start, ht.exec_end, 0),
+        // resp covers [exec_end, done] so the root's children tile; the
+        // tx span nests inside it and blame splits resp_svc/tx at tx_in.
+        ("resp_svc", ht.exec_end, ht.done, 0),
+        ("tx", ht.tx_in, ht.done, 5),
+    ];
+    for (i, (name, start, end, parent)) in bounds.into_iter().enumerate() {
+        spans.push(Span { id: i as u32 + 1, parent: Some(parent), name, cause: "", start, end });
+    }
+    let mut next = 7u32;
+    for (hop, name, cause, start, end) in lt.events {
+        spans.push(Span {
+            id: next,
+            parent: Some(hop_span_id(hop)),
+            name,
+            cause,
+            start,
+            end,
+        });
+        next += 1;
+    }
+    Trace { seq, function: lt.function, e2e: ht.e2e(), spans }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render trace groups as a Chrome `trace_event` JSON document. Each
+/// group is `(pid, traces)` — one process per backend when exporting a
+/// comparison — and each trace becomes one `tid` (its seq) of nested
+/// `ph:"B"`/`ph:"E"` duration events, `ts` in microseconds. Children are
+/// emitted depth-first in start order, so within a `(pid, tid)` the `ts`
+/// sequence is nondecreasing and every `B` has a matching `E` (the CI
+/// `jq` schema check pins both).
+pub fn chrome_trace_json(groups: &[(u32, &[Trace])]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for (pid, traces) in groups {
+        for t in *traces {
+            let n = t.spans.len();
+            let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+            let mut root = None;
+            for (i, s) in t.spans.iter().enumerate() {
+                match s.parent {
+                    Some(p) => children[p as usize].push(i),
+                    None => root = Some(i),
+                }
+            }
+            for c in &mut children {
+                c.sort_by_key(|&i| (t.spans[i].start, t.spans[i].end, i));
+            }
+            let Some(root) = root else { continue };
+            // Iterative DFS: emit B on entry, E after the children.
+            let mut stack: Vec<(usize, usize)> = vec![(root, 0)];
+            while let Some(&mut (i, ref mut cursor)) = stack.last_mut() {
+                if *cursor == 0 {
+                    let s = &t.spans[i];
+                    let cat = if s.cause.is_empty() { "span" } else { s.cause };
+                    if !first {
+                        out.push(',');
+                    }
+                    first = false;
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"B\",\"ts\":{:.3},\"pid\":{},\"tid\":{}",
+                        json_escape(s.name),
+                        json_escape(cat),
+                        s.start as f64 / 1e3,
+                        pid,
+                        t.seq
+                    );
+                    if s.parent.is_none() {
+                        let _ = write!(
+                            out,
+                            ",\"args\":{{\"function\":\"{}\",\"seq\":{}}}",
+                            json_escape(&t.function),
+                            t.seq
+                        );
+                    }
+                    out.push('}');
+                }
+                if *cursor < children[i].len() {
+                    let next = children[i][*cursor];
+                    *cursor += 1;
+                    stack.push((next, 0));
+                } else {
+                    let s = &t.spans[i];
+                    let cat = if s.cause.is_empty() { "span" } else { s.cause };
+                    let _ = write!(
+                        out,
+                        ",{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"E\",\"ts\":{:.3},\"pid\":{},\"tid\":{}}}",
+                        json_escape(s.name),
+                        json_escape(cat),
+                        s.end as f64 / 1e3,
+                        pid,
+                        t.seq
+                    );
+                    stack.pop();
+                }
+            }
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ht(submit: Time) -> HopTimes {
+        HopTimes {
+            submit,
+            nic_in: submit + 10,
+            gateway_in: submit + 30,
+            exec_start: submit + 60,
+            exec_end: submit + 160,
+            tx_in: submit + 180,
+            done: submit + 200,
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let tr = Tracer::new();
+        assert_eq!(tr.begin("f"), 0);
+        tr.event(0, Hop::Exec, "x", "", 0, 1);
+        tr.finish(0, ht(0), false);
+        assert_eq!(tr.completions(), 0);
+        assert!(tr.exemplars().is_empty());
+        assert!(tr.blame(0.99).is_none());
+    }
+
+    #[test]
+    fn root_children_tile_and_sum_to_e2e() {
+        let tr = Tracer::new_enabled(4);
+        let seq = tr.begin("aes");
+        tr.event(seq, Hop::Exec, "fabric.slice", "complete", 60, 160);
+        tr.finish(seq, ht(0), false);
+        let traces = tr.exemplars();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.e2e, 200);
+        let root = &t.spans[0];
+        let kids = t.root_children();
+        assert_eq!(kids.len(), 5);
+        assert_eq!(kids[0].start, root.start);
+        for w in kids.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "children must tile");
+        }
+        assert_eq!(kids.last().unwrap().end, root.end);
+        let sum: Time = kids.iter().map(|s| s.duration()).sum();
+        assert_eq!(sum, t.e2e);
+        // The recorded sub-span hangs off the exec hop.
+        let sub = t.spans.iter().find(|s| s.name == "fabric.slice").unwrap();
+        assert_eq!(sub.parent, Some(4));
+        assert_eq!(sub.cause, "complete");
+    }
+
+    #[test]
+    fn reservoir_keeps_k_slowest_deterministically() {
+        let tr = Tracer::new_enabled(3);
+        // e2e pattern: 200 for every trace except two slower ones.
+        let lat = [200u64, 500, 200, 200, 300, 200];
+        for (i, extra) in lat.iter().enumerate() {
+            let seq = tr.begin("f");
+            let mut h = ht(i as Time * 1000);
+            h.done = h.submit + extra;
+            h.tx_in = h.done.min(h.tx_in);
+            tr.finish(seq, h, false);
+        }
+        let ex = tr.exemplars();
+        assert_eq!(ex.len(), 3);
+        assert_eq!(ex[0].e2e, 500);
+        assert_eq!(ex[1].e2e, 300);
+        // Tie at 200: the earliest seq (seq 1) wins and later equals never
+        // displace it.
+        assert_eq!(ex[2].e2e, 200);
+        assert_eq!(ex[2].seq, 1);
+        assert_eq!(tr.completions(), 6);
+    }
+
+    #[test]
+    fn dropped_traces_are_discarded() {
+        let tr = Tracer::new_enabled(4);
+        let seq = tr.begin("f");
+        tr.finish(seq, ht(0), true);
+        assert_eq!(tr.completions(), 0);
+        assert!(tr.exemplars().is_empty());
+    }
+
+    #[test]
+    fn blame_shares_sum_to_one() {
+        let tr = Tracer::new_enabled(0);
+        for i in 0..100 {
+            let seq = tr.begin("f");
+            let mut h = ht(i * 1000);
+            if i >= 98 {
+                // Slow tail: all the extra time lands in nic_rx. Two slow
+                // completions keep the all-inclusive p50 selection (the
+                // nearest-rank p50 threshold is the common 200 ns e2e)
+                // majority-fast, while the p99 selection is slow-only.
+                h.gateway_in += 5_000;
+                h.exec_start += 5_000;
+                h.exec_end += 5_000;
+                h.tx_in += 5_000;
+                h.done += 5_000;
+            }
+            tr.finish(seq, h, false);
+        }
+        let r = tr.blame_report();
+        assert_eq!(r.count, 100);
+        let sum50: f64 = r.p50.iter().sum();
+        let sum99: f64 = r.p99.iter().sum();
+        assert!((sum50 - 1.0).abs() < 1e-9, "p50 shares sum to {sum50}");
+        assert!((sum99 - 1.0).abs() < 1e-9, "p99 shares sum to {sum99}");
+        // The injected tail is nic_rx-dominated at p99 but not at p50.
+        assert!(r.p99[1] > 0.9, "nic_rx p99 share {}", r.p99[1]);
+        assert!(r.p50[1] < 0.5, "nic_rx p50 share {}", r.p50[1]);
+        assert!(r.e2e_p99 > r.e2e_p50);
+    }
+
+    #[test]
+    fn chrome_export_is_nested_and_monotone() {
+        let tr = Tracer::new_enabled(2);
+        let seq = tr.begin("a\"es");
+        tr.event(seq, Hop::NicRx, "rx.ring", "irq_softirq", 12, 30);
+        tr.event(seq, Hop::Tx, "tx.backoff", "tx_backpressure", 182, 190);
+        tr.finish(seq, ht(0), false);
+        let ex = tr.exemplars();
+        let json = chrome_trace_json(&[(1, &ex)]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"name\":\"a\\\"es\"") || json.contains("a\\\"es"));
+        // Every B has a matching E and ts is nondecreasing in emit order.
+        let bs = json.matches("\"ph\":\"B\"").count();
+        let es = json.matches("\"ph\":\"E\"").count();
+        assert_eq!(bs, es);
+        assert!(bs >= 8, "root + 6 hops + 2 sub-spans, got {bs} B events");
+        let mut last = f64::MIN;
+        for part in json.split("\"ts\":").skip(1) {
+            let ts: f64 = part.split(',').next().unwrap().parse().unwrap();
+            assert!(ts >= last, "ts must be nondecreasing: {ts} after {last}");
+            last = ts;
+        }
+    }
+}
