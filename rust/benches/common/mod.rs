@@ -6,18 +6,18 @@
 //! check. `BENCH_QUICK=1` shrinks the workloads for smoke runs.
 #![allow(dead_code)] // each bench binary uses a different subset
 
-use std::time::Instant;
+use junctiond_repro::hostclock::{env_var, Stopwatch};
 
 pub fn quick() -> bool {
-    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+    env_var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
 /// Run a named section, timing wall clock.
 pub fn section<F: FnOnce()>(name: &str, f: F) {
     println!("\n==== {name} ====");
-    let t0 = Instant::now();
+    let sw = Stopwatch::new();
     f();
-    println!("---- {name}: {:.2}s ----", t0.elapsed().as_secs_f64());
+    println!("---- {name}: {:.2}s ----", sw.elapsed_secs());
 }
 
 /// Time a closure over `iters` iterations, reporting ns/iter.
@@ -26,11 +26,11 @@ pub fn time_it<F: FnMut()>(label: &str, iters: u32, mut f: F) -> f64 {
     for _ in 0..iters.div_ceil(10).max(1) {
         f();
     }
-    let t0 = Instant::now();
+    let sw = Stopwatch::new();
     for _ in 0..iters {
         f();
     }
-    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let per = sw.elapsed_ns() as f64 / iters as f64;
     println!("{label:<44} {per:>12.0} ns/iter   ({iters} iters)");
     per
 }

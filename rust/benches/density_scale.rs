@@ -133,7 +133,8 @@ fn main() {
 
     // Record the measured numbers (satellite: BENCH_engine.json). Written
     // to the repo root when run from `rust/` (cargo bench's cwd).
-    let path = std::env::var("BENCH_ENGINE_JSON").unwrap_or_else(|_| "../BENCH_engine.json".into());
+    let path = junctiond_repro::hostclock::env_var("BENCH_ENGINE_JSON")
+        .unwrap_or_else(|| "../BENCH_engine.json".into());
     let body = format!(
         "{{\n  \"experiment\": \"E12 density_scale\",\n  \"quick\": {},\n  \"points\": [\n    {}\n  ]\n}}\n",
         quick,

@@ -26,9 +26,9 @@ mod common;
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Instant;
 
 use junctiond_repro::experiments as ex;
+use junctiond_repro::hostclock::Stopwatch;
 use junctiond_repro::simcore::{
     set_default_engine, EngineKind, Sim, Time, MICROS, MILLIS, SECONDS,
 };
@@ -102,9 +102,9 @@ fn retransmit_workload(kind: EngineKind, flows: usize, ballast: usize, horizon: 
         // Staggered starts so arrivals don't all tie at t=0.
         sim.at(i as Time * 29, move |sim| flow_hop(sim, horizon));
     }
-    let t0 = Instant::now();
+    let sw = Stopwatch::new();
     sim.run_until(horizon);
-    (sim.events_fired(), t0.elapsed().as_secs_f64())
+    (sim.events_fired(), sw.elapsed_secs())
 }
 
 /// Steady-state ZST scheduling chain for the allocation microbench: each
@@ -190,13 +190,13 @@ fn main() {
             let (t, _) = ex::netpath_table(2, 10, &rates, &rates, dur, 7);
             t.to_markdown()
         };
-        let t0 = Instant::now();
+        let sw0 = Stopwatch::new();
         let wheel = run();
-        let wheel_s = t0.elapsed().as_secs_f64();
+        let wheel_s = sw0.elapsed_secs();
         let prev = set_default_engine(EngineKind::ReferenceHeap);
-        let t1 = Instant::now();
+        let sw1 = Stopwatch::new();
         let heap = run();
-        let heap_s = t1.elapsed().as_secs_f64();
+        let heap_s = sw1.elapsed_secs();
         set_default_engine(prev);
         // Wall-clock comparison is informational only: on this slice the
         // per-event pipeline work (cost sampling, RefCell state) dominates

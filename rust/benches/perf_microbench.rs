@@ -16,6 +16,7 @@ use std::rc::Rc;
 use junctiond_repro::config::{Backend, ExperimentConfig, PlatformConfig};
 use junctiond_repro::experiments as ex;
 use junctiond_repro::faas::{FaasSim, FunctionSpec, RuntimeKind};
+use junctiond_repro::hostclock::Stopwatch;
 use junctiond_repro::rpc::Message;
 use junctiond_repro::simcore::{Rng, Sim, SECONDS};
 use junctiond_repro::telemetry::LogHistogram;
@@ -24,14 +25,14 @@ use junctiond_repro::workload::ClosedLoop;
 fn main() {
     common::section("perf — DES engine", || {
         // 1M trivial events.
-        let t0 = std::time::Instant::now();
+        let sw = Stopwatch::new();
         let mut sim = Sim::new();
         let mut rng = Rng::new(1);
         for _ in 0..1_000_000u32 {
             sim.at(rng.below(1_000_000_000), |_| {});
         }
         sim.run_to_completion();
-        let per = t0.elapsed().as_nanos() as f64 / 1e6;
+        let per = sw.elapsed_ns() as f64 / 1e6;
         println!("event schedule+fire: {per:.0} ns/event ({:.1}M events/s)", 1e3 / per);
     });
 
@@ -52,9 +53,9 @@ fn main() {
                 let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
                 fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
                 sim.run_until(SECONDS);
-                let t0 = std::time::Instant::now();
+                let sw = Stopwatch::new();
                 ClosedLoop::new("aes", n).run(&mut sim, &fs);
-                best = best.min(t0.elapsed().as_nanos() as f64 / n as f64);
+                best = best.min(sw.elapsed_ns() as f64 / n as f64);
                 events = sim.events_fired();
             }
             println!(
@@ -111,8 +112,8 @@ fn main() {
     });
 
     common::section("perf — fig5 driver wall time", || {
-        let t0 = std::time::Instant::now();
+        let sw = Stopwatch::new();
         let _ = ex::fig5_table(100, 1);
-        println!("fig5_table(100): {:.2}s wall", t0.elapsed().as_secs_f64());
+        println!("fig5_table(100): {:.2}s wall", sw.elapsed_secs());
     });
 }

@@ -10,8 +10,10 @@ use std::rc::Rc;
 
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
 use crate::faas::{Cluster, FaasSim, FunctionSpec, RuntimeKind, ScaleMode};
+use crate::hostclock::Stopwatch;
+use crate::invariants::{audit_all, Violation};
 use crate::junction::Scheduler;
-use crate::simcore::{Sim, Time, MICROS, SECONDS};
+use crate::simcore::{Sim, Time, MICROS, MILLIS, SECONDS};
 use crate::telemetry::{BlameReport, Cell, LatencySummary, Table, Trace, HOP_NAMES};
 use crate::workload::{ClosedLoop, OpenLoop, RunResult};
 
@@ -83,15 +85,29 @@ pub struct Fig5Result {
 }
 
 pub fn fig5_run(backend: Backend, invocations: u32, seed: u64) -> Fig5Result {
+    let (r, _violations) = fig5_run_audited(backend, invocations, seed);
+    debug_assert!(_violations.is_empty(), "fig5 left broken invariants: {_violations:?}");
+    r
+}
+
+/// [`fig5_run`] plus a full post-run invariant audit of the drained sim
+/// (E5's leg of `selfcheck` / `tests/invariants.rs`).
+pub fn fig5_run_audited(
+    backend: Backend,
+    invocations: u32,
+    seed: u64,
+) -> (Fig5Result, Vec<Violation>) {
     let cfg = standard_config(backend, seed);
     let (mut sim, fs) = warm_deployment(&cfg);
     let mut r = ClosedLoop::new("aes", invocations).run(&mut sim, &fs);
-    Fig5Result {
+    let violations = audit_all(&fs);
+    let result = Fig5Result {
         gateway: r.gateway_observed.summary(),
         exec: r.exec.summary(),
         gateway_cdf: r.gateway_observed.cdf(),
         exec_cdf: r.exec.cdf(),
-    }
+    };
+    (result, violations)
 }
 
 /// The Fig. 5 comparison table (plus the paper's claimed reductions).
@@ -600,38 +616,64 @@ pub fn netpath_cluster_run(
     rates
         .iter()
         .map(|&rate| {
-            let mut sim = Sim::new();
-            let mut cluster = Cluster::new(backend, n_workers, worker_cores, seed, compute_ns);
-            cluster.policy.max_replicas = n_workers as u32;
-            cluster.deploy(
-                &mut sim,
-                FunctionSpec::new("aes", "aes600", RuntimeKind::Go).with_scale(
-                    ScaleMode::MaxCores,
-                    PlatformConfig::default().junction_max_cores as u32,
-                ),
-            );
-            for _ in 1..n_workers {
-                cluster.scale_up(&mut sim, "aes");
-            }
-            sim.run_until(SECONDS); // past every cold start
-            let cluster = Rc::new(RefCell::new(cluster));
-            let gen = OpenLoop::new("aes", rate, duration, seed ^ (rate as u64));
-            let mut r: RunResult = gen.run_on(&mut sim, &cluster);
-            let (dropped, retries) = (r.dropped, r.retried);
-            NetPathPoint {
+            let (p, _violations) = netpath_point_audited(
                 backend,
-                offered_rps: rate,
-                goodput_rps: r.goodput_rps(),
-                p50: r.gateway_observed.quantile(0.5),
-                p99: r.gateway_observed.quantile(0.99),
-                nic_p50: r.nic_hop.quantile(0.5),
-                gw_p50: r.pre_exec.quantile(0.5),
-                exec_p50: r.exec.quantile(0.5),
-                dropped,
-                retries,
-            }
+                n_workers,
+                worker_cores,
+                compute_ns,
+                rate,
+                duration,
+                seed,
+            );
+            debug_assert!(_violations.is_empty(), "netpath broke invariants: {_violations:?}");
+            p
         })
         .collect()
+}
+
+/// One rate point of the cluster sweep, plus a full post-run cluster
+/// audit (E11's leg of `selfcheck` / `tests/invariants.rs`).
+pub fn netpath_point_audited(
+    backend: Backend,
+    n_workers: usize,
+    worker_cores: usize,
+    compute_ns: Time,
+    rate: f64,
+    duration: Time,
+    seed: u64,
+) -> (NetPathPoint, Vec<Violation>) {
+    let mut sim = Sim::new();
+    let mut cluster = Cluster::new(backend, n_workers, worker_cores, seed, compute_ns);
+    cluster.policy.max_replicas = n_workers as u32;
+    cluster.deploy(
+        &mut sim,
+        FunctionSpec::new("aes", "aes600", RuntimeKind::Go).with_scale(
+            ScaleMode::MaxCores,
+            PlatformConfig::default().junction_max_cores as u32,
+        ),
+    );
+    for _ in 1..n_workers {
+        cluster.scale_up(&mut sim, "aes");
+    }
+    sim.run_until(SECONDS); // past every cold start
+    let cluster = Rc::new(RefCell::new(cluster));
+    let gen = OpenLoop::new("aes", rate, duration, seed ^ (rate as u64));
+    let mut r: RunResult = gen.run_on(&mut sim, &cluster);
+    let (dropped, retries) = (r.dropped, r.retried);
+    let violations = audit_all(&*cluster.borrow());
+    let point = NetPathPoint {
+        backend,
+        offered_rps: rate,
+        goodput_rps: r.goodput_rps(),
+        p50: r.gateway_observed.quantile(0.5),
+        p99: r.gateway_observed.quantile(0.99),
+        nic_p50: r.nic_hop.quantile(0.5),
+        gw_p50: r.pre_exec.quantile(0.5),
+        exec_p50: r.exec.quantile(0.5),
+        dropped,
+        retries,
+    };
+    (point, violations)
 }
 
 /// The cluster-scale Fig. 6 table: both backends, per-hop breakdown and
@@ -762,7 +804,7 @@ pub fn density_scale_run(
     use crate::workload::PopulationLoop;
     assert!(hot_functions as u64 <= n_functions);
     let compute = PlatformConfig::default().function_compute_ns;
-    let wall_t0 = std::time::Instant::now();
+    let sw = Stopwatch::new();
     let mut sim = Sim::new();
     let engine = match sim.engine_kind() {
         crate::simcore::EngineKind::Wheel => "wheel",
@@ -795,7 +837,7 @@ pub fn density_scale_run(
     let cluster = Rc::new(RefCell::new(cluster));
     let driver = PopulationLoop::new(hot, rate_rps, duration, seed);
     let mut r = driver.run_on(&mut sim, &cluster);
-    let wall_secs = wall_t0.elapsed().as_secs_f64();
+    let wall_secs = sw.elapsed_secs();
     DensityPoint {
         backend,
         engine,
@@ -1139,6 +1181,28 @@ pub fn interference_run(
     duration: Time,
     seed: u64,
 ) -> InterferencePoint {
+    let (p, _violations) = interference_run_audited(
+        backend,
+        antagonists,
+        ant_rps_per_tenant,
+        ant_compute_ns,
+        duration,
+        seed,
+    );
+    debug_assert!(_violations.is_empty(), "interference broke invariants: {_violations:?}");
+    p
+}
+
+/// [`interference_run`] plus a full post-run invariant audit of the
+/// simulated node (E14's leg of `selfcheck` / `tests/invariants.rs`).
+pub fn interference_run_audited(
+    backend: Backend,
+    antagonists: u32,
+    ant_rps_per_tenant: f64,
+    ant_compute_ns: Time,
+    duration: Time,
+    seed: u64,
+) -> (InterferencePoint, Vec<Violation>) {
     let platform = Rc::new(PlatformConfig::default());
     assert_eq!(
         platform.residual_jitter, 0,
@@ -1186,7 +1250,8 @@ pub fn interference_run(
         );
     }
     let mut r = OpenLoop::new("lat", 400.0, duration, seed ^ 0x7A7).run(&mut sim, &fs);
-    InterferencePoint {
+    let violations = audit_all(&fs);
+    let point = InterferencePoint {
         backend,
         antagonists,
         ant_rps_per_tenant,
@@ -1195,7 +1260,8 @@ pub fn interference_run(
         p50: r.gateway_observed.quantile(0.5),
         p99: r.gateway_observed.quantile(0.99),
         fabric: fs.fabric_stats(),
-    }
+    };
+    (point, violations)
 }
 
 /// One link of an antagonist's Poisson arrival chain: submit at `t +
@@ -1309,6 +1375,18 @@ pub struct TailAttribution {
 /// Deterministic: platform-default compute (no PJRT), fixed seeds, and
 /// tracing itself adds no events and draws no randomness.
 pub fn tail_attribution_run(backend: Backend, duration: Time, seed: u64) -> TailAttribution {
+    let (t, _violations) = tail_attribution_run_audited(backend, duration, seed);
+    debug_assert!(_violations.is_empty(), "tail attribution broke invariants: {_violations:?}");
+    t
+}
+
+/// [`tail_attribution_run`] plus a full post-run invariant audit of the
+/// simulated node (E15's leg of `selfcheck` / `tests/invariants.rs`).
+pub fn tail_attribution_run_audited(
+    backend: Backend,
+    duration: Time,
+    seed: u64,
+) -> (TailAttribution, Vec<Violation>) {
     let platform = Rc::new(PlatformConfig::default());
     assert_eq!(
         platform.residual_jitter, 0,
@@ -1333,13 +1411,15 @@ pub fn tail_attribution_run(backend: Backend, duration: Time, seed: u64) -> Tail
     sim.run_until(SECONDS);
     let tracer = fs.enable_tracing(8);
     let r = OpenLoop::new("aes", 150_000.0, duration, seed ^ 0xE15).run(&mut sim, &fs);
-    TailAttribution {
+    let violations = audit_all(&fs);
+    let attribution = TailAttribution {
         backend,
         completed: r.completed,
         dropped: r.dropped,
         report: tracer.blame_report(),
         exemplars: tracer.exemplars(),
-    }
+    };
+    (attribution, violations)
 }
 
 /// The E15 table: per-hop share (%) of end-to-end latency at p50 and
@@ -1401,6 +1481,43 @@ pub fn multitenant_table(n_functions: u32, total_rps: f64, seed: u64) -> Table {
         ]);
     }
     t
+}
+
+// ---------------------------------------------------------------------------
+// Selfcheck — run the audit-bearing experiments and report every invariant
+// violation the runtime walkers find (CLI `selfcheck`, `tests/invariants.rs`,
+// CI detlint job).
+// ---------------------------------------------------------------------------
+
+/// One experiment leg of [`selfcheck`]: which scenario ran on which
+/// backend, and every invariant violation `audit_all` found afterwards
+/// (empty means the run left the runtime in a lawful quiesced state).
+pub struct SelfcheckReport {
+    pub scenario: &'static str,
+    pub backend: Backend,
+    pub violations: Vec<Violation>,
+}
+
+/// Run the four audit-bearing experiments (E5 closed loop, E11 cluster
+/// netpath, E14 interference, E15 tail attribution) on both backends and
+/// collect each run's post-quiesce invariant audit. This is the dynamic
+/// counterpart of `cargo xtask detlint`: the linter proves the *code*
+/// keeps its determinism discipline, `selfcheck` proves the *runtime*
+/// keeps its conservation laws.
+pub fn selfcheck(duration: Time, seed: u64) -> Vec<SelfcheckReport> {
+    let compute = PlatformConfig::default().function_compute_ns;
+    let mut reports = Vec::new();
+    for backend in [Backend::Containerd, Backend::Junctiond] {
+        let (_, v) = fig5_run_audited(backend, 40, seed);
+        reports.push(SelfcheckReport { scenario: "fig5", backend, violations: v });
+        let (_, v) = netpath_point_audited(backend, 2, 10, compute, 2000.0, duration, seed);
+        reports.push(SelfcheckReport { scenario: "netpath", backend, violations: v });
+        let (_, v) = interference_run_audited(backend, 4, 400.0, 2 * MILLIS, duration, seed);
+        reports.push(SelfcheckReport { scenario: "interference", backend, violations: v });
+        let (_, v) = tail_attribution_run_audited(backend, duration, seed);
+        reports.push(SelfcheckReport { scenario: "tail-blame", backend, violations: v });
+    }
+    reports
 }
 
 #[cfg(test)]

@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
+use crate::invariants::{check, AuditTree, Violation};
 use crate::junction::BypassCosts;
 use crate::netpath::{NicQueue, NicStats, Packet, TxStats};
 use crate::oskernel::KernelCosts;
@@ -586,6 +587,9 @@ impl Cluster {
                 }
             }
         }
+        // Reconciles are the cluster's quiesce points: debug builds
+        // re-prove every conservation law after the scaling churn.
+        crate::invariants::debug_quiesce(self);
     }
 
     /// Drive `reconcile` on the policy interval for `horizon` virtual
@@ -693,6 +697,36 @@ impl Cluster {
             in_flight: Rc::new(RefCell::new(0)),
         });
         i as u32
+    }
+}
+
+/// Cluster-wide invariant walk: every worker's full single-node audit,
+/// plus the front-end laws only the cluster can see — the frontend RX
+/// ring never sheds a held frame (`rx_dropped == 0`, backpressure is
+/// counted as `retries`), its ring conserves frames, and no worker's
+/// in-flight gauge goes negative.
+impl AuditTree for Cluster {
+    fn audit_tree(&self, out: &mut Vec<Violation>) {
+        for w in &self.workers {
+            w.sim_node.audit_tree(out);
+            let inflight = *w.in_flight.borrow();
+            check(out, "faas/cluster", "inflight-gauge", inflight >= 0, || {
+                format!("worker {} in-flight gauge is {inflight}", w.id)
+            });
+        }
+        let m = "faas/cluster";
+        let front = self.front_rx.borrow();
+        let s = front.nic.stats;
+        check(out, m, "front-rx-no-loss", s.rx_dropped == 0, || {
+            format!("front end dropped {} held response frames", s.rx_dropped)
+        });
+        let held = front.nic.len() as u64;
+        check(out, m, "front-rx-conservation", s.rx_enqueued == s.rx_delivered + held, || {
+            format!(
+                "front rx_enqueued {} != rx_delivered {} + ring depth {held}",
+                s.rx_enqueued, s.rx_delivered
+            )
+        });
     }
 }
 

@@ -32,6 +32,7 @@ use std::rc::Rc;
 
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
 use crate::containerd_sim::{ContainerId, ContainerState, Containerd};
+use crate::invariants::{check, Audit, AuditTree, Violation};
 use crate::junction::{BypassCosts, InstanceId};
 use crate::junctiond::Junctiond;
 use crate::netpath::{NicQueue, NicStats, Packet, TxQueue, TxStats};
@@ -678,6 +679,9 @@ impl FaasSim {
             slots
         };
         self.ttl_cancel(sim, slots);
+        // Sweeps are quiesce points: debug builds re-prove every
+        // conservation law after the teardown churn.
+        crate::invariants::debug_quiesce(self);
     }
 
     /// Evict *every* parked instance (bench helper: forces the next
@@ -692,6 +696,7 @@ impl FaasSim {
             slots
         };
         self.ttl_cancel(sim, slots);
+        crate::invariants::debug_quiesce(self);
     }
 
     /// Arm the per-slot idle-TTL eviction timer for a freshly-parked (or
@@ -1096,6 +1101,40 @@ impl FaasSim {
                 + w.bc_nic.msgs_recv
                 + w.bc_nic.msgs_sent,
         }
+    }
+}
+
+/// Whole-sim invariant walk: audit every owned component, then the
+/// cross-component ring-conservation laws only the world can see. Runs
+/// from `debug_quiesce` hooks, `experiments::selfcheck`, and the
+/// `tests/invariants.rs` conservation suite.
+impl AuditTree for FaasSim {
+    fn audit_tree(&self, out: &mut Vec<Violation>) {
+        let w = self.w.borrow();
+        w.jd.scheduler.audit_into(out);
+        w.jd.audit_into(out);
+        w.cores.audit_into(out);
+        w.pool.audit_into(out);
+        // Ring conservation: every frame a ring accepted was consumed or
+        // is still queued. Refused frames (rx_dropped, tx_stalled,
+        // tx_abandoned before enqueue) never increment the enqueue side.
+        let m = "faas/pipeline";
+        let rx = w.nic.stats;
+        let rx_held = w.nic.len() as u64;
+        check(out, m, "rx-ring-conservation", rx.rx_enqueued == rx.rx_delivered + rx_held, || {
+            format!(
+                "rx_enqueued {} != rx_delivered {} + ring depth {rx_held}",
+                rx.rx_enqueued, rx.rx_delivered
+            )
+        });
+        let tx = w.tx.stats;
+        let tx_held = w.tx.len() as u64;
+        check(out, m, "tx-ring-conservation", tx.tx_enqueued == tx.tx_packets + tx_held, || {
+            format!(
+                "tx_enqueued {} != tx_packets {} + ring depth {tx_held}",
+                tx.tx_enqueued, tx.tx_packets
+            )
+        });
     }
 }
 

@@ -1,0 +1,70 @@
+//! The one sanctioned seam between the deterministic simulation and the
+//! host: wall-clock stopwatches (bench reporting, serve-mode latency
+//! printouts, executor calibration) and environment reads (artifact
+//! paths, BENCH_QUICK toggles).
+//!
+//! Everything in this file is *observably nondeterministic* — that is
+//! the point of quarantining it. detlint's `wall_clock` lint (L2)
+//! forbids `std::time::Instant`, `SystemTime`, `thread_rng`, and
+//! `std::env::var` everywhere else in the crate, so the virtual timeline
+//! can never silently couple to host time, host entropy, or host
+//! configuration. Code that genuinely needs the host — measuring how
+//! long a bench took on this machine, or finding the artifacts dir —
+//! goes through these helpers, which keeps every such coupling greppable
+//! and reviewable in one place.
+//!
+//! Nothing here may feed values back into simulation state: a
+//! `Stopwatch` reading must only ever be *reported* (printed beside the
+//! virtual-time results), never used to schedule, order, or seed events.
+
+use std::time::Instant;
+
+/// A host-monotonic stopwatch for wall-clock reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now (host time).
+    pub fn new() -> Self {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Nanoseconds of host time since `new()`.
+    pub fn elapsed_ns(&self) -> u128 {
+        self.t0.elapsed().as_nanos()
+    }
+
+    /// Seconds of host time since `new()`.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Read an environment variable, or `None` if unset / non-UTF8. The only
+/// sanctioned env read in the crate; callers must not let the result
+/// alter simulation behavior for a fixed CLI invocation (artifact paths
+/// and bench-quick toggles change *what* runs, never event order).
+pub fn env_var(key: &str) -> Option<String> {
+    std::env::var(key).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotonic() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn env_var_reads_are_optional() {
+        assert!(env_var("JUNCTIOND_DETLINT_NO_SUCH_VAR").is_none());
+    }
+}

@@ -1,0 +1,167 @@
+//! The unified runtime invariant auditor.
+//!
+//! Every stateful component of the simulation carries conservation laws —
+//! cores are neither created nor destroyed, every submitted job is
+//! completed or queued or running, warm-pool memory accounting matches
+//! resident slots, every packet accepted by a ring is delivered or still
+//! in it. Historically each component enforced its own laws with bare
+//! `assert!`s inside a `check_invariants` method, invoked ad hoc from its
+//! own tests. This module unifies them behind one vocabulary:
+//!
+//! - [`Audit`]: one component, one `module` name, structured
+//!   [`Violation`]s instead of panic strings.
+//! - [`AuditTree`]: a whole-simulation walker (`FaasSim`, `Cluster`)
+//!   that audits every component it owns plus the cross-component laws
+//!   (ring conservation) that no single component can see.
+//! - [`audit_all`]: run a walker, collect everything.
+//! - [`debug_quiesce`]: the debug-build hook called at simulation
+//!   quiesce points (pool sweeps, cluster reconciles); compiled out of
+//!   release builds so the hot path stays unmeasured.
+//!
+//! The CLI exposes the same walker as `junctiond-repro selfcheck`, and
+//! `tests/invariants.rs` runs it after full E5/E11/E14/E15 experiments
+//! on both backends. detlint's `unaudited_stats` lint (L4) closes the
+//! loop: a `*Stats` struct that no audit or conservation test mentions
+//! fails the build.
+
+use std::fmt;
+
+/// One broken invariant: which component, which law, and the observed
+/// numbers. `rule` is a stable kebab-case identifier (catalogued in
+/// DESIGN.md §3g) so tests and CI logs can match on it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub module: &'static str,
+    pub rule: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.module, self.rule, self.detail)
+    }
+}
+
+/// A component with self-checkable conservation laws.
+pub trait Audit {
+    /// Stable component name (`"junction/scheduler"`, `"simcore/fabric"`…).
+    fn module(&self) -> &'static str;
+
+    /// Append every currently-broken law to `out`. Must not mutate the
+    /// component and must be safe to call at any externally-consistent
+    /// point (between events, not mid-transition).
+    fn audit_into(&self, out: &mut Vec<Violation>);
+
+    /// Collect this component's violations.
+    fn audit(&self) -> Vec<Violation> {
+        let mut out = Vec::new();
+        self.audit_into(&mut out);
+        out
+    }
+
+    /// Panic with every violation listed — the structured replacement for
+    /// the old bare-`assert!` `check_invariants` bodies.
+    fn assert_clean(&self) {
+        let v = self.audit();
+        if !v.is_empty() {
+            panic!("{} invariants violated:\n{}", self.module(), render(&v));
+        }
+    }
+}
+
+/// A simulation root that can audit every component it owns, plus the
+/// cross-component laws between them.
+pub trait AuditTree {
+    fn audit_tree(&self, out: &mut Vec<Violation>);
+}
+
+/// Audit a whole simulation; empty means every law holds.
+pub fn audit_all<T: AuditTree + ?Sized>(root: &T) -> Vec<Violation> {
+    let mut out = Vec::new();
+    root.audit_tree(&mut out);
+    out
+}
+
+/// Debug-build quiesce hook: a full-tree audit that panics on the first
+/// broken law. Compiled to nothing in release builds, so benches and the
+/// paper-figure runs pay zero cost.
+pub fn debug_quiesce<T: AuditTree + ?Sized>(root: &T) {
+    if cfg!(debug_assertions) {
+        let v = audit_all(root);
+        if !v.is_empty() {
+            panic!("quiesce audit failed:\n{}", render(&v));
+        }
+    }
+}
+
+/// Push a violation when `ok` is false. The detail closure keeps the
+/// happy path allocation-free.
+pub fn check<F: FnOnce() -> String>(
+    out: &mut Vec<Violation>,
+    module: &'static str,
+    rule: &'static str,
+    ok: bool,
+    detail: F,
+) {
+    if !ok {
+        out.push(Violation { module, rule, detail: detail() });
+    }
+}
+
+fn render(v: &[Violation]) -> String {
+    let lines: Vec<String> = v.iter().map(|v| format!("  {v}")).collect();
+    lines.join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Toy {
+        held: u64,
+        capacity: u64,
+    }
+
+    impl Audit for Toy {
+        fn module(&self) -> &'static str {
+            "toy"
+        }
+
+        fn audit_into(&self, out: &mut Vec<Violation>) {
+            check(out, self.module(), "held-capacity", self.held <= self.capacity, || {
+                format!("held {} > capacity {}", self.held, self.capacity)
+            });
+        }
+    }
+
+    impl AuditTree for Toy {
+        fn audit_tree(&self, out: &mut Vec<Violation>) {
+            self.audit_into(out);
+        }
+    }
+
+    #[test]
+    fn clean_component_audits_empty() {
+        let t = Toy { held: 1, capacity: 2 };
+        assert!(t.audit().is_empty());
+        t.assert_clean();
+        assert!(audit_all(&t).is_empty());
+        debug_quiesce(&t);
+    }
+
+    #[test]
+    fn broken_component_reports_structured_violation() {
+        let t = Toy { held: 3, capacity: 2 };
+        let v = t.audit();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].module, "toy");
+        assert_eq!(v[0].rule, "held-capacity");
+        assert!(v[0].detail.contains("3"));
+    }
+
+    #[test]
+    #[should_panic(expected = "held-capacity")]
+    fn assert_clean_panics_with_rule_name() {
+        Toy { held: 3, capacity: 2 }.assert_clean();
+    }
+}

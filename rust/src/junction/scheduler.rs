@@ -15,6 +15,7 @@
 
 use super::instance::{Instance, InstanceId, InstanceState};
 use crate::config::PlatformConfig;
+use crate::invariants::{check, Audit, Violation};
 use crate::simcore::Time;
 
 /// What happened when a packet arrived for an instance.
@@ -328,45 +329,75 @@ impl Scheduler {
     }
 
     /// Debug/test invariant check: grant accounting is consistent.
+    /// Thin wrapper over the structured [`Audit`] impl so the ~30
+    /// existing call sites keep their panic-on-drift semantics.
     pub fn check_invariants(&self) {
+        self.assert_clean();
+    }
+}
+
+/// Conservation laws of the core granter. `grants`/`releases` are the
+/// telemetry counters in [`SchedulerStats`]; everything else is direct
+/// structural accounting over instances and the free pool.
+impl Audit for Scheduler {
+    fn module(&self) -> &'static str {
+        "junction/scheduler"
+    }
+
+    fn audit_into(&self, out: &mut Vec<Violation>) {
+        let m = self.module();
         let sum: u32 = self.instances.iter().map(|i| i.granted_cores).sum();
-        assert_eq!(sum, self.granted_total, "granted core accounting drifted");
-        assert!(self.granted_total <= self.grantable_cores, "over-granted cores");
-        assert_eq!(
-            self.free_cores.len() as u32 + self.granted_total,
-            self.grantable_cores,
-            "physical core conservation drifted"
-        );
+        check(out, m, "granted-accounting", sum == self.granted_total, || {
+            format!("instances hold {sum} cores but granted_total is {}", self.granted_total)
+        });
+        check(out, m, "over-grant", self.granted_total <= self.grantable_cores, || {
+            format!("granted_total {} > grantable {}", self.granted_total, self.grantable_cores)
+        });
+        let free = self.free_cores.len() as u32;
+        check(out, m, "core-conservation", free + self.granted_total == self.grantable_cores, || {
+            format!(
+                "free {free} + granted {} != grantable {}",
+                self.granted_total, self.grantable_cores
+            )
+        });
         // Telemetry balance: every core ever granted was either released
         // (request_done or force_release) or is still held. Preemption
         // transfers a core without touching either counter.
-        assert_eq!(
-            self.stats.grants,
-            self.stats.releases + self.granted_total as u64,
-            "grant/release telemetry drifted"
-        );
+        let balanced = self.stats.grants == self.stats.releases + self.granted_total as u64;
+        check(out, m, "grant-release-telemetry", balanced, || {
+            format!(
+                "grants {} != releases {} + held {}",
+                self.stats.grants, self.stats.releases, self.granted_total
+            )
+        });
         let mut held: Vec<u32> = self.free_cores.clone();
         for inst in self.instances.iter() {
-            assert!(
-                inst.granted_cores <= inst.max_cores,
-                "instance {} over its core cap",
-                inst.name
-            );
-            assert_eq!(
-                inst.core_ids.len() as u32,
-                inst.granted_cores,
-                "instance {} physical cores drifted from its grant count",
-                inst.name
-            );
+            check(out, m, "core-cap", inst.granted_cores <= inst.max_cores, || {
+                format!(
+                    "instance {} holds {} cores over its cap {}",
+                    inst.name, inst.granted_cores, inst.max_cores
+                )
+            });
+            let mapped = inst.core_ids.len() as u32 == inst.granted_cores;
+            check(out, m, "core-map", mapped, || {
+                format!(
+                    "instance {} maps {} physical cores but records {} granted",
+                    inst.name,
+                    inst.core_ids.len(),
+                    inst.granted_cores
+                )
+            });
             held.extend(&inst.core_ids);
         }
         held.sort_unstable();
         held.dedup();
-        assert_eq!(
-            held.len() as u32,
-            self.grantable_cores,
-            "a physical core is double-granted or lost"
-        );
+        check(out, m, "core-uniqueness", held.len() as u32 == self.grantable_cores, || {
+            format!(
+                "{} distinct physical cores visible, expected {} (double-grant or loss)",
+                held.len(),
+                self.grantable_cores
+            )
+        });
     }
 }
 

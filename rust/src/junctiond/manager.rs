@@ -5,6 +5,7 @@ use std::rc::Rc;
 
 use crate::config::PlatformConfig;
 use crate::faas::{FunctionSpec, ScaleMode};
+use crate::invariants::{check, Audit, Violation};
 use crate::junction::{InstanceId, InstanceState, Scheduler};
 use crate::simcore::{Rng, Time};
 
@@ -356,6 +357,36 @@ impl Junctiond {
             ScaleMode::MultiProcess => inst.concurrency(1),
             ScaleMode::MaxCores => inst.max_cores.min(self.platform.junction_max_cores as u32),
             ScaleMode::IsolatedInstances => 1,
+        }
+    }
+}
+
+/// Referential-integrity laws of the function manager: the function
+/// index and the network-config map may only point at instances the
+/// scheduler actually knows. (Parked instances leave `functions` but
+/// keep their config; retired instances keep their registration but lose
+/// the config — both directions are one-way inclusions, not bijections.)
+impl Audit for Junctiond {
+    fn module(&self) -> &'static str {
+        "junctiond/manager"
+    }
+
+    fn audit_into(&self, out: &mut Vec<Violation>) {
+        let m = self.module();
+        for (name, ids) in &self.functions {
+            for &id in ids {
+                check(out, m, "function-map", self.scheduler.instance(id).is_some(), || {
+                    format!("function {name} lists instance {id} unknown to the scheduler")
+                });
+                check(out, m, "function-map", self.configs.contains_key(&id), || {
+                    format!("function {name} instance {id} has no network config")
+                });
+            }
+        }
+        for id in self.configs.keys() {
+            check(out, m, "config-map", self.scheduler.instance(*id).is_some(), || {
+                format!("network config held for instance {id} unknown to the scheduler")
+            });
         }
     }
 }

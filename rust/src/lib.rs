@@ -38,6 +38,8 @@ pub mod config;
 pub mod containerd_sim;
 pub mod experiments;
 pub mod faas;
+pub mod hostclock;
+pub mod invariants;
 pub mod junction;
 pub mod junctiond;
 pub mod netpath;

@@ -9,13 +9,14 @@
 //!                           [--hot N] [--rate RPS] [--duration-ms MS] [--seed S]
 //! junctiond-repro serve     --mode kernel|bypass [--requests N]
 //! junctiond-repro calibrate [--runs N]
+//! junctiond-repro selfcheck [--duration-ms MS] [--seed S]
 //! junctiond-repro monitor
 //! ```
 //!
 //! (Hand-rolled argument parsing: the crates.io registry is offline in
 //! this environment, so no clap.)
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
@@ -25,8 +26,8 @@ use junctiond_repro::server::{run_pipeline, ServeMode};
 use junctiond_repro::simcore::MILLIS;
 use junctiond_repro::telemetry::write_csv;
 
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
-    let mut flags = HashMap::new();
+fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
+    let mut flags = BTreeMap::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
@@ -41,7 +42,7 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     Ok(flags)
 }
 
-fn get_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> Result<u64> {
+fn get_u64(flags: &BTreeMap<String, String>, key: &str, default: u64) -> Result<u64> {
     flags
         .get(key)
         .map(|v| v.parse::<u64>().with_context(|| format!("--{key} '{v}' is not a number")))
@@ -49,7 +50,7 @@ fn get_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> Result<u
 }
 
 fn maybe_csv(
-    flags: &HashMap<String, String>,
+    flags: &BTreeMap<String, String>,
     table: &junctiond_repro::telemetry::Table,
     name: &str,
 ) -> Result<()> {
@@ -63,7 +64,8 @@ fn maybe_csv(
 
 fn usage() -> ! {
     eprintln!(
-        "usage: junctiond-repro <fig5|fig6|coldstart|ablation|density|serve|calibrate|monitor> [flags]\n\
+        "usage: junctiond-repro \
+         <fig5|fig6|coldstart|ablation|density|serve|calibrate|selfcheck|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
          --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|\
          interference|blame\n\
@@ -308,10 +310,12 @@ fn main() -> Result<()> {
             for _ in 0..5 {
                 h.invoke_aes600(&payload)?; // warmup
             }
+            // Wall-clock latency through the sanctioned hostclock seam
+            // (serve mode measures the real pipeline, not the DES).
             for _ in 0..n {
-                let t0 = std::time::Instant::now();
+                let sw = junctiond_repro::hostclock::Stopwatch::new();
                 h.invoke_aes600(&payload)?;
-                lat.record(t0.elapsed().as_nanos() as u64);
+                lat.record(sw.elapsed_ns() as u64);
             }
             h.shutdown()?;
             println!("serve mode={} {}", mode.name(), lat.summary().fmt_us());
@@ -329,6 +333,34 @@ fn main() -> Result<()> {
                 c.min_ns / 1000,
                 c.runs
             );
+        }
+        "selfcheck" => {
+            // Run the unified invariant auditor (invariants::audit_all)
+            // after full E5/E11/E14/E15 experiments on both backends —
+            // the release-build twin of the debug quiesce hooks, and the
+            // CI gate next to the same-seed byte diff.
+            let dur = get_u64(&flags, "duration-ms", 120)? * MILLIS;
+            let seed = get_u64(&flags, "seed", 17)?;
+            let reports = ex::selfcheck(dur, seed);
+            let mut broken = 0usize;
+            for r in &reports {
+                if r.violations.is_empty() {
+                    println!("selfcheck {:>12} {:<10} ok", r.scenario, r.backend.name());
+                } else {
+                    broken += r.violations.len();
+                    for v in &r.violations {
+                        println!(
+                            "selfcheck {:>12} {:<10} VIOLATION {v}",
+                            r.scenario,
+                            r.backend.name()
+                        );
+                    }
+                }
+            }
+            if broken > 0 {
+                bail!("selfcheck: {broken} invariant violation(s)");
+            }
+            println!("selfcheck: all invariants hold across {} runs", reports.len());
         }
         "monitor" => {
             // Demonstrate junctiond's monitoring endpoint on a toy deployment.

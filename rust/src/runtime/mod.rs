@@ -23,8 +23,10 @@ pub use executor::{calibrate, ArgSig, Calibration, Executor, FunctionArtifact};
 
 /// Default artifacts directory, relative to the repo root.
 pub fn default_artifacts_dir() -> std::path::PathBuf {
-    // Honor an override for tests / relocated builds.
-    if let Ok(dir) = std::env::var("JUNCTIOND_ARTIFACTS") {
+    // Honor an override for tests / relocated builds, through the one
+    // sanctioned environment seam (it picks *which* catalog loads; it
+    // never reaches simulation state).
+    if let Some(dir) = crate::hostclock::env_var("JUNCTIOND_ARTIFACTS") {
         return dir.into();
     }
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")

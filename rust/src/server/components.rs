@@ -14,7 +14,7 @@
 //! logic is identical — only the transport differs, which is exactly the
 //! paper's point.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
 use std::thread::JoinHandle;
 
@@ -90,8 +90,9 @@ fn proxy_loop(
 ) {
     // Provider metadata cache stand-in: function name → hit count. The
     // real resolve logic lives in the DES (`faas::Provider`); here it is
-    // per-request bookkeeping on the same code path.
-    let mut cache: HashMap<String, u64> = HashMap::new();
+    // per-request bookkeeping on the same code path. Ordered map: any
+    // future dump of this cache must not depend on hash order.
+    let mut cache: BTreeMap<String, u64> = BTreeMap::new();
     loop {
         let Ok(Some(frame)) = up_rx.recv_frame() else { break };
         let Ok(msg) = Message::decode(&frame) else { break };

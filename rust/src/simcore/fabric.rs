@@ -59,6 +59,8 @@ use std::rc::Rc;
 use super::engine::{Sim, Time, TimerHandle};
 use super::resource::{JobFn, RefJob, RefState};
 
+use crate::invariants::{check, Audit, Violation};
+
 /// Which engine a [`ComputeFabric`] runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FabricKind {
@@ -998,36 +1000,67 @@ impl ComputeFabric {
     /// Debug/test invariants: per-core busy time sums to the total, job
     /// accounting conserves, and no job runs on capacity that does not
     /// exist (`busy <= cores`, counting reserved cores only while they
-    /// drain the job they held at reservation time).
+    /// drain the job they held at reservation time). Thin wrapper over
+    /// the structured [`Audit`] impl.
     pub fn check_invariants(&self) {
+        self.assert_clean();
+    }
+}
+
+/// Conservation laws of the compute fabric, checked against whichever
+/// engine backs it. The totals here are the same counters exported as
+/// [`FabricStats`] by `stats()`.
+impl Audit for ComputeFabric {
+    fn module(&self) -> &'static str {
+        "simcore/fabric"
+    }
+
+    fn audit_into(&self, out: &mut Vec<Violation>) {
+        let m = self.module();
         let inner = self.inner.borrow();
         match &inner.engine {
             Engine::PerCore(pc) => {
                 let per_core: u64 = pc.cores.iter().map(|c| c.busy_ns).sum();
-                assert_eq!(per_core, pc.busy_ns, "per-core busy_ns drifted from the total");
+                check(out, m, "busy-total", per_core == pc.busy_ns, || {
+                    format!("per-core busy_ns sums to {per_core}, total says {}", pc.busy_ns)
+                });
                 let starts: u64 = pc.cores.iter().map(|c| c.jobs_run).sum();
-                assert_eq!(starts, pc.jobs_run, "per-core job starts drifted from the total");
+                check(out, m, "jobs-run-total", starts == pc.jobs_run, || {
+                    format!("per-core job starts sum to {starts}, total says {}", pc.jobs_run)
+                });
                 let preempts: u64 = pc.cores.iter().map(|c| c.preemptions).sum();
-                assert_eq!(preempts, pc.preemptions, "per-core preemptions drifted");
+                check(out, m, "preemption-total", preempts == pc.preemptions, || {
+                    format!("per-core preemptions sum to {preempts}, total {}", pc.preemptions)
+                });
                 let running = pc.cores.iter().filter(|c| c.running.is_some()).count() as u64;
-                assert_eq!(
-                    pc.jobs_submitted,
-                    pc.jobs_completed + running + pc.waiting as u64,
-                    "job accounting drifted"
-                );
+                let held = running + pc.waiting as u64;
+                let conserved = pc.jobs_submitted == pc.jobs_completed + held;
+                check(out, m, "job-conservation", conserved, || {
+                    format!(
+                        "submitted {} != completed {} + running {running} + waiting {}",
+                        pc.jobs_submitted, pc.jobs_completed, pc.waiting
+                    )
+                });
                 let busy_unreserved =
                     pc.cores.iter().filter(|c| !c.reserved && c.running.is_some()).count();
-                assert!(
-                    busy_unreserved <= pc.unreserved(),
-                    "more jobs running than schedulable cores"
-                );
+                check(out, m, "overcommit", busy_unreserved <= pc.unreserved(), || {
+                    format!(
+                        "{busy_unreserved} jobs running on {} schedulable cores",
+                        pc.unreserved()
+                    )
+                });
             }
             Engine::Reference(r) => {
-                assert_eq!(
-                    r.jobs_submitted,
-                    r.jobs_completed + r.busy as u64 + r.queue.len() as u64,
-                    "reference job accounting drifted"
-                );
+                let held = r.busy as u64 + r.queue.len() as u64;
+                check(out, m, "job-conservation", r.jobs_submitted == r.jobs_completed + held, || {
+                    format!(
+                        "submitted {} != completed {} + busy {} + queued {}",
+                        r.jobs_submitted,
+                        r.jobs_completed,
+                        r.busy,
+                        r.queue.len()
+                    )
+                });
             }
         }
     }

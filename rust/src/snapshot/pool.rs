@@ -24,6 +24,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::PlatformConfig;
+use crate::invariants::{check, Audit, Violation};
 use crate::simcore::Time;
 
 pub type SlotId = usize;
@@ -316,26 +317,55 @@ impl WarmPool {
         matches!(self.slots[id].state, SlotState::InUse)
     }
 
-    /// Accounting invariants (called from tests and debug paths).
+    /// Accounting invariants (called from tests and debug paths). Thin
+    /// wrapper over the structured [`Audit`] impl.
     pub fn check_invariants(&self) {
+        self.assert_clean();
+    }
+}
+
+/// Conservation laws of the warm pool: memory accounting matches the
+/// resident slots, the warm index only points at warm slots filed under
+/// the right function, and the restoring list only holds restorations in
+/// flight. [`PoolStats`] eviction counters are bounded by admissions in
+/// `tests/invariants.rs`.
+impl Audit for WarmPool {
+    fn module(&self) -> &'static str {
+        "snapshot/pool"
+    }
+
+    fn audit_into(&self, out: &mut Vec<Violation>) {
+        let m = self.module();
         let resident: u64 = self
             .slots
             .iter()
             .filter(|s| matches!(s.state, SlotState::Warm | SlotState::Restoring { .. }))
             .map(|s| s.mem_bytes)
             .sum();
-        assert_eq!(resident, self.mem_in_use, "pool memory accounting drifted");
+        check(out, m, "pool-mem", resident == self.mem_in_use, || {
+            format!("resident slots hold {resident} bytes, mem_in_use says {}", self.mem_in_use)
+        });
         for (function, q) in &self.warm {
             for &id in q {
-                assert_eq!(self.slots[id].state, SlotState::Warm, "non-warm slot in warm queue");
-                assert_eq!(&self.slots[id].function, function, "slot filed under wrong function");
+                let warm = self.slots[id].state == SlotState::Warm;
+                check(out, m, "warm-queue", warm, || {
+                    let state = self.slots[id].state;
+                    format!("slot {id} in the warm queue for {function} is {state:?}")
+                });
+                let filed = &self.slots[id].function == function;
+                check(out, m, "warm-queue", filed, || {
+                    format!(
+                        "slot {id} filed under {function} but belongs to {}",
+                        self.slots[id].function
+                    )
+                });
             }
         }
         for &id in &self.restoring {
-            assert!(
-                matches!(self.slots[id].state, SlotState::Restoring { .. }),
-                "stale restoring entry"
-            );
+            let restoring = matches!(self.slots[id].state, SlotState::Restoring { .. });
+            check(out, m, "restoring", restoring, || {
+                format!("restoring list holds slot {id} in state {:?}", self.slots[id].state)
+            });
         }
     }
 }

@@ -1,0 +1,11 @@
+// Fixture: trips `unordered_container` (L1) and nothing else.
+// Not compiled by cargo — tests/ subdirectories are not test targets;
+// detlint lexes it in fixture mode (every file classed as a sim module).
+
+use std::collections::HashMap;
+
+pub fn instance_table() -> HashMap<u32, u64> {
+    let mut m = HashMap::new();
+    m.insert(1, 10);
+    m
+}

@@ -1,0 +1,15 @@
+// Fixture: trips `wall_clock` (L2) four ways and nothing else.
+
+use std::time::Instant;
+
+pub fn leak_host_state() -> u64 {
+    let t0 = Instant::now();
+    let _boot = std::time::SystemTime::now();
+    let _cfg = std::env::var("JUNCTIOND_SECRET_KNOB");
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn leak_entropy() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.next_u64()
+}

@@ -1,0 +1,23 @@
+// Fixture: trips `raw_event_key` (L3) both ways and nothing else.
+
+use std::collections::BinaryHeap;
+
+pub struct Deadline {
+    pub at: f64,
+}
+
+impl PartialOrd for Deadline {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.at.partial_cmp(&other.at)
+    }
+}
+
+impl Ord for Deadline {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+pub fn pending() -> BinaryHeap<(f64, u64)> {
+    BinaryHeap::new()
+}

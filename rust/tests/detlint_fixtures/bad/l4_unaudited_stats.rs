@@ -1,0 +1,11 @@
+// Fixture: trips `unaudited_stats` (L4) and nothing else — a public
+// counter block that no conservation test or audit body ever reads.
+
+pub struct OrphanStats {
+    pub enqueued: u64,
+    pub delivered: u64,
+}
+
+pub fn bump(s: &mut OrphanStats) {
+    s.enqueued += 1;
+}

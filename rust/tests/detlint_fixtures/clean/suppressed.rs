@@ -1,0 +1,27 @@
+// Fixture: every would-be violation carries a reasoned suppression, so
+// detlint must report nothing. Exercises both placements (same line,
+// line above) for each lint that fires in fixture mode.
+
+// detlint:allow(unordered_container, keys are drained sorted before any output)
+use std::collections::HashMap;
+
+pub fn scratch() {
+    // detlint:allow(unordered_container, scratch map, populated and dropped, never iterated)
+    let mut m = HashMap::new();
+    m.insert(1u32, 1u64);
+    let _ = m;
+}
+
+pub fn wall_report() -> u64 {
+    let t0 = std::time::Instant::now(); // detlint:allow(wall_clock, host-side report only)
+    t0.elapsed().as_nanos() as u64
+}
+
+// detlint:allow(raw_event_key, not an event key; total order is over plain u64)
+impl Ord for Pair {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.cmp(&other.0)
+    }
+}
+
+pub struct Pair(pub u64, pub u64);

@@ -1,0 +1,390 @@
+//! A minimal Rust lexer for detlint.
+//!
+//! Just enough of the language to walk a source file as a stream of
+//! identifier / punctuation tokens with line numbers, with comments and
+//! string / char literals stripped so a lint never fires on prose, and
+//! with `// detlint:allow(<lint>, reason)` suppression comments collected
+//! as structured directives.
+//!
+//! Deliberately dependency-free: the offline environment that builds this
+//! repo has no crates.io registry, so a `syn`-based AST pass is not an
+//! option. The lint rules in `lints.rs` are designed to need only
+//! token-level matching plus balanced-bracket skips, which this lexer
+//! provides. Handled here: line and (nested) block comments, string
+//! literals with escapes, raw and byte strings (`r"…"`, `r#"…"#`,
+//! `b"…"`, `br"…"`), byte chars, char-literal vs lifetime
+//! disambiguation, raw identifiers (`r#fn`), and `::` as a joined token.
+
+/// One surviving token: an identifier / keyword / number, a `::`, or a
+/// single punctuation character.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub text: String,
+    pub line: u32,
+}
+
+/// A well-formed `// detlint:allow(<lint>, reason)` directive.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub lint: String,
+    pub line: u32,
+}
+
+/// Result of lexing one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<Allow>,
+    /// Malformed suppression attempts: `(line, message)`. Always errors —
+    /// a suppression that silently fails to parse would hide violations.
+    pub bad_allows: Vec<(u32, String)>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + suppression directives. Never fails: unknown
+/// bytes become single-character punctuation tokens, and an unterminated
+/// literal simply consumes to end of file (rustc will reject the file
+/// anyway; detlint only needs to not panic or mis-tokenize what follows).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0;
+    let mut line: u32 = 1;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+            let comment: String = chars[start..i].iter().collect();
+            if !is_doc_comment(&comment) {
+                scan_allow(&comment, line, &mut out);
+            }
+        } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let (start, start_line) = (i, line);
+            i += 2;
+            let mut depth = 1u32;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            let comment: String = chars[start..i.min(chars.len())].iter().collect();
+            if !is_doc_comment(&comment) {
+                scan_allow(&comment, start_line, &mut out);
+            }
+        } else if c == '"' {
+            i = skip_string(&chars, i, &mut line);
+        } else if c == '\'' {
+            i = skip_char_or_lifetime(&chars, i);
+        } else if is_ident_start(c) {
+            i = lex_word(&chars, i, &mut line, &mut out);
+        } else if c.is_ascii_digit() {
+            // Numbers are consumed loosely (digits, letters, `_`, `.`) so
+            // suffixed literals like `1.0f64` never shed an `f64` ident.
+            let start = i;
+            while i < chars.len() && (is_ident_continue(chars[i]) || chars[i] == '.') {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            out.tokens.push(Token { text, line });
+        } else if c == ':' && chars.get(i + 1) == Some(&':') {
+            out.tokens.push(Token { text: "::".to_string(), line });
+            i += 2;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else {
+            out.tokens.push(Token { text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Lex something that starts like an identifier: a plain ident, a raw
+/// identifier (`r#fn`), or a raw / byte string or byte-char literal
+/// (`r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'x'`). Returns the index just
+/// past whatever was consumed.
+fn lex_word(chars: &[char], i: usize, line: &mut u32, out: &mut Lexed) -> usize {
+    let c = chars[i];
+    if c == 'r' || c == 'b' {
+        // Candidate literal prefix: `r`, `b`, or `br`, then `#`s, then `"`.
+        let mut j = i + 1;
+        let mut raw = c == 'r';
+        if c == 'b' && chars.get(j) == Some(&'r') {
+            raw = true;
+            j += 1;
+        }
+        let mut hashes = 0usize;
+        while chars.get(j + hashes) == Some(&'#') {
+            hashes += 1;
+        }
+        if chars.get(j + hashes) == Some(&'"') {
+            if raw {
+                return skip_raw_string(chars, j + hashes + 1, hashes, line);
+            }
+            if hashes == 0 && j == i + 1 {
+                // b"…" — escapes behave like a normal string.
+                return skip_string(chars, j, line);
+            }
+        }
+        if c == 'b' && j == i + 1 && hashes == 0 && chars.get(j) == Some(&'\'') {
+            return skip_char_or_lifetime(chars, j);
+        }
+        if c == 'r' && hashes >= 1 && chars.get(j + hashes).copied().is_some_and(is_ident_start) {
+            // Raw identifier r#ident: emit the bare ident.
+            let start = j + hashes;
+            let mut k = start;
+            while k < chars.len() && is_ident_continue(chars[k]) {
+                k += 1;
+            }
+            let text: String = chars[start..k].iter().collect();
+            out.tokens.push(Token { text, line: *line });
+            return k;
+        }
+    }
+    let start = i;
+    let mut k = i;
+    while k < chars.len() && is_ident_continue(chars[k]) {
+        k += 1;
+    }
+    let text: String = chars[start..k].iter().collect();
+    out.tokens.push(Token { text, line: *line });
+    k
+}
+
+/// Skip a `"…"` literal with escapes; `i` points at the opening quote.
+fn skip_string(chars: &[char], i: usize, line: &mut u32) -> usize {
+    let mut k = i + 1;
+    while k < chars.len() {
+        match chars[k] {
+            '\\' => k += 2,
+            '"' => return k + 1,
+            '\n' => {
+                *line += 1;
+                k += 1;
+            }
+            _ => k += 1,
+        }
+    }
+    k
+}
+
+/// Skip a raw string body; `start` points just past the opening quote,
+/// and the literal closes at `"` followed by `hashes` `#`s.
+fn skip_raw_string(chars: &[char], start: usize, hashes: usize, line: &mut u32) -> usize {
+    let mut k = start;
+    while k < chars.len() {
+        if chars[k] == '\n' {
+            *line += 1;
+        } else if chars[k] == '"' {
+            let mut h = 0;
+            while h < hashes && chars.get(k + 1 + h) == Some(&'#') {
+                h += 1;
+            }
+            if h == hashes {
+                return k + 1 + hashes;
+            }
+        }
+        k += 1;
+    }
+    k
+}
+
+/// `i` points at a `'`: either a char literal (skipped) or a lifetime
+/// (consumed without emitting — lints never key on lifetimes).
+fn skip_char_or_lifetime(chars: &[char], i: usize) -> usize {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            // Escape: consume quote + backslash + escaped char, then scan
+            // to the closing quote (covers \u{…}).
+            let mut k = i + 3;
+            while k < chars.len() && chars[k] != '\'' {
+                k += 1;
+            }
+            k + 1
+        }
+        Some(&c) if is_ident_continue(c) => {
+            if chars.get(i + 2) == Some(&'\'') {
+                i + 3 // 'x'
+            } else {
+                // Lifetime: consume the ident and move on.
+                let mut k = i + 2;
+                while k < chars.len() && is_ident_continue(chars[k]) {
+                    k += 1;
+                }
+                k
+            }
+        }
+        Some(_) => {
+            // Punctuation char literal like '(' — defensively scan for
+            // the closing quote.
+            let mut k = i + 2;
+            while k < chars.len() && chars[k] != '\'' {
+                k += 1;
+            }
+            k + 1
+        }
+        None => i + 1,
+    }
+}
+
+/// Doc comments are rendered prose, never directives: they may quote the
+/// suppression grammar without tripping the malformed-allow check (this
+/// very crate's docs do). A real suppression must be a plain comment.
+fn is_doc_comment(comment: &str) -> bool {
+    comment.starts_with("///")
+        || comment.starts_with("//!")
+        || comment.starts_with("/**")
+        || comment.starts_with("/*!")
+}
+
+/// Parse every `detlint:allow(lint, reason)` occurrence inside one
+/// comment. The lint name must be a known snake_case word and the reason
+/// must be nonempty — both checked later against the lint registry; here
+/// we only enforce shape.
+fn scan_allow(comment: &str, line: u32, out: &mut Lexed) {
+    let needle = "detlint:allow";
+    let mut rest = comment;
+    while let Some(p) = rest.find(needle) {
+        let after = &rest[p + needle.len()..];
+        let Some(body) = after.strip_prefix('(') else {
+            out.bad_allows
+                .push((line, "detlint:allow must be written detlint:allow(lint, reason)".into()));
+            rest = after;
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            out.bad_allows.push((line, "unclosed detlint:allow(".into()));
+            return;
+        };
+        match body[..close].split_once(',') {
+            Some((lint, reason)) => {
+                let lint = lint.trim();
+                let reason = reason.trim().trim_matches('"').trim();
+                if lint.is_empty() || !lint.chars().all(|c| c.is_ascii_lowercase() || c == '_') {
+                    out.bad_allows
+                        .push((line, format!("bad lint name {lint:?} in detlint:allow")));
+                } else if reason.is_empty() {
+                    out.bad_allows
+                        .push((line, format!("detlint:allow({lint}, …) requires a reason")));
+                } else {
+                    out.allows.push(Allow { lint: lint.to_string(), line });
+                }
+            }
+            None => {
+                out.bad_allows
+                    .push((line, "detlint:allow(lint) is missing the required reason".into()));
+            }
+        }
+        rest = &body[close..];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = "let x = \"Instant::now()\"; // Instant in prose\n/* HashMap */ let y = 1;";
+        let toks = texts(src);
+        assert!(!toks.iter().any(|t| t == "Instant"));
+        assert!(!toks.iter().any(|t| t == "HashMap"));
+        assert!(toks.iter().any(|t| t == "y"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_stripped() {
+        let src = "let a = r#\"SystemTime \" quoted\"#; let b = b\"thread_rng\"; let c = br\"x\";";
+        let toks = texts(src);
+        assert!(!toks.iter().any(|t| t == "SystemTime" || t == "thread_rng"));
+        assert!(toks.iter().any(|t| t == "c"));
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals() {
+        let toks = texts("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(toks.iter().any(|t| t == "str"));
+        assert!(toks.iter().any(|t| t == "char"));
+        let toks = texts(r"let q = '\''; let z = 3;");
+        assert!(toks.iter().any(|t| t == "z"));
+    }
+
+    #[test]
+    fn numeric_suffixes_do_not_shed_idents() {
+        let toks = texts("let t = 1.0f64; let u = 0x10u64;");
+        assert!(!toks.iter().any(|t| t == "f64"));
+        assert!(toks.iter().any(|t| t == "1.0f64"));
+    }
+
+    #[test]
+    fn double_colon_is_one_token() {
+        let toks = texts("std::time::Instant::now()");
+        assert_eq!(toks, vec!["std", "::", "time", "::", "Instant", "::", "now", "(", ")"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = texts("/* outer /* inner */ still comment */ let z = 1;");
+        assert_eq!(toks[0], "let");
+    }
+
+    #[test]
+    fn allow_directives_parse() {
+        let l = lex("// detlint:allow(wall_clock, bench wall-clock reporting)\nlet t = 1;");
+        assert_eq!(l.allows.len(), 1);
+        assert_eq!(l.allows[0].lint, "wall_clock");
+        assert_eq!(l.allows[0].line, 1);
+        assert!(l.bad_allows.is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_malformed() {
+        let l = lex("// detlint:allow(wall_clock)\nlet t = 1;");
+        assert!(l.allows.is_empty());
+        assert_eq!(l.bad_allows.len(), 1);
+        let l = lex("// detlint:allow(wall_clock,   )\nlet t = 1;");
+        assert!(l.allows.is_empty());
+        assert_eq!(l.bad_allows.len(), 1);
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let toks = texts("let r#fn = 1;");
+        assert!(toks.iter().any(|t| t == "fn"));
+    }
+
+    #[test]
+    fn doc_comments_may_quote_the_grammar() {
+        let l = lex("/// write `// detlint:allow(<lint>, reason)` above the line\nlet t = 1;");
+        assert!(l.allows.is_empty());
+        assert!(l.bad_allows.is_empty(), "{:?}", l.bad_allows);
+        let l = lex("//! plus the `detlint:allow` suppression protocol\nlet t = 1;");
+        assert!(l.bad_allows.is_empty(), "{:?}", l.bad_allows);
+    }
+}

@@ -1,0 +1,10 @@
+//! xtask — repo automation for junctiond-repro.
+//!
+//! The one subcommand today is `detlint` (see `lints`): a static
+//! determinism-and-conservation pass over the crate, run in CI next to
+//! the dynamic same-seed byte-diff. Library form so the fixture tests in
+//! `xtask/tests/` can drive the linter in-process.
+
+pub mod lexer;
+pub mod lints;
+pub mod scan;

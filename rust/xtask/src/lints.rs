@@ -1,0 +1,505 @@
+//! The detlint rules: four determinism / conservation lints over the
+//! token streams produced by `lexer`, plus the `detlint:allow`
+//! suppression protocol.
+//!
+//! - `unordered_container` (L1): no `HashMap` / `HashSet` in simulation
+//!   modules — iteration order is randomized per process, so any order
+//!   that reaches simulation state or output breaks same-seed
+//!   byte-identical runs.
+//! - `wall_clock` (L2): no `Instant` / `SystemTime` / `thread_rng` /
+//!   environment reads outside the `hostclock` seam — the virtual
+//!   timeline must never observe the host.
+//! - `raw_event_key` (L3): event ordering must go through the derived
+//!   `(time, seq)` `EventKey` — hand-written `Ord` impls and float-keyed
+//!   heaps in simulation modules are flagged.
+//! - `unaudited_stats` (L4): every `pub struct *Stats` must be named by
+//!   at least one conservation test or `check_invariants` / `audit` body,
+//!   so a counter can't drift without a test noticing.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use crate::lexer::{Lexed, Token};
+
+pub const LINT_NAMES: [&str; 4] =
+    ["unordered_container", "wall_clock", "raw_event_key", "unaudited_stats"];
+
+/// How a file participates in the analysis; decided by `scan` from its
+/// path (repo layout) or forced by fixture mode.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FileClass {
+    /// Simulation module: L1 and L3 apply.
+    pub sim: bool,
+    /// The one allowlisted host seam (`src/hostclock.rs`): L2 exempt.
+    pub hostclock: bool,
+    /// `pub struct *Stats` definitions here must be audited (L4).
+    pub stats_defs: bool,
+    /// The whole file counts as audited context for L4 (tests, benches).
+    pub audited: bool,
+}
+
+/// One lexed source file ready for analysis.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path as reported in diagnostics (relative to the crate root).
+    pub path: PathBuf,
+    pub class: FileClass,
+    pub lexed: Lexed,
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: PathBuf,
+    pub line: u32,
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file.display(), self.line, self.lint, self.msg)
+    }
+}
+
+/// Run every lint over `files` and apply suppressions. Returned
+/// violations are sorted by (file, line, lint) and deduplicated per line
+/// so one `HashMap<K, V> = HashMap::new()` line reports once.
+pub fn run(files: &[SourceFile]) -> Vec<Violation> {
+    let mut raw: Vec<Violation> = Vec::new();
+    for sf in files {
+        lint_unordered_container(sf, &mut raw);
+        lint_wall_clock(sf, &mut raw);
+        lint_raw_event_key(sf, &mut raw);
+    }
+    lint_unaudited_stats(files, &mut raw);
+
+    let mut out: Vec<Violation> = Vec::new();
+    let mut seen: BTreeSet<(PathBuf, u32, &'static str)> = BTreeSet::new();
+    for sf in files {
+        // An allow suppresses a violation on its own line or on the line
+        // directly below it (comment-above style). Unused allows are
+        // violations themselves: a stale suppression is a trap.
+        let mut used = vec![false; sf.lexed.allows.len()];
+        for v in raw.iter().filter(|v| v.file == sf.path) {
+            let mut suppressed = false;
+            for (ai, a) in sf.lexed.allows.iter().enumerate() {
+                if a.lint == v.lint && (a.line == v.line || a.line + 1 == v.line) {
+                    used[ai] = true;
+                    suppressed = true;
+                }
+            }
+            if !suppressed && seen.insert((v.file.clone(), v.line, v.lint)) {
+                out.push(v.clone());
+            }
+        }
+        for (ai, a) in sf.lexed.allows.iter().enumerate() {
+            if !LINT_NAMES.contains(&a.lint.as_str()) {
+                out.push(Violation {
+                    file: sf.path.clone(),
+                    line: a.line,
+                    lint: "bad_allow",
+                    msg: format!("unknown lint {:?} in detlint:allow", a.lint),
+                });
+            } else if !used[ai] {
+                out.push(Violation {
+                    file: sf.path.clone(),
+                    line: a.line,
+                    lint: "unused_allow",
+                    msg: format!("detlint:allow({}) suppresses nothing here", a.lint),
+                });
+            }
+        }
+        for (line, msg) in &sf.lexed.bad_allows {
+            out.push(Violation {
+                file: sf.path.clone(),
+                line: *line,
+                lint: "bad_allow",
+                msg: msg.clone(),
+            });
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    out
+}
+
+/// L1: randomized-order containers in simulation modules.
+fn lint_unordered_container(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if !sf.class.sim {
+        return;
+    }
+    for t in &sf.lexed.tokens {
+        if t.text == "HashMap" || t.text == "HashSet" {
+            out.push(Violation {
+                file: sf.path.clone(),
+                line: t.line,
+                lint: "unordered_container",
+                msg: format!(
+                    "{} in a simulation module: iteration order is per-process random and \
+                     breaks same-seed determinism; use BTreeMap/BTreeSet or an indexed Vec",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// L2: host clock / entropy / environment reads outside `hostclock`.
+fn lint_wall_clock(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if sf.class.hostclock {
+        return;
+    }
+    let toks = &sf.lexed.tokens;
+    let mut push = |line: u32, what: &str| {
+        out.push(Violation {
+            file: sf.path.clone(),
+            line,
+            lint: "wall_clock",
+            msg: format!(
+                "{what} outside the hostclock seam: the virtual timeline must not observe \
+                 the host; route through crate::hostclock (bench wall-clock reporting only)"
+            ),
+        });
+    };
+    for (i, t) in toks.iter().enumerate() {
+        match t.text.as_str() {
+            "Instant" => push(t.line, "std::time::Instant"),
+            "SystemTime" => push(t.line, "std::time::SystemTime"),
+            "thread_rng" => push(t.line, "thread_rng (nondeterministic entropy)"),
+            "rand" if toks.get(i + 1).map(|n| n.text.as_str()) == Some("::") => {
+                push(t.line, "the rand crate (nondeterministic entropy)");
+            }
+            "env" => {
+                // std::env::var / var_os / vars / vars_os are host state;
+                // env::args (CLI input) and the compile-time env! macro
+                // are fine.
+                let nx = toks.get(i + 1).map(|n| n.text.as_str());
+                let nx2 = toks.get(i + 2).map(|n| n.text.as_str());
+                if nx == Some("::")
+                    && matches!(nx2, Some("var" | "var_os" | "vars" | "vars_os"))
+                {
+                    push(t.line, "an environment read");
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// L3: hand-rolled ordering in simulation modules — `impl Ord /
+/// PartialOrd for …` and float-keyed `BinaryHeap`s. The derived
+/// `(time, seq)` `EventKey` is the only sanctioned event order.
+fn lint_raw_event_key(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if !sf.class.sim {
+        return;
+    }
+    let toks = &sf.lexed.tokens;
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text == "impl" {
+            let mut j = i + 1;
+            if toks.get(j).map(|t| t.text.as_str()) == Some("<") {
+                j = skip_angle_brackets(toks, j);
+            }
+            if let Some(t) = toks.get(j) {
+                if (t.text == "Ord" || t.text == "PartialOrd")
+                    && toks.get(j + 1).map(|n| n.text.as_str()) == Some("for")
+                {
+                    out.push(Violation {
+                        file: sf.path.clone(),
+                        line: t.line,
+                        lint: "raw_event_key",
+                        msg: format!(
+                            "hand-written {} impl in a simulation module: event ordering must \
+                             use the derived (time, seq) EventKey, not ad-hoc comparisons",
+                            t.text
+                        ),
+                    });
+                }
+            }
+        } else if toks[i].text == "BinaryHeap"
+            && toks.get(i + 1).map(|t| t.text.as_str()) == Some("<")
+        {
+            let end = skip_angle_brackets(toks, i + 1);
+            if toks[i + 1..end.min(toks.len())]
+                .iter()
+                .any(|t| t.text == "f64" || t.text == "f32")
+            {
+                out.push(Violation {
+                    file: sf.path.clone(),
+                    line: toks[i].line,
+                    lint: "raw_event_key",
+                    msg: "float-keyed BinaryHeap in a simulation module: floats have no total \
+                          order and ties are seed-visible; key events by the derived (time, seq) \
+                          EventKey"
+                        .to_string(),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Skip a balanced `<…>` region starting at the `<` at index `open`;
+/// returns the index just past the matching `>`.
+fn skip_angle_brackets(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = open;
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "<" => depth += 1,
+            ">" => {
+                depth -= 1;
+                if depth <= 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+/// L4: every `pub struct *Stats` definition must be referenced — by type
+/// name or snake_case name — inside audited context: a test file, a
+/// bench, a `#[cfg(test)]` region, or the body of a `check_invariants` /
+/// `audit` / `audit_into` / `audit_tree` fn.
+fn lint_unaudited_stats(files: &[SourceFile], out: &mut Vec<Violation>) {
+    let mut defs: Vec<(PathBuf, u32, String)> = Vec::new();
+    for sf in files {
+        if !sf.class.stats_defs {
+            continue;
+        }
+        let toks = &sf.lexed.tokens;
+        for i in 0..toks.len() {
+            if toks[i].text == "pub"
+                && toks.get(i + 1).map(|t| t.text.as_str()) == Some("struct")
+            {
+                if let Some(name) = toks.get(i + 2) {
+                    if name.text.ends_with("Stats") {
+                        defs.push((sf.path.clone(), name.line, name.text.clone()));
+                    }
+                }
+            }
+        }
+    }
+    if defs.is_empty() {
+        return;
+    }
+
+    let mut audited: BTreeSet<String> = BTreeSet::new();
+    for sf in files {
+        collect_audited(sf, &mut audited);
+    }
+
+    for (file, line, name) in defs {
+        let snake = snake_case(&name);
+        if !audited.contains(&name) && !audited.contains(&snake) {
+            out.push(Violation {
+                file,
+                line,
+                lint: "unaudited_stats",
+                msg: format!(
+                    "pub struct {name} is not referenced by any conservation test or \
+                     check_invariants/audit impl; counters that nothing checks drift silently"
+                ),
+            });
+        }
+    }
+}
+
+/// Gather the audited-context token set from one file.
+fn collect_audited(sf: &SourceFile, audited: &mut BTreeSet<String>) {
+    let toks = &sf.lexed.tokens;
+    if sf.class.audited {
+        for t in toks {
+            audited.insert(t.text.clone());
+        }
+        return;
+    }
+    // #[cfg(test)] to end of file. An approximation of module scope, but
+    // in this crate the test module is always the tail of the file, and
+    // widening the audited region only ever errs toward acceptance.
+    let mut i = 0;
+    while i + 4 < toks.len() {
+        if toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+        {
+            for t in &toks[i..] {
+                audited.insert(t.text.clone());
+            }
+            break;
+        }
+        i += 1;
+    }
+    // Bodies of invariant-auditing fns.
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if toks[i].text == "fn"
+            && matches!(
+                toks[i + 1].text.as_str(),
+                "check_invariants" | "audit" | "audit_into" | "audit_tree"
+            )
+        {
+            let mut k = i + 2;
+            while k < toks.len() && toks[k].text != "{" {
+                k += 1;
+            }
+            let mut depth = 0i32;
+            while k < toks.len() {
+                match toks[k].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                audited.insert(toks[k].text.clone());
+                k += 1;
+            }
+            i = k;
+        }
+        i += 1;
+    }
+}
+
+fn snake_case(name: &str) -> String {
+    let mut s = String::new();
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_uppercase() {
+            if i > 0 {
+                s.push('_');
+            }
+            s.push(c.to_ascii_lowercase());
+        } else {
+            s.push(c);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn file(path: &str, class: FileClass, src: &str) -> SourceFile {
+        SourceFile { path: PathBuf::from(path), class, lexed: lex(src) }
+    }
+
+    fn sim() -> FileClass {
+        FileClass { sim: true, stats_defs: true, ..FileClass::default() }
+    }
+
+    #[test]
+    fn l1_fires_only_in_sim_modules() {
+        let src = "use std::collections::HashMap;\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].lint, "unordered_container");
+        assert_eq!(v[0].line, 1);
+        let v = run(&[file("xtask/src/x.rs", FileClass::default(), src)]);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn l2_fires_everywhere_except_hostclock() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        let v = run(&[file("src/runtime/executor.rs", FileClass::default(), src)]);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].lint, "wall_clock");
+        let hc = FileClass { hostclock: true, ..FileClass::default() };
+        assert!(run(&[file("src/hostclock.rs", hc, src)]).is_empty());
+    }
+
+    #[test]
+    fn l2_env_reads_but_not_args_or_macro() {
+        let v = run(&[file("a.rs", FileClass::default(), "std::env::var(\"X\");\n")]);
+        assert_eq!(v.len(), 1);
+        let v = run(&[file(
+            "a.rs",
+            FileClass::default(),
+            "std::env::args().skip(1);\nlet d = env!(\"CARGO_MANIFEST_DIR\");\n",
+        )]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn l2_matches_exact_idents_only() {
+        let v = run(&[file("a.rs", FileClass::default(), "struct InstantTarget; fn f() {}\n")]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn l3_manual_ord_and_float_heaps() {
+        let src = "impl Ord for Key { }\nimpl<T> PartialOrd for K2<T> { }\n";
+        let v = run(&[file("src/simcore/x.rs", sim(), src)]);
+        assert_eq!(v.len(), 2);
+        assert!(v.iter().all(|v| v.lint == "raw_event_key"));
+        let v = run(&[file("src/simcore/x.rs", sim(), "let h: BinaryHeap<(f64, u64)>;\n")]);
+        assert_eq!(v.len(), 1);
+        // Derived ordering is fine.
+        let v = run(&[file(
+            "src/simcore/x.rs",
+            sim(),
+            "#[derive(PartialOrd, Ord)]\nstruct EventKey(u64, u64);\n",
+        )]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn l4_requires_an_audited_reference() {
+        let def = file("src/faas/x.rs", sim(), "pub struct FooStats { pub n: u64 }\n");
+        let v = run(&[def]);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].lint, "unaudited_stats");
+
+        let def = file("src/faas/x.rs", sim(), "pub struct FooStats { pub n: u64 }\n");
+        let test_file = file(
+            "tests/conservation.rs",
+            FileClass { audited: true, ..FileClass::default() },
+            "fn t() { let s: FooStats = todo!(); }\n",
+        );
+        assert!(run(&[def, test_file]).is_empty());
+    }
+
+    #[test]
+    fn l4_snake_case_reference_counts() {
+        let src = "pub struct FooStats { pub n: u64 }\n\
+                   fn check_invariants(foo_stats: &FooStats2) { let _ = foo_stats; }\n";
+        // The body of check_invariants mentions foo_stats → FooStats is
+        // considered audited via its snake_case name.
+        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn allows_suppress_and_must_be_used() {
+        let src = "// detlint:allow(unordered_container, ordered before output)\n\
+                   use std::collections::HashMap;\n";
+        assert!(run(&[file("src/faas/x.rs", sim(), src)]).is_empty());
+
+        let src = "// detlint:allow(unordered_container, stale)\nlet x = 1;\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].lint, "unused_allow");
+
+        let src = "// detlint:allow(no_such_lint, whatever)\nlet x = 1;\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].lint, "bad_allow");
+    }
+
+    #[test]
+    fn same_line_duplicates_collapse() {
+        let src = "let m: HashMap<u32, u32> = HashMap::new();\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        assert_eq!(v.len(), 1);
+    }
+}

@@ -1,0 +1,62 @@
+//! `cargo xtask <cmd>` — see the alias in `rust/.cargo/config.toml`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::{lints, scan};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("detlint") => detlint(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo xtask detlint [--path DIR]");
+            eprintln!();
+            eprintln!("  detlint          lint the repo for determinism/conservation hazards");
+            eprintln!("  detlint --path D lint every .rs under D as if it were a sim module");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn detlint(args: &[String]) -> ExitCode {
+    let mut path: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--path" => match it.next() {
+                Some(p) => path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("detlint: --path needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("detlint: unknown flag {other:?}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let files = match &path {
+        Some(dir) => scan::collect_dir(dir),
+        None => scan::collect_repo(&scan::crate_root()),
+    };
+    let files = match files {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let violations = lints::run(&files);
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("detlint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("detlint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,117 @@
+//! File collection + classification for detlint.
+//!
+//! Repo mode walks the crate the way CI builds it: `src/**`, `tests/*.rs`
+//! (minus the deliberately-bad `detlint_fixtures`), `benches/**`, and
+//! `xtask/src/**`. Fixture mode (`--path DIR`) walks one directory and
+//! treats every file as a simulation module with stats definitions, so a
+//! fixture snippet can trip any lint without replicating the repo layout.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::lex;
+use crate::lints::{FileClass, SourceFile};
+
+/// The modules whose state or output is part of the simulation timeline;
+/// L1/L3 apply here. Mirrors the list in ISSUE/DESIGN §3g.
+pub const SIM_MODULES: [&str; 8] = [
+    "simcore",
+    "faas",
+    "netpath",
+    "junction",
+    "junctiond",
+    "snapshot",
+    "workload",
+    "telemetry",
+];
+
+/// Crate root (`rust/`), derived from xtask's own manifest dir so the
+/// lint runs from any working directory.
+pub fn crate_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask sits inside rust/").to_path_buf()
+}
+
+/// Collect + lex every analyzable file of the repo rooted at `root`.
+pub fn collect_repo(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    walk(&root.join("src"), &mut |p| {
+        load(root, p, classify_src(root, p), &mut files);
+    })?;
+    walk(&root.join("tests"), &mut |p| {
+        if !p.components().any(|c| c.as_os_str() == "detlint_fixtures") {
+            let class = FileClass { audited: true, ..FileClass::default() };
+            load(root, p, class, &mut files);
+        }
+    })?;
+    walk(&root.join("benches"), &mut |p| {
+        let class = FileClass { audited: true, ..FileClass::default() };
+        load(root, p, class, &mut files);
+    })?;
+    walk(&root.join("xtask").join("src"), &mut |p| {
+        load(root, p, FileClass::default(), &mut files);
+    })?;
+    Ok(files)
+}
+
+/// Fixture mode: every `.rs` under `dir`, each treated as a simulation
+/// module with stats definitions so all four lints are live.
+pub fn collect_dir(dir: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    walk(dir, &mut |p| {
+        let class = FileClass { sim: true, stats_defs: true, ..FileClass::default() };
+        load(dir, p, class, &mut files);
+    })?;
+    if files.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("no .rs files under {}", dir.display()),
+        ));
+    }
+    Ok(files)
+}
+
+fn classify_src(root: &Path, p: &Path) -> FileClass {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    let mut parts = rel.components().skip(1); // skip "src"
+    let first = parts.next().map(|c| c.as_os_str().to_string_lossy().into_owned());
+    let Some(first) = first else {
+        return FileClass { stats_defs: true, ..FileClass::default() };
+    };
+    let module = first.trim_end_matches(".rs");
+    FileClass {
+        sim: SIM_MODULES.contains(&module),
+        hostclock: rel == Path::new("src/hostclock.rs"),
+        stats_defs: true,
+        audited: false,
+    }
+}
+
+fn load(base: &Path, p: &Path, class: FileClass, files: &mut Vec<SourceFile>) {
+    let src = match std::fs::read_to_string(p) {
+        Ok(s) => s,
+        Err(_) => return, // non-UTF8 or vanished; rustc will complain, not us
+    };
+    let shown = p.strip_prefix(base).unwrap_or(p).to_path_buf();
+    files.push(SourceFile { path: shown, class, lexed: lex(&src) });
+}
+
+/// Depth-first walk over `.rs` files in sorted order (read_dir order is
+/// platform-dependent; diagnostics must be stable).
+fn walk(dir: &Path, f: &mut dyn FnMut(&Path)) -> io::Result<()> {
+    if !dir.exists() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, f)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            f(&p);
+        }
+    }
+    Ok(())
+}

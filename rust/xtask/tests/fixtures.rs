@@ -1,0 +1,89 @@
+//! Fixture-driven end-to-end tests for detlint: every bad snippet trips
+//! exactly its lint at the expected lines, every clean snippet (used
+//! suppressions, covered stats) reports nothing, and the repo itself is
+//! clean — the same invocation CI gates on.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use xtask::lints::{self, Violation};
+use xtask::scan;
+
+fn fixture_dir(kind: &str) -> std::path::PathBuf {
+    scan::crate_root().join("tests").join("detlint_fixtures").join(kind)
+}
+
+fn lint_lines(violations: &[Violation], file: &str) -> (BTreeSet<&'static str>, BTreeSet<u32>) {
+    let mut lints = BTreeSet::new();
+    let mut lines = BTreeSet::new();
+    for v in violations.iter().filter(|v| v.file == Path::new(file)) {
+        lints.insert(v.lint);
+        lines.insert(v.line);
+    }
+    (lints, lines)
+}
+
+#[test]
+fn bad_fixtures_each_trip_exactly_their_lint() {
+    let files = scan::collect_dir(&fixture_dir("bad")).expect("bad fixtures present");
+    let v = lints::run(&files);
+
+    let (lints, lines) = lint_lines(&v, "l1_unordered_container.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["unordered_container"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [5, 7, 8]);
+
+    let (lints, lines) = lint_lines(&v, "l2_wall_clock.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["wall_clock"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [3, 6, 7, 8, 13]);
+
+    let (lints, lines) = lint_lines(&v, "l3_raw_event_key.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["raw_event_key"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [9, 15, 21]);
+
+    let (lints, lines) = lint_lines(&v, "l4_unaudited_stats.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["unaudited_stats"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [4]);
+
+    // Nothing beyond the four fixture files, and every violation renders
+    // as a clickable file:line diagnostic.
+    assert_eq!(v.len(), 12, "{v:#?}");
+    for violation in &v {
+        let s = violation.to_string();
+        let expect =
+            format!("{}:{}: {}:", violation.file.display(), violation.line, violation.lint);
+        assert!(s.starts_with(&expect), "diagnostic {s:?} lacks file:line prefix");
+    }
+}
+
+#[test]
+fn clean_fixtures_report_nothing() {
+    let files = scan::collect_dir(&fixture_dir("clean")).expect("clean fixtures present");
+    let v = lints::run(&files);
+    assert!(v.is_empty(), "clean fixtures must lint clean, got:\n{v:#?}");
+}
+
+#[test]
+fn unused_and_malformed_allows_are_violations() {
+    let dir = fixture_dir("clean");
+    let mut files = scan::collect_dir(&dir).expect("clean fixtures present");
+    // Append a synthetic fixture in-memory: a stale allow and a reasonless
+    // one must each surface rather than rot silently.
+    let src = "// detlint:allow(wall_clock, stale)\nlet x = 1;\n// detlint:allow(wall_clock)\n";
+    files.push(xtask::lints::SourceFile {
+        path: "synthetic.rs".into(),
+        class: Default::default(),
+        lexed: xtask::lexer::lex(src),
+    });
+    let v = lints::run(&files);
+    let (lints, lines) = lint_lines(&v, "synthetic.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["bad_allow", "unused_allow"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [1, 3]);
+}
+
+#[test]
+fn repo_is_detlint_clean() {
+    let files = scan::collect_repo(&scan::crate_root()).expect("repo readable");
+    assert!(files.len() > 30, "repo walk looks truncated: {} files", files.len());
+    let v = lints::run(&files);
+    assert!(v.is_empty(), "the repo must hold its own discipline, got:\n{v:#?}");
+}
