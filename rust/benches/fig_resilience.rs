@@ -1,0 +1,118 @@
+//! Bench E16: the resilience matrix — seeded fault schedules (instance
+//! and worker crashes, gray failure, wire loss, brownout) against the
+//! recovery machinery (per-invocation deadlines with cross-replica
+//! retry, quantile-derived hedging, health ejection, admission-control
+//! brownout).
+//!
+//! Asserts the fault plane's conservation law on every leg (submitted ==
+//! completed + dropped + timed_out, with the full invariant audit clean
+//! under an active schedule), and the paper-facing shape: crash recovery
+//! restores from snapshot rather than cold-booting — so the bypass
+//! backend re-provisions orders of magnitude faster than the kernel
+//! backend — and hedged requests defend the gray-failure p99 that
+//! health ejection cannot see (nothing fails, everything slows).
+
+mod common;
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::simcore::MILLIS;
+
+fn main() {
+    let duration = if common::quick() { 60 * MILLIS } else { 300 * MILLIS };
+
+    common::section("E16 — resilience matrix under seeded fault schedules", || {
+        let (table, points) = ex::resilience_table(duration, 2);
+        println!("{}", table.to_markdown());
+
+        let mut checks = common::Checks::new();
+        let find = |b: Backend, s: &str| {
+            points.iter().find(|p| p.backend == b && p.scenario == s).expect("point")
+        };
+
+        // Conservation: every leg resolves every submission exactly once,
+        // and the whole audit tree (cluster, workers, fault plane) is
+        // lawful after the run.
+        let conserved = points.iter().all(|p| p.conserved() && p.completed > 0);
+        checks.check(
+            "submitted == completed + dropped + timed_out on every leg",
+            conserved,
+            format!("{} legs", points.len()),
+        );
+        let audited = points.iter().all(|p| p.violations.is_empty());
+        checks.check(
+            "invariant audit clean under every fault schedule",
+            audited,
+            format!(
+                "{} violations",
+                points.iter().map(|p| p.violations.len()).sum::<usize>()
+            ),
+        );
+
+        // Crash recovery: both backends pay a re-provision, and the
+        // bypass snapshot restore beats the kernel backend's.
+        let jc = find(Backend::Junctiond, "crash+loss");
+        let cc = find(Backend::Containerd, "crash+loss");
+        checks.check(
+            "crashes pay a real re-provision on both backends",
+            jc.recovery_ns > 0 && cc.recovery_ns > 0,
+            format!("{}µs / {}µs", jc.recovery_ns / 1_000, cc.recovery_ns / 1_000),
+        );
+        checks.check(
+            "bypass crash recovery beats kernel crash recovery",
+            jc.recovery_ns < cc.recovery_ns,
+            format!(
+                "{}µs vs {}µs ({:.1}×)",
+                jc.recovery_ns / 1_000,
+                cc.recovery_ns / 1_000,
+                cc.recovery_ns as f64 / jc.recovery_ns.max(1) as f64
+            ),
+        );
+
+        // Gray failure: hedging is the only defence (nothing fails, so
+        // ejection never triggers) and it must win ≥2× on the p99.
+        let ratio = |b: Backend| {
+            let off = find(b, "gray").p99 as f64;
+            let on = find(b, "gray+hedge").p99.max(1) as f64;
+            off / on
+        };
+        let (rj, rc) = (ratio(Backend::Junctiond), ratio(Backend::Containerd));
+        checks.check(
+            "hedging wins ≥2× on the bypass gray-failure p99",
+            rj >= 2.0,
+            format!("{rj:.1}×"),
+        );
+        checks.check(
+            "hedging improves the kernel gray-failure p99",
+            rc > 1.0,
+            format!("{rc:.1}×"),
+        );
+        let hedged = points
+            .iter()
+            .filter(|p| p.scenario == "gray+hedge")
+            .all(|p| p.hedge_wins > 0);
+        checks.check(
+            "hedged duplicates actually win requests",
+            hedged,
+            format!(
+                "{} wins",
+                points.iter().map(|p| p.hedge_wins).sum::<u64>()
+            ),
+        );
+
+        // Brownout: with half the pool down, admission control sheds
+        // Batch-class work at the door on both backends.
+        let shed = [Backend::Containerd, Backend::Junctiond]
+            .iter()
+            .all(|&b| find(b, "brownout").shed_batch > 0);
+        checks.check(
+            "brownout sheds Batch work below the healthy-capacity watermark",
+            shed,
+            format!(
+                "{} shed",
+                points.iter().map(|p| p.shed_batch).sum::<u64>()
+            ),
+        );
+        checks.finish();
+    });
+}

@@ -190,6 +190,37 @@ pub struct PlatformConfig {
     /// Max cores junctiond configures per function instance (§3 scale-up:
     /// uProc threads across granted cores / multi-process).
     pub junction_max_cores: Time,
+
+    // ---- fault plane / recovery (E16; every knob defaults off) ----
+    /// Per-invocation deadline at the cluster frontend. 0 disables the
+    /// whole recovery path (deadline, retry, hedging, health routing,
+    /// brownout): the off position draws no randomness and schedules no
+    /// events, so faults-off runs stay byte-identical to pre-fault-plane
+    /// output (DESIGN.md §3h).
+    pub deadline_timeout_ns: Time,
+    /// Failed attempts retried against a *different* replica before the
+    /// deadline resolves the request as timed out.
+    pub deadline_max_retries: Time,
+    /// Base backoff before a failed attempt retries on another replica;
+    /// jittered (decorrelated) from the cluster's seeded fault stream.
+    pub deadline_retry_backoff_ns: Time,
+    /// Hedged requests: duplicate a still-pending invocation to a second
+    /// replica once it has waited past this quantile (1/10000, e.g.
+    /// 9500 = p95) of recently observed response times. 0 = off.
+    pub hedge_quantile_bp: Time,
+    /// Consecutive failed attempts on one worker before the health
+    /// checker ejects it from routing. 0 = never eject.
+    pub fault_health_fail_threshold: Time,
+    /// How long an ejected worker stays out of routing.
+    pub fault_health_eject_ns: Time,
+    /// Admission-control brownout watermark (1/10000 of workers
+    /// healthy): below it, Batch-class submissions are shed at the
+    /// frontend so interactive work keeps the surviving capacity. 0 = off.
+    pub fault_brownout_watermark_bp: Time,
+    /// 0/1 flag: decorrelated jitter on the netpath RX retransmit and TX
+    /// re-offer backoffs (seeded, deterministic) instead of the paper's
+    /// constant backoff.
+    pub nic_retry_jitter: Time,
 }
 
 impl Default for PlatformConfig {
@@ -261,6 +292,15 @@ impl Default for PlatformConfig {
 
             container_concurrency: 1,
             junction_max_cores: 8,
+
+            deadline_timeout_ns: 0,
+            deadline_max_retries: 0,
+            deadline_retry_backoff_ns: 0,
+            hedge_quantile_bp: 0,
+            fault_health_fail_threshold: 0,
+            fault_health_eject_ns: 0,
+            fault_brownout_watermark_bp: 0,
+            nic_retry_jitter: 0,
         }
     }
 }
@@ -340,6 +380,14 @@ impl PlatformConfig {
             kernel_interference_max_ns,
             container_concurrency,
             junction_max_cores,
+            deadline_timeout_ns,
+            deadline_max_retries,
+            deadline_retry_backoff_ns,
+            hedge_quantile_bp,
+            fault_health_fail_threshold,
+            fault_health_eject_ns,
+            fault_brownout_watermark_bp,
+            nic_retry_jitter,
         );
         cfg.validate()?;
         Ok(cfg)
@@ -404,6 +452,12 @@ impl PlatformConfig {
         );
         anyhow::ensure!(self.residual_jitter <= 1, "residual_jitter is a 0/1 flag");
         anyhow::ensure!(self.sched_steal <= 1, "sched_steal is a 0/1 flag");
+        anyhow::ensure!(self.hedge_quantile_bp <= 10_000, "hedge_quantile_bp is in 1/10000");
+        anyhow::ensure!(
+            self.fault_brownout_watermark_bp <= 10_000,
+            "fault_brownout_watermark_bp is in 1/10000"
+        );
+        anyhow::ensure!(self.nic_retry_jitter <= 1, "nic_retry_jitter is a 0/1 flag");
         Ok(())
     }
 }

@@ -11,7 +11,7 @@ use std::rc::Rc;
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
 use crate::faas::{Cluster, FaasSim, FunctionSpec, RuntimeKind, ScaleMode};
 use crate::hostclock::Stopwatch;
-use crate::invariants::{audit_all, Violation};
+use crate::invariants::{audit_all, Audit, Violation};
 use crate::junction::Scheduler;
 use crate::simcore::{Sim, Time, MICROS, MILLIS, SECONDS};
 use crate::telemetry::{BlameReport, Cell, LatencySummary, Table, Trace, HOP_NAMES};
@@ -1484,6 +1484,234 @@ pub fn multitenant_table(n_functions: u32, total_rps: f64, seed: u64) -> Table {
 }
 
 // ---------------------------------------------------------------------------
+// E16 — resilience matrix: seeded fault schedules vs the recovery machinery
+// (deadlines + cross-replica retry, hedging, health ejection, brownout)
+// ---------------------------------------------------------------------------
+
+/// One leg of the E16 resilience matrix: a fault scenario on one backend,
+/// with the request-conservation ledger, the recovery-machinery counters,
+/// and the post-run invariant audit.
+#[derive(Debug, Clone)]
+pub struct ResiliencePoint {
+    pub backend: Backend,
+    pub scenario: &'static str,
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub timed_out: u64,
+    pub failed: u64,
+    pub hedge_wins: u64,
+    pub retries_other: u64,
+    pub shed_batch: u64,
+    pub wire_lost: u64,
+    pub ejections: u64,
+    pub p50: Time,
+    pub p99: Time,
+    /// Worst re-provision latency any crash in the scenario paid through
+    /// the tier ladder (0 for crash-free scenarios).
+    pub recovery_ns: Time,
+    pub violations: Vec<Violation>,
+}
+
+impl ResiliencePoint {
+    /// The fault-plane conservation law: every submitted request resolves
+    /// exactly once — completed, dropped (incl. failed/shed), or timed out.
+    pub fn conserved(&self) -> bool {
+        self.submitted == self.completed + self.dropped + self.timed_out
+    }
+}
+
+/// The recovery-machinery platform for E16: per-invocation deadlines with
+/// cross-replica retry, jittered NIC backoff, and health ejection.
+/// `hedge_bp` 0 disables hedging; 5000 hedges at the observed median.
+fn resilience_platform(hedge_bp: u64) -> Rc<PlatformConfig> {
+    Rc::new(PlatformConfig {
+        deadline_timeout_ns: 50 * MILLIS,
+        deadline_max_retries: 3,
+        deadline_retry_backoff_ns: 20 * MICROS,
+        hedge_quantile_bp: hedge_bp,
+        fault_health_fail_threshold: 5,
+        fault_health_eject_ns: 5 * MILLIS,
+        nic_retry_jitter: 1,
+        ..PlatformConfig::default()
+    })
+}
+
+/// Offered load per backend: well below each backend's saturation knee so
+/// the matrix measures fault response, not overload responses.
+fn resilience_rate(backend: Backend) -> f64 {
+    match backend {
+        Backend::Containerd => 4_000.0,
+        Backend::Junctiond => 16_000.0,
+    }
+}
+
+/// Two-worker cluster with `aes` scaled to both workers, warmed past
+/// every cold start (which also captures the snapshots crash recovery
+/// restores from).
+fn resilience_cluster(
+    backend: Backend,
+    seed: u64,
+    platform: Rc<PlatformConfig>,
+) -> (Sim, Rc<RefCell<Cluster>>) {
+    let compute = platform.function_compute_ns;
+    let mut sim = Sim::new();
+    let mut c = Cluster::new_with_platform(backend, 2, 10, seed, compute, platform);
+    c.policy.max_replicas = 2;
+    c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+    c.scale_up(&mut sim, "aes");
+    sim.run_until(SECONDS);
+    (sim, Rc::new(RefCell::new(c)))
+}
+
+fn resilience_point(
+    backend: Backend,
+    scenario: &'static str,
+    r: &mut RunResult,
+    cluster: &Rc<RefCell<Cluster>>,
+    faults: &Rc<RefCell<crate::faultplane::FaultStats>>,
+) -> ResiliencePoint {
+    let cl = cluster.borrow();
+    let rec = cl.recovery_stats();
+    let fs = *faults.borrow();
+    let mut violations = audit_all(&*cl);
+    fs.audit_into(&mut violations);
+    ResiliencePoint {
+        backend,
+        scenario,
+        submitted: r.submitted,
+        completed: r.completed,
+        dropped: r.dropped,
+        timed_out: r.timed_out,
+        failed: r.failed,
+        hedge_wins: r.hedge_wins,
+        retries_other: rec.retries_other,
+        shed_batch: rec.shed_batch,
+        wire_lost: rec.wire_lost,
+        ejections: rec.ejections,
+        p50: r.gateway_observed.quantile(0.5),
+        p99: r.gateway_observed.quantile(0.99),
+        recovery_ns: fs.worst_recovery_ns,
+        violations,
+    }
+}
+
+/// Crash + wire-loss leg: an instance crash, then a full worker crash,
+/// then a lossy-wire window, against the deadline/retry machinery. The
+/// headline number is `recovery_ns` — what the crash actually paid to
+/// re-provision (snapshot restore, not cold boot) — which is where the
+/// kernel-vs-bypass restart asymmetry shows up.
+pub fn resilience_crash_run(backend: Backend, duration: Time, seed: u64) -> ResiliencePoint {
+    use crate::faultplane::FaultSchedule;
+    let (mut sim, cluster) = resilience_cluster(backend, seed, resilience_platform(0));
+    let schedule = FaultSchedule::new()
+        .instance_crash(SECONDS + duration / 4, 0, "aes")
+        .worker_crash(SECONDS + duration / 2, 1)
+        .wire_loss(SECONDS + 3 * duration / 4, 1_000, duration / 4);
+    let faults = crate::faultplane::install(schedule, &mut sim, &cluster);
+    let mut r =
+        OpenLoop::new("aes", resilience_rate(backend), duration, seed).run_on(&mut sim, &cluster);
+    resilience_point(backend, "crash+loss", &mut r, &cluster, &faults)
+}
+
+/// Gray-failure leg: worker 0 runs 16× slow for most of the window while
+/// nothing fails and nothing ejects — the failure mode only hedging can
+/// defend. Run with `hedge` off and on to measure the p99 delta.
+pub fn resilience_gray_run(
+    backend: Backend,
+    duration: Time,
+    seed: u64,
+    hedge: bool,
+) -> ResiliencePoint {
+    use crate::faultplane::FaultSchedule;
+    let bp = if hedge { 5_000 } else { 0 };
+    let (mut sim, cluster) = resilience_cluster(backend, seed, resilience_platform(bp));
+    let schedule = FaultSchedule::new().gray(SECONDS + duration / 5, 0, 1_600, duration);
+    let faults = crate::faultplane::install(schedule, &mut sim, &cluster);
+    let mut r =
+        OpenLoop::new("aes", resilience_rate(backend), duration, seed).run_on(&mut sim, &cluster);
+    resilience_point(backend, if hedge { "gray+hedge" } else { "gray" }, &mut r, &cluster, &faults)
+}
+
+/// Brownout leg: a Batch-class function rides along with the interactive
+/// one; repeated worker crashes drop the healthy fraction below the
+/// watermark, and admission control sheds Batch work at the door so the
+/// survivors keep serving Interactive.
+pub fn resilience_brownout_run(backend: Backend, duration: Time, seed: u64) -> ResiliencePoint {
+    use crate::faultplane::FaultSchedule;
+    use crate::workload::PopulationLoop;
+    let mut brownout = (*resilience_platform(0)).clone();
+    brownout.fault_brownout_watermark_bp = 6_000;
+    let platform = Rc::new(brownout);
+    let compute = platform.function_compute_ns;
+    let mut sim = Sim::new();
+    let mut c = Cluster::new_with_platform(backend, 2, 10, seed, compute, platform);
+    c.policy.max_replicas = 2;
+    c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+    c.deploy(&mut sim, FunctionSpec::new("bg", "aes600", RuntimeKind::Go).with_batch());
+    c.scale_up(&mut sim, "aes");
+    c.scale_up(&mut sim, "bg");
+    sim.run_until(SECONDS);
+    let cluster = Rc::new(RefCell::new(c));
+    // Crash worker 0 five times across the window: each recovery interval
+    // has 1 of 2 workers healthy (5000 bp < the 6000 bp watermark).
+    let mut schedule = FaultSchedule::new();
+    for i in 1..=5u64 {
+        schedule = schedule.worker_crash(SECONDS + i * duration / 6, 0);
+    }
+    let faults = crate::faultplane::install(schedule, &mut sim, &cluster);
+    let mix = vec![("aes".to_string(), 1.0), ("bg".to_string(), 1.0)];
+    let mut r = PopulationLoop::new(mix, resilience_rate(backend), duration, seed)
+        .run_on(&mut sim, &cluster);
+    resilience_point(backend, "brownout", &mut r, &cluster, &faults)
+}
+
+/// The E16 table: {crash+loss, gray, gray+hedge, brownout} × both
+/// backends. Deterministic for a given (duration, seed) — the CI
+/// resilience job byte-diffs two same-seed runs.
+pub fn resilience_table(duration: Time, seed: u64) -> (Table, Vec<ResiliencePoint>) {
+    let mut points = Vec::new();
+    for backend in [Backend::Containerd, Backend::Junctiond] {
+        points.push(resilience_crash_run(backend, duration, seed));
+        points.push(resilience_gray_run(backend, duration, seed, false));
+        points.push(resilience_gray_run(backend, duration, seed, true));
+        points.push(resilience_brownout_run(backend, duration, seed));
+    }
+    let mut t = Table::new(
+        "E16 — resilience matrix: seeded faults vs deadline/retry, hedging, brownout",
+        &[
+            "backend",
+            "scenario",
+            "completed",
+            "dropped",
+            "timed out",
+            "hedge wins",
+            "retries",
+            "shed",
+            "p50 (µs)",
+            "p99 (µs)",
+            "recovery (µs)",
+        ],
+    );
+    for p in &points {
+        t.push_row(vec![
+            p.backend.name().into(),
+            p.scenario.into(),
+            Cell::Int(p.completed as i64),
+            Cell::Int(p.dropped as i64),
+            Cell::Int(p.timed_out as i64),
+            Cell::Int(p.hedge_wins as i64),
+            Cell::Int(p.retries_other as i64),
+            Cell::Int(p.shed_batch as i64),
+            Cell::NsAsUs(p.p50),
+            Cell::NsAsUs(p.p99),
+            Cell::NsAsUs(p.recovery_ns),
+        ]);
+    }
+    (t, points)
+}
+
+// ---------------------------------------------------------------------------
 // Selfcheck — run the audit-bearing experiments and report every invariant
 // violation the runtime walkers find (CLI `selfcheck`, `tests/invariants.rs`,
 // CI detlint job).
@@ -1909,5 +2137,50 @@ mod tests {
                 assert!(goodput > 500.0, "goodput {goodput} too low");
             }
         }
+    }
+
+    #[test]
+    fn e16_matrix_conserves_and_audits_clean() {
+        let (t, points) = resilience_table(60 * MILLIS, 3);
+        assert_eq!(t.rows.len(), 8, "4 scenarios × 2 backends");
+        for p in &points {
+            assert!(
+                p.conserved(),
+                "{:?}/{}: submitted {} != completed {} + dropped {} + timed_out {}",
+                p.backend,
+                p.scenario,
+                p.submitted,
+                p.completed,
+                p.dropped,
+                p.timed_out
+            );
+            assert!(p.completed > 0, "{:?}/{}: nothing completed", p.backend, p.scenario);
+            assert!(
+                p.violations.is_empty(),
+                "{:?}/{}: audit violations: {:?}",
+                p.backend,
+                p.scenario,
+                p.violations
+            );
+        }
+        // Crash legs must actually pay a re-provision, and the bypass
+        // backend's restore must beat the kernel backend's.
+        let rec = |b: Backend| {
+            points.iter().find(|p| p.backend == b && p.scenario == "crash+loss").unwrap().recovery_ns
+        };
+        assert!(rec(Backend::Junctiond) > 0, "junction crash paid no recovery");
+        assert!(
+            rec(Backend::Junctiond) < rec(Backend::Containerd),
+            "bypass restore {} must beat kernel restore {}",
+            rec(Backend::Junctiond),
+            rec(Backend::Containerd)
+        );
+    }
+
+    #[test]
+    fn e16_table_is_deterministic() {
+        let (a, _) = resilience_table(40 * MILLIS, 11);
+        let (b, _) = resilience_table(40 * MILLIS, 11);
+        assert_eq!(a.to_markdown(), b.to_markdown(), "same-seed E16 tables diverged");
     }
 }

@@ -20,7 +20,7 @@ use crate::junction::BypassCosts;
 use crate::netpath::{NicQueue, NicStats, Packet, TxStats};
 use crate::oskernel::KernelCosts;
 use crate::rpc::Message;
-use crate::simcore::{Rng, Sim, Time, MILLIS, SECONDS};
+use crate::simcore::{Rng, Sim, Time, TimerHandle, MILLIS, SECONDS};
 use crate::telemetry::{Hop, Tracer};
 
 use super::pipeline::{trace_finish, FaasSim, RequestTiming};
@@ -57,6 +57,43 @@ impl Default for ScalePolicy {
     }
 }
 
+/// Per-worker health view the recovery router reads: response-time EWMA,
+/// consecutive-failure ejection, and crash downtime. All zeroes until the
+/// fault plane or the recovery path writes it — the fast path never does.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerHealth {
+    /// EWMA of recovery-path response times on this worker (ns; 0 until
+    /// the first sample). Routing tiebreak: prefer the faster worker.
+    pub ewma_ns: Time,
+    /// Consecutive failed attempts routed here since the last success.
+    pub consec_fails: u32,
+    /// Ejected from routing until this virtual time (health checker).
+    pub ejected_until: Time,
+    /// Marked down (worker crash) until this virtual time.
+    pub down_until: Time,
+}
+
+/// Counters of the end-to-end recovery machinery (deadline timeouts,
+/// cross-worker retries, hedges, brownout sheds, wire losses, health
+/// ejections). Carries one law: a hedge can only win if it was issued.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Requests resolved by the gateway-side deadline.
+    pub timed_out: u64,
+    /// Attempts re-issued on another replica after a failure.
+    pub retries_other: u64,
+    /// Hedged duplicates issued after the quantile delay.
+    pub hedges: u64,
+    /// Requests whose hedge beat the primary.
+    pub hedge_wins: u64,
+    /// Batch-class submissions shed by the admission brownout.
+    pub shed_batch: u64,
+    /// Attempts eaten by an active wire-loss window.
+    pub wire_lost: u64,
+    /// Health-checker ejections (consecutive-failure threshold hit).
+    pub ejections: u64,
+}
+
 /// One worker server: an independent single-node `FaasSim` (its own core
 /// pool, scheduler, containerd, cost samplers) plus placement metadata.
 pub struct Worker {
@@ -65,6 +102,8 @@ pub struct Worker {
     /// Functions with a replica on this worker.
     pub hosted: Vec<String>,
     pub in_flight: Rc<RefCell<i64>>,
+    /// Health view (EWMA, ejection, downtime) the recovery router reads.
+    pub health: Rc<RefCell<WorkerHealth>>,
 }
 
 /// The front end's own RX NIC: response frames coming back from the
@@ -197,6 +236,258 @@ fn frontend_rx_drain(front: Rc<RefCell<FrontendRx>>, sim: &mut Sim) {
     });
 }
 
+/// One routable attempt target on the recovery path: the worker's sim
+/// node plus the shared gauges/health cells the router reads.
+struct AttemptTarget {
+    node: FaasSim,
+    gauge: Rc<RefCell<i64>>,
+    health: Rc<RefCell<WorkerHealth>>,
+}
+
+/// Shared state of one recoverable invocation: the winner slot (the
+/// client's continuation — whoever takes it resolves the request),
+/// cancellable deadline/hedge timers, the routable targets, and the
+/// cluster-wide cells the attempts update. Lives in an `Rc` captured by
+/// every timer and attempt callback; the engine's generation-checked
+/// `cancel` makes stale timer handles safe to cancel twice.
+struct RecoveryCtx {
+    platform: Rc<PlatformConfig>,
+    targets: Vec<AttemptTarget>,
+    fn_inflight: Rc<RefCell<BTreeMap<String, i64>>>,
+    last_active: Rc<RefCell<BTreeMap<String, Time>>>,
+    front: Rc<RefCell<FrontendRx>>,
+    recovery: Rc<RefCell<RecoveryStats>>,
+    fault_rng: Rc<RefCell<Rng>>,
+    wire_loss: Rc<RefCell<(u64, Time)>>,
+    resp_ring: Rc<RefCell<(Vec<Time>, usize)>>,
+    name: String,
+    slot: RefCell<Option<RespFn>>,
+    deadline: RefCell<Option<TimerHandle>>,
+    hedge: RefCell<Option<TimerHandle>>,
+    /// Target index the most recent attempt was routed to (the hedge and
+    /// the retry path avoid it when an alternative exists).
+    last_target: RefCell<Option<usize>>,
+    submit_t: Time,
+    retries_used: RefCell<u32>,
+}
+
+/// Pick an attempt target: healthy (not down, not ejected) workers first,
+/// avoiding `avoid` when an alternative exists, least in-flight with the
+/// response-time EWMA as tiebreak. Falls back to the full set when no
+/// target is healthy — a request is never unroutable.
+fn recovery_route(ctx: &RecoveryCtx, now: Time, avoid: Option<usize>) -> usize {
+    let key = |ti: usize| {
+        let g = *ctx.targets[ti].gauge.borrow();
+        let e = ctx.targets[ti].health.borrow().ewma_ns;
+        (g, e, ti)
+    };
+    let healthy = |ti: &usize| {
+        let h = ctx.targets[*ti].health.borrow();
+        now >= h.down_until && now >= h.ejected_until
+    };
+    let all: Vec<usize> = (0..ctx.targets.len()).collect();
+    let pool: Vec<usize> = all.iter().copied().filter(healthy).collect();
+    let pool = if pool.is_empty() { all } else { pool };
+    let preferred: Vec<usize> = pool.iter().copied().filter(|&ti| Some(ti) != avoid).collect();
+    let pool = if preferred.is_empty() { pool } else { preferred };
+    pool.into_iter().min_by_key(|&ti| key(ti)).expect("no replica targets")
+}
+
+/// Hedge delay: the `hedge_quantile_bp` quantile of the recent response
+/// ring. `None` (no hedge) when hedging is off, only one replica exists,
+/// or no responses were observed yet.
+fn recovery_hedge_delay(ctx: &RecoveryCtx) -> Option<Time> {
+    let bp = ctx.platform.hedge_quantile_bp;
+    if bp == 0 || ctx.targets.len() < 2 {
+        return None;
+    }
+    let ring = ctx.resp_ring.borrow();
+    if ring.0.is_empty() {
+        return None;
+    }
+    let mut v = ring.0.clone();
+    v.sort_unstable();
+    Some(v[((v.len() as u64 - 1) * bp / 10_000) as usize])
+}
+
+/// A routed attempt responded: reset the target's failure streak, fold
+/// the response time into its EWMA, and feed the hedge-quantile ring.
+fn recovery_note_success(ctx: &RecoveryCtx, ti: usize, resp: Time) {
+    {
+        let mut h = ctx.targets[ti].health.borrow_mut();
+        h.consec_fails = 0;
+        h.ewma_ns = if h.ewma_ns == 0 { resp } else { h.ewma_ns - h.ewma_ns / 8 + resp / 8 };
+    }
+    let mut ring = ctx.resp_ring.borrow_mut();
+    let cur = ring.1;
+    if ring.0.len() < 128 {
+        ring.0.push(resp);
+    } else {
+        ring.0[cur % 128] = resp;
+    }
+    ring.1 = cur + 1;
+}
+
+/// A routed attempt failed: bump the target's failure streak and eject
+/// it from routing once the streak crosses the configured threshold.
+fn recovery_note_failure(ctx: &RecoveryCtx, now: Time, ti: usize) {
+    let ejected = {
+        let mut h = ctx.targets[ti].health.borrow_mut();
+        h.consec_fails += 1;
+        let thresh = ctx.platform.fault_health_fail_threshold;
+        if thresh > 0
+            && ctx.platform.fault_health_eject_ns > 0
+            && h.consec_fails as u64 >= thresh
+        {
+            h.ejected_until = now + ctx.platform.fault_health_eject_ns;
+            h.consec_fails = 0;
+            true
+        } else {
+            false
+        }
+    };
+    if ejected {
+        ctx.recovery.borrow_mut().ejections += 1;
+    }
+}
+
+/// Launch one attempt of a recoverable invocation: route it, maybe lose
+/// it to an active wire-loss window, otherwise submit it to the chosen
+/// worker. The attempt's completion either resolves the request (first
+/// winner), drives a retry (failure), or — when a sibling already won —
+/// just closes its own bookkeeping.
+fn recovery_launch(ctx: Rc<RecoveryCtx>, sim: &mut Sim, avoid: Option<usize>, is_hedge: bool) {
+    if ctx.slot.borrow().is_none() {
+        return;
+    }
+    let now = sim.now();
+    let ti = recovery_route(&ctx, now, avoid);
+    *ctx.last_target.borrow_mut() = Some(ti);
+    let lost = {
+        let (bp, until) = *ctx.wire_loss.borrow();
+        bp > 0 && now < until && ctx.fault_rng.borrow_mut().below(10_000) < bp
+    };
+    if lost {
+        // The frame vanished in flight: nothing reached the worker (no
+        // trace, no gauges). A synthetic failure after the retry backoff
+        // drives the re-send; the deadline bounds the worst case.
+        ctx.recovery.borrow_mut().wire_lost += 1;
+        let backoff = ctx.platform.deadline_retry_backoff_ns.max(1);
+        let ctx2 = ctx.clone();
+        sim.after(backoff, move |sim| recovery_attempt_failed(ctx2, sim, ti));
+        return;
+    }
+    *ctx.targets[ti].gauge.borrow_mut() += 1;
+    *ctx.fn_inflight.borrow_mut().entry(ctx.name.clone()).or_insert(0) += 1;
+    let ctx2 = ctx.clone();
+    let start = now;
+    ctx.targets[ti].node.clone().submit(sim, &ctx.name, move |sim, t| {
+        *ctx2.targets[ti].gauge.borrow_mut() -= 1;
+        *ctx2.fn_inflight.borrow_mut().get_mut(&ctx2.name).unwrap() -= 1;
+        ctx2.last_active.borrow_mut().insert(ctx2.name.clone(), sim.now());
+        let resolved = ctx2.slot.borrow().is_none();
+        if t.dropped {
+            // Worker-level failure (RX give-up or TX abandon): the frame
+            // never crossed back, so close the attempt's trace here.
+            trace_finish(&ctx2.front.borrow().tracer, &t);
+            if !resolved {
+                recovery_note_failure(&ctx2, sim.now(), ti);
+                recovery_attempt_failed(ctx2, sim, ti);
+            }
+        } else {
+            recovery_note_success(&ctx2, ti, sim.now() - start);
+            if resolved {
+                // A sibling attempt already won; this response is
+                // redundant — close its trace and discard it.
+                trace_finish(&ctx2.front.borrow().tracer, &t);
+            } else {
+                recovery_deliver(ctx2, sim, t, is_hedge);
+            }
+        }
+    });
+}
+
+/// An attempt failed (worker drop or wire loss). Re-issue on a different
+/// replica after a jittered backoff while budget remains; otherwise
+/// resolve the request as a failure now instead of waiting out the
+/// deadline.
+fn recovery_attempt_failed(ctx: Rc<RecoveryCtx>, sim: &mut Sim, from: usize) {
+    if ctx.slot.borrow().is_none() {
+        return;
+    }
+    let used = *ctx.retries_used.borrow() as u64;
+    if used >= ctx.platform.deadline_max_retries {
+        let Some(done) = ctx.slot.borrow_mut().take() else { return };
+        if let Some(h) = ctx.deadline.borrow_mut().take() {
+            sim.cancel(h);
+        }
+        if let Some(h) = ctx.hedge.borrow_mut().take() {
+            sim.cancel(h);
+        }
+        let now = sim.now();
+        let t = RequestTiming {
+            submit: ctx.submit_t,
+            done: now,
+            dropped: true,
+            failed: true,
+            retried_other_worker: used as u32,
+            ..Default::default()
+        };
+        done(sim, t);
+        return;
+    }
+    *ctx.retries_used.borrow_mut() += 1;
+    ctx.recovery.borrow_mut().retries_other += 1;
+    // Decorrelated-flavored jitter on the retry backoff: base + U[0, base)
+    // from the seeded fault stream, so synchronized failures don't
+    // re-collide on the retry boundary.
+    let base = ctx.platform.deadline_retry_backoff_ns;
+    let backoff = if base == 0 { 0 } else { base + ctx.fault_rng.borrow_mut().below(base) };
+    let ctx2 = ctx.clone();
+    sim.after(backoff, move |sim| recovery_launch(ctx2, sim, Some(from), false));
+}
+
+/// The per-invocation deadline fired with no resolution: synthesize a
+/// timeout. Attempts still in flight keep draining — their callbacks see
+/// the empty winner slot and only close their own bookkeeping.
+fn recovery_timeout(ctx: Rc<RecoveryCtx>, sim: &mut Sim) {
+    ctx.deadline.borrow_mut().take();
+    let Some(done) = ctx.slot.borrow_mut().take() else { return };
+    if let Some(h) = ctx.hedge.borrow_mut().take() {
+        sim.cancel(h);
+    }
+    ctx.recovery.borrow_mut().timed_out += 1;
+    let now = sim.now();
+    let t = RequestTiming {
+        submit: ctx.submit_t,
+        done: now,
+        timed_out: true,
+        retried_other_worker: *ctx.retries_used.borrow(),
+        ..Default::default()
+    };
+    done(sim, t);
+}
+
+/// First winning response: cancel the pending timers, stamp the
+/// recovery fields, and hand the frame to the front end's RX ring (the
+/// same return path the fast path pays).
+fn recovery_deliver(ctx: Rc<RecoveryCtx>, sim: &mut Sim, mut t: RequestTiming, is_hedge: bool) {
+    let Some(done) = ctx.slot.borrow_mut().take() else { return };
+    if let Some(h) = ctx.deadline.borrow_mut().take() {
+        sim.cancel(h);
+    }
+    if let Some(h) = ctx.hedge.borrow_mut().take() {
+        sim.cancel(h);
+    }
+    t.submit = ctx.submit_t;
+    t.hedge_won = is_hedge;
+    t.retried_other_worker = *ctx.retries_used.borrow();
+    if is_hedge {
+        ctx.recovery.borrow_mut().hedge_wins += 1;
+    }
+    frontend_rx_ingress(ctx.front.clone(), sim, t, done);
+}
+
 /// Replica placement strategies for the controller.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Placement {
@@ -238,6 +529,18 @@ pub struct Cluster {
     front_rx: Rc<RefCell<FrontendRx>>,
     /// Shared invocation tracer (disabled until [`Cluster::enable_tracing`]).
     tracer: Tracer,
+    /// Recovery-machinery counters (active only with
+    /// `platform.deadline_timeout_ns > 0`).
+    recovery: Rc<RefCell<RecoveryStats>>,
+    /// Seeded fault stream: wire-loss draws and retry jitter. Independent
+    /// of every other RNG in the sim and only drawn from on the recovery
+    /// path, so faults-off runs stay byte-identical.
+    fault_rng: Rc<RefCell<Rng>>,
+    /// Active wire-loss window: (loss in 1/10000, open until).
+    wire_loss: Rc<RefCell<(u64, Time)>>,
+    /// Ring of recent recovery-path response times (cap 128) feeding the
+    /// hedge delay quantile: (buffer, write cursor).
+    resp_ring: Rc<RefCell<(Vec<Time>, usize)>>,
 }
 
 impl Cluster {
@@ -284,6 +587,7 @@ impl Cluster {
                     sim_node: FaasSim::new(&cfg, platform.clone()),
                     hosted: Vec::new(),
                     in_flight: Rc::new(RefCell::new(0)),
+                    health: Rc::new(RefCell::new(WorkerHealth::default())),
                 }
             })
             .collect();
@@ -314,6 +618,10 @@ impl Cluster {
             tier_scale_ups: [0; 3],
             front_rx,
             tracer: Tracer::new(),
+            recovery: Rc::new(RefCell::new(RecoveryStats::default())),
+            fault_rng: Rc::new(RefCell::new(Rng::new(seed ^ 0xFA17))),
+            wire_loss: Rc::new(RefCell::new((0, 0))),
+            resp_ring: Rc::new(RefCell::new((Vec::new(), 0))),
         }
     }
 
@@ -492,13 +800,20 @@ impl Cluster {
 
     /// Submit one invocation; the cluster-level gateway picks the replica's
     /// worker (least in-flight first — the "stateless load-balancer" of
-    /// Figure 1).
+    /// Figure 1). With `platform.deadline_timeout_ns > 0` the request goes
+    /// through the recovery layer instead: per-invocation deadline,
+    /// retry-on-another-replica, optional hedging, health-aware routing,
+    /// and brownout admission control. With the knob at its default the
+    /// fast path below runs untouched — byte-identical to the seed.
     pub fn submit<F: FnOnce(&mut Sim, RequestTiming) + 'static>(
         &mut self,
         sim: &mut Sim,
         function: &str,
         done: F,
     ) {
+        if self.platform.deadline_timeout_ns > 0 {
+            return self.submit_recoverable(sim, function, Box::new(done));
+        }
         // Routing reads the replica list in place — cloning the spec per
         // submission (two Strings) was measurable at density-experiment
         // invocation counts.
@@ -553,6 +868,165 @@ impl Cluster {
                 frontend_rx_ingress(front, sim, t, Box::new(done));
             }
         });
+    }
+
+    /// The recovery-layer submission path (active when
+    /// `platform.deadline_timeout_ns > 0`): admission brownout, health-
+    /// aware routing, a cancellable per-invocation deadline, jittered
+    /// retry on a *different* replica after an attempt fails, and an
+    /// optional hedged duplicate after the observed-quantile delay.
+    /// Exactly one resolution reaches the client: the first winning
+    /// response, a synthesized failure when the retry budget is gone, or
+    /// a synthesized timeout at the deadline. Losing sibling attempts
+    /// still drain through the pipeline (their gauges and traces close),
+    /// so the engine's drain invariant holds under any schedule.
+    fn submit_recoverable(&mut self, sim: &mut Sim, function: &str, done: RespFn) {
+        let now = sim.now();
+        // Admission brownout: when the healthy fraction of the pool falls
+        // below the watermark, Batch-class work is shed at the door so
+        // Interactive work keeps the survivors.
+        let batch = self.functions.get(function).expect("unknown function").0.batch;
+        if batch && self.platform.fault_brownout_watermark_bp > 0 {
+            let healthy = self
+                .workers
+                .iter()
+                .filter(|w| {
+                    let h = w.health.borrow();
+                    now >= h.down_until && now >= h.ejected_until
+                })
+                .count() as u64;
+            let watermark = self.platform.fault_brownout_watermark_bp;
+            if healthy * 10_000 < watermark * self.workers.len() as u64 {
+                self.recovery.borrow_mut().shed_batch += 1;
+                let t = RequestTiming {
+                    submit: now,
+                    done: now,
+                    dropped: true,
+                    failed: true,
+                    ..Default::default()
+                };
+                done(sim, t);
+                return;
+            }
+        }
+        // Scaled to zero: re-provision on demand exactly like the fast
+        // path, then route the attempt(s) at the fresh replica.
+        let locs = self.functions.get(function).unwrap().1.clone();
+        let locs = if locs.is_empty() {
+            let (spec, _) = self.functions.get(function).unwrap().clone();
+            let warm = (0..self.workers.len())
+                .find(|&i| self.workers[i].sim_node.pool_warm_count(function) > 0);
+            let w = warm.unwrap_or_else(|| self.pick_worker(function));
+            let _ = self.scale_up_on(sim, function, w, &spec);
+            self.zero_redeploys += 1;
+            vec![w]
+        } else {
+            locs
+        };
+        let targets = locs
+            .iter()
+            .map(|&w| AttemptTarget {
+                node: self.workers[w].sim_node.clone(),
+                gauge: self.workers[w].in_flight.clone(),
+                health: self.workers[w].health.clone(),
+            })
+            .collect();
+        let ctx = Rc::new(RecoveryCtx {
+            platform: self.platform.clone(),
+            targets,
+            fn_inflight: self.inflight.clone(),
+            last_active: self.last_active.clone(),
+            front: self.front_rx.clone(),
+            recovery: self.recovery.clone(),
+            fault_rng: self.fault_rng.clone(),
+            wire_loss: self.wire_loss.clone(),
+            resp_ring: self.resp_ring.clone(),
+            name: function.to_string(),
+            slot: RefCell::new(Some(done)),
+            deadline: RefCell::new(None),
+            hedge: RefCell::new(None),
+            last_target: RefCell::new(None),
+            submit_t: now,
+            retries_used: RefCell::new(0),
+        });
+        let ctx2 = ctx.clone();
+        let h = sim
+            .after_handle(self.platform.deadline_timeout_ns, move |sim| {
+                recovery_timeout(ctx2, sim)
+            });
+        *ctx.deadline.borrow_mut() = Some(h);
+        // Hedge: after a delay derived from the observed response-time
+        // quantile, duplicate the attempt on another replica if the
+        // primary hasn't resolved. Needs >1 replica and a warm ring.
+        if let Some(delay) = recovery_hedge_delay(&ctx) {
+            let ctx2 = ctx.clone();
+            let h = sim.after_handle(delay, move |sim| {
+                ctx2.hedge.borrow_mut().take();
+                if ctx2.slot.borrow().is_none() {
+                    return;
+                }
+                ctx2.recovery.borrow_mut().hedges += 1;
+                let avoid = *ctx2.last_target.borrow();
+                recovery_launch(ctx2.clone(), sim, avoid, true);
+            });
+            *ctx.hedge.borrow_mut() = Some(h);
+        }
+        recovery_launch(ctx, sim, None, false);
+    }
+
+    /// Fault hook: crash worker `w` — its warm pool is wiped (it lived in
+    /// the worker's memory) and every hosted function's replicas die
+    /// mid-invocation and re-provision through the tier ladder (the
+    /// snapshot store survives host-side, so recovery normally pays a
+    /// restore, not a cold boot). Routing treats the worker as down for
+    /// the longest re-provision window. Returns that window.
+    pub fn crash_worker(&mut self, sim: &mut Sim, w: usize) -> Time {
+        let w = w % self.workers.len();
+        self.workers[w].sim_node.flush_warm_pool(sim);
+        let hosted = self.workers[w].hosted.clone();
+        let mut worst = 0;
+        for name in hosted {
+            if let Some(lat) = self.workers[w].sim_node.crash_function(sim, &name) {
+                worst = worst.max(lat);
+            }
+        }
+        self.workers[w].health.borrow_mut().down_until = sim.now() + worst;
+        worst
+    }
+
+    /// Fault hook: crash one function's replicas on worker `w` only.
+    /// Returns the re-provision latency (0 if not hosted there).
+    pub fn crash_instance(&mut self, sim: &mut Sim, w: usize, function: &str) -> Time {
+        let w = w % self.workers.len();
+        self.workers[w].sim_node.crash_function(sim, function).unwrap_or(0)
+    }
+
+    /// Fault hook: gray failure — degrade worker `w`'s function compute
+    /// to `factor_x100`/100 of nominal for `duration`, then restore.
+    /// Nothing fails and nothing ejects; only deadline/hedging machinery
+    /// can defend the tail.
+    pub fn set_gray(&mut self, sim: &mut Sim, w: usize, factor_x100: u64, duration: Time) {
+        let w = w % self.workers.len();
+        let node = self.workers[w].sim_node.clone();
+        node.set_degrade(factor_x100);
+        sim.after(duration, move |_| node.set_degrade(100));
+    }
+
+    /// Fault hook: open a wire-loss window — until it closes, each
+    /// recovery-path attempt is lost in flight with probability
+    /// `loss_bp`/10000 (drawn from the cluster's seeded fault stream).
+    pub fn set_wire_loss(&mut self, sim: &mut Sim, loss_bp: u64, duration: Time) {
+        *self.wire_loss.borrow_mut() = (loss_bp, sim.now() + duration);
+    }
+
+    /// Recovery-machinery counters.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        *self.recovery.borrow()
+    }
+
+    /// Health view of worker `w`.
+    pub fn worker_health(&self, w: usize) -> WorkerHealth {
+        *self.workers[w].health.borrow()
     }
 
     /// One controller reconcile pass (§2.1 "outside of the critical path,
@@ -695,6 +1169,7 @@ impl Cluster {
             sim_node,
             hosted: Vec::new(),
             in_flight: Rc::new(RefCell::new(0)),
+            health: Rc::new(RefCell::new(WorkerHealth::default())),
         });
         i as u32
     }
@@ -727,6 +1202,10 @@ impl AuditTree for Cluster {
                 s.rx_enqueued, s.rx_delivered
             )
         });
+        let r = *self.recovery.borrow();
+        check(out, m, "hedge-conservation", r.hedge_wins <= r.hedges, || {
+            format!("hedge_wins {} exceeds hedges issued {}", r.hedge_wins, r.hedges)
+        });
     }
 }
 
@@ -734,6 +1213,8 @@ impl AuditTree for Cluster {
 mod tests {
     use super::*;
     use crate::faas::RuntimeKind;
+    use crate::invariants::Audit;
+    use crate::simcore::MICROS;
     use crate::workload::RunResult;
 
     fn cluster(backend: Backend, n: usize) -> (Sim, Rc<RefCell<Cluster>>) {
@@ -995,6 +1476,65 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn conservation_and_traces_close_under_fault_schedule() {
+        use crate::workload::OpenLoop;
+        // The PR-6 overload law extended to an active fault plane: with a
+        // worker crash, an instance crash, a gray window and a wire-loss
+        // window all firing mid-run, every submitted request must still
+        // resolve exactly once (completed, dropped, or timed out — the
+        // deadline machinery guarantees wire-lost work resolves too), the
+        // RX give-up and TX abandon paths must close their span trees on
+        // both backends (no leaked live traces), and the whole audit tree
+        // — including the fault plane's own injection conservation — must
+        // stay clean.
+        for (backend, rate) in [(Backend::Containerd, 320_000.0), (Backend::Junctiond, 64_000.0)]
+        {
+            let mut sim = Sim::new();
+            let platform = Rc::new(PlatformConfig {
+                deadline_timeout_ns: 20 * MILLIS,
+                deadline_max_retries: 2,
+                deadline_retry_backoff_ns: 20 * MICROS,
+                hedge_quantile_bp: 9_500,
+                fault_health_fail_threshold: 8,
+                fault_health_eject_ns: 5 * MILLIS,
+                nic_retry_jitter: 1,
+                ..PlatformConfig::default()
+            });
+            let mut c = Cluster::new_with_platform(backend, 2, 10, 11, 100_000, platform);
+            c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+            c.scale_up(&mut sim, "aes");
+            sim.run_until(SECONDS);
+            let tracer = c.enable_tracing(8);
+            let c = Rc::new(RefCell::new(c));
+            let schedule = crate::faultplane::FaultSchedule::new()
+                .instance_crash(SECONDS + 20 * MILLIS, 0, "aes")
+                .worker_crash(SECONDS + 50 * MILLIS, 1)
+                .gray(SECONDS + 70 * MILLIS, 0, 800, 30 * MILLIS)
+                .wire_loss(SECONDS + 100 * MILLIS, 500, 30 * MILLIS);
+            let faults = crate::faultplane::install(schedule, &mut sim, &c);
+            let r = OpenLoop::new("aes", rate, 150 * MILLIS, 7).run_on(&mut sim, &c);
+            assert_eq!(
+                r.submitted,
+                r.completed + r.dropped + r.timed_out,
+                "{backend:?}: requests leaked under the fault schedule"
+            );
+            assert!(r.completed > 0, "{backend:?}: nothing completed under faults");
+            assert_eq!(
+                tracer.open_traces(),
+                0,
+                "{backend:?}: give-up/abandon paths leaked live traces"
+            );
+            let fs = *faults.borrow();
+            assert_eq!(fs.injected, 4, "{backend:?}: all scheduled faults must fire");
+            fs.assert_clean();
+            assert!(fs.worst_recovery_ns > 0, "{backend:?}: crashes must pay recovery");
+            let cl = c.borrow();
+            let violations = crate::invariants::audit_all(&*cl);
+            assert!(violations.is_empty(), "{backend:?}: audit violations: {violations:?}");
         }
     }
 

@@ -21,7 +21,7 @@ pub mod pipeline;
 mod provider;
 mod registry;
 
-pub use cluster::{Cluster, Placement, ScalePolicy, Worker};
+pub use cluster::{Cluster, Placement, RecoveryStats, ScalePolicy, Worker, WorkerHealth};
 pub use gate::Gate;
 pub use gateway::Gateway;
 pub use pipeline::{CostTelemetry, FaasSim, RequestTiming};

@@ -82,6 +82,21 @@ pub struct RequestTiming {
     /// (`tx_retries` > 0 distinguishes the latter); only `submit`,
     /// `nic_in`, `retries`, `tx_retries` and `done` are meaningful then.
     pub dropped: bool,
+    /// True when the resolution was caused by the fault plane (a wire-loss
+    /// window or a crashed worker ate an attempt); always accompanied by
+    /// `dropped` when the request never completed.
+    pub failed: bool,
+    /// True when the gateway-side deadline expired before any attempt
+    /// resolved (recovery path); disjoint from `dropped` — a timed-out
+    /// request was neither completed nor counted as a NIC/TX abandon.
+    pub timed_out: bool,
+    /// True when a hedged duplicate beat the primary attempt to the
+    /// response.
+    pub hedge_won: bool,
+    /// Retries the recovery layer re-issued on a *different* worker
+    /// (distinct from `retries`, which counts NIC retransmits on one
+    /// worker's wire).
+    pub retried_other_worker: u32,
     /// Trace sequence number assigned at submit; 0 when tracing is off.
     pub seq: u64,
 }
@@ -219,6 +234,17 @@ struct World {
     /// instead (the worker-local `done` fires before the return wire and
     /// frontend RX, which belong to the trace's tx hop).
     trace_finalize: bool,
+    /// Gray-failure multiplier on function compute, in percent (100 =
+    /// healthy). Only the fault plane moves it; runs without a fault
+    /// schedule never touch it.
+    degrade_x100: Time,
+    /// Decorrelated-jitter state for NIC retry backoffs. Seeded
+    /// independently of the cost samplers' fork chain and only drawn from
+    /// when `platform.nic_retry_jitter == 1`, so the default path stays
+    /// byte-identical to the constant-backoff seed.
+    jitter_rng: Rng,
+    rx_backoff_prev: Time,
+    tx_backoff_prev: Time,
 }
 
 impl World {
@@ -261,8 +287,44 @@ impl World {
 
     fn service_done(&mut self, inst: Option<InstanceId>) {
         if let (Backend::Junctiond, Some(id)) = (self.backend, inst) {
-            self.jd.scheduler.request_done(id);
+            // The instance may have been crash-retired while the segment
+            // ran (its in-flight was zeroed then); `request_done` asserts
+            // otherwise. Without a crash the guard is always true.
+            if self.jd.scheduler.instance(id).map_or(false, |i| i.in_flight > 0) {
+                self.jd.scheduler.request_done(id);
+            }
         }
+    }
+
+    /// RX retransmit backoff for the next client attempt. With
+    /// `nic_retry_jitter` off this is the constant platform backoff (the
+    /// seed's behavior — zero RNG draws); with it on, *decorrelated
+    /// jitter*: each wait is drawn uniformly from
+    /// `[base, min(prev * 3, base * 10)]`, so synchronized retry storms
+    /// spread out instead of re-colliding on the backoff boundary.
+    fn rx_retry_backoff(&mut self) -> Time {
+        let base = self.platform.nic_retry_backoff_ns;
+        if self.platform.nic_retry_jitter == 0 {
+            return base;
+        }
+        let hi = (self.rx_backoff_prev * 3).clamp(base, base * 10);
+        let b = base + self.jitter_rng.below(hi - base + 1);
+        self.rx_backoff_prev = b;
+        b
+    }
+
+    /// TX stall backoff for the responder's next re-offer; same
+    /// decorrelated-jitter scheme as [`World::rx_retry_backoff`], with
+    /// its own state so the two directions don't correlate.
+    fn tx_retry_backoff(&mut self) -> Time {
+        let base = self.platform.nic_tx_retry_backoff_ns;
+        if self.platform.nic_retry_jitter == 0 {
+            return base;
+        }
+        let hi = (self.tx_backoff_prev * 3).clamp(base, base * 10);
+        let b = base + self.jitter_rng.below(hi - base + 1);
+        self.tx_backoff_prev = b;
+        b
     }
 
     /// Provision one single-instance replica through the tier ladder:
@@ -475,6 +537,10 @@ impl FaasSim {
             dropped: 0,
             tracer: Tracer::new(),
             trace_finalize: true,
+            degrade_x100: 100,
+            jitter_rng: Rng::new(cfg.seed ^ 0x4A17_7E5A),
+            rx_backoff_prev: 0,
+            tx_backoff_prev: 0,
             platform,
         };
         FaasSim { w: Rc::new(RefCell::new(world)) }
@@ -697,6 +763,70 @@ impl FaasSim {
         };
         self.ttl_cancel(sim, slots);
         crate::invariants::debug_quiesce(self);
+    }
+
+    /// Fault plane: set the gray-degradation multiplier (percent of the
+    /// healthy compute cost; 100 restores health). Purely multiplicative
+    /// on function bodies — no events, no RNG draws.
+    pub fn set_degrade(&self, x100: Time) {
+        self.w.borrow_mut().degrade_x100 = x100.max(1);
+    }
+
+    /// Current gray-degradation multiplier (100 = healthy).
+    pub fn degrade(&self) -> Time {
+        self.w.borrow().degrade_x100
+    }
+
+    /// Fault plane: crash every replica of `name` mid-flight and
+    /// re-provision the function through the tier ladder. The snapshot
+    /// store and warm pool survive the crash (they live host-side), so
+    /// recovery normally lands on the restore rung instead of a cold
+    /// boot. In-flight requests on the crashed replicas keep flowing
+    /// through the pipeline (their scheduler bookkeeping was zeroed at
+    /// crash time — the completion path's guards skip the double
+    /// release); requests arriving afterwards wait on the replacement's
+    /// readiness. Returns the re-provision latency (the recovery
+    /// window), or `None` if the function is not deployed.
+    pub fn crash_function(&self, sim: &mut Sim, name: &str) -> Option<Time> {
+        let (spec, carried) = {
+            let mut w = self.w.borrow_mut();
+            let f = w.functions.remove(name)?;
+            w.registry.remove(name);
+            w.provider.invalidate(name);
+            w.gateway.evict(name);
+            for r in &f.replicas {
+                match r.handle {
+                    ReplicaHandle::Junction(_) => {
+                        // fail first (zeroes in-flight, ticks the crash
+                        // counter), then detach and retire — junctiond's
+                        // restart sweep must not see these as revivable.
+                        let ids = w.jd.instances_of(&r.jd_name).to_vec();
+                        for id in &ids {
+                            w.jd.fail_instance(*id);
+                        }
+                        w.jd.park_instances(&r.jd_name);
+                        for id in ids {
+                            w.jd.retire_instance(id);
+                        }
+                    }
+                    ReplicaHandle::Container(cid) => {
+                        if w.containerd.get(cid).is_some() {
+                            w.containerd.stop(cid);
+                        }
+                    }
+                }
+            }
+            (f.spec, f.outstanding)
+        };
+        let lat = self.deploy_tiered(sim, spec, true).0;
+        if carried > 0 {
+            // Requests in flight at crash time still resolve through the
+            // redeployed entry; keep the outstanding guard exact.
+            if let Some(f) = self.w.borrow_mut().functions.get_mut(name) {
+                f.outstanding = carried;
+            }
+        }
+        Some(lat)
     }
 
     /// Arm the per-slot idle-TTL eviction timer for a freshly-parked (or
@@ -1066,6 +1196,11 @@ impl FaasSim {
         self.w.borrow().jd.scheduler.stats
     }
 
+    /// junctiond's crash/restart counters (fault-plane conservation).
+    pub fn manager_stats(&self) -> crate::junctiond::ManagerStats {
+        self.w.borrow().jd.stats
+    }
+
     /// Virtual time at which `function` becomes warm (latest replica).
     pub fn ready_at(&self, function: &str) -> Time {
         self.w.borrow().functions[function].replicas.iter().map(|r| r.ready_at).max().unwrap_or(0)
@@ -1315,7 +1450,7 @@ fn nic_ingress(
     // closure (frame accepted) or the retransmit timer (frame dropped).
     // Cancellation guarantees exactly one of them ever runs.
     let done_slot: Rc<RefCell<Option<DoneFn>>> = Rc::new(RefCell::new(Some(done)));
-    let backoff = fs.w.borrow().platform.nic_retry_backoff_ns;
+    let backoff = fs.w.borrow_mut().rx_retry_backoff();
     let retrans = {
         let fs2 = fs.clone();
         let name2 = name.clone();
@@ -1609,9 +1744,18 @@ fn exec_segment(
         let mut w = fs.w.borrow_mut();
         let p = w.platform.clone();
         let nsys = p.function_syscalls as u32;
+        // A crash-redeploy may have replaced the replica set while this
+        // request waited in the gate; route to a surviving replica then.
+        // Without a crash the clamp is a no-op (the picked index is
+        // always in range).
+        let replica = replica.min(w.functions[&name].replicas.len() - 1);
         // Per-function body override (antagonist tenants in E14 carry
         // chunkier bodies); default is the sim-wide calibrated cost.
         let compute = w.functions[&name].spec.compute_ns.unwrap_or(w.compute_ns);
+        // Gray failure: a degraded worker's bodies run slower by the
+        // fault plane's multiplier (100 = healthy, the untouched default).
+        let compute =
+            if w.degrade_x100 == 100 { compute } else { compute * w.degrade_x100 / 100 };
         w.tier_served[t.tier.idx()] += 1;
         match w.backend {
             Backend::Containerd => {
@@ -1654,7 +1798,11 @@ fn exec_segment(
             {
                 let mut w = fs2.w.borrow_mut();
                 if let Some(id) = inst {
-                    w.jd.scheduler.request_done(id);
+                    // Crash-retired mid-exec: the scheduler already zeroed
+                    // this instance's in-flight; skip the double release.
+                    if w.jd.scheduler.instance(id).map_or(false, |i| i.in_flight > 0) {
+                        w.jd.scheduler.request_done(id);
+                    }
                 }
             }
             gate.release(sim);
@@ -1825,7 +1973,7 @@ fn tx_ingress(
             }
         }
         Decision::Hold => {
-            let backoff = fs.w.borrow().platform.nic_tx_retry_backoff_ns;
+            let backoff = fs.w.borrow_mut().tx_retry_backoff();
             let now = sim.now();
             trace_event(&fs, t.seq, Hop::Tx, "tx.backoff", "tx_backpressure", now, now + backoff);
             let done = done_opt.take().expect("done consumed before hold");
@@ -2091,6 +2239,71 @@ mod tests {
             assert_eq!(served[ProvisionTier::ColdBoot.idx()], 5);
             assert_eq!(served.iter().sum::<u64>(), fs.completed());
         }
+    }
+
+    #[test]
+    fn crash_function_resolves_inflight_and_serves_after_recovery() {
+        for backend in [Backend::Containerd, Backend::Junctiond] {
+            let mut sim = Sim::new();
+            let fs = FaasSim::new(&cfg(backend), Rc::new(PlatformConfig::default()));
+            fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+            sim.run_until(SECONDS);
+            let out = Rc::new(RefCell::new(Vec::new()));
+            for _ in 0..5 {
+                let o = out.clone();
+                fs.submit(&mut sim, "aes", move |_, t| o.borrow_mut().push(t));
+            }
+            // Crash while those requests are somewhere in the pipeline.
+            let fs2 = fs.clone();
+            sim.at(sim.now() + 10 * MICROS, move |sim| {
+                fs2.crash_function(sim, "aes").expect("deployed");
+            });
+            sim.run_to_completion();
+            assert_eq!(out.borrow().len(), 5, "{backend:?}: in-flight must resolve");
+            // The function is live again and serves new traffic.
+            assert!(fs.is_deployed("aes"), "{backend:?}");
+            for _ in 0..3 {
+                let o = out.clone();
+                fs.submit(&mut sim, "aes", move |_, t| o.borrow_mut().push(t));
+            }
+            sim.run_to_completion();
+            assert_eq!(out.borrow().len(), 8, "{backend:?}");
+            assert!(
+                out.borrow()[5..].iter().all(|t| !t.dropped),
+                "{backend:?}: post-recovery traffic must complete"
+            );
+            if backend == Backend::Junctiond {
+                let ms = fs.manager_stats();
+                assert!(ms.crashed >= 1, "crash must be counted");
+                assert!(ms.restarted <= ms.crashed);
+            }
+            let violations = crate::invariants::audit_all(&fs);
+            assert!(violations.is_empty(), "{backend:?}: {violations:?}");
+        }
+    }
+
+    #[test]
+    fn jittered_backoff_is_deterministic_and_gated() {
+        let run = |jitter: u64| -> Vec<Time> {
+            let platform =
+                PlatformConfig { nic_retry_jitter: jitter, ..PlatformConfig::default() };
+            let mut sim = Sim::new();
+            let fs = FaasSim::new(&cfg(Backend::Containerd), Rc::new(platform));
+            fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+            sim.run_until(crate::simcore::SECONDS);
+            let out = Rc::new(RefCell::new(Vec::new()));
+            // A burst deeper than the 256-slot RX ring forces retransmits,
+            // so the backoff policy is actually on the path.
+            for _ in 0..600 {
+                let o = out.clone();
+                fs.submit(&mut sim, "aes", move |_, t| o.borrow_mut().push(t.done));
+            }
+            sim.run_to_completion();
+            Rc::try_unwrap(out).ok().unwrap().into_inner()
+        };
+        assert_eq!(run(0), run(0));
+        assert_eq!(run(1), run(1), "decorrelated jitter must be seed-deterministic");
+        assert_ne!(run(0), run(1), "jitter must actually move the retransmit times");
     }
 
     #[test]

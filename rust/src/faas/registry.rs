@@ -52,6 +52,10 @@ pub struct FunctionSpec {
     /// calibrated cost; multi-tenant experiments give antagonist tenants
     /// chunkier bodies than the latency-sensitive function (E14).
     pub compute_ns: Option<Time>,
+    /// Batch-class work: sheddable first under admission-control
+    /// brownout when healthy cluster capacity drops below the
+    /// `fault_brownout_watermark_bp` watermark (E16).
+    pub batch: bool,
 }
 
 impl FunctionSpec {
@@ -63,6 +67,7 @@ impl FunctionSpec {
             scale_mode: runtime.default_scale_mode(),
             scale: 1,
             compute_ns: None,
+            batch: false,
         }
     }
 
@@ -74,6 +79,11 @@ impl FunctionSpec {
 
     pub fn with_compute(mut self, compute_ns: Time) -> Self {
         self.compute_ns = Some(compute_ns);
+        self
+    }
+
+    pub fn with_batch(mut self) -> Self {
+        self.batch = true;
         self
     }
 }

@@ -1,0 +1,222 @@
+//! Deterministic fault-injection plane.
+//!
+//! A [`FaultSchedule`] is a list of `(virtual time, fault)` pairs built
+//! ahead of a run and installed onto the simcore engine with
+//! [`install`]. Every fault is an ordinary scheduled event — no host
+//! entropy, no host clock — so the same schedule against the same seed
+//! replays bit-identically, and an *empty* schedule leaves the run
+//! byte-identical to a build without this module.
+//!
+//! Four fault kinds cover the failure modes the paper's restart-cost
+//! story cares about:
+//!
+//! * **Worker crash** — every instance on the worker dies mid-run; the
+//!   warm pool is wiped (it lived in the worker's memory) and every
+//!   hosted function re-provisions through the tier ladder. The on-disk
+//!   snapshot survives, so recovery pays a restore, not a cold boot —
+//!   the kernel-vs-bypass asymmetry E16 quantifies.
+//! * **Instance crash** — one function's instances on one worker die;
+//!   same recovery path, scoped to a single function.
+//! * **Gray failure** — a worker's service times degrade by a factor
+//!   without anything dying. Nothing fails, nothing ejects; only
+//!   deadline/hedging machinery can defend the p99.
+//! * **Wire loss** — for a window, each cluster submission is lost on
+//!   the wire with probability `loss_bp`/10 000 (drawn from the
+//!   cluster's own seeded fault stream). Requires the deadline/retry
+//!   machinery to be on, which guarantees every lost request still
+//!   resolves.
+//!
+//! [`FaultStats`] counts what was actually injected and carries its own
+//! conservation law, so `audit_all` covers the fault plane itself.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::faas::Cluster;
+use crate::invariants::{check, Audit, Violation};
+use crate::simcore::{Sim, Time};
+
+/// One injectable fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Kill every instance on worker `worker`; wipe its warm pool;
+    /// re-provision every hosted function through the tier ladder.
+    WorkerCrash { worker: usize },
+    /// Kill `function`'s instances on worker `worker` mid-invocation.
+    InstanceCrash { worker: usize, function: String },
+    /// Degrade worker `worker`'s service times to `factor_x100`/100 of
+    /// nominal for `duration` (e.g. 800 = 8× slower), then recover.
+    Gray { worker: usize, factor_x100: u64, duration: Time },
+    /// For `duration`, lose each cluster submission on the wire with
+    /// probability `loss_bp`/10 000.
+    WireLoss { loss_bp: u64, duration: Time },
+}
+
+/// A fault at a virtual-clock instant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at: Time,
+    pub kind: FaultKind,
+}
+
+/// A seeded, pre-built fault schedule. Built with the fluent
+/// constructors below; installed once with [`install`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn worker_crash(mut self, at: Time, worker: usize) -> Self {
+        self.events.push(FaultEvent { at, kind: FaultKind::WorkerCrash { worker } });
+        self
+    }
+
+    pub fn instance_crash(mut self, at: Time, worker: usize, function: &str) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            kind: FaultKind::InstanceCrash { worker, function: function.to_string() },
+        });
+        self
+    }
+
+    pub fn gray(mut self, at: Time, worker: usize, factor_x100: u64, duration: Time) -> Self {
+        self.events.push(FaultEvent { at, kind: FaultKind::Gray { worker, factor_x100, duration } });
+        self
+    }
+
+    pub fn wire_loss(mut self, at: Time, loss_bp: u64, duration: Time) -> Self {
+        self.events.push(FaultEvent { at, kind: FaultKind::WireLoss { loss_bp, duration } });
+        self
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// What the fault plane actually injected, with the worst recovery
+/// latency any crash paid through the tier ladder.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Total fault events fired.
+    pub injected: u64,
+    pub worker_crashes: u64,
+    pub instance_crashes: u64,
+    pub gray_onsets: u64,
+    pub wire_loss_windows: u64,
+    /// Worst re-provision latency a crash paid (restore or cold boot).
+    pub worst_recovery_ns: Time,
+}
+
+impl Audit for FaultStats {
+    fn module(&self) -> &'static str {
+        "faultplane"
+    }
+
+    fn audit_into(&self, out: &mut Vec<Violation>) {
+        let m = self.module();
+        let kinds = self.worker_crashes
+            + self.instance_crashes
+            + self.gray_onsets
+            + self.wire_loss_windows;
+        check(out, m, "injection-conservation", self.injected == kinds, || {
+            format!(
+                "injected {} != worker {} + instance {} + gray {} + wire {}",
+                self.injected,
+                self.worker_crashes,
+                self.instance_crashes,
+                self.gray_onsets,
+                self.wire_loss_windows
+            )
+        });
+    }
+}
+
+/// Install every event of `schedule` onto `sim` against `cluster`.
+/// Returns the shared stats cell; read it after the run for the audit
+/// and for recovery-latency telemetry.
+pub fn install(
+    schedule: FaultSchedule,
+    sim: &mut Sim,
+    cluster: &Rc<RefCell<Cluster>>,
+) -> Rc<RefCell<FaultStats>> {
+    let stats = Rc::new(RefCell::new(FaultStats::default()));
+    for ev in schedule.events {
+        let cluster = cluster.clone();
+        let stats = stats.clone();
+        let kind = ev.kind;
+        sim.at(ev.at, move |sim| {
+            let recovery = match kind {
+                FaultKind::WorkerCrash { worker } => {
+                    stats.borrow_mut().worker_crashes += 1;
+                    cluster.borrow_mut().crash_worker(sim, worker)
+                }
+                FaultKind::InstanceCrash { worker, function } => {
+                    stats.borrow_mut().instance_crashes += 1;
+                    cluster.borrow_mut().crash_instance(sim, worker, &function)
+                }
+                FaultKind::Gray { worker, factor_x100, duration } => {
+                    stats.borrow_mut().gray_onsets += 1;
+                    cluster.borrow_mut().set_gray(sim, worker, factor_x100, duration);
+                    0
+                }
+                FaultKind::WireLoss { loss_bp, duration } => {
+                    stats.borrow_mut().wire_loss_windows += 1;
+                    cluster.borrow_mut().set_wire_loss(sim, loss_bp, duration);
+                    0
+                }
+            };
+            let mut st = stats.borrow_mut();
+            st.injected += 1;
+            st.worst_recovery_ns = st.worst_recovery_ns.max(recovery);
+        });
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::MILLIS;
+
+    #[test]
+    fn schedule_builder_accumulates_in_order() {
+        let s = FaultSchedule::new()
+            .worker_crash(MILLIS, 0)
+            .instance_crash(2 * MILLIS, 1, "aes")
+            .gray(3 * MILLIS, 0, 800, 5 * MILLIS)
+            .wire_loss(4 * MILLIS, 500, 2 * MILLIS);
+        assert_eq!(s.len(), 4);
+        assert!(!s.is_empty());
+        assert_eq!(s.events()[0].at, MILLIS);
+        assert_eq!(
+            s.events()[1].kind,
+            FaultKind::InstanceCrash { worker: 1, function: "aes".to_string() }
+        );
+    }
+
+    #[test]
+    fn stats_conservation_law_catches_mismatch() {
+        let mut ok = FaultStats { injected: 2, worker_crashes: 1, gray_onsets: 1, ..Default::default() };
+        let mut out = Vec::new();
+        ok.audit_into(&mut out);
+        assert!(out.is_empty(), "{out:?}");
+        ok.injected = 3;
+        ok.audit_into(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "injection-conservation");
+    }
+}

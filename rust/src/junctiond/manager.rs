@@ -33,6 +33,18 @@ pub struct RunState {
     pub in_flight: u32,
 }
 
+/// Crash-path counters (§4's monitoring loop remediation). Conservation
+/// law: every revival answers a crash, so `restarted <= crashed` always
+/// (crashes recovered by a fresh redeploy instead of a restart sweep
+/// keep the inequality strict).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ManagerStats {
+    /// Instances that died via [`Junctiond::fail_instance`].
+    pub crashed: u64,
+    /// Instances revived by [`Junctiond::restart_crashed`].
+    pub restarted: u64,
+}
+
 /// The manager: owns the server's Junction scheduler, the per-function
 /// instance sets, and their configs.
 pub struct Junctiond {
@@ -44,6 +56,7 @@ pub struct Junctiond {
     next_ip: u32,
     next_port: u16,
     pub deploys: u64,
+    pub stats: ManagerStats,
 }
 
 impl Junctiond {
@@ -57,6 +70,7 @@ impl Junctiond {
             next_ip: 0x0A01_0002, // 10.1.0.x — junction subnet
             next_port: 8080,
             deploys: 0,
+            stats: ManagerStats::default(),
         }
     }
 
@@ -254,6 +268,7 @@ impl Junctiond {
     /// The scheduler releases its cores; junctiond's monitor will report
     /// it non-running until [`Junctiond::restart_crashed`] revives it.
     pub fn fail_instance(&mut self, id: InstanceId) {
+        self.stats.crashed += 1;
         let held = {
             let inst = self.scheduler.instance_mut(id).expect("unknown instance");
             inst.state = InstanceState::Stopped;
@@ -282,6 +297,7 @@ impl Junctiond {
             .collect();
         let mut worst = 0;
         let n = crashed.len() as u32;
+        self.stats.restarted += n as u64;
         for (id, name) in crashed {
             let inst = self.scheduler.instance_mut(id).unwrap();
             inst.spawn_uproc(&name);
@@ -388,6 +404,12 @@ impl Audit for Junctiond {
                 format!("network config held for instance {id} unknown to the scheduler")
             });
         }
+        check(out, m, "crash-conservation", self.stats.restarted <= self.stats.crashed, || {
+            format!(
+                "restarted {} > crashed {} — a revival without a crash",
+                self.stats.restarted, self.stats.crashed
+            )
+        });
     }
 }
 
@@ -490,6 +512,8 @@ mod tests {
         assert_eq!(revived, 1);
         assert!(worst > 3 * MILLIS && worst < 4 * MILLIS);
         assert_eq!(jd.monitor()[0].running, 1);
+        assert_eq!(jd.stats, ManagerStats { crashed: 1, restarted: 1 });
+        jd.assert_clean();
         jd.scheduler.check_invariants();
         // And it serves again.
         assert!(matches!(

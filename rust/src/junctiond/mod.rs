@@ -11,4 +11,4 @@
 
 mod manager;
 
-pub use manager::{InstanceConfig, Junctiond, RunState};
+pub use manager::{InstanceConfig, Junctiond, ManagerStats, RunState};

@@ -38,6 +38,7 @@ pub mod config;
 pub mod containerd_sim;
 pub mod experiments;
 pub mod faas;
+pub mod faultplane;
 pub mod hostclock;
 pub mod invariants;
 pub mod junction;

@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use junctiond_repro::config::Backend;
 use junctiond_repro::experiments as ex;
 use junctiond_repro::server::{run_pipeline, ServeMode};
-use junctiond_repro::simcore::MILLIS;
+use junctiond_repro::simcore::{MICROS, MILLIS};
 use junctiond_repro::telemetry::write_csv;
 
 fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
@@ -68,7 +68,7 @@ fn usage() -> ! {
          <fig5|fig6|coldstart|ablation|density|serve|calibrate|selfcheck|monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
          --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|\
-         interference|blame\n\
+         interference|blame|faults\n\
          --mode kernel|bypass --requests N --runs N --workers N --worker-cores N\n\
          --functions N --hot N --rate RPS --payload BYTES --trace-out FILE"
     );
@@ -207,6 +207,41 @@ fn main() -> Result<()> {
                 maybe_csv(&flags, &table, "ablation_blame")?;
                 return Ok(());
             }
+            if which == "faults" {
+                // E16: the resilience matrix — seeded fault schedules
+                // (crash, gray failure, wire loss, brownout) against the
+                // deadline/retry/hedging recovery machinery. Deliberately
+                // deterministic (platform-default compute, no wall-clock
+                // output): the CI resilience job diffs two same-seed runs
+                // byte-for-byte.
+                let dur = get_u64(&flags, "duration-ms", 300)? * MILLIS;
+                let (table, points) = ex::resilience_table(dur, seed);
+                println!("{}", table.to_markdown());
+                let find = |b: Backend, s: &str| {
+                    points.iter().find(|p| p.backend == b && p.scenario == s).unwrap()
+                };
+                let jc = find(Backend::Junctiond, "crash+loss");
+                let cc = find(Backend::Containerd, "crash+loss");
+                println!(
+                    "crash re-provision: junctiond {}µs vs containerd {}µs ({:.1}× faster)",
+                    jc.recovery_ns / MICROS,
+                    cc.recovery_ns / MICROS,
+                    cc.recovery_ns as f64 / jc.recovery_ns.max(1) as f64
+                );
+                for b in [Backend::Containerd, Backend::Junctiond] {
+                    let off = find(b, "gray").p99;
+                    let on = find(b, "gray+hedge").p99;
+                    println!(
+                        "gray-failure p99 {}: {}µs unhedged → {}µs hedged ({:.1}×)",
+                        b.name(),
+                        off / MICROS,
+                        on / MICROS,
+                        off as f64 / on.max(1) as f64
+                    );
+                }
+                maybe_csv(&flags, &table, "ablation_faults")?;
+                return Ok(());
+            }
             if which == "duplex" {
                 // E13: the full-duplex data path — worker TX rings with
                 // backpressure + the front end's own RX NIC, plus the echo
@@ -261,7 +296,7 @@ fn main() -> Result<()> {
                 "tiers" => ex::coldstart_tiers_table(20, seed),
                 other => bail!(
                     "unknown ablation '{other}' (cache|polling|scaleup|isolation|autoscale\
-                     |multitenant|tiers|netpath|duplex|interference|blame)"
+                     |multitenant|tiers|netpath|duplex|interference|blame|faults)"
                 ),
             };
             println!("{}", table.to_markdown());

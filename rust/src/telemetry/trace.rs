@@ -315,6 +315,14 @@ impl Tracer {
         self.inner.borrow().completions.len() as u64
     }
 
+    /// Traces opened by [`Tracer::begin`] but not yet finished. After a
+    /// drained run this must be 0 on every path — including give-ups,
+    /// TX abandons, and every fault-plane failure path (the span-leak
+    /// conservation law the cluster tests pin).
+    pub fn open_traces(&self) -> usize {
+        self.inner.borrow().live.len()
+    }
+
     /// Snapshot of the tail-exemplar reservoir, slowest first.
     pub fn exemplars(&self) -> Vec<Trace> {
         self.inner.borrow().reservoir.clone()

@@ -93,6 +93,17 @@ pub struct RunResult {
     pub retried: u64,
     /// Worker-side TX backpressure re-offers across all requests.
     pub tx_retried: u64,
+    /// Requests the frontend deadline resolved before any attempt
+    /// returned (fault plane; disjoint from `completed` and `dropped`).
+    pub timed_out: u64,
+    /// Requests whose final resolution was a failed attempt (subset of
+    /// `dropped` — failures also count there, keeping the conservation
+    /// law submitted == completed + dropped + timed_out).
+    pub failed: u64,
+    /// Requests won by a hedged duplicate rather than the primary.
+    pub hedge_wins: u64,
+    /// Cross-replica retry attempts across all requests (fault plane).
+    pub retried_other_worker: u64,
     /// Virtual duration of the measurement window.
     pub elapsed: Time,
 }
@@ -102,6 +113,17 @@ impl RunResult {
     fn record(&mut self, t: &RequestTiming) {
         self.retried += t.retries as u64;
         self.tx_retried += t.tx_retries as u64;
+        self.retried_other_worker += t.retried_other_worker as u64;
+        if t.hedge_won {
+            self.hedge_wins += 1;
+        }
+        if t.timed_out {
+            self.timed_out += 1;
+            return;
+        }
+        if t.failed {
+            self.failed += 1;
+        }
         if t.dropped {
             self.dropped += 1;
             return;
@@ -325,7 +347,7 @@ fn schedule_arrival_batch<T: LoadTarget, P: FnMut(&mut Rng) -> String + 'static>
                     if in_window {
                         let mut r = r3.borrow_mut();
                         r.record(&timing);
-                        if !timing.dropped && timing.done <= measure_until {
+                        if !timing.dropped && !timing.timed_out && timing.done <= measure_until {
                             r.completed_in_window += 1;
                         }
                     }

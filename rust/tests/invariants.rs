@@ -5,17 +5,20 @@
 //! counter struct is named below, so removing its coverage trips the
 //! linter.
 
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use junctiond_repro::config::{Backend, ExperimentConfig, PlatformConfig};
 use junctiond_repro::experiments as ex;
-use junctiond_repro::faas::{FaasSim, FunctionSpec, RuntimeKind};
-use junctiond_repro::invariants::audit_all;
+use junctiond_repro::faas::{Cluster, FaasSim, FunctionSpec, RecoveryStats, RuntimeKind};
+use junctiond_repro::faultplane::{install, FaultSchedule, FaultStats};
+use junctiond_repro::invariants::{audit_all, Audit};
 use junctiond_repro::junction::SchedulerStats;
+use junctiond_repro::junctiond::ManagerStats;
 use junctiond_repro::netpath::{NicStats, TxStats};
 use junctiond_repro::simcore::{EngineStats, FabricStats, Sim, MILLIS, SECONDS};
 use junctiond_repro::snapshot::PoolStats;
-use junctiond_repro::workload::ClosedLoop;
+use junctiond_repro::workload::{ClosedLoop, OpenLoop};
 
 /// Drive a short closed loop to a drained quiesce point and return the
 /// sim + node for counter inspection.
@@ -74,6 +77,82 @@ fn stats_counters_obey_their_conservation_laws() {
         // And the structural walker agrees the node is lawful.
         let v = audit_all(&fs);
         assert!(v.is_empty(), "{backend:?}: audit_all found: {v:?}");
+    }
+}
+
+#[test]
+fn manager_crash_counters_conserve() {
+    // The junctiond manager's crash ledger: every restart corresponds to
+    // a crash (`restarted <= crashed`), and a crash mid-invocation leaves
+    // the node lawful once the tier ladder re-provisions the function.
+    let cfg = ExperimentConfig {
+        backend: Backend::Junctiond,
+        function_compute_ns: 100_000,
+        seed: 23,
+        ..Default::default()
+    };
+    let mut sim = Sim::new();
+    let fs = FaasSim::new(&cfg, Rc::new(PlatformConfig::default()));
+    fs.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+    sim.run_until(SECONDS);
+    for _ in 0..5 {
+        fs.submit(&mut sim, "aes", |_, _| {});
+    }
+    let fs2 = fs.clone();
+    sim.after(10_000, move |sim| {
+        fs2.crash_function(sim, "aes");
+    });
+    sim.run_to_completion();
+    let ms: ManagerStats = fs.manager_stats();
+    assert!(ms.crashed >= 1, "crash was not recorded: {ms:?}");
+    assert!(ms.restarted <= ms.crashed, "restart without a crash: {ms:?}");
+    let v = audit_all(&fs);
+    assert!(v.is_empty(), "audit after crash recovery found: {v:?}");
+}
+
+#[test]
+fn fault_schedule_conserves_requests_on_both_backends() {
+    // The fault plane's end-to-end conservation law: under an active
+    // schedule (instance crash + worker crash + gray + wire loss) with
+    // the deadline/retry machinery on, every submitted request resolves
+    // exactly once, and the full audit tree — including the fault plane's
+    // own injection ledger — is clean afterwards.
+    for backend in [Backend::Containerd, Backend::Junctiond] {
+        let platform = Rc::new(PlatformConfig {
+            deadline_timeout_ns: 20 * MILLIS,
+            deadline_max_retries: 2,
+            deadline_retry_backoff_ns: 20_000,
+            nic_retry_jitter: 1,
+            ..PlatformConfig::default()
+        });
+        let mut sim = Sim::new();
+        let compute = platform.function_compute_ns;
+        let mut c = Cluster::new_with_platform(backend, 2, 10, 13, compute, platform);
+        c.policy.max_replicas = 2;
+        c.deploy(&mut sim, FunctionSpec::new("aes", "aes600", RuntimeKind::Go));
+        c.scale_up(&mut sim, "aes");
+        sim.run_until(SECONDS);
+        let c = Rc::new(RefCell::new(c));
+        let schedule = FaultSchedule::new()
+            .instance_crash(SECONDS + 10 * MILLIS, 0, "aes")
+            .worker_crash(SECONDS + 25 * MILLIS, 1)
+            .gray(SECONDS + 35 * MILLIS, 0, 800, 15 * MILLIS)
+            .wire_loss(SECONDS + 50 * MILLIS, 500, 15 * MILLIS);
+        let faults = install(schedule, &mut sim, &c);
+        let r = OpenLoop::new("aes", 4_000.0, 70 * MILLIS, 19).run_on(&mut sim, &c);
+        assert_eq!(
+            r.submitted,
+            r.completed + r.dropped + r.timed_out,
+            "{backend:?}: requests leaked under the fault schedule"
+        );
+        let fstats: FaultStats = *faults.borrow();
+        assert_eq!(fstats.injected, 4, "{backend:?}: not every fault fired");
+        fstats.assert_clean();
+        let cl = c.borrow();
+        let rec: RecoveryStats = cl.recovery_stats();
+        assert!(rec.hedge_wins <= rec.hedges, "{backend:?}: {rec:?}");
+        let v = audit_all(&*cl);
+        assert!(v.is_empty(), "{backend:?}: audit found: {v:?}");
     }
 }
 

@@ -14,7 +14,7 @@ use crate::lints::{FileClass, SourceFile};
 
 /// The modules whose state or output is part of the simulation timeline;
 /// L1/L3 apply here. Mirrors the list in ISSUE/DESIGN §3g.
-pub const SIM_MODULES: [&str; 8] = [
+pub const SIM_MODULES: [&str; 9] = [
     "simcore",
     "faas",
     "netpath",
@@ -23,6 +23,7 @@ pub const SIM_MODULES: [&str; 8] = [
     "snapshot",
     "workload",
     "telemetry",
+    "faultplane",
 ];
 
 /// Crate root (`rust/`), derived from xtask's own manifest dir so the
