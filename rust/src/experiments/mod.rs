@@ -5,6 +5,8 @@
 //! returns [`crate::telemetry::Table`]s so callers can print markdown or
 //! dump CSV.
 
+pub mod schedcheck;
+
 use std::cell::RefCell;
 use std::rc::Rc;
 

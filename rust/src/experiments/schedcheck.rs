@@ -1,0 +1,221 @@
+//! E17 — the same-time commutativity schedule explorer (`schedcheck`).
+//!
+//! The sharded-engine refactor (ROADMAP) will execute events *within* a
+//! conservative synchronization window in whatever order the shards
+//! reach them; only the cross-window order is guaranteed. The question
+//! this harness answers empirically is therefore: **which results
+//! depend on the engine's same-timestamp tie-break order?**
+//!
+//! It reruns whole experiment tables under every [`TieBreak`] policy —
+//! schedule order, reverse schedule order, and a seeded shuffle — by
+//! flipping the thread-local default ([`set_default_tiebreak`]) around
+//! the run, exactly the way the differential engine tests flip
+//! [`crate::simcore::set_default_engine`]. A table whose rendered bytes
+//! are identical under all three permutations is certified
+//! *tie-break-invariant*: every same-instant race in that run commutes,
+//! so the rows are safe for intra-window parallel execution. A table
+//! that diverges is reported with the first diverging line so the race
+//! can be fixed (distinct timestamps), declared (a `tie-break:`
+//! rationale for detlint L7), or excluded from the parallel plan.
+//!
+//! The harness also runs a deliberately order-dependent workload — a
+//! controller sampling a gauge that arrivals increment at the *same*
+//! instant — and must flag it with the first diverging
+//! `(time, seq, module)` triple: proof the explorer detects
+//! non-commutativity rather than vacuously certifying everything.
+//! Calibration cannot fool the byte-diff: [`super::calibrated_compute_ns`]
+//! is process-cached, so every policy sees the same compute cost.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::simcore::{set_default_tiebreak, Sim, TieBreak, Time, MILLIS};
+use crate::telemetry::Table;
+
+/// The permutations a certification run compares, derived from the
+/// experiment seed (ascending first: it is the engine default and the
+/// baseline every CI byte-diff already pins).
+pub fn policies(seed: u64) -> [TieBreak; 3] {
+    [
+        TieBreak::SeqAscending,
+        TieBreak::SeqDescending,
+        TieBreak::SeededShuffle(seed ^ 0x7361_6d65_7469_6d65),
+    ]
+}
+
+/// Short display name of a policy.
+pub fn policy_name(tb: TieBreak) -> String {
+    match tb {
+        TieBreak::SeqAscending => "seq-ascending".to_string(),
+        TieBreak::SeqDescending => "seq-descending".to_string(),
+        TieBreak::SeededShuffle(s) => format!("seeded-shuffle({s:#x})"),
+    }
+}
+
+/// Result of rerunning one experiment table under every policy.
+pub struct TableCert {
+    pub name: &'static str,
+    /// `(policy name, rendered markdown)` per policy, ascending first.
+    pub renders: Vec<(String, String)>,
+}
+
+impl TableCert {
+    /// Byte-identical under every policy?
+    pub fn invariant(&self) -> bool {
+        self.renders.iter().all(|(_, r)| *r == self.renders[0].1)
+    }
+
+    /// For a divergent table: `(policy name, line number, baseline line,
+    /// divergent line)` of the first differing rendered line against the
+    /// ascending baseline.
+    pub fn first_diff(&self) -> Option<(String, usize, String, String)> {
+        let base: Vec<&str> = self.renders[0].1.lines().collect();
+        for (name, render) in &self.renders[1..] {
+            if *render == self.renders[0].1 {
+                continue;
+            }
+            let lines: Vec<&str> = render.lines().collect();
+            for i in 0..base.len().max(lines.len()) {
+                let a = base.get(i).copied().unwrap_or("<missing>");
+                let b = lines.get(i).copied().unwrap_or("<missing>");
+                if a != b {
+                    return Some((name.clone(), i + 1, a.to_string(), b.to_string()));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Render `table()` under tie-break policy `tb` (restoring the previous
+/// thread default afterwards, even though every caller sets it anyway).
+fn render_under<F: FnOnce() -> Table>(tb: TieBreak, table: F) -> String {
+    let prev = set_default_tiebreak(tb);
+    let t = table();
+    set_default_tiebreak(prev);
+    t.to_markdown()
+}
+
+/// Rerun `table` under every policy and compare the rendered bytes.
+pub fn certify<F: Fn() -> Table>(name: &'static str, seed: u64, table: F) -> TableCert {
+    let renders = policies(seed)
+        .into_iter()
+        .map(|tb| (policy_name(tb), render_under(tb, &table)))
+        .collect();
+    TableCert { name, renders }
+}
+
+/// One fired event of the order-dependent demonstration workload:
+/// `(virtual time, schedule-order seq, module tag)`.
+pub type Fire = (Time, u64, &'static str);
+
+/// The divergence the demonstration workload must produce.
+pub struct BadDiverge {
+    pub policy_a: String,
+    pub policy_b: String,
+    /// Index into the fired-event sequence where the runs first differ.
+    pub fire_index: usize,
+    pub a: Fire,
+    pub b: Fire,
+}
+
+/// A deliberately order-dependent workload: every millisecond, an
+/// "arrival" event increments a shared gauge and a "controller" event
+/// scheduled at the *identical* timestamp samples it to make a scaling
+/// decision. Whichever fires first changes both the fired-event log and
+/// the controller's samples — the exact hazard detlint L7 flags
+/// statically and a sharded engine would hit nondeterministically.
+fn bad_workload_fires(tb: TieBreak) -> Vec<Fire> {
+    let mut sim = Sim::with_engine_and_tiebreak(crate::simcore::default_engine(), tb);
+    let fires: Rc<RefCell<Vec<Fire>>> = Rc::new(RefCell::new(Vec::new()));
+    let gauge = Rc::new(RefCell::new(0i64));
+    let samples: Rc<RefCell<Vec<i64>>> = Rc::new(RefCell::new(Vec::new()));
+    for k in 0..16u64 {
+        let t = (k + 1) * MILLIS;
+        let (f, g) = (fires.clone(), gauge.clone());
+        sim.at(t, move |s| {
+            *g.borrow_mut() += 1;
+            let (time, seq) = s.current_fire().expect("inside a fire");
+            f.borrow_mut().push((time, seq, "arrival"));
+        });
+        let (f, g, smp) = (fires.clone(), gauge.clone(), samples.clone());
+        sim.at(t, move |s| {
+            smp.borrow_mut().push(*g.borrow());
+            let (time, seq) = s.current_fire().expect("inside a fire");
+            f.borrow_mut().push((time, seq, "controller"));
+        });
+    }
+    sim.run_to_completion();
+    let v = fires.borrow().clone();
+    v
+}
+
+/// Run the demonstration workload under every policy; return the first
+/// divergence (`None` would mean the explorer failed to detect it).
+pub fn bad_workload_divergence(seed: u64) -> Option<BadDiverge> {
+    let pols = policies(seed);
+    let base = bad_workload_fires(pols[0]);
+    for &tb in &pols[1..] {
+        let other = bad_workload_fires(tb);
+        for i in 0..base.len().max(other.len()) {
+            let a = base.get(i).copied();
+            let b = other.get(i).copied();
+            if a != b {
+                return Some(BadDiverge {
+                    policy_a: policy_name(pols[0]),
+                    policy_b: policy_name(tb),
+                    fire_index: i,
+                    a: a.unwrap_or((0, 0, "<none>")),
+                    b: b.unwrap_or((0, 0, "<none>")),
+                });
+            }
+        }
+    }
+    None
+}
+
+/// Certify the experiment tables: E5 and E11 always, E16 unless
+/// `quick`. Returns the per-table certificates plus the demonstration
+/// divergence.
+pub fn schedcheck(quick: bool, duration: Time, seed: u64) -> (Vec<TableCert>, Option<BadDiverge>) {
+    let invocations = if quick { 40 } else { 100 };
+    let mut certs = vec![
+        certify("E5 fig5", seed, || super::fig5_table(invocations, seed).0),
+        certify("E11 netpath", seed, || {
+            super::netpath_table(
+                2,
+                16,
+                &super::netpath_default_containerd_rates(),
+                &super::netpath_default_junction_rates(),
+                duration,
+                seed,
+            )
+            .0
+        }),
+    ];
+    if !quick {
+        certs.push(certify("E16 resilience", seed, || super::resilience_table(duration, seed).0));
+    }
+    (certs, bad_workload_divergence(seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bad_workload_diverges_under_permuted_tiebreaks() {
+        let d = bad_workload_divergence(17).expect("order-dependent workload must diverge");
+        // The first divergence is a tied (same-time) pair: identical
+        // virtual time, different (seq, module).
+        assert_eq!(d.a.0, d.b.0, "divergence must be at a tied timestamp");
+        assert_ne!((d.a.1, d.a.2), (d.b.1, d.b.2));
+    }
+
+    #[test]
+    fn bad_workload_is_deterministic_per_policy() {
+        for tb in policies(17) {
+            assert_eq!(bad_workload_fires(tb), bad_workload_fires(tb));
+        }
+    }
+}

@@ -168,6 +168,10 @@ fn frontend_rx_ingress(
     match kicked {
         Some(true) => {
             let front2 = front.clone();
+            // The deferred kick lets a burst of tied responses coalesce
+            // into one drain batch; the drain pops whatever is ringed.
+            // tie-break: order among tied deliveries only moves batch
+            // boundaries, never which responses are delivered.
             sim.after(0, move |sim| frontend_rx_drain(front2, sim));
         }
         Some(false) => {}

@@ -140,6 +140,8 @@ mod tests {
             gate.acquire(&mut sim, move |sim| {
                 let log = log.clone();
                 let gate3 = gate2.clone();
+                // tie-break: grants at the same instant are the point —
+                // the asserted log pins the gate's FIFO grant order.
                 sim.after(10, move |sim| {
                     log.borrow_mut().push((i, sim.now()));
                     gate3.release(sim);
@@ -161,6 +163,8 @@ mod tests {
             gate.acquire(&mut sim, move |sim| {
                 let log = log.clone();
                 let gate3 = gate2.clone();
+                // tie-break: grants at the same instant are the point —
+                // the asserted log pins the gate's FIFO grant order.
                 sim.after(10, move |sim| {
                     log.borrow_mut().push((i, sim.now()));
                     gate3.release(sim);
@@ -222,6 +226,9 @@ mod tests {
                     }
                 }
                 let active3 = active2.clone();
+                // tie-break: the tied releases at each instant are
+                // symmetric; only the concurrency high-water mark is
+                // asserted, not which waiter runs first.
                 sim.after(10, move |sim| {
                     *active3.borrow_mut() -= 1;
                     gate2.release(sim);

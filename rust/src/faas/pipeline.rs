@@ -1517,8 +1517,10 @@ fn nic_ingress(
             debug_assert!(live, "retransmit timer must be live at accept");
             fs.w.borrow_mut().nic.stats.retrans_cancelled += 1;
             if kick {
-                // Defer the first poll one event so a burst of same-instant
-                // arrivals coalesces into one drain batch.
+                // Defer the first poll one event so a burst of
+                // same-instant arrivals coalesces into one drain batch.
+                // tie-break: the drain pops whatever is ringed, so tie
+                // order only moves batch boundaries.
                 let fs2 = fs.clone();
                 sim.after(0, move |sim| nic_drain(fs2, sim));
             }
@@ -1968,6 +1970,7 @@ fn tx_ingress(
             if kick {
                 // Defer the first flush one event so a burst of
                 // same-instant completions coalesces into one TX batch.
+                // tie-break: tie order only moves batch boundaries.
                 let fs2 = fs.clone();
                 sim.after(0, move |sim| tx_drain(fs2, sim));
             }

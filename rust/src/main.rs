@@ -10,6 +10,7 @@
 //! junctiond-repro serve     --mode kernel|bypass [--requests N]
 //! junctiond-repro calibrate [--runs N]
 //! junctiond-repro selfcheck [--duration-ms MS] [--seed S]
+//! junctiond-repro schedcheck [--quick] [--duration-ms MS] [--seed S]
 //! junctiond-repro monitor
 //! ```
 //!
@@ -26,6 +27,9 @@ use junctiond_repro::server::{run_pipeline, ServeMode};
 use junctiond_repro::simcore::{MICROS, MILLIS};
 use junctiond_repro::telemetry::write_csv;
 
+/// Flags that take no value (presence is the value).
+const BOOL_FLAGS: [&str; 1] = ["quick"];
+
 fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
     let mut flags = BTreeMap::new();
     let mut i = 0;
@@ -34,6 +38,11 @@ fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
         let Some(key) = a.strip_prefix("--") else {
             bail!("unexpected argument '{a}'");
         };
+        if BOOL_FLAGS.contains(&key) {
+            flags.insert(key.to_string(), "1".to_string());
+            i += 1;
+            continue;
+        }
         let val = args.get(i + 1).cloned().unwrap_or_default();
         anyhow::ensure!(!val.starts_with("--") && !val.is_empty(), "flag --{key} needs a value");
         flags.insert(key.to_string(), val);
@@ -65,8 +74,9 @@ fn maybe_csv(
 fn usage() -> ! {
     eprintln!(
         "usage: junctiond-repro \
-         <fig5|fig6|coldstart|ablation|density|serve|calibrate|selfcheck|monitor> [flags]\n\
-         flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR\n\
+         <fig5|fig6|coldstart|ablation|density|serve|calibrate|selfcheck|schedcheck|monitor> \
+         [flags]\n\
+         flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR --quick\n\
          --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|\
          interference|blame|faults\n\
          --mode kernel|bypass --requests N --runs N --workers N --worker-cores N\n\
@@ -396,6 +406,55 @@ fn main() -> Result<()> {
                 bail!("selfcheck: {broken} invariant violation(s)");
             }
             println!("selfcheck: all invariants hold across {} runs", reports.len());
+        }
+        "schedcheck" => {
+            // E17: the same-time commutativity schedule explorer — rerun
+            // E5/E11 (and E16 unless --quick) under all three TieBreak
+            // policies and byte-diff the rendered tables. Exits nonzero
+            // if any table diverges across policies, or if the built-in
+            // order-dependent demonstration workload fails to be flagged
+            // (the detector must detect).
+            let quick = flags.contains_key("quick");
+            let dur = get_u64(&flags, "duration-ms", 120)? * MILLIS;
+            let seed = get_u64(&flags, "seed", 17)?;
+            let pols = ex::schedcheck::policies(seed);
+            let names: Vec<String> = pols.into_iter().map(ex::schedcheck::policy_name).collect();
+            let ms = dur / MILLIS;
+            println!("schedcheck: seed {seed}, duration {ms}ms, policies: {}", names.join(" "));
+            let (certs, diverge) = ex::schedcheck::schedcheck(quick, dur, seed);
+            let mut broken = 0usize;
+            for c in &certs {
+                if c.invariant() {
+                    let bytes = c.renders[0].1.len();
+                    let n = c.renders.len();
+                    let msg = format!("INVARIANT ({n} policies byte-identical, {bytes} bytes)");
+                    println!("schedcheck {:<14} {msg}", c.name);
+                } else {
+                    broken += 1;
+                    let (policy, line, a, b) = c.first_diff().expect("divergent cert has a diff");
+                    println!("schedcheck {:<14} DIVERGED vs {policy} at line {line}:", c.name);
+                    println!("  {}: {a}", names[0]);
+                    println!("  {policy}: {b}");
+                }
+            }
+            match diverge {
+                Some(d) => {
+                    let (ta, sa, ma) = d.a;
+                    let (tb, sb, mb) = d.b;
+                    let at = format!("first diverging fire #{}", d.fire_index);
+                    println!("schedcheck bad-workload    FLAGGED (as required): {at}");
+                    println!("  {} fired (time={ta}, seq={sa}, module={ma})", d.policy_a);
+                    println!("  {} fired (time={tb}, seq={sb}, module={mb})", d.policy_b);
+                }
+                None => {
+                    bail!("schedcheck: order-dependent demonstration workload was NOT flagged");
+                }
+            }
+            if broken > 0 {
+                bail!("schedcheck: {broken} table(s) are tie-break-sensitive");
+            }
+            let n = certs.len();
+            println!("schedcheck: certified {n}/{n} tables tie-break-invariant");
         }
         "monitor" => {
             // Demonstrate junctiond's monitoring endpoint on a toy deployment.

@@ -32,7 +32,7 @@ use std::collections::BinaryHeap;
 use super::slab::{EventFn, EventKey, EventSlab};
 use super::wheel::{TimerWheel, WheelEntry};
 
-pub use super::slab::TimerHandle;
+pub use super::slab::{TieBreak, TimerHandle};
 
 /// Virtual time in nanoseconds.
 pub type Time = u64;
@@ -77,6 +77,29 @@ pub fn default_engine() -> EngineKind {
     DEFAULT_ENGINE.with(|c| c.get())
 }
 
+thread_local! {
+    static DEFAULT_TIEBREAK: std::cell::Cell<TieBreak> =
+        std::cell::Cell::new(TieBreak::SeqAscending);
+}
+
+/// Set the same-time tie-break policy [`Sim::new`] uses on this thread;
+/// returns the previous default. The schedule explorer (`schedcheck`)
+/// flips this to rerun whole experiments under permuted tie-breaks
+/// without threading a parameter through every layer — exactly like
+/// [`set_default_engine`].
+pub fn set_default_tiebreak(policy: TieBreak) -> TieBreak {
+    DEFAULT_TIEBREAK.with(|c| {
+        let prev = c.get();
+        c.set(policy);
+        prev
+    })
+}
+
+/// The tie-break policy new `Sim`s on this thread are built with.
+pub fn default_tiebreak() -> TieBreak {
+    DEFAULT_TIEBREAK.with(|c| c.get())
+}
+
 enum EngineImpl {
     Wheel(TimerWheel),
     ReferenceHeap(BinaryHeap<Reverse<WheelEntry>>),
@@ -107,11 +130,13 @@ pub struct EngineStats {
 pub struct Sim {
     now: Time,
     seq: u64,
+    tiebreak: TieBreak,
     slab: EventSlab,
     engine: EngineImpl,
     events_fired: u64,
     cancelled: u64,
     past_schedules: u64,
+    current: Option<(Time, u64)>,
 }
 
 impl Default for Sim {
@@ -127,8 +152,14 @@ impl Sim {
         Self::with_engine(default_engine())
     }
 
-    /// New simulation on an explicit engine.
+    /// New simulation on an explicit engine, with this thread's default
+    /// tie-break policy.
     pub fn with_engine(kind: EngineKind) -> Self {
+        Self::with_engine_and_tiebreak(kind, default_tiebreak())
+    }
+
+    /// New simulation on an explicit engine and tie-break policy.
+    pub fn with_engine_and_tiebreak(kind: EngineKind, tiebreak: TieBreak) -> Self {
         let engine = match kind {
             EngineKind::Wheel => EngineImpl::Wheel(TimerWheel::new()),
             EngineKind::ReferenceHeap => EngineImpl::ReferenceHeap(BinaryHeap::new()),
@@ -136,11 +167,13 @@ impl Sim {
         Sim {
             now: 0,
             seq: 0,
+            tiebreak,
             slab: EventSlab::new(),
             engine,
             events_fired: 0,
             cancelled: 0,
             past_schedules: 0,
+            current: None,
         }
     }
 
@@ -154,6 +187,20 @@ impl Sim {
             EngineImpl::Wheel(_) => EngineKind::Wheel,
             EngineImpl::ReferenceHeap(_) => EngineKind::ReferenceHeap,
         }
+    }
+
+    /// The same-time tie-break policy this sim was built with.
+    pub fn tie_break(&self) -> TieBreak {
+        self.tiebreak
+    }
+
+    /// `(time, schedule-order seq)` of the most recently fired event —
+    /// `None` before the first fire. The seq is the insertion sequence
+    /// number (policy-independent up to the first divergence), which is
+    /// what the schedule explorer prints when two tie-break policies
+    /// first disagree.
+    pub fn current_fire(&self) -> Option<(Time, u64)> {
+        self.current
     }
 
     /// Current virtual time.
@@ -197,9 +244,10 @@ impl Sim {
         } else {
             t
         };
-        let key = EventKey { time: t, seq: self.seq };
+        let key = EventKey { time: t, seq: self.tiebreak.token(self.seq) };
+        let orig = self.seq;
         self.seq += 1;
-        let h = self.slab.insert(key, cb);
+        let h = self.slab.insert(key, orig, cb);
         match &mut self.engine {
             EngineImpl::Wheel(w) => w.insert(key, h.idx, h.gen, self.now),
             EngineImpl::ReferenceHeap(heap) => {
@@ -254,14 +302,14 @@ impl Sim {
     /// handle was already stale. Times in the past clamp-and-count like
     /// [`Sim::at`].
     pub fn reschedule(&mut self, h: TimerHandle, t: Time) -> Option<TimerHandle> {
-        let (_, cb) = self.slab.take(h.idx, h.gen)?;
+        let (_, _, cb) = self.slab.take(h.idx, h.gen)?;
         self.cancelled += 1;
         Some(self.schedule_boxed(t, cb))
     }
 
     /// Pop the earliest live event at or before `until`, skipping stale
     /// (cancelled/rescheduled) references lazily.
-    fn pop_live(&mut self, until: Time) -> Option<(EventKey, EventFn)> {
+    fn pop_live(&mut self, until: Time) -> Option<(EventKey, u64, EventFn)> {
         loop {
             let (key, idx, gen) = match &mut self.engine {
                 EngineImpl::Wheel(w) => w.pop_at_or_before(until)?,
@@ -274,9 +322,9 @@ impl Sim {
                     (e.key, e.idx, e.gen)
                 }
             };
-            if let Some((k, cb)) = self.slab.take(idx, gen) {
+            if let Some((k, orig, cb)) = self.slab.take(idx, gen) {
                 debug_assert_eq!(k, key);
-                return Some((k, cb));
+                return Some((k, orig, cb));
             }
             // Stale reference: the event was cancelled or rescheduled.
         }
@@ -290,8 +338,9 @@ impl Sim {
     /// moves backwards (the seed engine's early-return path set
     /// `now = until` unclamped, rewinding the clock).
     pub fn run_until(&mut self, until: Time) {
-        while let Some((key, cb)) = self.pop_live(until) {
+        while let Some((key, orig, cb)) = self.pop_live(until) {
             self.now = key.time;
+            self.current = Some((key.time, orig));
             self.events_fired += 1;
             cb(self);
         }
@@ -300,8 +349,9 @@ impl Sim {
 
     /// Run until every live event has fired.
     pub fn run_to_completion(&mut self) {
-        while let Some((key, cb)) = self.pop_live(Time::MAX) {
+        while let Some((key, orig, cb)) = self.pop_live(Time::MAX) {
             self.now = key.time;
+            self.current = Some((key.time, orig));
             self.events_fired += 1;
             cb(self);
         }
@@ -370,6 +420,8 @@ mod tests {
             let log = Rc::new(RefCell::new(Vec::new()));
             for i in 0..100 {
                 let log = log.clone();
+                // tie-break: deliberately tied — this test pins the
+                // default ascending tie order itself.
                 sim.at(5, move |_| log.borrow_mut().push(i));
             }
             sim.run_to_completion();
@@ -687,10 +739,11 @@ mod tests {
 
     fn run_plan(
         kind: EngineKind,
+        tb: TieBreak,
         roots: &[(Time, usize)],
         plan: &[Vec<Act>],
     ) -> (Vec<(usize, Time)>, u64, Time, u64) {
-        let mut sim = Sim::with_engine(kind);
+        let mut sim = Sim::with_engine_and_tiebreak(kind, tb);
         let ctx = Rc::new(Ctx {
             log: RefCell::new(Vec::new()),
             handles: RefCell::new(vec![None; plan.len()]),
@@ -704,10 +757,12 @@ mod tests {
         (log, sim.events_fired(), sim.now(), sim.past_schedules())
     }
 
-    /// Satellite: the wheel and the reference heap fire the identical
-    /// event sequence — times, tie order, clock, counters — across seeded
-    /// random schedules with nesting, cancellations and re-schedules
-    /// spanning every wheel level and the far tier.
+    /// Satellite: under **every** tie-break policy, the wheel and the
+    /// reference heap fire the identical event sequence — times, tie
+    /// order, clock, counters — across seeded random schedules with
+    /// nesting, cancellations and re-schedules spanning every wheel
+    /// level and the far tier (including same-instant mid-drain spawns,
+    /// where non-ascending tokens exercise the sorted insert).
     #[test]
     fn property_wheel_matches_reference_heap() {
         use crate::simcore::{forall, Gen};
@@ -745,13 +800,99 @@ mod tests {
                 };
                 plan[actor].push(act);
             }
-            let a = run_plan(EngineKind::Wheel, &roots, &plan);
-            let b = run_plan(EngineKind::ReferenceHeap, &roots, &plan);
-            assert_eq!(a.0, b.0, "fired (id, time) sequences diverged");
-            assert_eq!(a.1, b.1, "events_fired diverged");
-            assert_eq!(a.2, b.2, "final clock diverged");
-            assert_eq!(a.3, b.3, "past_schedules diverged");
+            let policies = [
+                TieBreak::SeqAscending,
+                TieBreak::SeqDescending,
+                TieBreak::SeededShuffle(g.u64(0, 1 << 48)),
+            ];
+            for tb in policies {
+                let a = run_plan(EngineKind::Wheel, tb, &roots, &plan);
+                let b = run_plan(EngineKind::ReferenceHeap, tb, &roots, &plan);
+                assert_eq!(a.0, b.0, "fired (id, time) sequences diverged under {tb:?}");
+                assert_eq!(a.1, b.1, "events_fired diverged under {tb:?}");
+                assert_eq!(a.2, b.2, "final clock diverged under {tb:?}");
+                assert_eq!(a.3, b.3, "past_schedules diverged under {tb:?}");
+            }
         });
+    }
+
+    /// Tentpole: ties fire in *reverse* schedule order under
+    /// `SeqDescending`, in a seed-deterministic permutation under
+    /// `SeededShuffle`, and the three policies agree on everything that
+    /// does not race at an identical timestamp.
+    #[test]
+    fn tiebreak_policies_permute_ties_deterministically() {
+        let order = |tb: TieBreak| -> Vec<u32> {
+            let mut sim = Sim::with_engine_and_tiebreak(EngineKind::Wheel, tb);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            for i in 0..8u32 {
+                let log = log.clone();
+                // tie-break: this test exists to observe tie order.
+                sim.at(5, move |_| log.borrow_mut().push(i));
+            }
+            sim.run_to_completion();
+            let v = log.borrow().clone();
+            v
+        };
+        assert_eq!(order(TieBreak::SeqAscending), (0..8).collect::<Vec<_>>());
+        assert_eq!(order(TieBreak::SeqDescending), (0..8).rev().collect::<Vec<_>>());
+        let s1 = order(TieBreak::SeededShuffle(17));
+        let s2 = order(TieBreak::SeededShuffle(17));
+        assert_eq!(s1, s2, "same seed must give the same permutation");
+        let mut sorted = s1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "shuffle must be a permutation");
+        assert_ne!(s1, order(TieBreak::SeededShuffle(18)), "seeds must differ");
+    }
+
+    /// Satellite: a *commutative* workload — tied events only bump
+    /// per-time counters, so any tie order yields the same aggregate —
+    /// produces identical results under all three policies on both
+    /// engines. This is the certification the schedule explorer
+    /// (`schedcheck`) applies to whole experiment tables.
+    #[test]
+    fn tiebreak_policies_agree_on_commutative_workload() {
+        use std::collections::BTreeMap;
+        let run = |kind: EngineKind, tb: TieBreak| -> (BTreeMap<Time, u32>, u64, Time) {
+            let mut sim = Sim::with_engine_and_tiebreak(kind, tb);
+            let counts: Rc<RefCell<BTreeMap<Time, u32>>> = Rc::new(RefCell::new(BTreeMap::new()));
+            for round in 0..6u64 {
+                let t = 100 + round * 37;
+                for _ in 0..5 {
+                    let counts = counts.clone();
+                    // tie-break: commutative by construction — each tied
+                    // event increments the same per-time counter.
+                    sim.at(t, move |s| {
+                        *counts.borrow_mut().entry(s.now()).or_insert(0) += 1;
+                        // Same-instant respawn: exercises mid-drain
+                        // inserts under permuted tokens.
+                        let counts = counts.clone();
+                        sim_bump(s, counts);
+                    });
+                }
+            }
+            sim.run_to_completion();
+            let c = counts.borrow().clone();
+            (c, sim.events_fired(), sim.now())
+        };
+        fn sim_bump(s: &mut Sim, counts: Rc<RefCell<BTreeMap<Time, u32>>>) {
+            // tie-break: commutative — order among these bumps is
+            // unobservable in the aggregate.
+            s.after(0, move |s| {
+                *counts.borrow_mut().entry(s.now()).or_insert(0) += 1;
+            });
+        }
+        let policies = [
+            TieBreak::SeqAscending,
+            TieBreak::SeqDescending,
+            TieBreak::SeededShuffle(17),
+        ];
+        let baseline = run(EngineKind::Wheel, TieBreak::SeqAscending);
+        for kind in BOTH {
+            for tb in policies {
+                assert_eq!(run(kind, tb), baseline, "{kind:?}/{tb:?} diverged");
+            }
+        }
     }
 
     /// The steady-state scheduling hot path reuses slab slots: a long

@@ -1394,6 +1394,8 @@ mod tests {
             pool.run(&mut sim, 10, move |s| log.borrow_mut().push((i, s.now())));
         }
         let pool2 = pool.clone();
+        // tie-break: fires after the same-instant run() submissions by
+        // schedule order; any order leaves the same pool state.
         sim.after(0, move |sim| pool2.unpin(sim, 1));
         sim.run_to_completion();
         assert_eq!(log.borrow().len(), 5);

@@ -26,8 +26,8 @@ mod slab;
 mod wheel;
 
 pub use engine::{
-    default_engine, set_default_engine, tick_train, EngineKind, EngineStats, Sim, Time,
-    TimerHandle, MICROS, MILLIS, SECONDS,
+    default_engine, default_tiebreak, set_default_engine, set_default_tiebreak, tick_train,
+    EngineKind, EngineStats, Sim, TieBreak, Time, TimerHandle, MICROS, MILLIS, SECONDS,
 };
 pub use fabric::{
     default_fabric, set_default_fabric, ComputeFabric, FabricConfig, FabricKind, FabricStats,

@@ -21,12 +21,57 @@ use super::engine::{Sim, Time};
 pub(crate) type EventFn = Box<dyn FnOnce(&mut Sim)>;
 
 /// Event ordering key. The derived lexicographic order — earlier `time`
-/// first, insertion `seq` breaking ties — is the engine's entire
-/// determinism contract: simultaneous events fire in schedule order.
+/// first, `seq` breaking ties — is the engine's entire determinism
+/// contract. Under the default [`TieBreak::SeqAscending`] policy `seq`
+/// is the insertion sequence number, so simultaneous events fire in
+/// schedule order; the other policies substitute a bijective remapping
+/// of it (see [`TieBreak::token`]) to permute equal-time runs without
+/// touching this derive.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub(crate) struct EventKey {
     pub time: Time,
     pub seq: u64,
+}
+
+/// Policy for ordering events scheduled at the **same** virtual time.
+///
+/// The schedule explorer (`schedcheck`) reruns whole experiments under
+/// each policy: aggregate output that is byte-identical across all three
+/// is certified tie-break-invariant — the property a sharded engine
+/// needs, since conservative parallel execution cannot promise schedule
+/// order *within* a synchronization window, only across windows.
+///
+/// Each policy is a bijection `seq → token`; the token replaces `seq`
+/// inside [`EventKey`], so key uniqueness (and therefore the total event
+/// order) is preserved and the ordering structures stay untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TieBreak {
+    /// Ties fire in schedule order — today's behaviour, bit-identical to
+    /// the engine before this policy existed (`token(seq) == seq`).
+    SeqAscending,
+    /// Ties fire in reverse schedule order (`token(seq) == !seq`).
+    SeqDescending,
+    /// Ties fire in a seeded pseudo-random order: `seq` is passed through
+    /// a splitmix64-style finalizer (every step invertible, so distinct
+    /// seqs keep distinct tokens) salted with the seed.
+    SeededShuffle(u64),
+}
+
+impl TieBreak {
+    /// The tie-break token stored in [`EventKey::seq`] for insertion
+    /// sequence number `seq`. Bijective for every policy.
+    pub(crate) fn token(self, seq: u64) -> u64 {
+        match self {
+            TieBreak::SeqAscending => seq,
+            TieBreak::SeqDescending => !seq,
+            TieBreak::SeededShuffle(seed) => {
+                let mut z = seq.wrapping_add(seed).wrapping_add(0x9e37_79b9_7f4a_7c15);
+                z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+                z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+                z ^ (z >> 31)
+            }
+        }
+    }
 }
 
 /// Generation-checked handle to a scheduled event, returned by
@@ -43,6 +88,11 @@ pub struct TimerHandle {
 struct Slot {
     gen: u32,
     key: EventKey,
+    /// Insertion sequence number (the pre-tie-break identity of the
+    /// event). Under [`TieBreak::SeqAscending`] this equals `key.seq`;
+    /// under the other policies it is the schedule-order diagnostic the
+    /// explorer reports divergences in.
+    orig: u64,
     cb: Option<EventFn>,
 }
 
@@ -65,18 +115,20 @@ impl EventSlab {
         self.live
     }
 
-    /// Store an event; returns its generation-checked handle.
-    pub fn insert(&mut self, key: EventKey, cb: EventFn) -> TimerHandle {
+    /// Store an event; returns its generation-checked handle. `orig` is
+    /// the insertion sequence number before tie-break tokenization.
+    pub fn insert(&mut self, key: EventKey, orig: u64, cb: EventFn) -> TimerHandle {
         self.live += 1;
         if let Some(idx) = self.free.pop() {
             let s = &mut self.slots[idx as usize];
             debug_assert!(s.cb.is_none(), "free-list slot still holds a callback");
             s.key = key;
+            s.orig = orig;
             s.cb = Some(cb);
             TimerHandle { idx, gen: s.gen }
         } else {
             let idx = u32::try_from(self.slots.len()).expect("event slab exceeded u32 slots");
-            self.slots.push(Slot { gen: 0, key, cb: Some(cb) });
+            self.slots.push(Slot { gen: 0, key, orig, cb: Some(cb) });
             TimerHandle { idx, gen: 0 }
         }
     }
@@ -85,17 +137,18 @@ impl EventSlab {
     /// slot. Returns `None` for stale references (already fired, cancelled
     /// or rescheduled) — the lazy-deletion check every ordering tier
     /// relies on.
-    pub fn take(&mut self, idx: u32, gen: u32) -> Option<(EventKey, EventFn)> {
+    pub fn take(&mut self, idx: u32, gen: u32) -> Option<(EventKey, u64, EventFn)> {
         let s = self.slots.get_mut(idx as usize)?;
         if s.gen != gen {
             return None;
         }
         let cb = s.cb.take()?;
         let key = s.key;
+        let orig = s.orig;
         s.gen = s.gen.wrapping_add(1);
         self.free.push(idx);
         self.live -= 1;
-        Some((key, cb))
+        Some((key, orig, cb))
     }
 
     /// Drop the event behind the handle (O(1) cancellation). Returns
@@ -142,11 +195,12 @@ mod tests {
     #[test]
     fn insert_take_roundtrip() {
         let mut slab = EventSlab::new();
-        let h = slab.insert(key(10, 0), Box::new(|_| {}));
+        let h = slab.insert(key(10, 0), 0, Box::new(|_| {}));
         assert_eq!(slab.len(), 1);
         assert_eq!(slab.key_of(h), Some(key(10, 0)));
-        let (k, _cb) = slab.take(h.idx, h.gen).expect("live");
+        let (k, orig, _cb) = slab.take(h.idx, h.gen).expect("live");
         assert_eq!(k, key(10, 0));
+        assert_eq!(orig, 0);
         assert_eq!(slab.len(), 0);
         // Second take is stale.
         assert!(slab.take(h.idx, h.gen).is_none());
@@ -155,12 +209,12 @@ mod tests {
     #[test]
     fn cancelled_handle_goes_stale_and_slot_is_reused() {
         let mut slab = EventSlab::new();
-        let a = slab.insert(key(1, 0), Box::new(|_| {}));
+        let a = slab.insert(key(1, 0), 0, Box::new(|_| {}));
         assert!(slab.cancel(a));
         assert!(!slab.cancel(a), "double cancel must be a no-op");
         // The freed slot is reused with a bumped generation: the old
         // handle stays stale even though the index matches.
-        let b = slab.insert(key(2, 1), Box::new(|_| {}));
+        let b = slab.insert(key(2, 1), 1, Box::new(|_| {}));
         assert_eq!(a.idx, b.idx, "LIFO free list must reuse the slot");
         assert_ne!(a.gen, b.gen);
         assert!(slab.take(a.idx, a.gen).is_none(), "stale gen must not take");
@@ -171,18 +225,39 @@ mod tests {
     fn steady_state_reuses_slots_without_growth() {
         let mut slab = EventSlab::new();
         // Prime two slots, then churn: capacity must not grow.
-        let h1 = slab.insert(key(1, 0), Box::new(|_| {}));
-        let h2 = slab.insert(key(2, 1), Box::new(|_| {}));
+        let h1 = slab.insert(key(1, 0), 0, Box::new(|_| {}));
+        let h2 = slab.insert(key(2, 1), 1, Box::new(|_| {}));
         slab.take(h1.idx, h1.gen);
         slab.take(h2.idx, h2.gen);
         let cap = slab.capacity();
         for i in 0..10_000u64 {
-            let a = slab.insert(key(i, i), Box::new(|_| {}));
-            let b = slab.insert(key(i, i + 1), Box::new(|_| {}));
+            let a = slab.insert(key(i, i), i, Box::new(|_| {}));
+            let b = slab.insert(key(i, i + 1), i + 1, Box::new(|_| {}));
             slab.take(a.idx, a.gen);
             slab.cancel(b);
         }
         assert_eq!(slab.capacity(), cap, "steady-state churn must not grow the slab");
         assert_eq!(slab.len(), 0);
+    }
+
+    #[test]
+    fn tiebreak_tokens_are_bijective_and_order_as_documented() {
+        use std::collections::BTreeSet;
+        // Ascending is the identity (the bit-compatibility guarantee);
+        // descending reverses; shuffle permutes without collisions.
+        for seq in [0u64, 1, 7, u64::MAX - 1] {
+            assert_eq!(TieBreak::SeqAscending.token(seq), seq);
+            assert_eq!(TieBreak::SeqDescending.token(seq), !seq);
+        }
+        assert!(TieBreak::SeqDescending.token(5) < TieBreak::SeqDescending.token(4));
+        for seed in [0u64, 17, 0xdead_beef] {
+            let p = TieBreak::SeededShuffle(seed);
+            let tokens: BTreeSet<u64> = (0..4096u64).map(|s| p.token(s)).collect();
+            assert_eq!(tokens.len(), 4096, "seeded shuffle must stay injective");
+        }
+        // Distinct seeds give distinct permutations (overwhelmingly).
+        let a: Vec<u64> = (0..64u64).map(|s| TieBreak::SeededShuffle(1).token(s)).collect();
+        let b: Vec<u64> = (0..64u64).map(|s| TieBreak::SeededShuffle(2).token(s)).collect();
+        assert_ne!(a, b);
     }
 }

@@ -145,7 +145,26 @@ impl TimerWheel {
         debug_assert!(level < LEVELS);
         let shift = level * SLOT_BITS;
         let slot = ((t >> shift) & SLOT_MASK) as usize;
-        self.levels[level].buckets[slot].push(e);
+        // Mid-drain insert into the bucket currently being drained (an
+        // event firing at `now` scheduled another at the same instant):
+        // the drained prefix `[..cursor]` is spent, and the pending tail
+        // `[cursor..]` is sorted — place the entry by key so that
+        // non-ascending tie-break tokens keep parity with the reference
+        // heap. Under the default ascending policy the fresh token
+        // exceeds every pending one, so this stays the plain append it
+        // has always been (bit-identical behaviour).
+        let mid_drain = match &self.active {
+            Some(a) if level == 0 && a.slot == slot => Some(a.cursor),
+            _ => None,
+        };
+        let bucket = &mut self.levels[level].buckets[slot];
+        if let Some(cursor) = mid_drain {
+            debug_assert_eq!(t, self.now);
+            let pos = cursor + bucket[cursor..].partition_point(|x| *x < e);
+            bucket.insert(pos, e);
+        } else {
+            bucket.push(e);
+        }
         self.levels[level].occupied |= 1u64 << slot;
         self.wheel_len += 1;
     }
@@ -396,6 +415,27 @@ mod tests {
         w.insert(key(100, 2), 2, 0, 100);
         assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 1));
         assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 2));
+        assert!(w.pop_at_or_before(Time::MAX).is_none());
+    }
+
+    #[test]
+    fn mid_drain_insert_with_smaller_token_fires_before_pending_tail() {
+        // Non-ascending tie-break policies hand out tokens *below* the
+        // pending tail's; the mid-drain insert must place them by key,
+        // not append (which was only correct for ascending seq).
+        let mut w = TimerWheel::new();
+        w.insert(key(100, 10), 0, 0, 0);
+        w.insert(key(100, 20), 1, 0, 0);
+        w.insert(key(100, 40), 2, 0, 0);
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 10));
+        // Smaller than both pending tokens → next out.
+        w.insert(key(100, 5), 3, 0, 100);
+        // Between the two pending tokens → fires between them.
+        w.insert(key(100, 30), 4, 0, 100);
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 5));
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 20));
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 30));
+        assert_eq!(w.pop_at_or_before(Time::MAX).unwrap().0, key(100, 40));
         assert!(w.pop_at_or_before(Time::MAX).is_none());
     }
 

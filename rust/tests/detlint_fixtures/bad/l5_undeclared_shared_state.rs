@@ -1,0 +1,6 @@
+// Fixture: trips `undeclared_shared_state` (L5) and nothing else — a
+// cross-module shared handle with no [state.*] entry in the shard map.
+
+pub fn attach(ghost: Rc<RefCell<GhostTable>>) -> u64 {
+    ghost.borrow().len() as u64
+}

@@ -1,0 +1,8 @@
+// Fixture: trips `cross_shard_mut` (L6) and nothing else — a
+// per_worker module mutating per_worker state owned by another module
+// without crossing the netpath wire seam. The handle itself is
+// declared in shard_map.toml, so L5 stays quiet.
+
+pub fn steal_work(q: &Rc<RefCell<RemoteQueue>>) {
+    q.borrow_mut().depth -= 1;
+}

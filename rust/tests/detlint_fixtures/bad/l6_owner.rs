@@ -1,0 +1,6 @@
+// Fixture: the owning side of the L6 pair — defines RemoteQueue, the
+// per_worker state `l6_cross_shard_mut.rs` reaches into. Clean itself.
+
+pub struct RemoteQueue {
+    pub depth: u64,
+}

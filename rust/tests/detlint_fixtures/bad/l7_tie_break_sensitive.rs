@@ -1,0 +1,10 @@
+// Fixture: trips `tie_break_sensitive` (L7) both ways and nothing
+// else — a fan-out loop scheduling every worker at one instant with no
+// ordering rationale, and an immediate .after(0) kick.
+
+pub fn storm(sim: &mut Sim, base: u64) {
+    for worker in 0..4u32 {
+        sim.at(base, move |s| poke(s, worker));
+    }
+    sim.after(0, drain);
+}

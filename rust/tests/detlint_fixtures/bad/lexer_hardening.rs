@@ -1,0 +1,9 @@
+// Fixture: pins lexer hardening — a violation AFTER a nested block
+// comment and a raw byte string must still fire, at the right line.
+
+/* outer /* nested HashMap Instant */ still one stripped comment */
+pub fn payload() -> &'static [u8] {
+    br#"SystemTime " thread_rng"#
+}
+
+use std::collections::HashSet;

@@ -1,0 +1,7 @@
+// Fixture: a cross-module shared handle that IS declared in
+// shard_map.toml — L5 stays quiet, and a gateway-domain mutation is
+// not a cross-shard hazard.
+
+pub fn credit(ledger: &Rc<RefCell<SharedLedger>>) {
+    ledger.borrow_mut().total += 1;
+}

@@ -1,0 +1,7 @@
+// Fixture: owning side of the declared-state pair — defines the
+// SharedLedger that `l5_declared_handle.rs` holds across the module
+// boundary.
+
+pub struct SharedLedger {
+    pub total: u64,
+}

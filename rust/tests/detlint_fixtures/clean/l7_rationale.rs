@@ -1,0 +1,12 @@
+// Fixture: deliberately tied schedules carrying `tie-break:` ordering
+// rationales — L7 must stay quiet.
+
+pub fn fan_out(sim: &mut Sim, base: u64) {
+    for worker in 0..4u32 {
+        // tie-break: all workers wake together; each touches only its
+        // own queue, so the firing order among them is immaterial.
+        sim.at(base, move |s| poke(s, worker));
+    }
+    // tie-break: defer the drain behind the same-instant submissions.
+    sim.after(0, drain);
+}

@@ -1,0 +1,7 @@
+// Fixture: the wire seam may mutate per_worker state owned elsewhere —
+// that is exactly what "crossing the netpath seam" means, so L6 must
+// stay quiet here.
+
+pub fn deliver(q: &Rc<RefCell<WorkerQueue>>) {
+    q.borrow_mut().depth += 1;
+}

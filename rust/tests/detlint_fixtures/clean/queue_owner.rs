@@ -1,0 +1,6 @@
+// Fixture: defines the per_worker WorkerQueue that the netpath seam
+// fixture delivers into.
+
+pub struct WorkerQueue {
+    pub depth: u64,
+}

@@ -1,0 +1,8 @@
+// Fixture: regression for the unified suppression pass — an allow
+// consumed by the graph-based L5 lint must not be reported stale by
+// any later pass.
+
+// detlint:allow(undeclared_shared_state, staged migration to a declared domain)
+pub fn adopt(orphan: Rc<RefCell<OrphanLedger>>) -> u64 {
+    orphan.borrow().total
+}

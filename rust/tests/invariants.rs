@@ -168,3 +168,49 @@ fn selfcheck_is_clean_after_all_audited_experiments() {
         );
     }
 }
+
+#[test]
+fn shard_map_covers_every_sim_module() {
+    // The shard map is detlint's L5/L6 ground truth and the ROADMAP's
+    // sharded-engine contract: every simulation module must carry a
+    // declared shard domain, in the closed domain vocabulary. Parsed
+    // with plain string ops here so the repro crate needs no dependency
+    // on xtask.
+    const SIM_MODULES: [&str; 10] = [
+        "simcore",
+        "faas",
+        "netpath",
+        "junction",
+        "junctiond",
+        "snapshot",
+        "workload",
+        "telemetry",
+        "faultplane",
+        "containerd_sim",
+    ];
+    const DOMAINS: [&str; 6] =
+        ["per_worker", "gateway", "wire", "control", "global_readonly", "value"];
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/xtask/shard_map.toml");
+    let src = std::fs::read_to_string(path).expect("xtask/shard_map.toml is checked in");
+    let mut in_modules = false;
+    let mut covered: Vec<(String, String)> = Vec::new();
+    for raw in src.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.starts_with('[') {
+            in_modules = line == "[modules]";
+            continue;
+        }
+        if !in_modules || line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once('=').expect("module lines are `name = \"domain\"`");
+        let domain = v.trim().trim_matches('"').to_string();
+        covered.push((k.trim().to_string(), domain));
+    }
+    for m in SIM_MODULES {
+        let hit = covered.iter().find(|(k, _)| k == m);
+        let (_, domain) = hit.unwrap_or_else(|| panic!("module `{m}` missing from [modules]"));
+        assert!(DOMAINS.contains(&domain.as_str()), "module `{m}` has unknown domain {domain:?}");
+    }
+    assert_eq!(covered.len(), SIM_MODULES.len(), "stale [modules] entries: {covered:?}");
+}

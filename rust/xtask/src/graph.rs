@@ -1,0 +1,417 @@
+//! The module-level state-access graph behind detlint's shard-safety
+//! lints (L5/L6).
+//!
+//! Built from the same token streams the other lints walk — no AST, no
+//! crates — the graph records, per simulation module: which shared
+//! types it *defines*, which `Rc<RefCell<T>>` handles it *holds* (a
+//! binding annotation, struct field, fn param, or bare type position),
+//! where it *mutates* through a held handle (`h.borrow_mut()`), where a
+//! handle *escapes* by cloning (`Rc::clone(&h)` / `h.clone()`), and the
+//! `&mut self` method surfaces of the types it implements. Only handles
+//! with a *named*, non-builtin inner type participate in the shard
+//! lints: `Rc<RefCell<Vec<_>>>` or a tuple gauge is closure-local
+//! plumbing, not shard state; `Rc<RefCell<Cluster>>` is the real thing.
+//!
+//! The extraction is deliberately conservative in the same way the
+//! lexer is: it only sees annotated handles (`x: Rc<RefCell<T>>`), so
+//! an un-annotated `Rc::new(RefCell::new(..))` local never enters the
+//! graph. That under-approximates — but every cross-module handle in
+//! this crate crosses a fn/struct boundary, which forces the annotation
+//! the graph keys on.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use crate::lexer::Token;
+use crate::lints::SourceFile;
+
+/// One held `Rc<RefCell<inner>>` handle.
+#[derive(Debug, Clone)]
+pub struct HandleRef {
+    /// Binding / field / param name; `None` for a bare type position
+    /// (return type, `impl Trait for Rc<RefCell<T>>`).
+    pub binding: Option<String>,
+    /// Inner type name, or `"(tuple)"` for an anonymous tuple.
+    pub inner: String,
+    pub file: PathBuf,
+    pub line: u32,
+}
+
+/// One `handle.borrow_mut()` mutation through a held handle.
+#[derive(Debug, Clone)]
+pub struct Mutation {
+    pub binding: String,
+    /// Inner type of the handle the binding was declared with.
+    pub inner: String,
+    pub file: PathBuf,
+    pub line: u32,
+}
+
+/// What one module constructs, holds, and mutates.
+#[derive(Debug, Default)]
+pub struct ModuleAccess {
+    /// Types this module defines (`struct` / `enum`), with first def site.
+    pub defines: BTreeMap<String, (PathBuf, u32)>,
+    pub handles: Vec<HandleRef>,
+    pub mutations: Vec<Mutation>,
+    /// `Rc::clone(&h)` / `h.clone()` escape sites of held handles.
+    pub escapes: Vec<(String, PathBuf, u32)>,
+    /// `(type, method, line)` for every `fn m(&mut self, ..)` surface.
+    pub mut_surfaces: Vec<(String, String, u32)>,
+}
+
+/// The whole graph: module name → accesses.
+#[derive(Debug, Default)]
+pub struct StateGraph {
+    pub modules: BTreeMap<String, ModuleAccess>,
+}
+
+/// Container / std types whose `Rc<RefCell<..>>` wrapping is closure
+/// plumbing rather than nameable shard state. Lowercase-initial names
+/// (primitives) and tuples are excluded by the same test.
+pub fn is_builtin(inner: &str) -> bool {
+    matches!(
+        inner,
+        "(tuple)"
+            | "Vec"
+            | "VecDeque"
+            | "BTreeMap"
+            | "BTreeSet"
+            | "Option"
+            | "Box"
+            | "String"
+            | "Cell"
+            | "RefCell"
+    ) || !inner.chars().next().is_some_and(|c| c.is_ascii_uppercase())
+}
+
+impl StateGraph {
+    /// Build the graph from every file that carries a module name (sim
+    /// modules in repo mode; every file in fixture mode).
+    pub fn build(files: &[SourceFile]) -> StateGraph {
+        let mut g = StateGraph::default();
+        for sf in files {
+            let Some(module) = &sf.module else { continue };
+            let acc = g.modules.entry(module.clone()).or_default();
+            extract(sf, acc);
+        }
+        g
+    }
+
+    /// Module that defines `ty`, if any scanned module does.
+    pub fn def_site(&self, ty: &str) -> Option<&str> {
+        self.modules
+            .iter()
+            .find(|(_, acc)| acc.defines.contains_key(ty))
+            .map(|(m, _)| m.as_str())
+    }
+
+    /// Human-readable dump for `cargo xtask detlint --graph`.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for (m, acc) in &self.modules {
+            s.push_str(&format!("module {m}\n"));
+            for (ty, (f, l)) in &acc.defines {
+                s.push_str(&format!("  defines  {ty}  ({}:{l})\n", f.display()));
+            }
+            for h in &acc.handles {
+                let b = h.binding.as_deref().unwrap_or("<type position>");
+                let at = format!("({}:{})", h.file.display(), h.line);
+                s.push_str(&format!("  holds    Rc<RefCell<{}>> as {b}  {at}\n", h.inner));
+            }
+            for mu in &acc.mutations {
+                let at = format!("({}:{})", mu.file.display(), mu.line);
+                let b = &mu.binding;
+                s.push_str(&format!("  mutates  {} via {b}.borrow_mut()  {at}\n", mu.inner));
+            }
+            for (b, f, l) in &acc.escapes {
+                s.push_str(&format!("  escapes  {b} cloned  ({}:{l})\n", f.display()));
+            }
+            for (ty, method, l) in &acc.mut_surfaces {
+                s.push_str(&format!("  &mut     {ty}::{method}  (line {l})\n"));
+            }
+        }
+        s
+    }
+}
+
+fn is_ident(t: &str) -> bool {
+    t.chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Walk one file's tokens into `acc`.
+fn extract(sf: &SourceFile, acc: &mut ModuleAccess) {
+    let toks = &sf.lexed.tokens;
+    // Pass 1: type definitions and handle declarations.
+    let mut local: BTreeMap<String, String> = BTreeMap::new(); // binding → inner
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if (t.text == "struct" || t.text == "enum") && i + 1 < toks.len() {
+            let name = &toks[i + 1];
+            if is_ident(&name.text) && name.text.chars().next().is_some_and(char::is_uppercase) {
+                acc.defines
+                    .entry(name.text.clone())
+                    .or_insert_with(|| (sf.path.clone(), name.line));
+            }
+        }
+        if t.text == "Rc" && toks.get(i + 1).is_some_and(|n| n.text == "<") {
+            if let Some(inner) = refcell_inner(toks, i + 2) {
+                let binding = binding_before(toks, i);
+                if let Some(b) = &binding {
+                    local.insert(b.clone(), inner.clone());
+                }
+                acc.handles.push(HandleRef {
+                    binding,
+                    inner,
+                    file: sf.path.clone(),
+                    line: t.line,
+                });
+            }
+        }
+    }
+    // Pass 2: mutations and escapes through the handles pass 1 named.
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if is_ident(&t.text)
+            && toks.get(i + 1).is_some_and(|n| n.text == ".")
+            && toks.get(i + 2).is_some_and(|n| n.text == "borrow_mut")
+        {
+            if let Some(inner) = local.get(&t.text) {
+                acc.mutations.push(Mutation {
+                    binding: t.text.clone(),
+                    inner: inner.clone(),
+                    file: sf.path.clone(),
+                    line: t.line,
+                });
+            }
+        }
+        if is_ident(&t.text)
+            && local.contains_key(&t.text)
+            && toks.get(i + 1).is_some_and(|n| n.text == ".")
+            && toks.get(i + 2).is_some_and(|n| n.text == "clone")
+        {
+            acc.escapes.push((t.text.clone(), sf.path.clone(), t.line));
+        }
+        if t.text == "Rc"
+            && toks.get(i + 1).is_some_and(|n| n.text == "::")
+            && toks.get(i + 2).is_some_and(|n| n.text == "clone")
+        {
+            // Rc::clone(&path.to.handle): last ident before the closing
+            // paren names the handle.
+            let mut k = i + 3;
+            let mut last: Option<&Token> = None;
+            while k < toks.len() && toks[k].text != ")" {
+                if is_ident(&toks[k].text) {
+                    last = Some(&toks[k]);
+                }
+                k += 1;
+            }
+            if let Some(b) = last {
+                if local.contains_key(&b.text) {
+                    acc.escapes.push((b.text.clone(), sf.path.clone(), b.line));
+                }
+            }
+        }
+    }
+    // Pass 3: `&mut self` method surfaces, attributed to their impl type.
+    extract_mut_surfaces(toks, acc);
+}
+
+/// Starting just inside `Rc<`, return the inner type of a
+/// `RefCell<inner>` if that is what the generic argument is. `from`
+/// points at the first token after `Rc<`.
+fn refcell_inner(toks: &[Token], from: usize) -> Option<String> {
+    let mut j = from;
+    // Skip a `cell ::`-style path prefix before RefCell.
+    while j + 1 < toks.len() && is_ident(&toks[j].text) && toks[j + 1].text == "::" {
+        j += 2;
+    }
+    if toks.get(j).map(|t| t.text.as_str()) != Some("RefCell")
+        || toks.get(j + 1).map(|t| t.text.as_str()) != Some("<")
+    {
+        return None;
+    }
+    let mut k = j + 2;
+    if toks.get(k).map(|t| t.text.as_str()) == Some("(") {
+        return Some("(tuple)".to_string());
+    }
+    while k + 1 < toks.len() && is_ident(&toks[k].text) && toks[k + 1].text == "::" {
+        k += 2;
+    }
+    let t = toks.get(k)?;
+    if is_ident(&t.text) {
+        Some(t.text.clone())
+    } else {
+        None
+    }
+}
+
+/// Scan backward from the `Rc` token for a `name :` binding annotation,
+/// skipping `&` / `mut` and any `path ::` segments.
+fn binding_before(toks: &[Token], rc: usize) -> Option<String> {
+    let mut b = rc.checked_sub(1)?;
+    loop {
+        match toks[b].text.as_str() {
+            "&" | "mut" => b = b.checked_sub(1)?,
+            "::" => b = b.checked_sub(2)?,
+            _ => break,
+        }
+    }
+    if toks[b].text == ":" {
+        let prev = toks.get(b.checked_sub(1)?)?;
+        if is_ident(&prev.text) {
+            return Some(prev.text.clone());
+        }
+    }
+    None
+}
+
+/// Find `impl [<..>] Type [for Target]` blocks and the `&mut self`
+/// methods inside them.
+fn extract_mut_surfaces(toks: &[Token], acc: &mut ModuleAccess) {
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].text != "impl" {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if toks.get(j).is_some_and(|t| t.text == "<") {
+            j = skip_angles(toks, j);
+        }
+        let Some(first) = toks.get(j) else { break };
+        let mut ty = first.text.clone();
+        let mut k = j + 1;
+        if toks.get(k).is_some_and(|t| t.text == "<") {
+            k = skip_angles(toks, k);
+        }
+        if toks.get(k).is_some_and(|t| t.text == "for") {
+            // Trait impl: the implementing type follows `for`.
+            k += 1;
+            while k + 1 < toks.len() && is_ident(&toks[k].text) && toks[k + 1].text == "::" {
+                k += 2;
+            }
+            if let Some(t) = toks.get(k) {
+                ty = t.text.clone();
+            }
+        }
+        // Body: first `{` after the header, to its matching `}`.
+        while k < toks.len() && toks[k].text != "{" {
+            k += 1;
+        }
+        let end = skip_braces(toks, k);
+        let mut f = k;
+        while f < end.min(toks.len()) {
+            if toks[f].text == "fn" && toks.get(f + 1).is_some_and(|t| is_ident(&t.text)) {
+                let name = toks[f + 1].text.clone();
+                let mut p = f + 2;
+                if toks.get(p).is_some_and(|t| t.text == "<") {
+                    p = skip_angles(toks, p);
+                }
+                if toks.get(p).is_some_and(|t| t.text == "(")
+                    && toks.get(p + 1).is_some_and(|t| t.text == "&")
+                    && toks.get(p + 2).is_some_and(|t| t.text == "mut")
+                    && toks.get(p + 3).is_some_and(|t| t.text == "self")
+                {
+                    acc.mut_surfaces.push((ty.clone(), name, toks[f].line));
+                }
+            }
+            f += 1;
+        }
+        i = end;
+    }
+}
+
+fn skip_angles(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = open;
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "<" => depth += 1,
+            ">" => {
+                depth -= 1;
+                if depth <= 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+pub(crate) fn skip_braces(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut k = open;
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth <= 0 {
+                    return k + 1;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::lints::FileClass;
+
+    fn graph_of(module: &str, src: &str) -> StateGraph {
+        StateGraph::build(&[SourceFile {
+            path: PathBuf::from(format!("{module}.rs")),
+            class: FileClass { sim: true, ..FileClass::default() },
+            module: Some(module.to_string()),
+            lexed: lex(src),
+        }])
+    }
+
+    #[test]
+    fn handles_defs_and_mutations_are_extracted() {
+        let src = "pub struct Ledger { pub n: u64 }\n\
+                   fn attach(ledger: Rc<RefCell<Ledger>>, log: &Rc<RefCell<Vec<u64>>>) {\n\
+                   ledger.borrow_mut().n += 1;\nlet l2 = Rc::clone(&ledger);\n}\n";
+        let g = graph_of("faas", src);
+        let acc = &g.modules["faas"];
+        assert_eq!(g.def_site("Ledger"), Some("faas"));
+        let inners: Vec<&str> = acc.handles.iter().map(|h| h.inner.as_str()).collect();
+        assert_eq!(inners, ["Ledger", "Vec"]);
+        assert_eq!(acc.handles[0].binding.as_deref(), Some("ledger"));
+        assert_eq!(acc.handles[0].line, 2);
+        assert_eq!(acc.mutations.len(), 1);
+        assert_eq!((acc.mutations[0].inner.as_str(), acc.mutations[0].line), ("Ledger", 3));
+        assert_eq!(acc.escapes.len(), 1);
+    }
+
+    #[test]
+    fn type_position_handles_and_paths_resolve() {
+        let src = "impl Target for Rc<RefCell<Cluster>> { fn go(&mut self) {} }\n\
+                   fn mk() -> std::rc::Rc<cell::RefCell<Cluster>> { todo!() }\n";
+        let g = graph_of("workload", src);
+        let acc = &g.modules["workload"];
+        assert_eq!(acc.handles.len(), 2);
+        assert!(acc.handles.iter().all(|h| h.inner == "Cluster" && h.binding.is_none()));
+        // &mut self surface attributed to the trait-impl target type.
+        assert_eq!(acc.mut_surfaces.len(), 1);
+        assert_eq!(acc.mut_surfaces[0].1, "go");
+    }
+
+    #[test]
+    fn builtins_and_tuples_are_not_shard_state() {
+        assert!(is_builtin("Vec"));
+        assert!(is_builtin("(tuple)"));
+        assert!(is_builtin("i64"));
+        assert!(!is_builtin("Cluster"));
+        let g = graph_of("faas", "fn f(g: Rc<RefCell<(u64, Time)>>) {}\n");
+        assert_eq!(g.modules["faas"].handles[0].inner, "(tuple)");
+    }
+}

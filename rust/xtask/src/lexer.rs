@@ -38,6 +38,11 @@ pub struct Lexed {
     /// Malformed suppression attempts: `(line, message)`. Always errors —
     /// a suppression that silently fails to parse would hide violations.
     pub bad_allows: Vec<(u32, String)>,
+    /// Lines whose comment text contains a `tie-break:` ordering
+    /// rationale — the L7 (`tie_break_sensitive`) suppression marker.
+    /// Collected from every comment flavour (doc comments included: a
+    /// rationale is prose, not a directive).
+    pub rationales: Vec<u32>,
 }
 
 fn is_ident_start(c: char) -> bool {
@@ -68,6 +73,7 @@ pub fn lex(src: &str) -> Lexed {
                 i += 1;
             }
             let comment: String = chars[start..i].iter().collect();
+            scan_rationale(&comment, line, &mut out);
             if !is_doc_comment(&comment) {
                 scan_allow(&comment, line, &mut out);
             }
@@ -90,6 +96,7 @@ pub fn lex(src: &str) -> Lexed {
                 }
             }
             let comment: String = chars[start..i.min(chars.len())].iter().collect();
+            scan_rationale(&comment, start_line, &mut out);
             if !is_doc_comment(&comment) {
                 scan_allow(&comment, start_line, &mut out);
             }
@@ -178,7 +185,14 @@ fn skip_string(chars: &[char], i: usize, line: &mut u32) -> usize {
     let mut k = i + 1;
     while k < chars.len() {
         match chars[k] {
-            '\\' => k += 2,
+            '\\' => {
+                // A `\`-newline continuation still ends a source line;
+                // skipping it blind would drift every later diagnostic.
+                if chars.get(k + 1) == Some(&'\n') {
+                    *line += 1;
+                }
+                k += 2;
+            }
             '"' => return k + 1,
             '\n' => {
                 *line += 1;
@@ -255,8 +269,19 @@ fn skip_char_or_lifetime(chars: &[char], i: usize) -> usize {
 fn is_doc_comment(comment: &str) -> bool {
     comment.starts_with("///")
         || comment.starts_with("//!")
-        || comment.starts_with("/**")
+        // `/**/` is an *empty plain* comment, not a doc comment.
+        || (comment.starts_with("/**") && !comment.starts_with("/**/"))
         || comment.starts_with("/*!")
+}
+
+/// Record the line of every `tie-break:` ordering rationale inside one
+/// comment (block comments may span lines; each matching line counts).
+fn scan_rationale(comment: &str, start_line: u32, out: &mut Lexed) {
+    for (off, l) in comment.lines().enumerate() {
+        if l.contains("tie-break:") {
+            out.rationales.push(start_line + off as u32);
+        }
+    }
 }
 
 /// Parse every `detlint:allow(lint, reason)` occurrence inside one
@@ -371,6 +396,45 @@ mod tests {
         let l = lex("// detlint:allow(wall_clock,   )\nlet t = 1;");
         assert!(l.allows.is_empty());
         assert_eq!(l.bad_allows.len(), 1);
+    }
+
+    #[test]
+    fn string_escapes_do_not_drift_line_numbers() {
+        // A `\`-newline continuation inside a string literal must still
+        // count the newline, or every later diagnostic points one line
+        // high (regression: the escape arm skipped it blind).
+        let l = lex("let s = \"a\\\nb\";\nlet after = 1;");
+        let tok = l.tokens.iter().find(|t| t.text == "after").unwrap();
+        assert_eq!(tok.line, 3);
+    }
+
+    #[test]
+    fn raw_byte_strings_with_hashes_do_not_leak_tokens() {
+        let toks = texts("let a = br#\"HashMap \" Instant\"#; let tail = 1;");
+        assert!(!toks.iter().any(|t| t == "HashMap" || t == "Instant"));
+        assert!(toks.iter().any(|t| t == "tail"), "lexer must resync after br#…#");
+    }
+
+    #[test]
+    fn tie_break_rationales_are_collected_with_lines() {
+        let l = lex("// tie-break: deliberate fan-out\nlet a = 1;\n/* tie-break: here too */\n");
+        assert_eq!(l.rationales, vec![1, 3]);
+        // Multi-line block comments attribute the rationale to its line.
+        let l = lex("/* preamble\n   tie-break: in a block\n*/\nlet x = 1;");
+        assert_eq!(l.rationales, vec![2]);
+        // Doc comments count: a rationale is prose, not a directive.
+        let l = lex("/// tie-break: documented ordering\nlet x = 1;");
+        assert_eq!(l.rationales, vec![1]);
+        assert!(l.bad_allows.is_empty());
+    }
+
+    #[test]
+    fn empty_block_comment_is_not_a_doc_comment() {
+        // `/**/` must classify as a plain comment (doc comments skip the
+        // allow scanner; an empty comment has nothing to scan either way,
+        // but the classifier should not lie).
+        assert!(!is_doc_comment("/**/"));
+        assert!(is_doc_comment("/** real doc */"));
     }
 
     #[test]

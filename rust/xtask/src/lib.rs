@@ -1,10 +1,15 @@
 //! xtask — repo automation for junctiond-repro.
 //!
-//! The one subcommand today is `detlint` (see `lints`): a static
-//! determinism-and-conservation pass over the crate, run in CI next to
-//! the dynamic same-seed byte-diff. Library form so the fixture tests in
+//! Subcommands: `detlint` (see `lints`) — a static determinism /
+//! conservation / shard-safety pass over the crate built on the `graph`
+//! state-access analysis and the checked-in `shard_map.toml` — and
+//! `schedcheck`, which builds the repro binary and runs the E17
+//! tie-break schedule explorer. Both run in CI next to the dynamic
+//! same-seed byte-diff. Library form so the fixture tests in
 //! `xtask/tests/` can drive the linter in-process.
 
+pub mod graph;
 pub mod lexer;
 pub mod lints;
 pub mod scan;
+pub mod shard_map;

@@ -1,6 +1,6 @@
-//! The detlint rules: four determinism / conservation lints over the
-//! token streams produced by `lexer`, plus the `detlint:allow`
-//! suppression protocol.
+//! The detlint rules: seven determinism / conservation / shard-safety
+//! lints over the token streams produced by `lexer`, plus the
+//! `detlint:allow` suppression protocol.
 //!
 //! - `unordered_container` (L1): no `HashMap` / `HashSet` in simulation
 //!   modules — iteration order is randomized per process, so any order
@@ -15,20 +15,46 @@
 //! - `unaudited_stats` (L4): every `pub struct *Stats` must be named by
 //!   at least one conservation test or `check_invariants` / `audit` body,
 //!   so a counter can't drift without a test noticing.
+//! - `undeclared_shared_state` (L5): every cross-module
+//!   `Rc<RefCell<T>>` handle (per the `graph` state-access pass) must
+//!   have a `[state.T]` entry in `xtask/shard_map.toml` naming its
+//!   owning module and shard domain; the map's owner fields must match
+//!   the graph, and stale entries are flagged too.
+//! - `cross_shard_mut` (L6): no `per_worker` module may mutate state
+//!   owned by a *different* `per_worker` domain except through the
+//!   `netpath` wire seam — the invariant a sharded engine relies on.
+//! - `tie_break_sensitive` (L7): schedule calls whose firing order is
+//!   decided by the engine's same-timestamp tie-break — loop-invariant
+//!   timestamps in a `for` body, and `.after(0, ..)` — must carry a
+//!   `// tie-break:` ordering rationale within three lines.
+//!
+//! Suppression is a single pass over *all* raw violations from *all*
+//! lints, so an allow consumed by one lint is never reported stale by
+//! another, and violations against files the scanner did not lex (the
+//! shard map itself) flow through instead of being dropped.
 
-use std::collections::BTreeSet;
-use std::path::PathBuf;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
 
+use crate::graph::{is_builtin, skip_braces, StateGraph};
 use crate::lexer::{Lexed, Token};
+use crate::shard_map::ShardMap;
 
-pub const LINT_NAMES: [&str; 4] =
-    ["unordered_container", "wall_clock", "raw_event_key", "unaudited_stats"];
+pub const LINT_NAMES: [&str; 7] = [
+    "unordered_container",
+    "wall_clock",
+    "raw_event_key",
+    "unaudited_stats",
+    "undeclared_shared_state",
+    "cross_shard_mut",
+    "tie_break_sensitive",
+];
 
 /// How a file participates in the analysis; decided by `scan` from its
 /// path (repo layout) or forced by fixture mode.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FileClass {
-    /// Simulation module: L1 and L3 apply.
+    /// Simulation module: L1, L3 and L7 apply.
     pub sim: bool,
     /// The one allowlisted host seam (`src/hostclock.rs`): L2 exempt.
     pub hostclock: bool,
@@ -44,6 +70,10 @@ pub struct SourceFile {
     /// Path as reported in diagnostics (relative to the crate root).
     pub path: PathBuf,
     pub class: FileClass,
+    /// Module name for the state-access graph: the top-level directory
+    /// under `src/` for sim modules in repo mode, the file stem in
+    /// fixture mode, `None` for files outside the graph.
+    pub module: Option<String>,
     pub lexed: Lexed,
 }
 
@@ -61,37 +91,73 @@ impl std::fmt::Display for Violation {
     }
 }
 
+/// Load a shard map, converting parse errors into violations against
+/// the map file itself. `Ok(None)` means the file does not exist.
+pub fn load_map(path: &Path) -> Result<Option<ShardMap>, Vec<Violation>> {
+    crate::shard_map::load(path).map_err(|errs| {
+        errs.into_iter()
+            .map(|(line, msg)| Violation {
+                file: path.to_path_buf(),
+                line,
+                lint: "shard_map",
+                msg,
+            })
+            .collect()
+    })
+}
+
 /// Run every lint over `files` and apply suppressions. Returned
 /// violations are sorted by (file, line, lint) and deduplicated per line
-/// so one `HashMap<K, V> = HashMap::new()` line reports once.
-pub fn run(files: &[SourceFile]) -> Vec<Violation> {
+/// so one `HashMap<K, V> = HashMap::new()` line reports once. The shard
+/// lints (L5/L6) only run when a shard map is present; repo mode always
+/// passes one, fixture dirs may omit it.
+pub fn run(files: &[SourceFile], map: Option<&ShardMap>) -> Vec<Violation> {
     let mut raw: Vec<Violation> = Vec::new();
     for sf in files {
         lint_unordered_container(sf, &mut raw);
         lint_wall_clock(sf, &mut raw);
         lint_raw_event_key(sf, &mut raw);
+        lint_tie_break(sf, &mut raw);
     }
     lint_unaudited_stats(files, &mut raw);
+    lint_shard_state(files, map, &mut raw);
+    suppress(files, raw)
+}
 
+/// The single suppression pass: every raw violation from every lint is
+/// checked against the allows of the file it points at. An allow
+/// suppresses a violation on its own line or on the line directly below
+/// it (comment-above style); one allow may absorb hits from several
+/// lint passes and counts as used after the first. Unused allows are
+/// violations themselves: a stale suppression is a trap. Violations
+/// against files with no lexed source (the shard map) pass through —
+/// they cannot be suppressed, only fixed.
+fn suppress(files: &[SourceFile], raw: Vec<Violation>) -> Vec<Violation> {
+    let by_path: BTreeMap<&Path, &SourceFile> =
+        files.iter().map(|sf| (sf.path.as_path(), sf)).collect();
+    let mut used: BTreeMap<&Path, Vec<bool>> = files
+        .iter()
+        .map(|sf| (sf.path.as_path(), vec![false; sf.lexed.allows.len()]))
+        .collect();
     let mut out: Vec<Violation> = Vec::new();
     let mut seen: BTreeSet<(PathBuf, u32, &'static str)> = BTreeSet::new();
-    for sf in files {
-        // An allow suppresses a violation on its own line or on the line
-        // directly below it (comment-above style). Unused allows are
-        // violations themselves: a stale suppression is a trap.
-        let mut used = vec![false; sf.lexed.allows.len()];
-        for v in raw.iter().filter(|v| v.file == sf.path) {
-            let mut suppressed = false;
+    for v in &raw {
+        let mut suppressed = false;
+        if let Some(sf) = by_path.get(v.file.as_path()) {
+            let flags = used.get_mut(v.file.as_path()).expect("same key set");
             for (ai, a) in sf.lexed.allows.iter().enumerate() {
                 if a.lint == v.lint && (a.line == v.line || a.line + 1 == v.line) {
-                    used[ai] = true;
+                    flags[ai] = true;
                     suppressed = true;
                 }
             }
-            if !suppressed && seen.insert((v.file.clone(), v.line, v.lint)) {
-                out.push(v.clone());
-            }
         }
+        if !suppressed && seen.insert((v.file.clone(), v.line, v.lint)) {
+            out.push(v.clone());
+        }
+    }
+    for sf in files {
+        let flags = &used[sf.path.as_path()];
         for (ai, a) in sf.lexed.allows.iter().enumerate() {
             if !LINT_NAMES.contains(&a.lint.as_str()) {
                 out.push(Violation {
@@ -100,7 +166,7 @@ pub fn run(files: &[SourceFile]) -> Vec<Violation> {
                     lint: "bad_allow",
                     msg: format!("unknown lint {:?} in detlint:allow", a.lint),
                 });
-            } else if !used[ai] {
+            } else if !flags[ai] {
                 out.push(Violation {
                     file: sf.path.clone(),
                     line: a.line,
@@ -174,8 +240,7 @@ fn lint_wall_clock(sf: &SourceFile, out: &mut Vec<Violation>) {
                 // are fine.
                 let nx = toks.get(i + 1).map(|n| n.text.as_str());
                 let nx2 = toks.get(i + 2).map(|n| n.text.as_str());
-                if nx == Some("::")
-                    && matches!(nx2, Some("var" | "var_os" | "vars" | "vars_os"))
+                if nx == Some("::") && matches!(nx2, Some("var" | "var_os" | "vars" | "vars_os"))
                 {
                     push(t.line, "an environment read");
                 }
@@ -272,8 +337,7 @@ fn lint_unaudited_stats(files: &[SourceFile], out: &mut Vec<Violation>) {
         }
         let toks = &sf.lexed.tokens;
         for i in 0..toks.len() {
-            if toks[i].text == "pub"
-                && toks.get(i + 1).map(|t| t.text.as_str()) == Some("struct")
+            if toks[i].text == "pub" && toks.get(i + 1).map(|t| t.text.as_str()) == Some("struct")
             {
                 if let Some(name) = toks.get(i + 2) {
                     if name.text.ends_with("Stats") {
@@ -384,79 +448,415 @@ fn snake_case(name: &str) -> String {
     s
 }
 
+/// L5 + L6: shard-safety over the state-access graph.
+///
+/// L5 (`undeclared_shared_state`): a module holding a named, non-builtin
+/// `Rc<RefCell<T>>` whose defining module is *not* itself must find a
+/// `[state.T]` declaration in the shard map; the declaration's `owner`
+/// must match the graph's definition site; a declaration no handle
+/// references is stale; and every module participating in declared state
+/// must have a `[modules]` domain entry.
+///
+/// L6 (`cross_shard_mut`): a `per_worker` module mutating
+/// (`.borrow_mut()`) declared `per_worker` state owned by a different
+/// module is flagged unless either side is the `netpath` wire seam.
+fn lint_shard_state(files: &[SourceFile], map: Option<&ShardMap>, out: &mut Vec<Violation>) {
+    let Some(map) = map else { return };
+    let graph = StateGraph::build(files);
+    let mut referenced: BTreeSet<&str> = BTreeSet::new();
+    for (m, acc) in &graph.modules {
+        for h in &acc.handles {
+            if is_builtin(&h.inner) {
+                continue;
+            }
+            referenced.insert(h.inner.as_str());
+            let owner = graph.def_site(&h.inner);
+            if owner == Some(m.as_str()) {
+                continue;
+            }
+            match map.state.get(&h.inner) {
+                Some(decl) => {
+                    if !map.modules.contains_key(m) {
+                        let ty = &h.inner;
+                        out.push(Violation {
+                            file: map.path.clone(),
+                            line: decl.line,
+                            lint: "undeclared_shared_state",
+                            msg: format!(
+                                "module `{m}` holds declared state {ty} but has no [modules] \
+                                 entry in the shard map"
+                            ),
+                        });
+                    }
+                }
+                None => {
+                    let owner = owner.unwrap_or("unknown");
+                    let ty = &h.inner;
+                    out.push(Violation {
+                        file: h.file.clone(),
+                        line: h.line,
+                        lint: "undeclared_shared_state",
+                        msg: format!(
+                            "module `{m}` holds a cross-module Rc<RefCell<{ty}>> (defining \
+                             module: {owner}) with no [state.{ty}] entry in shard_map.toml; \
+                             declare its owning shard domain"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for (ty, decl) in &map.state {
+        if let Some(actual) = graph.def_site(ty) {
+            if actual != decl.owner {
+                let o = &decl.owner;
+                out.push(Violation {
+                    file: map.path.clone(),
+                    line: decl.line,
+                    lint: "undeclared_shared_state",
+                    msg: format!(
+                        "[state.{ty}] declares owner \"{o}\" but {ty} is defined in module \
+                         `{actual}`"
+                    ),
+                });
+            }
+        }
+        if !map.modules.contains_key(&decl.owner) {
+            let o = &decl.owner;
+            out.push(Violation {
+                file: map.path.clone(),
+                line: decl.line,
+                lint: "undeclared_shared_state",
+                msg: format!(
+                    "owner module `{o}` of [state.{ty}] has no [modules] entry in the shard map"
+                ),
+            });
+        }
+        if !referenced.contains(ty.as_str()) {
+            out.push(Violation {
+                file: map.path.clone(),
+                line: decl.line,
+                lint: "undeclared_shared_state",
+                msg: format!(
+                    "[state.{ty}] matches no Rc<RefCell<{ty}>> handle in any scanned module; \
+                     stale entries mask real gaps — delete it"
+                ),
+            });
+        }
+    }
+    for (m, acc) in &graph.modules {
+        if m == "netpath" {
+            continue;
+        }
+        let Some((domain, _)) = map.modules.get(m) else { continue };
+        if domain != "per_worker" {
+            continue;
+        }
+        for mu in &acc.mutations {
+            let Some(decl) = map.state.get(&mu.inner) else { continue };
+            if decl.domain == "per_worker" && decl.owner != *m && decl.owner != "netpath" {
+                let (ty, o) = (&mu.inner, &decl.owner);
+                out.push(Violation {
+                    file: mu.file.clone(),
+                    line: mu.line,
+                    lint: "cross_shard_mut",
+                    msg: format!(
+                        "per_worker module `{m}` mutates {ty} owned by per_worker module `{o}`: \
+                         cross-shard mutation must cross the netpath wire seam, not a shared \
+                         handle"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// One active `for` loop surrounding the current token position.
+struct LoopFrame {
+    /// The loop pattern's idents plus every ident assigned in the body —
+    /// a timestamp derived from either varies per iteration.
+    vars: BTreeSet<String>,
+    /// Token index just past the body's closing brace.
+    end: usize,
+    /// The body constructs a `Sim::…` — a fresh per-iteration engine,
+    /// so same-instant schedules cannot tie across iterations.
+    fresh_sim: bool,
+}
+
+const SCHED_CALLS: [&str; 4] = ["at", "at_handle", "after", "after_handle"];
+
+/// L7: tie-break-sensitive schedule calls in simulation modules.
+///
+/// Rule A: a `.at/.after(..)` call inside a `for` body whose time
+/// argument mentions no per-iteration variable — every iteration lands
+/// on the same instant, and the firing order among those events is
+/// whatever the engine's tie-break policy says.
+///
+/// Rule B: `.after(0, ..)` — scheduling at the *current* instant races
+/// against everything already queued for that timestamp.
+///
+/// Both are legitimate patterns when the order genuinely does not matter
+/// (or is itself under test); the lint demands that the author say so in
+/// a `// tie-break:` comment on the call line or within the three lines
+/// above it, or via `detlint:allow(tie_break_sensitive, …)`.
+fn lint_tie_break(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if !sf.class.sim {
+        return;
+    }
+    let toks = &sf.lexed.tokens;
+    let rationales = &sf.lexed.rationales;
+    let excused = |line: u32| rationales.iter().any(|&r| r <= line && line <= r + 3);
+    let mut frames: Vec<LoopFrame> = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        while frames.last().is_some_and(|f| f.end <= i) {
+            frames.pop();
+        }
+        if toks[i].text == "for" && is_loop_for(toks, i) {
+            if let Some(frame) = parse_for_frame(toks, i) {
+                frames.push(frame);
+            }
+        } else if let Some(frame) = frames.last_mut() {
+            if toks[i].text == "Sim" && toks.get(i + 1).is_some_and(|n| n.text == "::") {
+                frame.fresh_sim = true;
+            }
+            track_frame_vars(toks, i, frame);
+        }
+        if toks[i].text == "."
+            && toks.get(i + 1).is_some_and(|n| SCHED_CALLS.contains(&n.text.as_str()))
+            && toks.get(i + 2).is_some_and(|n| n.text == "(")
+        {
+            let name = toks[i + 1].text.clone();
+            let line = toks[i + 1].line;
+            let immediate = (name == "after" || name == "after_handle")
+                && toks.get(i + 3).is_some_and(|n| n.text == "0");
+            if immediate {
+                if !excused(line) {
+                    out.push(Violation {
+                        file: sf.path.clone(),
+                        line,
+                        lint: "tie_break_sensitive",
+                        msg: format!(
+                            ".{name}(0, ..) schedules at the current instant and races \
+                             already-queued same-time events under a permuted tie-break; \
+                             state the ordering rationale in a `// tie-break:` comment"
+                        ),
+                    });
+                }
+            } else if !frames.is_empty() && !frames.last().is_some_and(|f| f.fresh_sim) {
+                let args = first_arg_idents(toks, i + 3);
+                let varies =
+                    args.iter().any(|a| frames.iter().any(|f| f.vars.contains(a.as_str())));
+                if !varies && !excused(line) {
+                    out.push(Violation {
+                        file: sf.path.clone(),
+                        line,
+                        lint: "tie_break_sensitive",
+                        msg: format!(
+                            ".{name}(..) in a loop at a loop-invariant timestamp: every \
+                             iteration lands on the same instant and fires in tie-break order; \
+                             vary the time or state the rationale in a `// tie-break:` comment"
+                        ),
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Is the `for` at `i` a loop (not `impl … for T` / `for<'a>`)?
+fn is_loop_for(toks: &[Token], i: usize) -> bool {
+    if toks.get(i + 1).is_some_and(|n| n.text == "<") {
+        return false;
+    }
+    match i.checked_sub(1).and_then(|p| toks.get(p)) {
+        Some(p) => !(is_ident_text(&p.text) || p.text == ">"),
+        None => true,
+    }
+}
+
+fn is_ident_text(t: &str) -> bool {
+    t.chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Parse the loop at token `i` into a frame: pattern idents + body span.
+fn parse_for_frame(toks: &[Token], i: usize) -> Option<LoopFrame> {
+    let mut vars = BTreeSet::new();
+    let mut j = i + 1;
+    while j < toks.len() && toks[j].text != "in" {
+        if j > i + 32 {
+            return None; // not a loop shape we understand
+        }
+        if is_ident_text(&toks[j].text) && toks[j].text != "mut" {
+            vars.insert(toks[j].text.clone());
+        }
+        j += 1;
+    }
+    // Body: the first `{` after `in` at paren/bracket depth 0 (a `{` in
+    // a closure argument of the iterator chain sits inside parens).
+    let mut depth = 0i32;
+    let mut k = j + 1;
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            "{" if depth == 0 => break,
+            _ => {}
+        }
+        k += 1;
+    }
+    if k >= toks.len() {
+        return None;
+    }
+    Some(LoopFrame { vars, end: skip_braces(toks, k), fresh_sim: false })
+}
+
+/// Record idents the innermost loop body assigns (`x = …`, `x += …`,
+/// `let (a, b) = …`): they vary per iteration like the loop pattern.
+fn track_frame_vars(toks: &[Token], i: usize, frame: &mut LoopFrame) {
+    let t = &toks[i];
+    if t.text == "let" && toks.get(i + 1).is_some_and(|n| n.text == "(") {
+        let mut k = i + 2;
+        while k < toks.len() && toks[k].text != ")" {
+            if is_ident_text(&toks[k].text) && toks[k].text != "mut" {
+                frame.vars.insert(toks[k].text.clone());
+            }
+            k += 1;
+        }
+        return;
+    }
+    if !is_ident_text(&t.text) {
+        return;
+    }
+    let n1 = toks.get(i + 1).map(|n| n.text.as_str());
+    let n2 = toks.get(i + 2).map(|n| n.text.as_str());
+    let plain_assign = n1 == Some("=") && n2 != Some("=") && n2 != Some(">");
+    let compound = matches!(n1, Some("+" | "-" | "*")) && n2 == Some("=");
+    if plain_assign || compound {
+        frame.vars.insert(t.text.clone());
+    }
+}
+
+/// The ident tokens of the first argument of a call whose `(` sits at
+/// `open - 1` — i.e. scanning from `open` to the first depth-0 `,`/`)`.
+fn first_arg_idents(toks: &[Token], open: usize) -> Vec<String> {
+    let mut depth = 0i32;
+    let mut k = open;
+    let mut out = Vec::new();
+    while k < toks.len() {
+        match toks[k].text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                if depth == 0 {
+                    break;
+                }
+                depth -= 1;
+            }
+            "," if depth == 0 => break,
+            t if is_ident_text(t) => out.push(t.to_string()),
+            _ => {}
+        }
+        k += 1;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::lexer::lex;
+    use crate::shard_map;
 
     fn file(path: &str, class: FileClass, src: &str) -> SourceFile {
-        SourceFile { path: PathBuf::from(path), class, lexed: lex(src) }
+        SourceFile { path: PathBuf::from(path), class, module: None, lexed: lex(src) }
+    }
+
+    fn mfile(path: &str, module: &str, src: &str) -> SourceFile {
+        SourceFile {
+            path: PathBuf::from(path),
+            class: FileClass { sim: true, stats_defs: true, ..FileClass::default() },
+            module: Some(module.to_string()),
+            lexed: lex(src),
+        }
     }
 
     fn sim() -> FileClass {
         FileClass { sim: true, stats_defs: true, ..FileClass::default() }
     }
 
+    fn map(src: &str) -> ShardMap {
+        shard_map::parse(Path::new("shard_map.toml"), src).expect("test map parses")
+    }
+
     #[test]
     fn l1_fires_only_in_sim_modules() {
         let src = "use std::collections::HashMap;\n";
-        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].lint, "unordered_container");
         assert_eq!(v[0].line, 1);
-        let v = run(&[file("xtask/src/x.rs", FileClass::default(), src)]);
+        let v = run(&[file("xtask/src/x.rs", FileClass::default(), src)], None);
         assert!(v.is_empty());
     }
 
     #[test]
     fn l2_fires_everywhere_except_hostclock() {
         let src = "let t0 = std::time::Instant::now();\n";
-        let v = run(&[file("src/runtime/executor.rs", FileClass::default(), src)]);
+        let v = run(&[file("src/runtime/executor.rs", FileClass::default(), src)], None);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].lint, "wall_clock");
         let hc = FileClass { hostclock: true, ..FileClass::default() };
-        assert!(run(&[file("src/hostclock.rs", hc, src)]).is_empty());
+        assert!(run(&[file("src/hostclock.rs", hc, src)], None).is_empty());
     }
 
     #[test]
     fn l2_env_reads_but_not_args_or_macro() {
-        let v = run(&[file("a.rs", FileClass::default(), "std::env::var(\"X\");\n")]);
+        let v = run(&[file("a.rs", FileClass::default(), "std::env::var(\"X\");\n")], None);
         assert_eq!(v.len(), 1);
-        let v = run(&[file(
-            "a.rs",
-            FileClass::default(),
-            "std::env::args().skip(1);\nlet d = env!(\"CARGO_MANIFEST_DIR\");\n",
-        )]);
+        let v = run(
+            &[file(
+                "a.rs",
+                FileClass::default(),
+                "std::env::args().skip(1);\nlet d = env!(\"CARGO_MANIFEST_DIR\");\n",
+            )],
+            None,
+        );
         assert!(v.is_empty(), "{v:?}");
     }
 
     #[test]
     fn l2_matches_exact_idents_only() {
-        let v = run(&[file("a.rs", FileClass::default(), "struct InstantTarget; fn f() {}\n")]);
+        let src = "struct InstantTarget; fn f() {}\n";
+        let v = run(&[file("a.rs", FileClass::default(), src)], None);
         assert!(v.is_empty(), "{v:?}");
     }
 
     #[test]
     fn l3_manual_ord_and_float_heaps() {
         let src = "impl Ord for Key { }\nimpl<T> PartialOrd for K2<T> { }\n";
-        let v = run(&[file("src/simcore/x.rs", sim(), src)]);
+        let v = run(&[file("src/simcore/x.rs", sim(), src)], None);
         assert_eq!(v.len(), 2);
         assert!(v.iter().all(|v| v.lint == "raw_event_key"));
-        let v = run(&[file("src/simcore/x.rs", sim(), "let h: BinaryHeap<(f64, u64)>;\n")]);
+        let src = "let h: BinaryHeap<(f64, u64)>;\n";
+        let v = run(&[file("src/simcore/x.rs", sim(), src)], None);
         assert_eq!(v.len(), 1);
         // Derived ordering is fine.
-        let v = run(&[file(
-            "src/simcore/x.rs",
-            sim(),
-            "#[derive(PartialOrd, Ord)]\nstruct EventKey(u64, u64);\n",
-        )]);
+        let v = run(
+            &[file(
+                "src/simcore/x.rs",
+                sim(),
+                "#[derive(PartialOrd, Ord)]\nstruct EventKey(u64, u64);\n",
+            )],
+            None,
+        );
         assert!(v.is_empty(), "{v:?}");
     }
 
     #[test]
     fn l4_requires_an_audited_reference() {
         let def = file("src/faas/x.rs", sim(), "pub struct FooStats { pub n: u64 }\n");
-        let v = run(&[def]);
+        let v = run(&[def], None);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].lint, "unaudited_stats");
 
@@ -466,7 +866,7 @@ mod tests {
             FileClass { audited: true, ..FileClass::default() },
             "fn t() { let s: FooStats = todo!(); }\n",
         );
-        assert!(run(&[def, test_file]).is_empty());
+        assert!(run(&[def, test_file], None).is_empty());
     }
 
     #[test]
@@ -475,31 +875,157 @@ mod tests {
                    fn check_invariants(foo_stats: &FooStats2) { let _ = foo_stats; }\n";
         // The body of check_invariants mentions foo_stats → FooStats is
         // considered audited via its snake_case name.
-        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
         assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn l5_cross_module_handle_requires_declaration() {
+        let owner = mfile("src/faas/c.rs", "faas", "pub struct Cluster { pub n: u64 }\n");
+        let holder = mfile(
+            "src/faultplane/mod.rs",
+            "faultplane",
+            "fn inject(cluster: &Rc<RefCell<Cluster>>) { cluster.borrow_mut().n += 1; }\n",
+        );
+        let m = map("[modules]\nfaas = \"gateway\"\nfaultplane = \"control\"\n");
+        let v = run(&[owner, holder], Some(&m));
+        assert_eq!(v.len(), 1, "{v:#?}");
+        assert_eq!(v[0].lint, "undeclared_shared_state");
+        assert_eq!((v[0].file.to_str().unwrap(), v[0].line), ("src/faultplane/mod.rs", 1));
+    }
+
+    #[test]
+    fn l5_declared_handle_is_clean_and_builtins_are_exempt() {
+        let owner = mfile("src/faas/c.rs", "faas", "pub struct Cluster { pub n: u64 }\n");
+        let holder = mfile(
+            "src/faultplane/mod.rs",
+            "faultplane",
+            "fn inject(c: &Rc<RefCell<Cluster>>, log: Rc<RefCell<Vec<u64>>>) {}\n",
+        );
+        let m = map("[modules]\nfaas = \"gateway\"\nfaultplane = \"control\"\n\
+                     [state.Cluster]\nowner = \"faas\"\ndomain = \"gateway\"\n");
+        let v = run(&[owner, holder], Some(&m));
+        assert!(v.is_empty(), "{v:#?}");
+    }
+
+    #[test]
+    fn l5_owner_mismatch_and_stale_entries_point_at_the_map() {
+        let owner = mfile("src/faas/c.rs", "faas", "pub struct Cluster { pub n: u64 }\n");
+        let holder =
+            mfile("src/workload/mod.rs", "workload", "fn go(c: Rc<RefCell<Cluster>>) {}\n");
+        let m = map("[modules]\nfaas = \"gateway\"\nworkload = \"gateway\"\n\
+                     [state.Cluster]\nowner = \"workload\"\ndomain = \"gateway\"\n\
+                     [state.Ghost]\nowner = \"faas\"\ndomain = \"value\"\n");
+        let v = run(&[owner, holder], Some(&m));
+        let msgs: Vec<&str> = v.iter().map(|v| v.msg.as_str()).collect();
+        assert_eq!(v.len(), 2, "{v:#?}");
+        assert!(v.iter().all(|v| v.file == Path::new("shard_map.toml")));
+        assert!(msgs.iter().any(|m| m.contains("defined in module `faas`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("stale")), "{msgs:?}");
+    }
+
+    #[test]
+    fn l6_per_worker_cross_mutation_is_flagged_but_netpath_is_the_seam() {
+        let owner = mfile("src/junction/q.rs", "junction", "pub struct Queue { pub n: u64 }\n");
+        let src = "fn steal(q: &Rc<RefCell<Queue>>) {\nq.borrow_mut().n -= 1;\n}\n";
+        let thief = mfile("src/snapshot/mod.rs", "snapshot", src);
+        let seam = mfile("src/netpath/mod.rs", "netpath", src);
+        let m = map("[modules]\njunction = \"per_worker\"\nsnapshot = \"per_worker\"\n\
+                     netpath = \"wire\"\n\
+                     [state.Queue]\nowner = \"junction\"\ndomain = \"per_worker\"\n");
+        let v = run(&[owner, thief, seam], Some(&m));
+        assert_eq!(v.len(), 1, "{v:#?}");
+        assert_eq!(v[0].lint, "cross_shard_mut");
+        assert_eq!((v[0].file.to_str().unwrap(), v[0].line), ("src/snapshot/mod.rs", 2));
+    }
+
+    #[test]
+    fn l7_loop_invariant_schedule_is_flagged() {
+        let src = "fn storm(sim: &mut Sim, base: u64) {\nfor w in 0..4 {\n\
+                   sim.at(base, move |s| poke(s, w));\n}\n}\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
+        assert_eq!(v.len(), 1, "{v:#?}");
+        assert_eq!((v[0].lint, v[0].line), ("tie_break_sensitive", 3));
+    }
+
+    #[test]
+    fn l7_loop_varying_timestamps_are_clean() {
+        // Loop var in the time argument, an ident assigned in the body,
+        // and a fresh per-iteration Sim are all per-iteration: no ties.
+        let src = "fn f(sim: &mut Sim) {\nfor w in 0..4 {\nsim.at(100 * w, go);\n}\n\
+                   for _ in 0..4 {\nt += 5;\nsim.at(t, go);\n}\n\
+                   for kind in BOTH {\nlet mut sim = Sim::with_engine(kind);\nsim.at(7, go);\n}\n}\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
+        assert!(v.is_empty(), "{v:#?}");
+    }
+
+    #[test]
+    fn l7_after_zero_needs_a_rationale() {
+        let src = "fn kick(sim: &mut Sim) {\nsim.after(0, drain);\n}\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
+        assert_eq!(v.len(), 1, "{v:#?}");
+        assert_eq!((v[0].lint, v[0].line), ("tie_break_sensitive", 2));
+        // Non-zero delays are not immediate.
+        let src = "fn kick(sim: &mut Sim) {\nsim.after(10, drain);\n}\n";
+        assert!(run(&[file("src/faas/x.rs", sim(), src)], None).is_empty());
+    }
+
+    #[test]
+    fn l7_rationale_comments_excuse_within_three_lines() {
+        let src = "fn kick(sim: &mut Sim) {\n// tie-break: drain order is load-bearing here\n\
+                   sim.after(0, drain);\nfor w in 0..4 {\n\
+                   // tie-break: grants race on purpose\nsim.at(9, go);\n}\n}\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
+        assert!(v.is_empty(), "{v:#?}");
+        // A rationale more than three lines above the call is stale prose.
+        let src = "fn kick(sim: &mut Sim) {\n// tie-break: too far away\n\nlet a = 1;\n\
+                   let b = 2;\nsim.after(0, drain);\n}\n";
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
+        assert_eq!(v.len(), 1, "{v:#?}");
     }
 
     #[test]
     fn allows_suppress_and_must_be_used() {
         let src = "// detlint:allow(unordered_container, ordered before output)\n\
                    use std::collections::HashMap;\n";
-        assert!(run(&[file("src/faas/x.rs", sim(), src)]).is_empty());
+        assert!(run(&[file("src/faas/x.rs", sim(), src)], None).is_empty());
 
         let src = "// detlint:allow(unordered_container, stale)\nlet x = 1;\n";
-        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].lint, "unused_allow");
 
         let src = "// detlint:allow(no_such_lint, whatever)\nlet x = 1;\n";
-        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].lint, "bad_allow");
     }
 
     #[test]
+    fn an_allow_used_by_any_pass_is_not_stale() {
+        // One allow absorbing an L5 hit (a graph-pass lint) must not be
+        // reported unused by the suppression sweep — the regression the
+        // unified pass exists to prevent — and map-file violations
+        // survive even though the map has no lexed source to suppress
+        // them with.
+        let holder = mfile(
+            "src/workload/mod.rs",
+            "workload",
+            "// detlint:allow(undeclared_shared_state, staged migration)\n\
+             fn go(c: Rc<RefCell<Phantom>>) {}\n",
+        );
+        let m = map("[modules]\nworkload = \"gateway\"\n\
+                     [state.Gone]\nowner = \"workload\"\ndomain = \"value\"\n");
+        let v = run(&[holder], Some(&m));
+        assert_eq!(v.len(), 1, "{v:#?}");
+        assert_eq!(v[0].file, Path::new("shard_map.toml"));
+        assert!(v[0].msg.contains("stale"), "{}", v[0].msg);
+    }
+
+    #[test]
     fn same_line_duplicates_collapse() {
         let src = "let m: HashMap<u32, u32> = HashMap::new();\n";
-        let v = run(&[file("src/faas/x.rs", sim(), src)]);
+        let v = run(&[file("src/faas/x.rs", sim(), src)], None);
         assert_eq!(v.len(), 1);
     }
 }

@@ -3,17 +3,20 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use xtask::{lints, scan};
+use xtask::{graph, lints, scan};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("detlint") => detlint(&args[1..]),
+        Some("schedcheck") => schedcheck(&args[1..]),
         _ => {
-            eprintln!("usage: cargo xtask detlint [--path DIR]");
+            eprintln!("usage: cargo xtask <detlint [--path DIR] [--graph] | schedcheck [args..]>");
             eprintln!();
-            eprintln!("  detlint          lint the repo for determinism/conservation hazards");
+            eprintln!("  detlint          lint the repo for determinism/shard-safety hazards");
             eprintln!("  detlint --path D lint every .rs under D as if it were a sim module");
+            eprintln!("  detlint --graph  also dump the module state-access graph");
+            eprintln!("  schedcheck ..    build + run the tie-break schedule explorer (E17)");
             ExitCode::from(2)
         }
     }
@@ -21,6 +24,7 @@ fn main() -> ExitCode {
 
 fn detlint(args: &[String]) -> ExitCode {
     let mut path: Option<PathBuf> = None;
+    let mut dump_graph = false;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -31,15 +35,19 @@ fn detlint(args: &[String]) -> ExitCode {
                     return ExitCode::from(2);
                 }
             },
+            "--graph" => dump_graph = true,
             other => {
                 eprintln!("detlint: unknown flag {other:?}");
                 return ExitCode::from(2);
             }
         }
     }
-    let files = match &path {
-        Some(dir) => scan::collect_dir(dir),
-        None => scan::collect_repo(&scan::crate_root()),
+    let (files, map_path, map_required) = match &path {
+        Some(dir) => (scan::collect_dir(dir), dir.join("shard_map.toml"), false),
+        None => {
+            let root = scan::crate_root();
+            (scan::collect_repo(&root), scan::repo_shard_map(&root), true)
+        }
     };
     let files = match files {
         Ok(f) => f,
@@ -48,7 +56,24 @@ fn detlint(args: &[String]) -> ExitCode {
             return ExitCode::from(2);
         }
     };
-    let violations = lints::run(&files);
+    let map = match lints::load_map(&map_path) {
+        Ok(m) => m,
+        Err(errs) => {
+            for v in &errs {
+                println!("{v}");
+            }
+            eprintln!("detlint: shard map failed to parse ({} error(s))", errs.len());
+            return ExitCode::FAILURE;
+        }
+    };
+    if map.is_none() && map_required {
+        eprintln!("detlint: missing {} (required for L5/L6)", map_path.display());
+        return ExitCode::FAILURE;
+    }
+    if dump_graph {
+        print!("{}", graph::StateGraph::build(&files).dump());
+    }
+    let violations = lints::run(&files, map.as_ref());
     for v in &violations {
         println!("{v}");
     }
@@ -58,5 +83,24 @@ fn detlint(args: &[String]) -> ExitCode {
     } else {
         eprintln!("detlint: {} violation(s)", violations.len());
         ExitCode::FAILURE
+    }
+}
+
+/// Build the release binary and forward to its `schedcheck` subcommand.
+/// Kept as a shell-out so xtask stays dependency-free and the explorer
+/// runs the exact binary CI byte-diffs.
+fn schedcheck(args: &[String]) -> ExitCode {
+    let status = std::process::Command::new(env!("CARGO"))
+        .current_dir(scan::crate_root())
+        .args(["run", "--release", "--package", "junctiond-repro", "--", "schedcheck"])
+        .args(args)
+        .status();
+    match status {
+        Ok(s) if s.success() => ExitCode::SUCCESS,
+        Ok(s) => ExitCode::from(s.code().unwrap_or(1).clamp(0, 255) as u8),
+        Err(e) => {
+            eprintln!("schedcheck: failed to launch cargo: {e}");
+            ExitCode::from(2)
+        }
     }
 }

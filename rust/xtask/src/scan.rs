@@ -5,6 +5,12 @@
 //! `xtask/src/**`. Fixture mode (`--path DIR`) walks one directory and
 //! treats every file as a simulation module with stats definitions, so a
 //! fixture snippet can trip any lint without replicating the repo layout.
+//!
+//! Module attribution for the state-access graph: in repo mode a sim
+//! file's module is its top-level directory (or file stem) under `src/`;
+//! in fixture mode every file is its own module, named by its stem, so a
+//! fixture `shard_map.toml` can declare cross-"module" state between two
+//! sibling fixture files.
 
 use std::io;
 use std::path::{Path, PathBuf};
@@ -13,8 +19,9 @@ use crate::lexer::lex;
 use crate::lints::{FileClass, SourceFile};
 
 /// The modules whose state or output is part of the simulation timeline;
-/// L1/L3 apply here. Mirrors the list in ISSUE/DESIGN §3g.
-pub const SIM_MODULES: [&str; 9] = [
+/// L1/L3/L7 apply here, and the shard-safety graph (L5/L6) is built over
+/// exactly this set. Mirrors the list in ISSUE/DESIGN §3g/§3i.
+pub const SIM_MODULES: [&str; 10] = [
     "simcore",
     "faas",
     "netpath",
@@ -24,6 +31,7 @@ pub const SIM_MODULES: [&str; 9] = [
     "workload",
     "telemetry",
     "faultplane",
+    "containerd_sim",
 ];
 
 /// Crate root (`rust/`), derived from xtask's own manifest dir so the
@@ -32,35 +40,43 @@ pub fn crate_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("xtask sits inside rust/").to_path_buf()
 }
 
+/// The checked-in repo shard map consulted by L5/L6.
+pub fn repo_shard_map(root: &Path) -> PathBuf {
+    root.join("xtask").join("shard_map.toml")
+}
+
 /// Collect + lex every analyzable file of the repo rooted at `root`.
 pub fn collect_repo(root: &Path) -> io::Result<Vec<SourceFile>> {
     let mut files = Vec::new();
     walk(&root.join("src"), &mut |p| {
-        load(root, p, classify_src(root, p), &mut files);
+        let (class, module) = classify_src(root, p);
+        load(root, p, class, module, &mut files);
     })?;
     walk(&root.join("tests"), &mut |p| {
         if !p.components().any(|c| c.as_os_str() == "detlint_fixtures") {
             let class = FileClass { audited: true, ..FileClass::default() };
-            load(root, p, class, &mut files);
+            load(root, p, class, None, &mut files);
         }
     })?;
     walk(&root.join("benches"), &mut |p| {
         let class = FileClass { audited: true, ..FileClass::default() };
-        load(root, p, class, &mut files);
+        load(root, p, class, None, &mut files);
     })?;
     walk(&root.join("xtask").join("src"), &mut |p| {
-        load(root, p, FileClass::default(), &mut files);
+        load(root, p, FileClass::default(), None, &mut files);
     })?;
     Ok(files)
 }
 
 /// Fixture mode: every `.rs` under `dir`, each treated as a simulation
-/// module with stats definitions so all four lints are live.
+/// module (named by its file stem) with stats definitions so all lints
+/// are live.
 pub fn collect_dir(dir: &Path) -> io::Result<Vec<SourceFile>> {
     let mut files = Vec::new();
     walk(dir, &mut |p| {
         let class = FileClass { sim: true, stats_defs: true, ..FileClass::default() };
-        load(dir, p, class, &mut files);
+        let module = p.file_stem().map(|s| s.to_string_lossy().into_owned());
+        load(dir, p, class, module, &mut files);
     })?;
     if files.is_empty() {
         return Err(io::Error::new(
@@ -71,29 +87,37 @@ pub fn collect_dir(dir: &Path) -> io::Result<Vec<SourceFile>> {
     Ok(files)
 }
 
-fn classify_src(root: &Path, p: &Path) -> FileClass {
+fn classify_src(root: &Path, p: &Path) -> (FileClass, Option<String>) {
     let rel = p.strip_prefix(root).unwrap_or(p);
     let mut parts = rel.components().skip(1); // skip "src"
     let first = parts.next().map(|c| c.as_os_str().to_string_lossy().into_owned());
     let Some(first) = first else {
-        return FileClass { stats_defs: true, ..FileClass::default() };
+        return (FileClass { stats_defs: true, ..FileClass::default() }, None);
     };
     let module = first.trim_end_matches(".rs");
-    FileClass {
-        sim: SIM_MODULES.contains(&module),
+    let sim = SIM_MODULES.contains(&module);
+    let class = FileClass {
+        sim,
         hostclock: rel == Path::new("src/hostclock.rs"),
         stats_defs: true,
         audited: false,
-    }
+    };
+    (class, sim.then(|| module.to_string()))
 }
 
-fn load(base: &Path, p: &Path, class: FileClass, files: &mut Vec<SourceFile>) {
+fn load(
+    base: &Path,
+    p: &Path,
+    class: FileClass,
+    module: Option<String>,
+    files: &mut Vec<SourceFile>,
+) {
     let src = match std::fs::read_to_string(p) {
         Ok(s) => s,
         Err(_) => return, // non-UTF8 or vanished; rustc will complain, not us
     };
     let shown = p.strip_prefix(base).unwrap_or(p).to_path_buf();
-    files.push(SourceFile { path: shown, class, lexed: lex(&src) });
+    files.push(SourceFile { path: shown, class, module, lexed: lex(&src) });
 }
 
 /// Depth-first walk over `.rs` files in sorted order (read_dir order is

@@ -1,0 +1,208 @@
+//! `shard_map.toml` — the checked-in declaration of every cross-module
+//! shared-state handle and each module's shard domain.
+//!
+//! Parsed with a hand-rolled TOML *subset* (sections, `key = "value"`
+//! pairs, `#` comments) for the same reason the lexer is hand-rolled:
+//! the offline registry has no `toml` crate. The subset is exactly what
+//! the schema needs; anything else is a loud parse error, never a
+//! silent skip — an unparsed declaration would hide an L5 violation.
+//!
+//! Schema:
+//!
+//! ```toml
+//! [modules]
+//! faas = "gateway"          # module name -> shard domain
+//!
+//! [state.Cluster]           # one section per declared shared type
+//! owner = "faas"            # module that defines the struct
+//! domain = "gateway"        # shard domain the state lives in
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The shard domains a module or state type may be declared in. Kept in
+/// sync with the header comment of `xtask/shard_map.toml` and DESIGN.md
+/// §3i.
+pub const DOMAINS: [&str; 6] =
+    ["per_worker", "gateway", "wire", "control", "global_readonly", "value"];
+
+/// One `[state.T]` declaration.
+#[derive(Debug, Clone)]
+pub struct StateDecl {
+    pub owner: String,
+    pub domain: String,
+    /// Line of the `[state.T]` header (for diagnostics).
+    pub line: u32,
+}
+
+/// Parsed shard map.
+#[derive(Debug, Default)]
+pub struct ShardMap {
+    /// Path the map was read from (diagnostics point here).
+    pub path: PathBuf,
+    /// `[modules]`: module name → shard domain, with declaration line.
+    pub modules: BTreeMap<String, (String, u32)>,
+    /// `[state.T]`: type name → declaration.
+    pub state: BTreeMap<String, StateDecl>,
+}
+
+/// Parse errors as `(line, message)`; the caller turns them into
+/// violations against the map file itself.
+pub fn parse(path: &Path, src: &str) -> Result<ShardMap, Vec<(u32, String)>> {
+    let mut map = ShardMap { path: path.to_path_buf(), ..ShardMap::default() };
+    let mut errors: Vec<(u32, String)> = Vec::new();
+    // Current section: None (preamble), modules, or a state type.
+    enum Section {
+        None,
+        Modules,
+        State(String, u32),
+    }
+    let mut section = Section::None;
+    // Pending fields of the open [state.T] section.
+    let mut owner: Option<String> = None;
+    let mut domain: Option<String> = None;
+    let mut close = |map: &mut ShardMap,
+                     errors: &mut Vec<(u32, String)>,
+                     section: &Section,
+                     owner: &mut Option<String>,
+                     domain: &mut Option<String>| {
+        if let Section::State(ty, line) = section {
+            match (owner.take(), domain.take()) {
+                (Some(o), Some(d)) => {
+                    let decl = StateDecl { owner: o, domain: d, line: *line };
+                    if map.state.insert(ty.clone(), decl).is_some() {
+                        errors.push((*line, format!("duplicate [state.{ty}] section")));
+                    }
+                }
+                (o, d) => {
+                    if o.is_none() {
+                        errors.push((*line, format!("[state.{ty}] is missing `owner`")));
+                    }
+                    if d.is_none() {
+                        errors.push((*line, format!("[state.{ty}] is missing `domain`")));
+                    }
+                }
+            }
+        }
+    };
+    for (idx, raw) in src.lines().enumerate() {
+        let line = idx as u32 + 1;
+        let text = match raw.split_once('#') {
+            Some((before, _)) => before.trim(),
+            None => raw.trim(),
+        };
+        if text.is_empty() {
+            continue;
+        }
+        if let Some(inner) = text.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+            close(&mut map, &mut errors, &section, &mut owner, &mut domain);
+            section = if inner == "modules" {
+                Section::Modules
+            } else if let Some(ty) = inner.strip_prefix("state.") {
+                if ty.is_empty() {
+                    errors.push((line, "empty type in [state.] section".to_string()));
+                    Section::None
+                } else {
+                    Section::State(ty.to_string(), line)
+                }
+            } else {
+                errors.push((line, format!("unknown section [{inner}]")));
+                Section::None
+            };
+            continue;
+        }
+        let Some((key, val)) = text.split_once('=') else {
+            errors.push((line, format!("expected `key = \"value\"`, got {text:?}")));
+            continue;
+        };
+        let key = key.trim();
+        let val = val.trim();
+        let Some(val) = val.strip_prefix('"').and_then(|v| v.strip_suffix('"')) else {
+            errors.push((line, format!("value for `{key}` must be a double-quoted string")));
+            continue;
+        };
+        match &section {
+            Section::None => {
+                errors.push((line, format!("`{key}` outside any section")));
+            }
+            Section::Modules => {
+                if !DOMAINS.contains(&val) {
+                    errors.push((line, format!("unknown domain {val:?} for module `{key}`")));
+                }
+                if map.modules.insert(key.to_string(), (val.to_string(), line)).is_some() {
+                    errors.push((line, format!("duplicate module entry `{key}`")));
+                }
+            }
+            Section::State(ty, _) => match key {
+                "owner" => owner = Some(val.to_string()),
+                "domain" => {
+                    if !DOMAINS.contains(&val) {
+                        errors.push((line, format!("unknown domain {val:?} in [state.{ty}]")));
+                    }
+                    domain = Some(val.to_string());
+                }
+                other => {
+                    errors.push((line, format!("unknown key `{other}` in [state.{ty}]")));
+                }
+            },
+        }
+    }
+    close(&mut map, &mut errors, &section, &mut owner, &mut domain);
+    if errors.is_empty() {
+        Ok(map)
+    } else {
+        Err(errors)
+    }
+}
+
+/// Load the map at `path`; `Ok(None)` when the file does not exist (the
+/// caller decides whether absence is an error — it is in repo mode).
+pub fn load(path: &Path) -> Result<Option<ShardMap>, Vec<(u32, String)>> {
+    match std::fs::read_to_string(path) {
+        Ok(src) => parse(path, &src).map(Some),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(vec![(0, format!("cannot read {}: {e}", path.display()))]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(src: &str) -> Result<ShardMap, Vec<(u32, String)>> {
+        parse(Path::new("test.toml"), src)
+    }
+
+    #[test]
+    fn parses_modules_and_state_sections() {
+        let src = "# header\n[modules]\nfaas = \"gateway\" # inline\n\n\
+                   [state.Cluster]\nowner = \"faas\"\ndomain = \"gateway\"\n";
+        let m = p(src).unwrap();
+        assert_eq!(m.modules.get("faas").map(|(d, _)| d.as_str()), Some("gateway"));
+        let c = m.state.get("Cluster").unwrap();
+        assert_eq!((c.owner.as_str(), c.domain.as_str()), ("faas", "gateway"));
+        assert_eq!(c.line, 5);
+    }
+
+    #[test]
+    fn rejects_unknown_domains_and_incomplete_sections() {
+        let errs = p("[modules]\nfaas = \"galaxy\"\n").unwrap_err();
+        assert!(errs[0].1.contains("unknown domain"), "{errs:?}");
+        let errs = p("[state.Rng]\nowner = \"simcore\"\n").unwrap_err();
+        assert!(errs[0].1.contains("missing `domain`"), "{errs:?}");
+        let errs = p("[state.X]\nowner = unquoted\ndomain = \"value\"\n").unwrap_err();
+        assert!(errs[0].1.contains("double-quoted"), "{errs:?}");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_stray_keys() {
+        let errs = p("[modules]\na = \"wire\"\na = \"wire\"\n").unwrap_err();
+        assert!(errs[0].1.contains("duplicate module"), "{errs:?}");
+        let errs = p("stray = \"value\"\n").unwrap_err();
+        assert!(errs[0].1.contains("outside any section"), "{errs:?}");
+        let src = "[state.T]\nowner = \"a\"\ndomain = \"value\"\ncolor = \"red\"\n";
+        let errs = p(src).unwrap_err();
+        assert!(errs[0].1.contains("unknown key"), "{errs:?}");
+    }
+}

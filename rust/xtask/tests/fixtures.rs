@@ -1,7 +1,8 @@
 //! Fixture-driven end-to-end tests for detlint: every bad snippet trips
 //! exactly its lint at the expected lines, every clean snippet (used
-//! suppressions, covered stats) reports nothing, and the repo itself is
-//! clean — the same invocation CI gates on.
+//! suppressions, covered stats, declared handles, rationale'd ties)
+//! reports nothing, and the repo itself is clean — the same invocation
+//! CI gates on.
 
 use std::collections::BTreeSet;
 use std::path::Path;
@@ -11,6 +12,15 @@ use xtask::scan;
 
 fn fixture_dir(kind: &str) -> std::path::PathBuf {
     scan::crate_root().join("tests").join("detlint_fixtures").join(kind)
+}
+
+/// Lint one fixture dir the way `cargo xtask detlint --path` does:
+/// every file a sim module, the dir's `shard_map.toml` (if any) loaded.
+fn lint_dir(kind: &str) -> Vec<Violation> {
+    let dir = fixture_dir(kind);
+    let files = scan::collect_dir(&dir).expect("fixtures present");
+    let map = lints::load_map(&dir.join("shard_map.toml")).expect("fixture map parses");
+    lints::run(&files, map.as_ref())
 }
 
 fn lint_lines(violations: &[Violation], file: &str) -> (BTreeSet<&'static str>, BTreeSet<u32>) {
@@ -25,8 +35,7 @@ fn lint_lines(violations: &[Violation], file: &str) -> (BTreeSet<&'static str>, 
 
 #[test]
 fn bad_fixtures_each_trip_exactly_their_lint() {
-    let files = scan::collect_dir(&fixture_dir("bad")).expect("bad fixtures present");
-    let v = lints::run(&files);
+    let v = lint_dir("bad");
 
     let (lints, lines) = lint_lines(&v, "l1_unordered_container.rs");
     assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["unordered_container"]);
@@ -44,9 +53,32 @@ fn bad_fixtures_each_trip_exactly_their_lint() {
     assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["unaudited_stats"]);
     assert_eq!(lines.into_iter().collect::<Vec<_>>(), [4]);
 
-    // Nothing beyond the four fixture files, and every violation renders
+    let (lints, lines) = lint_lines(&v, "l5_undeclared_shared_state.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["undeclared_shared_state"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [4]);
+
+    let (lints, lines) = lint_lines(&v, "l6_cross_shard_mut.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["cross_shard_mut"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [7]);
+
+    let (lints, lines) = lint_lines(&v, "l7_tie_break_sensitive.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["tie_break_sensitive"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [7, 9]);
+
+    // Lexer hardening: the violation after a nested block comment and a
+    // raw byte string fires at the right line, and nothing leaks out of
+    // the stripped regions.
+    let (lints, lines) = lint_lines(&v, "lexer_hardening.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["unordered_container"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [9]);
+
+    // The owning-side helper of the L6 pair is itself clean.
+    let (lints, _) = lint_lines(&v, "l6_owner.rs");
+    assert!(lints.is_empty(), "{v:#?}");
+
+    // Nothing beyond the fixture files, and every violation renders
     // as a clickable file:line diagnostic.
-    assert_eq!(v.len(), 12, "{v:#?}");
+    assert_eq!(v.len(), 17, "{v:#?}");
     for violation in &v {
         let s = violation.to_string();
         let expect =
@@ -57,8 +89,7 @@ fn bad_fixtures_each_trip_exactly_their_lint() {
 
 #[test]
 fn clean_fixtures_report_nothing() {
-    let files = scan::collect_dir(&fixture_dir("clean")).expect("clean fixtures present");
-    let v = lints::run(&files);
+    let v = lint_dir("clean");
     assert!(v.is_empty(), "clean fixtures must lint clean, got:\n{v:#?}");
 }
 
@@ -72,9 +103,11 @@ fn unused_and_malformed_allows_are_violations() {
     files.push(xtask::lints::SourceFile {
         path: "synthetic.rs".into(),
         class: Default::default(),
+        module: None,
         lexed: xtask::lexer::lex(src),
     });
-    let v = lints::run(&files);
+    let map = lints::load_map(&dir.join("shard_map.toml")).expect("fixture map parses");
+    let v = lints::run(&files, map.as_ref());
     let (lints, lines) = lint_lines(&v, "synthetic.rs");
     assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["bad_allow", "unused_allow"]);
     assert_eq!(lines.into_iter().collect::<Vec<_>>(), [1, 3]);
@@ -82,8 +115,29 @@ fn unused_and_malformed_allows_are_violations() {
 
 #[test]
 fn repo_is_detlint_clean() {
-    let files = scan::collect_repo(&scan::crate_root()).expect("repo readable");
+    let root = scan::crate_root();
+    let files = scan::collect_repo(&root).expect("repo readable");
     assert!(files.len() > 30, "repo walk looks truncated: {} files", files.len());
-    let v = lints::run(&files);
+    let map = lints::load_map(&scan::repo_shard_map(&root))
+        .expect("repo shard map parses")
+        .expect("xtask/shard_map.toml is checked in");
+    let v = lints::run(&files, Some(&map));
     assert!(v.is_empty(), "the repo must hold its own discipline, got:\n{v:#?}");
+}
+
+#[test]
+fn repo_graph_sees_the_declared_cross_module_handles() {
+    // The state-access graph is what L5 keys on; pin that it discovers
+    // the two real cross-module handles (faultplane/workload → Cluster,
+    // faas → Rng) so the lint can't go vacuously green.
+    let files = scan::collect_repo(&scan::crate_root()).expect("repo readable");
+    let g = xtask::graph::StateGraph::build(&files);
+    assert_eq!(g.def_site("Cluster"), Some("faas"));
+    assert_eq!(g.def_site("Rng"), Some("simcore"));
+    let holds = |m: &str, ty: &str| {
+        g.modules.get(m).is_some_and(|acc| acc.handles.iter().any(|h| h.inner == ty))
+    };
+    assert!(holds("faultplane", "Cluster"), "graph lost faultplane's Cluster handle");
+    assert!(holds("workload", "Cluster"), "graph lost workload's Cluster handle");
+    assert!(holds("faas", "Rng"), "graph lost faas's fault_rng handle");
 }
