@@ -1,0 +1,212 @@
+//! Bench E18 — `shard_scale`: the parallel shard runner (DESIGN.md §3j)
+//! on the E12 density workload, recording the host-side numbers in
+//! `BENCH_shard.json`.
+//!
+//! Full mode drives the headline point — 100k registered functions on a
+//! 16-rack cluster at 2.5M rps for 40 virtual seconds ≈ **100M+
+//! simulated invocations** — at 1, 2, 4, and 8 shards, and asserts the
+//! ISSUE 10 gate: ≥4× wall-clock speedup at 8 shards vs `--shards 1`
+//! (only when the host actually exposes ≥8 cores — on smaller runners
+//! the speedup is reported but not asserted). `BENCH_QUICK=1` runs a
+//! scaled-down sweep as the CI smoke gate.
+//!
+//! In both modes it asserts the determinism contract:
+//!
+//! * the deterministic table is byte-identical across shards ∈ {1,2,4,8};
+//! * the threaded transport matches the serial (inline) transport byte
+//!   for byte at the same shard count;
+//! * every run conserves requests and passes the per-rack + merged
+//!   audits (`shard_scale_run` panics otherwise).
+
+mod common;
+
+use std::io::Write as _;
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::hostclock::host_parallelism;
+use junctiond_repro::simcore::{MILLIS, SECONDS};
+
+const SEED: u64 = 18;
+
+struct Shape {
+    workers: usize,
+    cores: usize,
+    functions: u64,
+    hot: usize,
+    rate: f64,
+    duration: u64,
+}
+
+fn run(shape: &Shape, shards: usize, threaded: bool) -> ex::ShardScalePoint {
+    ex::shard_scale_run(
+        Backend::Junctiond,
+        shards,
+        threaded,
+        shape.workers,
+        shape.cores,
+        shape.functions,
+        shape.hot,
+        shape.rate,
+        shape.duration,
+        SEED,
+    )
+}
+
+/// The table bytes with the shard count and transport (the two
+/// legitimately varying cells) neutralized, for cross-N equality checks.
+fn normalized_table(p: &ex::ShardScalePoint) -> String {
+    let mut p = p.clone();
+    p.shards = 0;
+    p.transport = "-";
+    ex::shard_scale_table(std::slice::from_ref(&p)).to_markdown()
+}
+
+fn json_point(p: &ex::ShardScalePoint) -> String {
+    format!(
+        "{{\"backend\":\"{}\",\"shards\":{},\"transport\":\"{}\",\"workers\":{},\
+         \"functions\":{},\"hot_functions\":{},\"submitted\":{},\"completed\":{},\
+         \"dropped\":{},\"timed_out\":{},\"events_fired\":{},\"wall_secs\":{:.3},\
+         \"events_per_sec\":{:.0},\"p50_us\":{:.1},\"p99_us\":{:.1}}}",
+        p.backend.name(),
+        p.shards,
+        p.transport,
+        p.workers,
+        p.functions,
+        p.hot_functions,
+        p.submitted,
+        p.completed,
+        p.dropped,
+        p.timed_out,
+        p.events_fired,
+        p.wall_secs,
+        p.events_fired as f64 / p.wall_secs.max(1e-9),
+        p.p50 as f64 / 1_000.0,
+        p.p99 as f64 / 1_000.0,
+    )
+}
+
+fn main() {
+    let quick = common::quick();
+    let mut checks = common::Checks::new();
+    let mut points: Vec<ex::ShardScalePoint> = Vec::new();
+
+    // Quick keeps CI smoke under a minute; full is the headline regime:
+    // 2.5M rps × 40 virtual seconds ≈ 100M in-window (111M simulated
+    // with warm-up) invocations across 16 racks.
+    let shape = if quick {
+        Shape {
+            workers: 8,
+            cores: 8,
+            functions: 5_000,
+            hot: 256,
+            rate: 20_000.0,
+            duration: 500 * MILLIS,
+        }
+    } else {
+        Shape {
+            workers: 16,
+            cores: 16,
+            functions: 100_000,
+            hot: 1_024,
+            rate: 2_500_000.0,
+            duration: 40 * SECONDS,
+        }
+    };
+
+    common::section("E18 — determinism across shard counts", || {
+        let mut base: Option<String> = None;
+        for shards in [1usize, 2, 4, 8] {
+            let p = run(&shape, shards, true);
+            println!(
+                "shards={} submitted={} completed={} wall={:.1}s events={}",
+                p.shards, p.submitted, p.completed, p.wall_secs, p.events_fired
+            );
+            let table = normalized_table(&p);
+            match &base {
+                None => base = Some(table),
+                Some(b) => checks.check(
+                    &format!("table at {shards} shards identical to 1 shard"),
+                    &table == b,
+                    format!("{} bytes", table.len()),
+                ),
+            }
+            points.push(p);
+        }
+        checks.check(
+            "workload is non-trivial",
+            points[0].submitted > 1_000,
+            format!("{} submitted", points[0].submitted),
+        );
+        if !quick {
+            checks.check(
+                "headline point reaches ≥100M simulated invocations",
+                points[0].submitted >= 100_000_000,
+                format!("{} submitted", points[0].submitted),
+            );
+        }
+    });
+
+    common::section("E18 — serial transport == threaded transport", || {
+        let serial = run(&shape_small(&shape, quick), 4, false);
+        let threaded = run(&shape_small(&shape, quick), 4, true);
+        let a = normalized_table(&serial);
+        let b = normalized_table(&threaded);
+        checks.check("serial and threaded tables identical", a == b, format!("{} bytes", a.len()));
+    });
+
+    common::section("E18 — wall-clock speedup", || {
+        let wall = |shards: usize| {
+            points.iter().find(|p| p.shards == shards).map(|p| p.wall_secs).unwrap_or(f64::NAN)
+        };
+        let speedup = wall(1) / wall(8).max(1e-9);
+        let cores = host_parallelism();
+        println!(
+            "host cores={} wall(1)={:.1}s wall(8)={:.1}s speedup={:.2}x",
+            cores,
+            wall(1),
+            wall(8),
+            speedup
+        );
+        if !quick && cores >= 8 {
+            checks.check(
+                "≥4x speedup at 8 shards on ≥8 host cores",
+                speedup >= 4.0,
+                format!("{speedup:.2}x"),
+            );
+        } else {
+            println!("(speedup gate skipped: quick={quick}, host cores={cores})");
+        }
+    });
+
+    // Record the measured numbers (satellite: BENCH_shard.json). Written
+    // to the repo root when run from `rust/` (cargo bench's cwd).
+    let path = junctiond_repro::hostclock::env_var("BENCH_SHARD_JSON")
+        .unwrap_or_else(|| "../BENCH_shard.json".into());
+    let body = format!(
+        "{{\n  \"experiment\": \"E18 shard_scale\",\n  \"quick\": {},\n  \"host_cores\": {},\n  \"points\": [\n    {}\n  ]\n}}\n",
+        quick,
+        host_parallelism(),
+        points.iter().map(json_point).collect::<Vec<_>>().join(",\n    ")
+    );
+    match std::fs::File::create(&path).and_then(|mut f| f.write_all(body.as_bytes())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+
+    checks.finish();
+}
+
+/// The serial-vs-threaded leg re-runs the workload twice more, so full
+/// mode shrinks it to a slice (equality is shape-independent; no reason
+/// to pay 2×40 virtual seconds for it).
+fn shape_small(shape: &Shape, quick: bool) -> Shape {
+    Shape {
+        workers: shape.workers,
+        cores: shape.cores,
+        functions: shape.functions.min(5_000),
+        hot: shape.hot.min(256),
+        rate: if quick { shape.rate } else { 50_000.0 },
+        duration: 500 * MILLIS,
+    }
+}

@@ -72,6 +72,12 @@ pub struct PlatformConfig {
     // ---- wire / physical ----
     /// One-way wire + NIC DMA latency between the two machines (100 GbE).
     pub wire_ns: Time,
+    /// One-way wire latency between *sharded-cluster* endpoints (gateway
+    /// rack ↔ worker racks over the aggregation fabric). This is also the
+    /// parallel shard runner's conservative lookahead window — epochs are
+    /// this long — so it trades fidelity (a datacenter RTT, not a ToR
+    /// hop) against synchronization overhead; see DESIGN.md §3j.
+    pub shard_wire_ns: Time,
 
     // ---- per-worker NIC / network data path (netpath) ----
     /// RX descriptor ring depth (packets) of a worker NIC queue. Arrivals
@@ -250,6 +256,7 @@ impl Default for PlatformConfig {
             junctiond_state_query_ns: 40 * MICROS,
 
             wire_ns: 2 * MICROS,
+            shard_wire_ns: 20 * MICROS, // cross-rack aggregation hop
 
             nic_queue_depth: 256,
             nic_batch_max: 32,
@@ -345,6 +352,7 @@ impl PlatformConfig {
             provider_state_query_ns,
             junctiond_state_query_ns,
             wire_ns,
+            shard_wire_ns,
             nic_queue_depth,
             nic_batch_max,
             nic_copy_ns_per_kb,
@@ -458,6 +466,10 @@ impl PlatformConfig {
             "fault_brownout_watermark_bp is in 1/10000"
         );
         anyhow::ensure!(self.nic_retry_jitter <= 1, "nic_retry_jitter is a 0/1 flag");
+        anyhow::ensure!(
+            self.shard_wire_ns >= self.wire_ns,
+            "the cross-rack shard wire cannot undercut the in-rack wire"
+        );
         Ok(())
     }
 }

@@ -11,7 +11,9 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::config::{Backend, ExperimentConfig, PlatformConfig};
-use crate::faas::{Cluster, FaasSim, FunctionSpec, RuntimeKind, ScaleMode};
+use crate::faas::{
+    run_shard_cluster, Cluster, FaasSim, FunctionSpec, RuntimeKind, ScaleMode, ShardClusterCfg,
+};
 use crate::hostclock::Stopwatch;
 use crate::invariants::{audit_all, Audit, Violation};
 use crate::junction::Scheduler;
@@ -898,6 +900,183 @@ pub fn density_scale_table(points: &[DensityPoint]) -> Table {
         ]);
     }
     t
+}
+
+// ---------------------------------------------------------------------------
+// E18 — shard scale: the parallel engine shards (simcore::shard, §3j)
+// driving the E12 density workload across OS threads
+// ---------------------------------------------------------------------------
+
+/// One measured point of the shard sweep. Every field except `wall_secs`
+/// and `shard_stats` is deterministic — byte-identical across repeated
+/// same-seed runs, across shard counts, and across the serial/threaded
+/// transports — so the rendered table can be `cmp`-diffed in CI while
+/// the host-side telemetry rides separately (stderr / BENCH_shard.json).
+#[derive(Clone)]
+pub struct ShardScalePoint {
+    pub backend: Backend,
+    pub shards: usize,
+    /// `"threaded"` (one OS thread per shard) or `"serial"` (the same
+    /// barrier-epoch protocol run inline — the equality baseline).
+    pub transport: &'static str,
+    pub workers: usize,
+    pub functions: u64,
+    pub hot_functions: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub timed_out: u64,
+    pub completed_in_window: u64,
+    /// Engine events fired, summed across shards — invariant under the
+    /// shard count (the model schedules the same events wherever its
+    /// endpoints happen to live).
+    pub events_fired: u64,
+    /// Gateway-observed e2e latency (two cross-rack wire hops + the
+    /// in-rack pipeline), measurement-window arrivals only.
+    pub p50: u64,
+    pub p99: u64,
+    pub exec_p99: u64,
+    /// Host wall clock for the whole run — telemetry, never tabled.
+    pub wall_secs: f64,
+    /// Per-shard runner counters (epochs, skips, wire messages, wall).
+    pub shard_stats: Vec<crate::simcore::ShardStats>,
+}
+
+/// Run one point of E18: the E12 density shape (Zipf head + idle tail,
+/// open-loop arrivals) rebuilt as a message-passing cluster on `shards`
+/// engine shards. Panics on any conservation/audit violation — on the
+/// sharded path a broken law is a broken run, not a footnote.
+#[allow(clippy::too_many_arguments)]
+pub fn shard_scale_run(
+    backend: Backend,
+    shards: usize,
+    threaded: bool,
+    n_workers: usize,
+    worker_cores: usize,
+    n_functions: u64,
+    hot_functions: usize,
+    rate_rps: f64,
+    duration: Time,
+    seed: u64,
+) -> ShardScalePoint {
+    let sw = Stopwatch::new();
+    let out = run_shard_cluster(&ShardClusterCfg {
+        backend,
+        shards,
+        threaded,
+        workers: n_workers,
+        worker_cores,
+        functions: n_functions,
+        hot_functions,
+        rate_rps,
+        duration,
+        seed,
+    });
+    let wall_secs = sw.elapsed_secs();
+    assert!(
+        out.audit_violations.is_empty(),
+        "E18 shard run broke invariants: {:?}",
+        out.audit_violations
+    );
+    let mut g = out.gateway;
+    ShardScalePoint {
+        backend,
+        shards,
+        transport: if threaded { "threaded" } else { "serial" },
+        workers: n_workers,
+        functions: n_functions,
+        hot_functions,
+        submitted: g.submitted,
+        completed: g.completed,
+        dropped: g.dropped,
+        timed_out: g.timed_out,
+        completed_in_window: g.completed_in_window,
+        events_fired: out.events_fired,
+        p50: g.e2e.quantile(0.5),
+        p99: g.e2e.quantile(0.99),
+        exec_p99: g.exec.quantile(0.99),
+        wall_secs,
+        shard_stats: out.shard_stats,
+    }
+}
+
+/// Markdown table for a set of shard points — deterministic columns
+/// only, so `shardscale` stdout can be byte-diffed across runs and
+/// shard counts. Wall-clock/speedup live in [`shard_scale_host_summary`].
+pub fn shard_scale_table(points: &[ShardScalePoint]) -> Table {
+    let mut t = Table::new(
+        "E18 — shard scale: parallel engine shards on the density workload",
+        &[
+            "backend",
+            "shards",
+            "transport",
+            "workers",
+            "functions",
+            "hot",
+            "submitted",
+            "completed",
+            "dropped",
+            "timed out",
+            "in window",
+            "events",
+            "p50 (µs)",
+            "p99 (µs)",
+            "exec p99 (µs)",
+        ],
+    );
+    for p in points {
+        t.push_row(vec![
+            p.backend.name().into(),
+            Cell::Int(p.shards as i64),
+            p.transport.into(),
+            Cell::Int(p.workers as i64),
+            Cell::Int(p.functions as i64),
+            Cell::Int(p.hot_functions as i64),
+            Cell::Int(p.submitted as i64),
+            Cell::Int(p.completed as i64),
+            Cell::Int(p.dropped as i64),
+            Cell::Int(p.timed_out as i64),
+            Cell::Int(p.completed_in_window as i64),
+            Cell::Int(p.events_fired as i64),
+            Cell::NsAsUs(p.p50),
+            Cell::NsAsUs(p.p99),
+            Cell::NsAsUs(p.exec_p99),
+        ]);
+    }
+    t
+}
+
+/// The host-side leg of E18, kept off stdout so the deterministic table
+/// stays byte-diffable: wall clock, events/sec, and per-shard runner
+/// counters for each point, plus the speedup of every point against the
+/// slowest single-shard point in the set (when one is present).
+pub fn shard_scale_host_summary(points: &[ShardScalePoint]) -> String {
+    use std::fmt::Write as _;
+    let base = points
+        .iter()
+        .filter(|p| p.shards == 1)
+        .map(|p| p.wall_secs)
+        .fold(f64::NAN, f64::max);
+    let mut s = String::from("# host telemetry (nondeterministic; not part of the table)\n");
+    for p in points {
+        let eps = p.events_fired as f64 / p.wall_secs.max(1e-9);
+        let _ = write!(
+            s,
+            "shards={} transport={} wall={:.3}s events/s={:.0}",
+            p.shards,
+            p.transport,
+            p.wall_secs,
+            eps
+        );
+        if base.is_finite() && p.shards > 1 {
+            write!(s, " speedup_vs_1={:.2}x", base / p.wall_secs.max(1e-9)).unwrap();
+        }
+        let epochs: u64 = p.shard_stats.iter().map(|st| st.epochs).sum();
+        let skipped: u64 = p.shard_stats.iter().map(|st| st.skipped_epochs).sum();
+        let wire: u64 = p.shard_stats.iter().map(|st| st.msgs_out).sum();
+        writeln!(s, " epochs={epochs} skipped={skipped} wire_msgs={wire}").unwrap();
+    }
+    s
 }
 
 // ---------------------------------------------------------------------------
@@ -2184,5 +2363,36 @@ mod tests {
         let (a, _) = resilience_table(40 * MILLIS, 11);
         let (b, _) = resilience_table(40 * MILLIS, 11);
         assert_eq!(a.to_markdown(), b.to_markdown(), "same-seed E16 tables diverged");
+    }
+
+    fn e18_quick(shards: usize, threaded: bool) -> ShardScalePoint {
+        shard_scale_run(
+            Backend::Junctiond,
+            shards,
+            threaded,
+            4,
+            8,
+            256,
+            32,
+            4_000.0,
+            50 * MILLIS,
+            13,
+        )
+    }
+
+    #[test]
+    fn e18_table_is_shard_count_invariant() {
+        // Neutralize the one cell that legitimately differs (the shard
+        // count itself); every other rendered byte must match.
+        let mut a = e18_quick(1, false);
+        let mut b = e18_quick(2, false);
+        a.shards = 0;
+        b.shards = 0;
+        assert_eq!(
+            shard_scale_table(std::slice::from_ref(&a)).to_markdown(),
+            shard_scale_table(std::slice::from_ref(&b)).to_markdown(),
+            "sharding changed the model's results"
+        );
+        assert!(a.submitted > 50 && a.completed > 0, "workload too small to mean anything");
     }
 }

@@ -13,6 +13,9 @@
 //! * [`pipeline`] — the discrete-event invocation pipeline for both
 //!   backends (the simulation counterpart of `server/` which runs the
 //!   same topology on real sockets).
+//! * [`shardcluster`] — the message-passing cluster model that runs the
+//!   gateway and worker racks as endpoints on the parallel shard runner
+//!   (`simcore::shard`, DESIGN.md §3j).
 
 pub mod cluster;
 mod gate;
@@ -20,6 +23,7 @@ mod gateway;
 pub mod pipeline;
 mod provider;
 mod registry;
+pub mod shardcluster;
 
 pub use cluster::{Cluster, Placement, RecoveryStats, ScalePolicy, Worker, WorkerHealth};
 pub use gate::Gate;
@@ -27,3 +31,7 @@ pub use gateway::Gateway;
 pub use pipeline::{CostTelemetry, FaasSim, RequestTiming};
 pub use provider::{CacheOutcome, Provider, ReplicaMeta};
 pub use registry::{FunctionSpec, Registry, RuntimeKind, ScaleMode};
+pub use shardcluster::{
+    run_shard_cluster, ClusterMsg, GatewayTotals, ShardClusterCfg, ShardClusterOut, ShardHost,
+    WorkerTotals,
+};

@@ -1,0 +1,584 @@
+//! Sharded cluster: the message-passing twin of [`super::Cluster`] that
+//! runs on the parallel shard runner (`simcore::shard`, DESIGN.md §3j).
+//!
+//! Topology: one **gateway** endpoint plus one endpoint per **worker
+//! rack**, each rack hosting a full [`FaasSim`] pipeline (NIC rings,
+//! scheduler, compute fabric, pools) *and* the rack-local slice of the
+//! open-loop client population. Everything between endpoints travels as
+//! timestamped [`WireMsg`]s over the shard runner's wire seam — there is
+//! no shared mutable state across endpoints, which is exactly what makes
+//! the results invariant under the shard count:
+//!
+//! * arrivals are per-rack Poisson substreams split from the root seed by
+//!   **worker id** (never shard id),
+//! * the worker count is a model constant independent of `--shards N`,
+//! * every handler touches only its destination endpoint's state, and
+//! * per-source wire seqs make the merge order packing-independent.
+//!
+//! Flow per invocation: rack client stages `Submit` → gateway routes
+//! least-in-flight (ties to the lowest worker id) and stages `Invoke` →
+//! the rack's `FaasSim` runs the full invocation pipeline → the done
+//! callback stages `Response` → the gateway settles the in-flight gauge
+//! and records the end-to-end latency. The gateway-observed e2e therefore
+//! pays two cross-rack wire hops on top of the in-rack pipeline.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::config::{Backend, ExperimentConfig, PlatformConfig};
+use crate::invariants::audit_all;
+use crate::simcore::{
+    run_sharded, EndpointId, NetHandle, Rng, ShardNet, ShardPlan, ShardRun, ShardStats,
+    ShardWorld, Sim, Time, WireMsg, SECONDS,
+};
+use crate::telemetry::Samples;
+use crate::workload::population;
+
+use super::pipeline::{FaasSim, RequestTiming};
+use super::registry::{FunctionSpec, RuntimeKind};
+
+/// The gateway's fixed endpoint id; workers are `1 + worker_id`.
+const GATEWAY: EndpointId = 0;
+
+/// Clients start after the deploy-time cold-start storm has settled
+/// (mirrors E12's warm-up `run_until` before the open loop).
+const CLIENT_START: Time = SECONDS;
+
+/// Every payload crossing a shard boundary in the sharded cluster. Plain
+/// `Copy` data — handles never ride the wire.
+#[derive(Debug, Clone, Copy)]
+pub enum ClusterMsg {
+    /// Rack client → gateway: one open-loop arrival.
+    Submit { function: u32, submitted_at: Time },
+    /// Gateway → worker rack: routed invocation.
+    Invoke { function: u32, submitted_at: Time },
+    /// Worker rack → gateway: the pipeline's resolution (completed,
+    /// dropped, or timed out — exactly one per `Invoke`).
+    Response { timing: RequestTiming, submitted_at: Time },
+}
+
+/// Shape of one sharded-cluster run.
+#[derive(Debug, Clone)]
+pub struct ShardClusterCfg {
+    pub backend: Backend,
+    /// Engine shards. `1` hosts every endpoint on one shard — through the
+    /// identical message path — and is the serial-equality baseline.
+    pub shards: usize,
+    /// One OS thread per shard, or the single-threaded transport (same
+    /// protocol, byte-identical output).
+    pub threaded: bool,
+    /// Worker racks — a model constant, deliberately independent of
+    /// `shards` so results stay comparable across shard counts.
+    pub workers: usize,
+    pub worker_cores: usize,
+    /// Registered population (hot Zipf head + idle tail).
+    pub functions: u64,
+    pub hot_functions: usize,
+    /// Aggregate open-loop arrival rate, split evenly across racks.
+    pub rate_rps: f64,
+    /// Measurement window; warm-up is an extra `duration / 10` up front.
+    pub duration: Time,
+    pub seed: u64,
+}
+
+impl ShardClusterCfg {
+    /// Endpoint placement: everything on shard 0 when `shards == 1`;
+    /// otherwise the gateway gets shard 0 to itself and racks round-robin
+    /// over the rest.
+    fn endpoint_shard(&self) -> Vec<usize> {
+        let n = self.shards.max(1);
+        (0..=self.workers)
+            .map(|e| if n == 1 || e == 0 { 0 } else { 1 + (e - 1) % (n - 1) })
+            .collect()
+    }
+}
+
+/// Merged deterministic output of [`run_shard_cluster`], plus host-side
+/// shard telemetry (never printed into byte-diffed tables).
+pub struct ShardClusterOut {
+    pub gateway: GatewayTotals,
+    /// Per-worker pipeline totals, sorted by worker id.
+    pub workers: Vec<WorkerTotals>,
+    /// Per-shard runner telemetry (epochs, messages, wall clock).
+    pub shard_stats: Vec<ShardStats>,
+    /// Engine events fired, summed over shards.
+    pub events_fired: u64,
+    /// Per-worker `audit_all` findings plus merged cross-shard
+    /// conservation checks; empty means every law held.
+    pub audit_violations: Vec<String>,
+}
+
+/// Gateway-side counters and latency samples.
+#[derive(Debug, Clone, Default)]
+pub struct GatewayTotals {
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub timed_out: u64,
+    pub failed: u64,
+    pub completed_in_window: u64,
+    /// Gateway-observed end-to-end latency (client stage → response back
+    /// at the gateway), post-warm-up arrivals only.
+    pub e2e: Samples,
+    /// Function execution window, post-warm-up arrivals only.
+    pub exec: Samples,
+}
+
+/// One worker rack's pipeline totals, with its conservation audit.
+#[derive(Debug, Clone)]
+pub struct WorkerTotals {
+    pub worker: usize,
+    pub completed: u64,
+    pub dropped: u64,
+    pub audit_violations: Vec<String>,
+}
+
+/// Gateway state: the in-flight gauge routing reads and the result
+/// ledger. Lives entirely on the gateway's shard.
+struct GatewayCore {
+    in_flight: Vec<u32>,
+    submitted: u64,
+    completed: u64,
+    dropped: u64,
+    timed_out: u64,
+    failed: u64,
+    completed_in_window: u64,
+    e2e: Samples,
+    exec: Samples,
+    measure_from: Time,
+    measure_until: Time,
+}
+
+impl GatewayCore {
+    fn new(workers: usize, measure_from: Time, measure_until: Time) -> Self {
+        GatewayCore {
+            in_flight: vec![0; workers],
+            submitted: 0,
+            completed: 0,
+            dropped: 0,
+            timed_out: 0,
+            failed: 0,
+            completed_in_window: 0,
+            e2e: Samples::new(),
+            exec: Samples::new(),
+            measure_from,
+            measure_until,
+        }
+    }
+}
+
+/// One rack hosted on this shard: its endpoint and its full pipeline.
+struct WorkerNode {
+    endpoint: EndpointId,
+    faas: FaasSim,
+}
+
+/// Everything one shard hosts: at most the gateway, plus the racks the
+/// plan assigned here. Built on the shard's own thread.
+pub struct ShardHost {
+    net: Rc<RefCell<ShardNet<ClusterMsg>>>,
+    gateway: Option<Rc<RefCell<GatewayCore>>>,
+    workers: Vec<WorkerNode>,
+    names: Rc<Vec<String>>,
+}
+
+/// What one shard reports back (crosses the thread boundary: plain data).
+pub struct HostReport {
+    gateway: Option<(GatewayTotals, Vec<String>)>,
+    workers: Vec<WorkerTotals>,
+}
+
+fn gateway_on_submit(
+    core: &Rc<RefCell<GatewayCore>>,
+    net: &Rc<RefCell<ShardNet<ClusterMsg>>>,
+    sim: &mut Sim,
+    function: u32,
+    submitted_at: Time,
+) {
+    let worker = {
+        let mut g = core.borrow_mut();
+        g.submitted += 1;
+        // Least in-flight, ties to the lowest worker id: deterministic
+        // and shard-count-independent (the gauge is gateway-local state).
+        let mut best = 0usize;
+        for (w, &n) in g.in_flight.iter().enumerate() {
+            if n < g.in_flight[best] {
+                best = w;
+            }
+        }
+        g.in_flight[best] += 1;
+        best
+    };
+    let dst = 1 + worker as EndpointId;
+    net.borrow_mut().send(sim.now(), GATEWAY, dst, ClusterMsg::Invoke { function, submitted_at });
+}
+
+fn gateway_on_response(
+    core: &Rc<RefCell<GatewayCore>>,
+    sim: &mut Sim,
+    worker: usize,
+    timing: RequestTiming,
+    submitted_at: Time,
+) {
+    let mut g = core.borrow_mut();
+    debug_assert!(g.in_flight[worker] > 0, "response from a worker with nothing in flight");
+    g.in_flight[worker] -= 1;
+    let now = sim.now();
+    if timing.timed_out {
+        g.timed_out += 1;
+    } else if timing.dropped {
+        g.dropped += 1;
+        if timing.failed {
+            g.failed += 1;
+        }
+    } else {
+        g.completed += 1;
+        if submitted_at >= g.measure_from {
+            if submitted_at < g.measure_until && now <= g.measure_until {
+                g.completed_in_window += 1;
+            }
+            g.e2e.record(now - submitted_at);
+            g.exec.record(timing.exec_end - timing.exec_start);
+        }
+    }
+}
+
+/// One rack's open-loop client: a Poisson substream seeded by worker id,
+/// picking from the shared Zipf CDF, staging `Submit`s to the gateway.
+struct RackClient {
+    rng: Rng,
+    t: f64,
+    gap_ns: f64,
+    until: Time,
+    me: EndpointId,
+    cdf: Rc<Vec<f64>>,
+    net: NetHandle<ClusterMsg>,
+}
+
+fn arm_client(mut c: RackClient, sim: &mut Sim) {
+    c.t += c.rng.exp(c.gap_ns);
+    let at = c.t as Time;
+    if at >= c.until {
+        return;
+    }
+    let x = c.rng.next_f64();
+    let function = c.cdf.partition_point(|&cum| cum < x).min(c.cdf.len() - 1) as u32;
+    sim.at(at, move |sim| {
+        c.net.borrow_mut().send(
+            sim.now(),
+            c.me,
+            GATEWAY,
+            ClusterMsg::Submit { function, submitted_at: sim.now() },
+        );
+        arm_client(c, sim);
+    });
+}
+
+/// The shared hot population: names plus the arrival-pick CDF. Pure
+/// function of `(hot_functions, seed)`, so every shard derives the
+/// identical table locally — nothing to ship across threads.
+fn hot_population(cfg: &ShardClusterCfg) -> (Vec<String>, Vec<f64>) {
+    let mut rng = Rng::new(cfg.seed ^ 0xD57);
+    let pop = population(cfg.hot_functions, &mut rng);
+    let names = pop.iter().map(|(n, _)| n.clone()).collect();
+    let mut acc = 0.0;
+    let cdf = pop
+        .iter()
+        .map(|(_, w)| {
+            acc += w;
+            acc
+        })
+        .collect();
+    (names, cdf)
+}
+
+fn build_host(
+    shard: usize,
+    cfg: &ShardClusterCfg,
+    endpoint_shard: &[usize],
+    platform: &PlatformConfig,
+    sim: &mut Sim,
+    net: NetHandle<ClusterMsg>,
+) -> ShardHost {
+    let (names, cdf) = hot_population(cfg);
+    let names = Rc::new(names);
+    let cdf = Rc::new(cdf);
+    let warmup = cfg.duration / 10;
+    let measure_from = CLIENT_START + warmup;
+    let measure_until = measure_from + cfg.duration;
+    let mut host = ShardHost {
+        net: net.clone(),
+        gateway: None,
+        workers: Vec::new(),
+        names: names.clone(),
+    };
+    if endpoint_shard[GATEWAY as usize] == shard {
+        host.gateway =
+            Some(Rc::new(RefCell::new(GatewayCore::new(cfg.workers, measure_from, measure_until))));
+    }
+    for w in 0..cfg.workers {
+        let endpoint = 1 + w as EndpointId;
+        if endpoint_shard[endpoint as usize] != shard {
+            continue;
+        }
+        let ecfg = ExperimentConfig {
+            backend: cfg.backend,
+            provider_cache: true,
+            worker_cores: cfg.worker_cores,
+            // The same per-worker seed split the serial Cluster uses.
+            seed: cfg.seed.wrapping_add(w as u64 * 7919),
+            function_compute_ns: platform.function_compute_ns,
+            instance_concurrency: 4,
+        };
+        let faas = FaasSim::new(&ecfg, Rc::new(platform.clone()));
+        // The Zipf head is pre-deployed on every rack (E12's pre-scale:
+        // the experiment measures the engine, not autoscaler lag)...
+        for name in names.iter() {
+            faas.deploy(sim, FunctionSpec::new(name, "aes600", RuntimeKind::Go));
+        }
+        // ...and the idle tail is striped across racks: registered,
+        // deployed once, never invoked.
+        let mut i = cfg.hot_functions as u64 + w as u64;
+        while i < cfg.functions {
+            let cold = format!("cold-{i:07}");
+            faas.deploy(sim, FunctionSpec::new(&cold, "aes600", RuntimeKind::Python));
+            i += cfg.workers as u64;
+        }
+        // This rack's slice of the open-loop arrival stream, seeded by
+        // worker id so the stream set is invariant under resharding.
+        let client = RackClient {
+            rng: Rng::new(cfg.seed ^ 0xC11E47 ^ (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            t: CLIENT_START as f64,
+            gap_ns: 1e9 * cfg.workers as f64 / cfg.rate_rps,
+            until: measure_until,
+            me: endpoint,
+            cdf: cdf.clone(),
+            net: net.clone(),
+        };
+        arm_client(client, sim);
+        host.workers.push(WorkerNode { endpoint, faas });
+    }
+    host
+}
+
+impl ShardHost {
+    fn worker(&self, endpoint: EndpointId) -> &WorkerNode {
+        self.workers
+            .iter()
+            .find(|w| w.endpoint == endpoint)
+            .expect("message routed to a shard not hosting its endpoint")
+    }
+}
+
+impl ShardWorld<ClusterMsg> for ShardHost {
+    type Report = HostReport;
+
+    fn inject(&mut self, sim: &mut Sim, m: WireMsg<ClusterMsg>) {
+        match m.payload {
+            ClusterMsg::Submit { function, submitted_at } => {
+                let core = self.gateway.clone().expect("Submit routed off the gateway shard");
+                let net = self.net.clone();
+                sim.at(m.deliver_at, move |sim| {
+                    gateway_on_submit(&core, &net, sim, function, submitted_at);
+                });
+            }
+            ClusterMsg::Invoke { function, submitted_at } => {
+                let node = self.worker(m.dst);
+                let faas = node.faas.clone();
+                let net = self.net.clone();
+                let name = self.names[function as usize].clone();
+                let me = m.dst;
+                sim.at(m.deliver_at, move |sim| {
+                    faas.submit(sim, &name, move |sim: &mut Sim, timing: RequestTiming| {
+                        let msg = ClusterMsg::Response { timing, submitted_at };
+                        net.borrow_mut().send(sim.now(), me, GATEWAY, msg);
+                    });
+                });
+            }
+            ClusterMsg::Response { timing, submitted_at } => {
+                let core = self.gateway.clone().expect("Response routed off the gateway shard");
+                let worker = (m.src - 1) as usize;
+                sim.at(m.deliver_at, move |sim| {
+                    gateway_on_response(&core, sim, worker, timing, submitted_at);
+                });
+            }
+        }
+    }
+
+    fn finish(self, _sim: &mut Sim) -> HostReport {
+        let gateway = self.gateway.map(|core| {
+            let g = core.borrow();
+            let mut violations = Vec::new();
+            for (w, &n) in g.in_flight.iter().enumerate() {
+                if n != 0 {
+                    violations.push(format!(
+                        "[faas/shardcluster] in-flight-drained: worker {w} still holds {n}"
+                    ));
+                }
+            }
+            if g.submitted != g.completed + g.dropped + g.timed_out {
+                violations.push(format!(
+                    "[faas/shardcluster] request-conservation: submitted {} != completed {} + \
+                     dropped {} + timed_out {}",
+                    g.submitted, g.completed, g.dropped, g.timed_out
+                ));
+            }
+            let totals = GatewayTotals {
+                submitted: g.submitted,
+                completed: g.completed,
+                dropped: g.dropped,
+                timed_out: g.timed_out,
+                failed: g.failed,
+                completed_in_window: g.completed_in_window,
+                e2e: g.e2e.clone(),
+                exec: g.exec.clone(),
+            };
+            (totals, violations)
+        });
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| WorkerTotals {
+                worker: (w.endpoint - 1) as usize,
+                completed: w.faas.completed(),
+                dropped: w.faas.dropped(),
+                audit_violations: audit_all(&w.faas).iter().map(|v| v.to_string()).collect(),
+            })
+            .collect();
+        HostReport { gateway, workers }
+    }
+}
+
+/// Run one sharded-cluster workload under the conservative shard runner
+/// and merge the per-shard reports. Deterministic fields of the result
+/// are byte-identical across `shards` ∈ {1, 2, 4, 8}, across repeated
+/// same-seed runs, and across the serial/threaded transports.
+pub fn run_shard_cluster(cfg: &ShardClusterCfg) -> ShardClusterOut {
+    assert!(cfg.workers > 0 && cfg.hot_functions > 0, "need at least one worker and function");
+    assert!(cfg.hot_functions as u64 <= cfg.functions, "hot set larger than the population");
+    let platform = PlatformConfig::default();
+    let endpoint_shard = cfg.endpoint_shard();
+    let plan = ShardPlan {
+        shards: cfg.shards.max(1),
+        endpoint_shard: endpoint_shard.clone(),
+        wire_ns: platform.shard_wire_ns,
+    };
+    type HostBuilder = Box<dyn FnOnce(&mut Sim, NetHandle<ClusterMsg>) -> ShardHost + Send>;
+    let builders: Vec<HostBuilder> = (0..plan.shards)
+        .map(|s| {
+            let cfg = cfg.clone();
+            let map = endpoint_shard.clone();
+            let platform = platform.clone();
+            Box::new(move |sim: &mut Sim, net: NetHandle<ClusterMsg>| {
+                build_host(s, &cfg, &map, &platform, sim, net)
+            }) as HostBuilder
+        })
+        .collect();
+    let run: ShardRun<HostReport> = run_sharded(&plan, builders, cfg.threaded);
+    let events_fired = run.stats.iter().map(|s| s.events_fired).sum();
+    let mut gateway = None;
+    let mut workers: Vec<WorkerTotals> = Vec::new();
+    let mut audit_violations = Vec::new();
+    for report in run.reports {
+        if let Some((totals, mut viol)) = report.gateway {
+            gateway = Some(totals);
+            audit_violations.append(&mut viol);
+        }
+        workers.extend(report.workers);
+    }
+    workers.sort_by_key(|w| w.worker);
+    let gateway = gateway.expect("the plan always places the gateway");
+    for w in &workers {
+        audit_violations.extend(w.audit_violations.iter().cloned());
+    }
+    // Merged cross-shard conservation: what the racks resolved must be
+    // exactly what the gateway settled.
+    let rack_completed: u64 = workers.iter().map(|w| w.completed).sum();
+    if rack_completed != gateway.completed {
+        audit_violations.push(format!(
+            "[faas/shardcluster] merged-conservation: racks completed {} but the gateway \
+             settled {}",
+            rack_completed, gateway.completed
+        ));
+    }
+    for s in &run.stats {
+        if s.past_schedules != 0 {
+            audit_violations.push(format!(
+                "[simcore/shard] lookahead: shard {} clamped {} past schedules",
+                s.shard, s.past_schedules
+            ));
+        }
+    }
+    ShardClusterOut {
+        gateway,
+        workers,
+        shard_stats: run.stats,
+        events_fired,
+        audit_violations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcore::MILLIS;
+
+    fn tiny(shards: usize, threaded: bool) -> ShardClusterOut {
+        run_shard_cluster(&ShardClusterCfg {
+            backend: Backend::Junctiond,
+            shards,
+            threaded,
+            workers: 4,
+            worker_cores: 8,
+            functions: 64,
+            hot_functions: 16,
+            rate_rps: 4_000.0,
+            duration: 50 * MILLIS,
+            seed: 11,
+        })
+    }
+
+    fn fingerprint(out: &mut ShardClusterOut) -> Vec<u64> {
+        let g = &mut out.gateway;
+        let mut v = vec![
+            g.submitted,
+            g.completed,
+            g.dropped,
+            g.timed_out,
+            g.completed_in_window,
+            g.e2e.quantile(0.5),
+            g.e2e.quantile(0.99),
+            g.exec.quantile(0.99),
+        ];
+        v.extend(out.workers.iter().map(|w| w.completed));
+        v
+    }
+
+    #[test]
+    fn audits_are_clean_and_requests_conserved() {
+        let out = tiny(2, false);
+        assert!(out.audit_violations.is_empty(), "violations: {:?}", out.audit_violations);
+        assert!(out.gateway.submitted > 50, "workload too small to mean anything");
+        assert_eq!(
+            out.gateway.submitted,
+            out.gateway.completed + out.gateway.dropped + out.gateway.timed_out
+        );
+    }
+
+    #[test]
+    fn output_is_invariant_across_shard_counts() {
+        let mut base = tiny(1, false);
+        let want = fingerprint(&mut base);
+        for shards in [2, 3, 4] {
+            let mut out = tiny(shards, false);
+            assert_eq!(fingerprint(&mut out), want, "diverged at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn threaded_transport_matches_serial() {
+        let mut serial = tiny(4, false);
+        let mut threaded = tiny(4, true);
+        assert_eq!(fingerprint(&mut serial), fingerprint(&mut threaded));
+    }
+}

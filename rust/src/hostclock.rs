@@ -1,7 +1,8 @@
 //! The one sanctioned seam between the deterministic simulation and the
 //! host: wall-clock stopwatches (bench reporting, serve-mode latency
-//! printouts, executor calibration) and environment reads (artifact
-//! paths, BENCH_QUICK toggles).
+//! printouts, executor calibration), environment reads (artifact paths,
+//! BENCH_QUICK toggles), and the CPU-parallelism probe the shard runner
+//! benches size themselves with.
 //!
 //! Everything in this file is *observably nondeterministic* — that is
 //! the point of quarantining it. detlint's `wall_clock` lint (L2)
@@ -20,10 +21,22 @@
 use std::time::Instant;
 
 /// A host-monotonic stopwatch for wall-clock reporting.
+///
+/// `Send + Sync` by construction (`Instant` is plain data), so the shard
+/// runner can carry per-shard stopwatches across its worker threads
+/// without any sim module touching `Instant` directly — the static
+/// assertion below pins the guarantee.
 #[derive(Debug, Clone, Copy)]
 pub struct Stopwatch {
     t0: Instant,
 }
+
+/// Compile-time proof that per-shard wall-clock accounting can cross
+/// thread boundaries through this seam alone.
+const _: fn() = || {
+    fn requires_send_sync<T: Send + Sync>() {}
+    requires_send_sync::<Stopwatch>();
+};
 
 impl Stopwatch {
     /// Start timing now (host time).
@@ -50,6 +63,14 @@ pub fn env_var(key: &str) -> Option<String> {
     std::env::var(key).ok()
 }
 
+/// Host CPU parallelism (for sizing shard fleets and gating wall-clock
+/// speedup assertions in benches); `1` when the host won't say. Like the
+/// stopwatch, the value must only pick *how much hardware* a run uses —
+/// never event order, seeds, or any deterministic output.
+pub fn host_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,5 +87,10 @@ mod tests {
     #[test]
     fn env_var_reads_are_optional() {
         assert!(env_var("JUNCTIOND_DETLINT_NO_SUCH_VAR").is_none());
+    }
+
+    #[test]
+    fn host_parallelism_is_at_least_one() {
+        assert!(host_parallelism() >= 1);
     }
 }

@@ -7,6 +7,8 @@
 //! junctiond-repro ablation  --which cache|polling|scaleup|...|blame [--trace-out FILE]
 //! junctiond-repro density   [--workers N] [--worker-cores N] [--functions N]
 //!                           [--hot N] [--rate RPS] [--duration-ms MS] [--seed S]
+//! junctiond-repro shardscale [--shards N] [--serial] [--workers N] [--worker-cores N]
+//!                           [--functions N] [--hot N] [--rate RPS] [--duration-ms MS] [--seed S]
 //! junctiond-repro serve     --mode kernel|bypass [--requests N]
 //! junctiond-repro calibrate [--runs N]
 //! junctiond-repro selfcheck [--duration-ms MS] [--seed S]
@@ -28,7 +30,7 @@ use junctiond_repro::simcore::{MICROS, MILLIS};
 use junctiond_repro::telemetry::write_csv;
 
 /// Flags that take no value (presence is the value).
-const BOOL_FLAGS: [&str; 1] = ["quick"];
+const BOOL_FLAGS: [&str; 2] = ["quick", "serial"];
 
 fn parse_flags(args: &[String]) -> Result<BTreeMap<String, String>> {
     let mut flags = BTreeMap::new();
@@ -74,13 +76,14 @@ fn maybe_csv(
 fn usage() -> ! {
     eprintln!(
         "usage: junctiond-repro \
-         <fig5|fig6|coldstart|ablation|density|serve|calibrate|selfcheck|schedcheck|monitor> \
-         [flags]\n\
+         <fig5|fig6|coldstart|ablation|density|shardscale|serve|calibrate|selfcheck|schedcheck|\
+         monitor> [flags]\n\
          flags: --invocations N --trials N --duration-ms MS --seed S --csv DIR --quick\n\
          --which cache|polling|scaleup|isolation|autoscale|multitenant|tiers|netpath|duplex|\
          interference|blame|faults\n\
          --mode kernel|bypass --requests N --runs N --workers N --worker-cores N\n\
-         --functions N --hot N --rate RPS --payload BYTES --trace-out FILE"
+         --functions N --hot N --rate RPS --payload BYTES --trace-out FILE\n\
+         --shards N --serial (shardscale: engine shards / single-threaded transport)"
     );
     std::process::exit(2);
 }
@@ -341,6 +344,38 @@ fn main() -> Result<()> {
                 p.engine, p.events_fired, p.wall_secs, p.events_per_sec
             );
             maybe_csv(&flags, &table, "density")?;
+        }
+        "shardscale" => {
+            // E18: the density workload on the parallel shard runner
+            // (§3j). Stdout carries ONLY the deterministic table — CI
+            // byte-diffs it across repeated runs, shard counts, and the
+            // serial/threaded transports — so the host-side telemetry
+            // (wall clock, speedup, epoch counters) goes to stderr.
+            let shards = get_u64(&flags, "shards", 4)? as usize;
+            let workers = get_u64(&flags, "workers", 8)? as usize;
+            let cores = get_u64(&flags, "worker-cores", 16)? as usize;
+            let functions = get_u64(&flags, "functions", 100_000)?;
+            let hot = get_u64(&flags, "hot", 1_024)? as usize;
+            let rate = get_u64(&flags, "rate", 50_000)? as f64;
+            let dur = get_u64(&flags, "duration-ms", 2_000)? * MILLIS;
+            let seed = get_u64(&flags, "seed", 12)?;
+            let threaded = !flags.contains_key("serial");
+            let p = ex::shard_scale_run(
+                Backend::Junctiond,
+                shards,
+                threaded,
+                workers,
+                cores,
+                functions,
+                hot,
+                rate,
+                dur,
+                seed,
+            );
+            let table = ex::shard_scale_table(std::slice::from_ref(&p));
+            println!("{}", table.to_markdown());
+            eprint!("{}", ex::shard_scale_host_summary(std::slice::from_ref(&p)));
+            maybe_csv(&flags, &table, "shardscale")?;
         }
         "serve" => {
             let mode = match flags.get("mode").map(|s| s.as_str()).unwrap_or("bypass") {

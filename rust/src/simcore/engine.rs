@@ -237,6 +237,15 @@ impl Sim {
         self.slab.len()
     }
 
+    /// Virtual time of the earliest pending event, `None` when the
+    /// schedule is empty. Costs a linear scan of the event slab (the
+    /// wheel cannot peek without cascading), so callers should gate it on
+    /// a small [`Sim::pending`] count — the shard runner does, using it
+    /// only to fast-forward epochs once a shard has gone quiet.
+    pub fn next_event_time(&self) -> Option<Time> {
+        self.slab.min_time()
+    }
+
     fn schedule_boxed(&mut self, t: Time, cb: EventFn) -> TimerHandle {
         let t = if t < self.now {
             self.past_schedules += 1;

@@ -7,7 +7,10 @@
 //! a per-core compute fabric (`fabric` — run queues, priority classes,
 //! preemption quanta; the seed's flat FIFO pool survives in `resource`
 //! as the differential reference), and a deterministic xorshift RNG (no
-//! external `rand` crate — the registry is offline).
+//! external `rand` crate — the registry is offline). The `shard` module
+//! scales this across OS threads: one engine per shard, synchronized
+//! conservatively on the cross-shard wire delay (DESIGN.md §3j), with
+//! each individual shard still single-threaded by construction.
 //!
 //! Time is in **virtual nanoseconds** (`Time = u64`); helper constructors
 //! exist for µs/ms. Determinism is a hard invariant: two runs with the
@@ -22,12 +25,17 @@ mod fabric;
 mod proptest;
 mod resource;
 mod rng;
+mod shard;
 mod slab;
 mod wheel;
 
 pub use engine::{
     default_engine, default_tiebreak, set_default_engine, set_default_tiebreak, tick_train,
     EngineKind, EngineStats, Sim, TieBreak, Time, TimerHandle, MICROS, MILLIS, SECONDS,
+};
+pub use shard::{
+    run_sharded, EndpointId, NetHandle, ShardId, ShardNet, ShardPlan, ShardRun, ShardStats,
+    ShardWorld, WireMsg,
 };
 pub use fabric::{
     default_fabric, set_default_fabric, ComputeFabric, FabricConfig, FabricKind, FabricStats,

@@ -1,0 +1,643 @@
+//! Conservative parallel shard runner: one [`Sim`] engine per OS thread,
+//! synchronized on the cross-shard wire delay.
+//!
+//! The model (DESIGN.md §3j) is classic conservative parallel DES
+//! (Chandy–Misra–Bryant with a barrier-epoch transport, no speculative
+//! rollback): virtual time is cut into epochs of length `wire_ns` — the
+//! minimum cross-shard wire latency, i.e. the lookahead — and every shard
+//! runs its local engine to the epoch barrier, exchanges one batch per
+//! peer (an empty batch is the null message that keeps the protocol
+//! deadlock-free), injects what it received, and advances. A message
+//! staged at local time `t` in epoch `k` delivers at `t + wire_ns`, which
+//! is *strictly after* barrier `k` (because `t > k·wire_ns` once the
+//! epoch is underway), so a shard that has already run to the barrier can
+//! never receive an event in its past — no rollback machinery needed.
+//!
+//! Determinism is the hard invariant. The cross-shard merge tie-break is
+//! stated once: inbound messages are injected in
+//! `(deliver_at, src endpoint, per-source seq)` order. Sequence numbers
+//! are per *source endpoint* (not per shard), so the merged order — and
+//! therefore every engine sequence number a delivery receives — is
+//! independent of how endpoints are packed onto shards. Combined with the
+//! model discipline that a handler touches only its own endpoint's state,
+//! this makes results byte-identical across `--shards {1,2,4,8}`, across
+//! repeated same-seed runs, and between [`run_sharded`]'s serial and
+//! threaded transports.
+//!
+//! Idle phases (pool TTL drains, prewarm gaps) would otherwise cost one
+//! barrier per `wire_ns` of virtual time; instead each batch carries a
+//! horizon hint (earliest pending event, scanned only once a shard's
+//! pending count is small) and all shards — computing from identical
+//! exchanged data — jump to the same next interesting epoch, or agree to
+//! terminate when no shard has events or staged messages left.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use super::engine::{default_engine, default_tiebreak, EngineKind, Sim, TieBreak, Time};
+use crate::hostclock::Stopwatch;
+
+/// Index of a shard (an engine + OS thread) inside a [`ShardPlan`].
+pub type ShardId = usize;
+
+/// Index of a model endpoint (gateway, worker, rack…). Endpoints are the
+/// unit of placement: the plan maps each endpoint to a shard, and wire
+/// messages address endpoints, never shards.
+pub type EndpointId = u32;
+
+/// Pending events above this count skip the horizon scan and report
+/// [`Horizon::Busy`]: the scan is O(slab capacity), so it only runs once
+/// a shard has mostly drained and epoch fast-forwarding can actually win.
+const IDLE_SCAN_MAX: usize = 4096;
+
+/// Bounded depth of each inter-shard channel. Lockstep barriers keep at
+/// most two batches in flight per directed link (a peer can run at most
+/// one epoch ahead before blocking on our batch).
+const LINK_DEPTH: usize = 4;
+
+/// A timestamped payload crossing a shard boundary. `seq` is assigned by
+/// the sending [`ShardNet`] per source endpoint; `(deliver_at, src, seq)`
+/// is the total merge order at the receiver.
+#[derive(Debug, Clone, Copy)]
+pub struct WireMsg<P> {
+    pub deliver_at: Time,
+    pub src: EndpointId,
+    pub dst: EndpointId,
+    pub seq: u64,
+    pub payload: P,
+}
+
+/// Per-shard staging buffer for outbound wire messages — the only
+/// lint-sanctioned cross-shard mutation seam (`[state.ShardNet]`,
+/// `wire` domain, in `xtask/shard_map.toml`). Model code holds it as
+/// `Rc<RefCell<ShardNet<P>>>` and calls [`ShardNet::send`]; the runner
+/// drains it at every epoch barrier.
+pub struct ShardNet<P> {
+    wire_ns: Time,
+    staged: Vec<WireMsg<P>>,
+    /// Per-source-endpoint sequence counters. Keyed by endpoint — not by
+    /// shard — so the merge order is invariant under repacking endpoints
+    /// onto fewer or more shards.
+    seqs: BTreeMap<EndpointId, u64>,
+}
+
+impl<P> ShardNet<P> {
+    fn new(wire_ns: Time) -> Self {
+        assert!(wire_ns > 0, "shard wire latency (the lookahead) must be positive");
+        ShardNet { wire_ns, staged: Vec::new(), seqs: BTreeMap::new() }
+    }
+
+    /// The cross-shard wire latency — also the conservative lookahead
+    /// window, so every send is visible to the receiver one epoch later.
+    pub fn wire_ns(&self) -> Time {
+        self.wire_ns
+    }
+
+    /// Stage `payload` from endpoint `src` to endpoint `dst`, delivering
+    /// one wire delay after `now`.
+    pub fn send(&mut self, now: Time, src: EndpointId, dst: EndpointId, payload: P) {
+        let seq = self.seqs.entry(src).or_insert(0);
+        let msg = WireMsg { deliver_at: now + self.wire_ns, src, dst, seq: *seq, payload };
+        *seq += 1;
+        self.staged.push(msg);
+    }
+
+    /// Messages staged since the last barrier (runner-side drain).
+    fn take_staged(&mut self) -> Vec<WireMsg<P>> {
+        std::mem::take(&mut self.staged)
+    }
+}
+
+/// Shared handle to a shard's outbound wire seam.
+pub type NetHandle<P> = Rc<RefCell<ShardNet<P>>>;
+
+/// The static sharding plan: how many shards, which endpoint lives where,
+/// and the wire latency that doubles as the lookahead window.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub shards: usize,
+    /// `endpoint_shard[endpoint] = shard`. Every entry must be `< shards`.
+    pub endpoint_shard: Vec<ShardId>,
+    /// Cross-shard wire latency in virtual ns; also the epoch length.
+    pub wire_ns: Time,
+}
+
+impl ShardPlan {
+    fn validate(&self) {
+        assert!(self.shards > 0, "a plan needs at least one shard");
+        assert!(self.wire_ns > 0, "lookahead (wire_ns) must be positive");
+        for (ep, &s) in self.endpoint_shard.iter().enumerate() {
+            assert!(s < self.shards, "endpoint {ep} mapped to out-of-range shard {s}");
+        }
+    }
+}
+
+/// One shard's model world. Built by its builder *on the shard's own
+/// thread* (worlds hold `Rc` state and never cross threads; only
+/// [`WireMsg`] payloads and the final report do).
+pub trait ShardWorld<P>: Sized {
+    /// Aggregate the runner hands back to the caller; crosses threads.
+    type Report: Send;
+
+    /// Schedule the arrival of `msg` into this shard's engine. Called at
+    /// an epoch barrier with `sim.now() <= msg.deliver_at`;
+    /// implementations schedule via `sim.at(msg.deliver_at, ..)`.
+    fn inject(&mut self, sim: &mut Sim, msg: WireMsg<P>);
+
+    /// Consume the world once the cluster-wide schedule has drained.
+    fn finish(self, sim: &mut Sim) -> Self::Report;
+}
+
+/// Host-side telemetry for one shard's run: barrier counts, message
+/// traffic, and wall clock (via the `hostclock` seam — no raw host
+/// clock reads in sim modules). Never feeds deterministic output.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Epoch barriers this shard actually executed.
+    pub epochs: u64,
+    /// Epoch indices fast-forwarded over while globally idle.
+    pub skipped_epochs: u64,
+    /// Wire messages sent to other shards (self-deliveries excluded).
+    pub msgs_out: u64,
+    /// Wire messages injected locally (incl. self-deliveries).
+    pub msgs_in: u64,
+    /// Empty per-peer batches sent — pure null messages.
+    pub null_batches: u64,
+    /// Engine events fired on this shard.
+    pub events_fired: u64,
+    /// Past-time schedule clamps on this shard (0 when the lookahead
+    /// invariant holds — injection never targets the past).
+    pub past_schedules: u64,
+    /// Host wall clock spent on this shard's lane, via [`Stopwatch`].
+    pub wall_secs: f64,
+}
+
+/// Result of [`run_sharded`]: per-shard reports and host telemetry, both
+/// indexed by shard id.
+pub struct ShardRun<R> {
+    pub reports: Vec<R>,
+    pub stats: Vec<ShardStats>,
+}
+
+/// What a shard knows about its own future at a barrier, shipped inside
+/// every batch so all shards can agree on the next epoch.
+#[derive(Debug, Clone, Copy)]
+enum Horizon {
+    /// Too many pending events to scan — step one epoch at a time.
+    Busy,
+    /// Earliest pending event (before injecting this barrier's arrivals).
+    NextAt(Time),
+    /// No pending events at all.
+    Drained,
+}
+
+/// One per-peer exchange unit. An empty `msgs` vector is the null
+/// message; `horizon`/`min_staged` drive epoch fast-forward and
+/// termination.
+struct EpochBatch<P> {
+    epoch: u64,
+    msgs: Vec<WireMsg<P>>,
+    horizon: Horizon,
+    min_staged: Option<Time>,
+}
+
+/// Virtual time of barrier `k`: epochs are `((k)·L, (k+1)·L]`.
+fn barrier_at(k: u64, wire_ns: Time) -> Time {
+    (k + 1).saturating_mul(wire_ns)
+}
+
+/// Decide the epoch after barrier `k` from the exchanged hints — a pure
+/// function of data every shard holds identically, so all shards jump
+/// together. `None` terminates the run: no shard has a pending event and
+/// nothing was staged, so no event can ever exist again.
+fn next_epoch(
+    k: u64,
+    wire_ns: Time,
+    horizons: &[Horizon],
+    staged_mins: &[Option<Time>],
+) -> Option<u64> {
+    let mut busy = false;
+    let mut t_min: Option<Time> = None;
+    let mut fold = |t: Time| t_min = Some(t_min.map_or(t, |m| m.min(t)));
+    for h in horizons {
+        match *h {
+            Horizon::Busy => busy = true,
+            Horizon::NextAt(t) => fold(t),
+            Horizon::Drained => {}
+        }
+    }
+    for t in staged_mins.iter().flatten() {
+        fold(*t);
+    }
+    if busy {
+        return Some(k + 1);
+    }
+    // Earliest future event is at t: the first epoch whose barrier
+    // reaches it is (t-1)/L (barrier of epoch e is (e+1)·L ≥ t).
+    t_min.map(|t| (k + 1).max(t.saturating_sub(1) / wire_ns))
+}
+
+/// The per-shard execution state: engine + net + world + telemetry.
+struct Lane<P, W> {
+    id: ShardId,
+    shards: usize,
+    endpoint_shard: Vec<ShardId>,
+    sim: Sim,
+    net: Rc<RefCell<ShardNet<P>>>,
+    world: W,
+    stats: ShardStats,
+    sw: Stopwatch,
+}
+
+/// What [`Lane::advance`] hands the transport at a barrier.
+struct StagePack<P> {
+    /// Staged messages partitioned by destination shard (own slot =
+    /// self-deliveries).
+    outgoing: Vec<Vec<WireMsg<P>>>,
+    horizon: Horizon,
+    min_staged: Option<Time>,
+}
+
+impl<P, W: ShardWorld<P>> Lane<P, W> {
+    fn new<B>(id: ShardId, plan: &ShardPlan, sched: SchedPolicy, builder: B) -> Self
+    where
+        B: FnOnce(&mut Sim, NetHandle<P>) -> W,
+    {
+        let sw = Stopwatch::new();
+        let mut sim = Sim::with_engine_and_tiebreak(sched.0, sched.1);
+        let net = Rc::new(RefCell::new(ShardNet::new(plan.wire_ns)));
+        let world = builder(&mut sim, net.clone());
+        Lane {
+            id,
+            shards: plan.shards,
+            endpoint_shard: plan.endpoint_shard.clone(),
+            sim,
+            net,
+            world,
+            stats: ShardStats { shard: id, ..Default::default() },
+            sw,
+        }
+    }
+
+    /// Run to the barrier, drain the wire seam, and summarize the local
+    /// horizon. Messages are partitioned by destination shard.
+    fn advance(&mut self, barrier: Time) -> StagePack<P> {
+        self.stats.epochs += 1;
+        self.sim.run_until(barrier);
+        let staged = self.net.borrow_mut().take_staged();
+        let mut outgoing: Vec<Vec<WireMsg<P>>> = (0..self.shards).map(|_| Vec::new()).collect();
+        let mut min_staged: Option<Time> = None;
+        for m in staged {
+            debug_assert!(
+                m.deliver_at > barrier,
+                "wire message must deliver strictly after its send barrier \
+                 (deliver_at {} <= barrier {})",
+                m.deliver_at,
+                barrier
+            );
+            min_staged = Some(min_staged.map_or(m.deliver_at, |t| t.min(m.deliver_at)));
+            let dst = self.endpoint_shard[m.dst as usize];
+            if dst != self.id {
+                self.stats.msgs_out += 1;
+            }
+            outgoing[dst].push(m);
+        }
+        for (j, q) in outgoing.iter().enumerate() {
+            if j != self.id && q.is_empty() {
+                self.stats.null_batches += 1;
+            }
+        }
+        let pending = self.sim.pending();
+        let horizon = if pending == 0 {
+            Horizon::Drained
+        } else if pending <= IDLE_SCAN_MAX {
+            match self.sim.next_event_time() {
+                Some(t) => Horizon::NextAt(t),
+                None => Horizon::Drained,
+            }
+        } else {
+            Horizon::Busy
+        };
+        StagePack { outgoing, horizon, min_staged }
+    }
+
+    /// Inject this barrier's arrivals in the canonical merge order.
+    fn absorb(&mut self, mut inbound: Vec<WireMsg<P>>) {
+        // tie-break: the cross-shard merge order, stated once — sort by
+        // (deliver_at, src endpoint, per-source seq); equal-time arrivals
+        // then receive engine seqs in this order on every shard count.
+        inbound.sort_by_key(|m| (m.deliver_at, m.src, m.seq));
+        self.stats.msgs_in += inbound.len() as u64;
+        for m in inbound {
+            debug_assert!(m.deliver_at >= self.sim.now(), "injection must never target the past");
+            self.world.inject(&mut self.sim, m);
+        }
+    }
+
+    /// Consume the lane once the global schedule has drained.
+    fn finish(self) -> (W::Report, ShardStats) {
+        let Lane { mut sim, world, mut stats, sw, net, .. } = self;
+        debug_assert_eq!(sim.pending(), 0, "termination protocol left pending events");
+        debug_assert!(net.borrow().staged.is_empty(), "termination protocol left staged messages");
+        stats.events_fired = sim.events_fired();
+        stats.past_schedules = sim.past_schedules();
+        stats.wall_secs = sw.elapsed_secs();
+        (world.finish(&mut sim), stats)
+    }
+}
+
+/// Run `builders[s]` on shard `s` under `plan`, serially on the calling
+/// thread (`threaded == false`) or with one OS thread per shard. Both
+/// transports execute the identical barrier protocol, so their outputs
+/// are byte-identical — the `--shards 1` vs serial differential test
+/// rides on this.
+///
+/// Each shard's [`Sim`] is built with the *calling* thread's default
+/// engine kind and tie-break policy (captured before spawning), so
+/// differential engine-swap tests work unchanged across threads.
+pub fn run_sharded<P, W, B>(
+    plan: &ShardPlan,
+    builders: Vec<B>,
+    threaded: bool,
+) -> ShardRun<W::Report>
+where
+    P: Send + 'static,
+    W: ShardWorld<P>,
+    B: FnOnce(&mut Sim, NetHandle<P>) -> W + Send,
+{
+    plan.validate();
+    assert_eq!(builders.len(), plan.shards, "one builder per shard");
+    // Captured on the calling thread: shard threads have fresh
+    // thread-locals, and differential tests flip the defaults here.
+    let sched: SchedPolicy = (default_engine(), default_tiebreak());
+    if threaded && plan.shards > 1 {
+        run_threaded(plan, builders, sched)
+    } else {
+        run_serial(plan, builders, sched)
+    }
+}
+
+/// Engine kind + tie-break policy every shard engine is built with.
+type SchedPolicy = (EngineKind, TieBreak);
+
+fn run_serial<P, W, B>(
+    plan: &ShardPlan,
+    builders: Vec<B>,
+    sched: SchedPolicy,
+) -> ShardRun<W::Report>
+where
+    P: Send + 'static,
+    W: ShardWorld<P>,
+    B: FnOnce(&mut Sim, NetHandle<P>) -> W,
+{
+    let n = plan.shards;
+    let mut lanes: Vec<Lane<P, W>> =
+        builders.into_iter().enumerate().map(|(i, b)| Lane::new(i, plan, sched, b)).collect();
+    let mut k = 0u64;
+    loop {
+        let barrier = barrier_at(k, plan.wire_ns);
+        let mut inboxes: Vec<Vec<WireMsg<P>>> = (0..n).map(|_| Vec::new()).collect();
+        let mut horizons = Vec::with_capacity(n);
+        let mut mins = Vec::with_capacity(n);
+        for lane in lanes.iter_mut() {
+            let pack = lane.advance(barrier);
+            for (j, msgs) in pack.outgoing.into_iter().enumerate() {
+                inboxes[j].extend(msgs);
+            }
+            horizons.push(pack.horizon);
+            mins.push(pack.min_staged);
+        }
+        for (lane, inbox) in lanes.iter_mut().zip(inboxes) {
+            lane.absorb(inbox);
+        }
+        match next_epoch(k, plan.wire_ns, &horizons, &mins) {
+            Some(k2) => {
+                for lane in lanes.iter_mut() {
+                    lane.stats.skipped_epochs += k2 - k - 1;
+                }
+                k = k2;
+            }
+            None => break,
+        }
+    }
+    let mut reports = Vec::with_capacity(n);
+    let mut stats = Vec::with_capacity(n);
+    for lane in lanes {
+        let (r, s) = lane.finish();
+        reports.push(r);
+        stats.push(s);
+    }
+    ShardRun { reports, stats }
+}
+
+/// Sender / receiver half of one directed inter-shard link (`None` on
+/// the self-diagonal of the mesh).
+type LinkTx<P> = Option<SyncSender<EpochBatch<P>>>;
+type LinkRx<P> = Option<Receiver<EpochBatch<P>>>;
+
+fn run_threaded<P, W, B>(
+    plan: &ShardPlan,
+    builders: Vec<B>,
+    sched: SchedPolicy,
+) -> ShardRun<W::Report>
+where
+    P: Send + 'static,
+    W: ShardWorld<P>,
+    B: FnOnce(&mut Sim, NetHandle<P>) -> W + Send,
+{
+    let n = plan.shards;
+    // Full mesh of bounded links: txs[i][j] sends i → j (None on the
+    // diagonal), rxs[i][j] receives j's batches at i.
+    let mut txs: Vec<Vec<LinkTx<P>>> = (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    let mut rxs: Vec<Vec<LinkRx<P>>> = (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let (tx, rx) = sync_channel(LINK_DEPTH);
+                txs[i][j] = Some(tx);
+                rxs[j][i] = Some(rx);
+            }
+        }
+    }
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(n);
+        let lanes = builders.into_iter().zip(txs).zip(rxs).enumerate();
+        for (i, ((builder, tx_row), rx_row)) in lanes {
+            let plan = plan.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("shard-{i}"))
+                .spawn_scoped(scope, move || {
+                    let mut lane: Lane<P, W> = Lane::new(i, &plan, sched, builder);
+                    let mut k = 0u64;
+                    loop {
+                        let barrier = barrier_at(k, plan.wire_ns);
+                        let mut pack = lane.advance(barrier);
+                        // Send every peer its batch (null if empty) before
+                        // receiving anything: with all shards doing the
+                        // same, every recv below is eventually satisfied.
+                        for (j, tx) in tx_row.iter().enumerate() {
+                            if let Some(tx) = tx {
+                                let msgs = std::mem::take(&mut pack.outgoing[j]);
+                                let batch = EpochBatch {
+                                    epoch: k,
+                                    msgs,
+                                    horizon: pack.horizon,
+                                    min_staged: pack.min_staged,
+                                };
+                                tx.send(batch).expect("peer shard hung up mid-epoch");
+                            }
+                        }
+                        let mut inbound = std::mem::take(&mut pack.outgoing[i]);
+                        let mut horizons = vec![pack.horizon];
+                        let mut mins = vec![pack.min_staged];
+                        for rx in rx_row.iter().flatten() {
+                            let b = rx.recv().expect("peer shard hung up mid-epoch");
+                            debug_assert_eq!(b.epoch, k, "shards diverged on the epoch schedule");
+                            inbound.extend(b.msgs);
+                            horizons.push(b.horizon);
+                            mins.push(b.min_staged);
+                        }
+                        lane.absorb(inbound);
+                        match next_epoch(k, plan.wire_ns, &horizons, &mins) {
+                            Some(k2) => {
+                                lane.stats.skipped_epochs += k2 - k - 1;
+                                k = k2;
+                            }
+                            None => break,
+                        }
+                    }
+                    lane.finish()
+                })
+                .expect("spawn shard thread");
+            handles.push(handle);
+        }
+        let mut reports = Vec::with_capacity(n);
+        let mut stats = Vec::with_capacity(n);
+        for handle in handles {
+            let (r, s) = handle.join().expect("shard thread panicked");
+            reports.push(r);
+            stats.push(s);
+        }
+        ShardRun { reports, stats }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WIRE: Time = 1_000;
+
+    /// Endpoints playing ping-pong across the wire: each delivery is
+    /// recorded and bounced back (sourced from the *receiving* endpoint,
+    /// `msg.dst`) with `payload + 1` until a limit — so the per-endpoint
+    /// seq streams are identical however endpoints are packed onto
+    /// shards.
+    struct PingWorld {
+        net: NetHandle<u64>,
+        log: Rc<RefCell<Vec<(Time, u64)>>>,
+        limit: u64,
+    }
+
+    impl ShardWorld<u64> for PingWorld {
+        type Report = Vec<(Time, u64)>;
+
+        fn inject(&mut self, sim: &mut Sim, msg: WireMsg<u64>) {
+            let net = self.net.clone();
+            let log = self.log.clone();
+            let limit = self.limit;
+            sim.at(msg.deliver_at, move |sim| {
+                log.borrow_mut().push((sim.now(), msg.payload));
+                if msg.payload < limit {
+                    net.borrow_mut().send(sim.now(), msg.dst, msg.src, msg.payload + 1);
+                }
+            });
+        }
+
+        fn finish(self, _sim: &mut Sim) -> Self::Report {
+            self.log.borrow().clone()
+        }
+    }
+
+    type PingRun = (Vec<Vec<(Time, u64)>>, Vec<ShardStats>);
+
+    fn pingpong(shards: usize, threaded: bool, start_at: Time) -> PingRun {
+        let plan = ShardPlan {
+            shards,
+            endpoint_shard: (0..2).map(|e| e % shards).collect(),
+            wire_ns: WIRE,
+        };
+        let builders: Vec<_> = (0..shards)
+            .map(|s| {
+                move |sim: &mut Sim, net: NetHandle<u64>| {
+                    let world = PingWorld {
+                        net: net.clone(),
+                        log: Rc::new(RefCell::new(Vec::new())),
+                        limit: 8,
+                    };
+                    if s == 0 {
+                        let net = net.clone();
+                        sim.at(start_at, move |sim| {
+                            net.borrow_mut().send(sim.now(), 0, 1, 0);
+                        });
+                    }
+                    world
+                }
+            })
+            .collect();
+        let run = run_sharded(&plan, builders, threaded);
+        (run.reports, run.stats)
+    }
+
+    #[test]
+    fn pingpong_terminates_and_counts_both_sides() {
+        let (reports, stats) = pingpong(2, false, 5);
+        // Endpoint 1 sees payloads 0,2,4,6,8; endpoint 0 sees 1,3,5,7.
+        assert_eq!(reports[1].iter().map(|&(_, p)| p).collect::<Vec<_>>(), vec![0, 2, 4, 6, 8]);
+        assert_eq!(reports[0].iter().map(|&(_, p)| p).collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+        // Each hop is exactly one wire delay after the previous.
+        assert_eq!(reports[1][0].0, 5 + WIRE);
+        assert_eq!(reports[0][0].0, 5 + 2 * WIRE);
+        let s: &ShardStats = &stats[0];
+        assert!(s.msgs_out == 5 && stats[1].msgs_out == 4, "cross-shard traffic miscounted");
+        assert_eq!(s.past_schedules, 0, "lookahead must keep injections out of the past");
+    }
+
+    #[test]
+    fn serial_and_threaded_transports_are_identical() {
+        for shards in [1, 2] {
+            let (serial, _) = pingpong(shards, false, 5);
+            let (threaded, _) = pingpong(shards, true, 5);
+            assert_eq!(serial, threaded, "transports diverged at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn results_are_invariant_across_shard_counts() {
+        let (one, _) = pingpong(1, false, 5);
+        let (two, _) = pingpong(2, true, 5);
+        let flat1: Vec<_> = {
+            let mut v: Vec<(Time, u64)> = one.concat();
+            v.sort_unstable();
+            v
+        };
+        let mut flat2: Vec<(Time, u64)> = two.concat();
+        flat2.sort_unstable();
+        assert_eq!(flat1, flat2, "delivery schedule must not depend on shard count");
+    }
+
+    #[test]
+    fn idle_gaps_fast_forward_instead_of_stepping() {
+        // First event sits 10_000 epochs out; the horizon exchange must
+        // jump there, not walk every barrier.
+        let far = 10_000 * WIRE + 3;
+        let (reports, stats) = pingpong(2, true, far);
+        assert_eq!(reports[1][0].0, far + WIRE);
+        let walked: u64 = stats.iter().map(|s| s.epochs).max().unwrap();
+        assert!(walked < 64, "expected epoch fast-forward, walked {walked} barriers");
+        assert!(stats[0].skipped_epochs > 9_000, "skip counter missed the idle gap");
+    }
+}

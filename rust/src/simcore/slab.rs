@@ -171,6 +171,18 @@ impl EventSlab {
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }
+
+    /// Earliest key time among live events, `None` when nothing is
+    /// pending. O(slots): a linear scan over the arena, intended for the
+    /// shard runner's idle fast-forward (called only when the live count
+    /// is small — the ordering tiers cannot answer this without popping,
+    /// and popping would re-sequence ties).
+    pub fn min_time(&self) -> Option<Time> {
+        if self.live == 0 {
+            return None;
+        }
+        self.slots.iter().filter(|s| s.cb.is_some()).map(|s| s.key.time).min()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,9 @@
+// Fixture: trips `cross_shard_mut` (L6) for the inter-shard channel
+// type — a per_worker module draining another per_worker module's
+// ShardInbox through a shared handle instead of letting the shard
+// runner's wire seam deliver the frames. The handle is declared in
+// shard_map.toml, so L5 stays quiet.
+
+pub fn drain(inbox: &Rc<RefCell<ShardInbox>>) {
+    inbox.borrow_mut().frames -= 1;
+}

@@ -1,0 +1,7 @@
+// Fixture: the owning side of the shard-channel L6 pair — defines the
+// per_worker ShardInbox that `l6_shard_inbox.rs` reaches into. Clean
+// itself.
+
+pub struct ShardInbox {
+    pub frames: u64,
+}

@@ -1,0 +1,8 @@
+// Fixture: a per_worker module may stage frames into a `wire`-domain
+// ShardOutbox owned elsewhere — that is the sanctioned inter-shard
+// channel seam (the fixture twin of simcore's ShardNet), so L6 must
+// stay quiet here.
+
+pub fn stage(outbox: &Rc<RefCell<ShardOutbox>>) {
+    outbox.borrow_mut().frames += 1;
+}

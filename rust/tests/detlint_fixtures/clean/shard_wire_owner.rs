@@ -1,0 +1,6 @@
+// Fixture: defines the wire-domain ShardOutbox that `shard_wire.rs`
+// stages frames into.
+
+pub struct ShardOutbox {
+    pub frames: u64,
+}

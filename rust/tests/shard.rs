@@ -1,0 +1,134 @@
+//! Differential tests for the parallel shard runner (DESIGN.md §3j) —
+//! the same technique as the PR 3 engine swap and PR 5 fabric swap: the
+//! new path must be byte-identical to the old one at its degenerate
+//! setting, and invariant across every setting that is not supposed to
+//! change results.
+//!
+//! Three contracts are pinned here:
+//!
+//! 1. The E18 table is byte-identical across `--shards {1,2,4,8}`, across
+//!    the serial (inline) and threaded transports, and across repeated
+//!    same-seed runs — sharding moves wall clock only.
+//! 2. The serial experiments (E5 polling, E11 netpath, quick E16
+//!    resilience) render byte-identical tables before and after sharded
+//!    runs execute in the same process: the shard runner must not perturb
+//!    the serial `EngineKind` path's thread-local scheduling defaults.
+//! 3. Conservation holds per shard and on the merged totals
+//!    (`run_shard_cluster` folds `audit_all` per rack plus the merged
+//!    gateway/rack conservation laws into one violation list).
+
+use junctiond_repro::config::Backend;
+use junctiond_repro::experiments as ex;
+use junctiond_repro::faas::{run_shard_cluster, ShardClusterCfg};
+use junctiond_repro::simcore::{ShardStats, MILLIS};
+
+fn point(shards: usize, threaded: bool) -> ex::ShardScalePoint {
+    let (workers, cores, functions, hot) = (4, 8, 128, 32);
+    ex::shard_scale_run(
+        Backend::Junctiond,
+        shards,
+        threaded,
+        workers,
+        cores,
+        functions,
+        hot,
+        4_000.0,
+        50 * MILLIS,
+        13,
+    )
+}
+
+/// Rendered table with the two legitimately varying cells (shard count,
+/// transport) neutralized.
+fn normalized(p: &ex::ShardScalePoint) -> String {
+    let mut p = p.clone();
+    p.shards = 0;
+    p.transport = "-";
+    ex::shard_scale_table(std::slice::from_ref(&p)).to_markdown()
+}
+
+#[test]
+fn e18_table_identical_across_shard_counts() {
+    let base = normalized(&point(1, false));
+    for shards in [2, 4, 8] {
+        assert_eq!(
+            normalized(&point(shards, false)),
+            base,
+            "E18 table diverged at {shards} shards"
+        );
+    }
+}
+
+#[test]
+fn e18_threaded_transport_matches_serial() {
+    for shards in [1, 4] {
+        assert_eq!(
+            normalized(&point(shards, true)),
+            normalized(&point(shards, false)),
+            "transports diverged at {shards} shards"
+        );
+    }
+}
+
+#[test]
+fn e18_same_seed_reruns_are_byte_identical() {
+    let a = ex::shard_scale_table(std::slice::from_ref(&point(2, true))).to_markdown();
+    let b = ex::shard_scale_table(std::slice::from_ref(&point(2, true))).to_markdown();
+    assert_eq!(a, b, "same-seed threaded reruns diverged");
+}
+
+#[test]
+fn sharded_runs_do_not_perturb_serial_experiments() {
+    // Render the serial tables once, interleave sharded runs on both
+    // transports, render again: every byte must survive. This is the
+    // shards-1-vs-serial-EngineKind guarantee from the other side — the
+    // shard runner captures its scheduling policy from the calling
+    // thread and must never write anything back.
+    let e5 = || ex::ablation_polling_table(&[1, 16], 5).to_markdown();
+    let e11 = || {
+        let rates = [1_000.0, 3_000.0];
+        let (t, _) = ex::netpath_table(2, 10, &rates, &rates, 100 * MILLIS, 7);
+        t.to_markdown()
+    };
+    let e16 = || ex::resilience_table(40 * MILLIS, 11).0.to_markdown();
+    let (e5_before, e11_before, e16_before) = (e5(), e11(), e16());
+    let _ = point(4, true);
+    let _ = point(2, false);
+    assert_eq!(e5(), e5_before, "E5 table changed after sharded runs");
+    assert_eq!(e11(), e11_before, "E11 table changed after sharded runs");
+    assert_eq!(e16(), e16_before, "quick E16 table changed after sharded runs");
+}
+
+#[test]
+fn merged_audits_and_conservation_hold() {
+    let out = run_shard_cluster(&ShardClusterCfg {
+        backend: Backend::Junctiond,
+        shards: 4,
+        threaded: true,
+        workers: 6,
+        worker_cores: 8,
+        functions: 128,
+        hot_functions: 32,
+        rate_rps: 6_000.0,
+        duration: 50 * MILLIS,
+        seed: 29,
+    });
+    assert!(out.audit_violations.is_empty(), "violations: {:?}", out.audit_violations);
+    assert_eq!(
+        out.gateway.submitted,
+        out.gateway.completed + out.gateway.dropped + out.gateway.timed_out,
+        "gateway lost requests"
+    );
+    assert_eq!(
+        out.workers.iter().map(|w| w.completed).sum::<u64>(),
+        out.gateway.completed,
+        "rack completions disagree with the gateway ledger"
+    );
+    // The runner actually ran multi-shard: wire traffic crossed shards
+    // and every shard observed the same barrier epochs.
+    let stats: &[ShardStats] = &out.shard_stats;
+    assert_eq!(stats.len(), 4);
+    assert!(stats.iter().any(|s| s.msgs_out > 0), "no cross-shard traffic at 4 shards");
+    assert!(stats.iter().all(|s| s.epochs == stats[0].epochs), "shards ran different epochs");
+    assert!(stats.iter().all(|s| s.past_schedules == 0), "lookahead violated");
+}

@@ -61,6 +61,12 @@ fn bad_fixtures_each_trip_exactly_their_lint() {
     assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["cross_shard_mut"]);
     assert_eq!(lines.into_iter().collect::<Vec<_>>(), [7]);
 
+    // The inter-shard channel pair: draining a peer shard's inbox through
+    // a shared handle is the same disease at the runner's boundary.
+    let (lints, lines) = lint_lines(&v, "l6_shard_inbox.rs");
+    assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["cross_shard_mut"]);
+    assert_eq!(lines.into_iter().collect::<Vec<_>>(), [8]);
+
     let (lints, lines) = lint_lines(&v, "l7_tie_break_sensitive.rs");
     assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["tie_break_sensitive"]);
     assert_eq!(lines.into_iter().collect::<Vec<_>>(), [7, 9]);
@@ -72,13 +78,15 @@ fn bad_fixtures_each_trip_exactly_their_lint() {
     assert_eq!(lints.into_iter().collect::<Vec<_>>(), ["unordered_container"]);
     assert_eq!(lines.into_iter().collect::<Vec<_>>(), [9]);
 
-    // The owning-side helper of the L6 pair is itself clean.
+    // The owning-side helpers of the L6 pairs are themselves clean.
     let (lints, _) = lint_lines(&v, "l6_owner.rs");
+    assert!(lints.is_empty(), "{v:#?}");
+    let (lints, _) = lint_lines(&v, "l6_shard_inbox_owner.rs");
     assert!(lints.is_empty(), "{v:#?}");
 
     // Nothing beyond the fixture files, and every violation renders
     // as a clickable file:line diagnostic.
-    assert_eq!(v.len(), 17, "{v:#?}");
+    assert_eq!(v.len(), 18, "{v:#?}");
     for violation in &v {
         let s = violation.to_string();
         let expect =
